@@ -1,0 +1,162 @@
+//! Paper §4.4 / Table 1 / Fig. 5 / Table 8: the memory & throughput
+//! profile, from the analytic simulator calibrated against the paper's own
+//! measurements (the testbed substitution — DESIGN.md §4) plus measured
+//! step times of the real artifacts for the local scaling shape.
+//!
+//! ```sh
+//! cargo run --release --example memory_throughput
+//! ```
+
+use adalomo::data::{loader::DataLoader, Domain};
+use adalomo::experiments as exp;
+use adalomo::memsim::{liveness, memory, paper, throughput, Arch};
+use adalomo::runtime::Manifest;
+use adalomo::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Table 1: closed-form model-state memory --------------------------
+    let arch = Arch::analytic("llama7b").unwrap();
+    let mut t1 = Table::new(
+        "Table 1 — model-state bytes/param (paper: LoRA ~2M, AdamW 16M, AdaLomo ~2M)",
+    )
+    .header(&["method", "param", "grad", "opt state", "total"]);
+    for m in [
+        memory::Method::LoRA { rank: 8 },
+        memory::Method::AdamW,
+        memory::Method::AdaLomo,
+    ] {
+        let b = memory::model_state_bytes(&arch, m);
+        let n = arch.n_params() as f64;
+        t1.row(vec![
+            m.name().into(),
+            fnum(b.params / n),
+            fnum(b.gradients / n),
+            fnum(b.optimizer_state / n),
+            fnum(b.model_state() / n),
+        ]);
+    }
+    t1.print();
+
+    // ---- Fig 5a / Table 8 memory ------------------------------------------
+    let act = memory::calibrate();
+    println!(
+        "calibrated activation model: {:.2} B/token/layer/d_model, {:.2} GB/GPU overhead\n",
+        act.act_coeff,
+        act.gpu_overhead / memory::GB
+    );
+    let mut t8m = Table::new("Fig 5a / Table 8 — memory (GB), modeled vs paper")
+        .header(&["model", "method", "modeled", "paper", "err"]);
+    for &(arch_name, method, gpus, mb, paper_gb, _) in paper::TABLE8 {
+        let est = memory::estimate(
+            &memory::TrainSetup {
+                arch: Arch::analytic(arch_name).unwrap(),
+                method: memory::Method::parse(method)?,
+                n_gpus: gpus,
+                micro_batch: mb,
+                seq_len: paper::PROFILE_SEQ_LEN,
+            },
+            act,
+        )
+        .total_gb();
+        t8m.row(vec![
+            arch_name.into(),
+            method.into(),
+            fnum(est),
+            fnum(paper_gb),
+            format!("{:+.0}%", 100.0 * (est - paper_gb) / paper_gb),
+        ]);
+    }
+    t8m.print();
+
+    // ---- Fig 5b / Table 8 throughput --------------------------------------
+    let hw = throughput::Hardware::default();
+    let eff = throughput::calibrate();
+    let mut t8t =
+        Table::new("Fig 5b / Table 8 — throughput (TGS), modeled vs paper")
+            .header(&["model", "method", "modeled", "paper", "err"]);
+    for &(arch_name, method, gpus, mb, _, paper_tgs) in paper::TABLE8 {
+        let tgs = throughput::tgs(
+            &memory::TrainSetup {
+                arch: Arch::analytic(arch_name).unwrap(),
+                method: memory::Method::parse(method)?,
+                n_gpus: gpus,
+                micro_batch: mb,
+                seq_len: paper::PROFILE_SEQ_LEN,
+            },
+            hw,
+            eff,
+        );
+        t8t.row(vec![
+            arch_name.into(),
+            method.into(),
+            fnum(tgs),
+            fnum(paper_tgs),
+            format!("{:+.0}%", 100.0 * (tgs - paper_tgs) / paper_tgs),
+        ]);
+    }
+    t8t.print();
+
+    // ---- gradient liveness (the §2.1 argument) -----------------------------
+    let mut tl = Table::new("Gradient liveness (llama65b)")
+        .header(&["mode", "peak grad GB", "vs standard"]);
+    let std_peak = liveness::simulate(
+        &Arch::analytic("llama65b").unwrap(),
+        liveness::BackwardMode::Standard,
+    )
+    .peak_bytes as f64;
+    for (name, mode) in [
+        ("standard", liveness::BackwardMode::Standard),
+        ("fused (LOMO/AdaLomo)", liveness::BackwardMode::Fused),
+    ] {
+        let r = liveness::simulate(
+            &Arch::analytic("llama65b").unwrap(),
+            mode,
+        );
+        tl.row(vec![
+            name.into(),
+            fnum(r.peak_bytes as f64 / memory::GB),
+            format!("{:.2}%", 100.0 * r.peak_bytes as f64 / std_peak),
+        ]);
+    }
+    tl.print();
+
+    // ---- measured (real artifacts): per-method step time on this host -----
+    if exp::artifacts_available() {
+        let session = exp::open_session()?;
+        let preset = "nano";
+        let p = session.manifest.preset(preset)?.clone();
+        let (b, t) = (p.batch_size, p.seq_len);
+        let mut tm = Table::new(&format!(
+            "Measured on this host — {preset} ({} params), CPU PJRT",
+            p.n_params
+        ))
+        .header(&["optimizer", "ms/step", "tokens/s"]);
+        for opt in ["sgd", "adamw", "adafactor", "lomo", "adalomo"] {
+            let entry = Manifest::train_step_name(preset, opt);
+            session.compile(&entry)?;
+            let seed = session.upload_i32(&[1], &[])?;
+            let mut blob = session
+                .execute_buf(&Manifest::init_name(preset, opt), &[&seed])?;
+            let mut loader = DataLoader::lm(Domain::C4, 3, b, t, 80_000);
+            let reps = 12;
+            let t0 = std::time::Instant::now();
+            for step in 1..=reps {
+                let batch = loader.next_batch();
+                let x = session.upload_i32(&batch.x, &[b, t])?;
+                let y = session.upload_i32(&batch.y, &[b, t])?;
+                let sched = session
+                    .upload_f32(&[1e-3, step as f32, 0.0, 1.0], &[4])?;
+                blob = session
+                    .execute_buf(&entry, &[&blob, &x, &y, &sched])?;
+            }
+            let dt = t0.elapsed().as_secs_f64() / reps as f64;
+            tm.row(vec![
+                opt.into(),
+                fnum(dt * 1e3),
+                fnum((b * t) as f64 / dt),
+            ]);
+        }
+        tm.print();
+    }
+    Ok(())
+}

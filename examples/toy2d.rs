@@ -1,0 +1,114 @@
+//! Paper Appendix A / Fig. 6: optimizer trajectories on
+//! f(x,y) = x² + y² − 2e^{−5[(x−1)²+y²]} − 3e^{−5[(x+1)²+y²]}.
+//!
+//! Renders an ASCII phase portrait: from the same start, SGD and
+//! SGD+momentum descend into the local well at (+1, 0); SGD+variance and
+//! Adam cross to the global optimum at (−1, 0). Both the Rust-native
+//! optimizers and (when artifacts exist) the AOT toy2d programs are run —
+//! they must agree.
+
+use adalomo::experiments as exp;
+use adalomo::optim::OptKind;
+use adalomo::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let kinds = [
+        (OptKind::Sgd, 's'),
+        (OptKind::SgdMomentum, 'm'),
+        (OptKind::SgdVariance, 'v'),
+        (OptKind::AdamW, 'a'),
+    ];
+    let (w, h) = (68usize, 24usize);
+    let (x0, x1, y0, y1) = (-1.6f32, 1.6f32, -0.35f32, 1.1f32);
+    let mut grid = vec![vec![' '; w]; h];
+    let mark = |grid: &mut Vec<Vec<char>>, x: f32, y: f32, ch: char| {
+        let col = ((x - x0) / (x1 - x0) * (w as f32 - 1.0)).round();
+        let row = ((y1 - y) / (y1 - y0) * (h as f32 - 1.0)).round();
+        if (0.0..w as f32).contains(&col) && (0.0..h as f32).contains(&row) {
+            let (r, c) = (row as usize, col as usize);
+            if grid[r][c] == ' ' || grid[r][c] == '.' {
+                grid[r][c] = ch;
+            }
+        }
+    };
+    // Landscape contour hints: the two wells.
+    mark(&mut grid, -1.0, 0.0, 'G');
+    mark(&mut grid, 1.0, 0.0, 'L');
+
+    let mut table = Table::new("Fig. 6 — final positions")
+        .header(&["optimizer", "glyph", "x", "y", "f", "basin"]);
+    for (kind, ch) in kinds {
+        let traj = exp::toy2d_trajectory(
+            kind,
+            exp::TOY2D_LR,
+            exp::TOY2D_STEPS,
+            exp::TOY2D_START,
+        );
+        for p in &traj {
+            mark(&mut grid, p.0, p.1, ch);
+        }
+        let last = traj.last().unwrap();
+        table.row(vec![
+            kind.name().into(),
+            ch.to_string(),
+            fnum(last.0 as f64),
+            fnum(last.1 as f64),
+            fnum(last.2 as f64),
+            exp::toy2d_basin(&traj).into(),
+        ]);
+    }
+    mark(&mut grid, exp::TOY2D_START.0, exp::TOY2D_START.1, '+');
+
+    println!(
+        "start '+' at {:?}; wells: G = global (-1,0), L = local (+1,0)\n",
+        exp::TOY2D_START
+    );
+    for row in &grid {
+        println!("  {}", row.iter().collect::<String>());
+    }
+    println!();
+    table.print();
+
+    // Cross-check through the AOT artifacts when available.
+    if exp::artifacts_available() {
+        let session = exp::open_session()?;
+        println!("\nAOT cross-check (toy2d_* artifacts):");
+        for (kind, entry) in [
+            (OptKind::Sgd, "sgd"),
+            (OptKind::SgdMomentum, "sgd_momentum"),
+            (OptKind::SgdVariance, "sgd_variance"),
+            (OptKind::AdamW, "adamw"),
+        ] {
+            let layout = session.manifest.layout(&format!("toy2d/{entry}"))?;
+            let mut blob = vec![0f32; layout.blob_len];
+            blob[0] = exp::TOY2D_START.0;
+            blob[1] = exp::TOY2D_START.1;
+            let mut buf = session.upload_f32(&blob, &[layout.blob_len])?;
+            for t in 1..=exp::TOY2D_STEPS {
+                let sched = session.upload_f32(
+                    &[exp::TOY2D_LR, t as f32, 0.0, 1.0],
+                    &[4],
+                )?;
+                buf = session
+                    .execute_buf(&format!("toy2d_{entry}"), &[&buf, &sched])?;
+            }
+            let out = session.fetch_f32_raw(&buf, 2)?;
+            let native = exp::toy2d_trajectory(
+                kind,
+                exp::TOY2D_LR,
+                exp::TOY2D_STEPS,
+                exp::TOY2D_START,
+            );
+            let nl = native.last().unwrap();
+            println!(
+                "  {entry:14} AOT ({:+.3}, {:+.3})  native ({:+.3}, {:+.3})  {}",
+                out[0],
+                out[1],
+                nl.0,
+                nl.1,
+                if (out[0] - nl.0).abs() < 0.05 { "agree" } else { "DISAGREE" }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,294 @@
+# AOT driver: lowers every entry point to HLO *text* + writes the manifest.
+#
+# HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+# >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+# (the version behind the Rust `xla` crate) rejects; the text parser
+# reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# Usage:
+#   python -m compile.aot --out ../artifacts
+#       [--presets nano,micro,tiny,small] [--only REGEX]
+#       [--kernels pallas|jnp] [--list] [--force] [--report]
+#
+# Python runs ONCE at build time (make artifacts); the Rust binary is
+# self-contained afterwards.
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layout, model, steps
+
+# Which optimizers get artifacts per preset (paper experiment needs; the
+# larger presets skip the ablation-only arms to bound build time).
+OPTS_FULL = ["sgd", "sgd_momentum", "sgd_variance", "adamw", "adafactor",
+             "lomo", "adalomo"]
+OPTS_SMALL = ["sgd", "adamw", "adafactor", "lomo", "adalomo"]
+PRESET_OPTS = {
+    "nano": OPTS_FULL,
+    "micro": OPTS_FULL,
+    "tiny": OPTS_FULL,
+    "small": OPTS_SMALL,
+    "base100m": ["adamw", "adalomo"],
+}
+DEFAULT_PRESETS = ["nano", "micro", "tiny", "small"]
+GNORM_OPTS = ["lomo", "adalomo"]   # Appendix-B ablation arms
+FUSED_PRESETS = ["nano", "micro"]  # fused-backward group programs (demo)
+TOY2D_OPTS = ["sgd", "sgd_momentum", "sgd_variance", "adamw"]
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def plan_entries(presets, use_kernels):
+    """Yield (entry_name, build_fn, arg_specs, meta). build_fn() -> traced fn."""
+    entries = []
+
+    def add(name, fn_builder, arg_specs, out_shape, meta):
+        entries.append((name, fn_builder, arg_specs, out_shape, meta))
+
+    for pname in presets:
+        cfg = model.PRESETS[pname]
+        b, t, v = cfg.batch_size, cfg.seq_len, cfg.vocab
+        x_spec = _spec((b, t), jnp.int32)
+        y_spec = _spec((b, t), jnp.int32)
+        sched_spec = _spec((4,))
+        seed_spec = _spec((), jnp.int32)
+        psegs = steps.params_only_segments(cfg)
+        plen = layout.params_len(psegs)
+
+        # Shared per-preset entries on the bare parameter blob.
+        add(f"eval_{pname}", lambda cfg=cfg: steps.make_eval(cfg),
+            [_io("params", (plen,), "f32"), _io("x", (b, t), "i32"),
+             _io("y", (b, t), "i32")],
+            (layout.METRIC_SLOTS,),
+            {"preset": pname, "kind": "eval"})
+        add(f"seq_loss_{pname}", lambda cfg=cfg: steps.make_seq_loss(cfg),
+            [_io("params", (plen,), "f32"), _io("x", (b, t), "i32"),
+             _io("y", (b, t), "i32")],
+            (2, b),
+            {"preset": pname, "kind": "seq_loss"})
+        add(f"next_logits_{pname}", lambda cfg=cfg: steps.make_next_logits(cfg),
+            [_io("params", (plen,), "f32"), _io("x", (b, t), "i32")],
+            (b, v),
+            {"preset": pname, "kind": "next_logits"})
+
+        variants = []
+        for opt in PRESET_OPTS[pname]:
+            variants.append((opt, opt, {}))
+            if opt in GNORM_OPTS:
+                variants.append((f"{opt}_gnorm", opt, {"gnorm": True}))
+        variants.append(("lora", "adamw",
+                         {"lora_rank": model.LORA_DEFAULT_RANK}))
+
+        seen_layout = set()
+        for vname, opt, kw in variants:
+            lora_rank = kw.get("lora_rank", 0)
+            segs = steps.param_layout(cfg, opt, lora_rank)
+            blob = layout.blob_len(segs)
+            blob_spec = _spec((blob,))
+            layout_key = (opt, lora_rank)
+
+            add(f"train_step_{pname}_{vname}",
+                lambda cfg=cfg, opt=opt, kw=kw: steps.make_train_step(
+                    cfg, opt, use_kernels=use_kernels, **kw)[0],
+                [_io("blob", (blob,), "f32"), _io("x", (b, t), "i32"),
+                 _io("y", (b, t), "i32"), _io("sched", (4,), "f32")],
+                (blob,),
+                {"preset": pname, "kind": "train_step", "opt": vname,
+                 "layout": f"{pname}/{vname}"})
+
+            if layout_key in seen_layout:
+                continue
+            seen_layout.add(layout_key)
+            add(f"init_{pname}_{vname}",
+                lambda cfg=cfg, opt=opt, lr=lora_rank:
+                    steps.make_init(cfg, opt, lora_rank=lr)[0],
+                [_io("seed", (), "i32")], (blob,),
+                {"preset": pname, "kind": "init", "opt": vname,
+                 "layout": f"{pname}/{vname}"})
+            add(f"extract_params_{pname}_{vname}",
+                lambda cfg=cfg, opt=opt, lr=lora_rank:
+                    steps.make_extract_params(cfg, opt, lr)[0],
+                [_io("blob", (blob,), "f32")],
+                (layout.params_len(segs),),
+                {"preset": pname, "kind": "extract_params", "opt": vname,
+                 "layout": f"{pname}/{vname}"})
+            add(f"read_metrics_{pname}_{vname}",
+                lambda cfg=cfg, opt=opt, lr=lora_rank:
+                    steps.make_read_metrics(cfg, opt, lr)[0],
+                [_io("blob", (blob,), "f32")], (layout.METRIC_SLOTS,),
+                {"preset": pname, "kind": "read_metrics", "opt": vname,
+                 "layout": f"{pname}/{vname}"})
+
+        # LoRA merge (adapters folded for the shared eval entries).
+        lsegs = steps.param_layout(cfg, "adamw", model.LORA_DEFAULT_RANK)
+        add(f"merge_lora_{pname}",
+            lambda cfg=cfg: steps.make_merge_lora(cfg, model.LORA_DEFAULT_RANK),
+            [_io("blob", (layout.blob_len(lsegs),), "f32")], (plen,),
+            {"preset": pname, "kind": "merge_lora"})
+
+        # Fused-backward group programs (coordinator demo + tests).
+        if pname in FUSED_PRESETS:
+            segs = steps.param_layout(cfg, "adalomo")
+            blob = layout.blob_len(segs)
+            groups = steps.fused_groups(cfg)
+            for k in range(len(groups)):
+                add(f"fused_{pname}_adalomo_g{k}",
+                    lambda cfg=cfg, k=k: steps.make_fused_group_step(
+                        cfg, "adalomo", k, use_kernels=use_kernels)[0],
+                    [_io("frozen", (blob,), "f32"), _io("accum", (blob,), "f32"),
+                     _io("x", (b, t), "i32"), _io("y", (b, t), "i32"),
+                     _io("sched", (4,), "f32")],
+                    (blob,),
+                    {"preset": pname, "kind": "fused_group", "opt": "adalomo",
+                     "group": k, "n_groups": len(groups),
+                     "layout": f"{pname}/adalomo"})
+
+    # Toy 2-D landscape (Appendix A / Fig 6) — preset-independent.
+    for opt in TOY2D_OPTS:
+        segs = steps.toy2d_layout(opt)
+        blob = layout.blob_len(segs)
+        add(f"toy2d_{opt}",
+            lambda opt=opt: steps.make_toy2d_step(opt)[0],
+            [_io("state", (blob,), "f32"), _io("sched", (4,), "f32")],
+            (blob,),
+            {"kind": "toy2d", "opt": opt, "layout": f"toy2d/{opt}"})
+
+    return entries
+
+
+def layouts_json(presets):
+    out = {}
+    for pname in presets:
+        cfg = model.PRESETS[pname]
+        for opt in PRESET_OPTS[pname] + ["lora"]:
+            lora_rank = model.LORA_DEFAULT_RANK if opt == "lora" else 0
+            base_opt = "adamw" if opt == "lora" else opt
+            segs = steps.param_layout(cfg, base_opt, lora_rank)
+            out[f"{pname}/{opt}"] = {
+                "blob_len": layout.blob_len(segs),
+                "params_len": layout.params_len(segs),
+                "segments": layout.segments_json(segs),
+            }
+            if opt in GNORM_OPTS:
+                out[f"{pname}/{opt}_gnorm"] = out[f"{pname}/{opt}"]
+    for opt in TOY2D_OPTS:
+        segs = steps.toy2d_layout(opt)
+        out[f"toy2d/{opt}"] = {
+            "blob_len": layout.blob_len(segs),
+            "params_len": layout.params_len(segs),
+            "segments": layout.segments_json(segs),
+        }
+    return out
+
+
+def presets_json(presets):
+    out = {}
+    for pname in presets:
+        cfg = model.PRESETS[pname]
+        out[pname] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "batch_size": cfg.batch_size,
+            "n_params": model.n_params(cfg),
+            "fused_groups": len(steps.fused_groups(cfg)),
+            "opts": PRESET_OPTS[pname],
+        }
+    return out
+
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def lower_entry(name, fn_builder, arg_specs):
+    fn = fn_builder()
+    specs = [_spec(tuple(a["shape"]), DTYPES[a["dtype"]]) for a in arg_specs]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(DEFAULT_PRESETS))
+    ap.add_argument("--only", default=None, help="regex filter on entry name")
+    ap.add_argument("--kernels", default="pallas", choices=["pallas", "jnp"],
+                    help="2-D updates via Pallas kernels or jnp reference")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    args = ap.parse_args()
+
+    presets = [p for p in args.presets.split(",") if p]
+    entries = plan_entries(presets, use_kernels=(args.kernels == "pallas"))
+    if args.only:
+        rx = re.compile(args.only)
+        entries = [e for e in entries if rx.search(e[0])]
+
+    if args.list:
+        for name, _, arg_specs, out_shape, meta in entries:
+            print(f"{name:48s} {meta.get('kind', ''):>14s} -> {out_shape}")
+        print(f"{len(entries)} entries")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"version": 1, "kernel_impl": args.kernels,
+                "presets": {}, "layouts": {}, "entries": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest["kernel_impl"] = args.kernels
+
+    manifest["presets"].update(presets_json(presets))
+    manifest["layouts"].update(layouts_json(presets))
+
+    t_all = time.time()
+    for i, (name, fn_builder, arg_specs, out_shape, meta) in enumerate(entries):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        rec = {"file": f"{name}.hlo.txt", "inputs": arg_specs,
+               "output": {"shape": list(out_shape), "dtype": "f32"}, **meta}
+        if os.path.exists(path) and not args.force:
+            manifest["entries"][name] = rec
+            continue
+        t0 = time.time()
+        text = lower_entry(name, fn_builder, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = rec
+        print(f"[{i + 1}/{len(entries)}] {name}: "
+              f"{len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+              flush=True)
+        # Persist incrementally so an interrupted build resumes.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['entries'])} entries "
+          f"({time.time() - t_all:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+# Layer-1 kernel: Adafactor step (Shazeer & Stern, 2018) for 2-D parameters.
+# Shares the three-stage structure of the AdaLomo kernel (the AdaLomo paper
+# derives its factored second moment from Adafactor); the differences are
+# the time-dependent decay beta2_t = 1 - t^-0.8, the eps1 floor added to
+# g^2 before factoring, update clipping at d=1.0, and the relative step
+# alpha = max(eps2, RMS(theta)) * lr.
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref, tiles
+
+
+def _moments_kernel(aux_ref, g_ref, r_ref, c_ref, r_out, c_out):
+    beta2t = aux_ref[0]
+    g2 = jnp.square(g_ref[...]) + ref.ADAFACTOR_EPS1
+    r_out[...] = beta2t * r_ref[...] + (1.0 - beta2t) * jnp.sum(g2, axis=1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        c_out[...] = beta2t * c_ref[...]
+
+    c_out[...] += (1.0 - beta2t) * jnp.sum(g2, axis=0)
+
+
+def _u_tile(g, r, c, sum_r):
+    v = (r[:, None] * c[None, :]) / jnp.maximum(sum_r, ref.ADAFACTOR_EPS1)
+    return g / jnp.sqrt(v + ref.ADAFACTOR_EPS1)
+
+
+def _stats_kernel(aux_ref, g_ref, r_ref, c_ref, theta_ref, stats_out):
+    u = _u_tile(g_ref[...], r_ref[...], c_ref[...], aux_ref[1])
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        stats_out[...] = jnp.zeros_like(stats_out)
+
+    stats_out[0] += jnp.sum(jnp.square(u))
+    stats_out[1] += jnp.sum(jnp.square(theta_ref[...]))
+
+
+def _apply_kernel(aux_ref, scale_ref, g_ref, r_ref, c_ref, theta_ref, out_ref):
+    u = _u_tile(g_ref[...], r_ref[...], c_ref[...], aux_ref[1])
+    out_ref[...] = theta_ref[...] - scale_ref[0] * u
+
+
+def adafactor_update(theta, g, r, c, t, lr, block_m=None):
+    """Adafactor step for a 2-D parameter via the Pallas pipeline.
+
+    Semantics identical to ref.adafactor_ref; returns (theta', r', c').
+    """
+    m, n = theta.shape
+    if m * n < tiles.MIN_KERNEL_ELEMS:
+        return ref.adafactor_ref(theta, g, r, c, t, lr)
+    bm = tiles.choose_block_m(m, block_m or tiles.DEFAULT_BLOCK_M)
+    grid = tiles.row_grid(m, bm)
+    t = jnp.asarray(t, jnp.float32)
+    beta2t = 1.0 - jnp.power(t, -ref.ADAFACTOR_DECAY_POW)
+    aux0 = jnp.stack([beta2t, jnp.float32(0.0)])
+
+    r_new, c_new = tiles.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[tiles.scalar_spec(2), tiles.stripe_spec(bm, n),
+                  tiles.rowvec_spec(bm), tiles.colvec_spec(n)],
+        out_specs=[tiles.rowvec_spec(bm), tiles.colvec_spec(n)],
+        out_shape=[tiles.f32((m,)), tiles.f32((n,))],
+    )(aux0, g, r, c)
+
+    aux = jnp.stack([beta2t, jnp.sum(r_new)])
+    stats = tiles.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[tiles.scalar_spec(2), tiles.stripe_spec(bm, n),
+                  tiles.rowvec_spec(bm), tiles.colvec_spec(n),
+                  tiles.stripe_spec(bm, n)],
+        out_specs=tiles.scalar_spec(2),
+        out_shape=tiles.f32((2,)),
+    )(aux, g, r_new, c_new, theta)
+
+    count = jnp.float32(m * n)
+    rms_u = jnp.sqrt(stats[0] / count)
+    rms_theta = jnp.sqrt(stats[1] / count)
+    clip = jnp.maximum(1.0, rms_u / ref.ADAFACTOR_CLIP_D)
+    alpha = jnp.maximum(ref.ADAFACTOR_EPS2, rms_theta) * jnp.asarray(lr, jnp.float32)
+    scale_arr = jnp.reshape(alpha / clip, (1,))
+
+    theta_new = tiles.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[tiles.scalar_spec(2), tiles.scalar_spec(1),
+                  tiles.stripe_spec(bm, n), tiles.rowvec_spec(bm),
+                  tiles.colvec_spec(n), tiles.stripe_spec(bm, n)],
+        out_specs=tiles.stripe_spec(bm, n),
+        out_shape=tiles.f32((m, n)),
+    )(aux, scale_arr, g, r_new, c_new, theta)
+
+    return theta_new, r_new, c_new
+
+
+def adafactor_update_vector(theta, g, v, t, lr, **kw):
+    """1-D/0-D parameters keep a full second moment (ref path)."""
+    return ref.adafactor_vector_ref(theta, g, v, t, lr, **kw)

@@ -1,0 +1,48 @@
+# Layer-1 kernel: fused AdamW step (paper Eq. 2 + decoupled weight decay).
+# Fully elementwise -- both moment EMAs, bias correction, the adaptive
+# division and the decayed parameter write happen in one pass over the
+# stripe, so g is read exactly once (the GPU version's "update in registers"
+# becomes "update in VMEM").
+
+import jax.numpy as jnp
+
+from . import ref, tiles
+
+
+def _adamw_kernel(aux_ref, theta_ref, g_ref, m_ref, v_ref,
+                  theta_out, m_out, v_out):
+    # aux = [lr, bias1, bias2, wd]  (bias_i = 1 - beta_i^t, host-side)
+    lr, bias1, bias2, wd = aux_ref[0], aux_ref[1], aux_ref[2], aux_ref[3]
+    g = g_ref[...]
+    m_new = ref.ADAM_BETA1 * m_ref[...] + (1.0 - ref.ADAM_BETA1) * g
+    v_new = ref.ADAM_BETA2 * v_ref[...] + (1.0 - ref.ADAM_BETA2) * jnp.square(g)
+    update = (m_new / bias1) / (jnp.sqrt(v_new / bias2) + ref.ADAM_EPS)
+    theta_out[...] = theta_ref[...] - lr * (update + wd * theta_ref[...])
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def adamw_update(theta, g, m, v, t, lr, wd=0.0, block_m=None):
+    """AdamW step for a 2-D parameter (Pallas). wd=0 recovers Adam.
+
+    Returns (theta', m', v'); semantics identical to ref.adamw_ref.
+    """
+    if theta.ndim != 2 or theta.size < tiles.MIN_KERNEL_ELEMS:
+        return ref.adamw_ref(theta, g, m, v, t, lr, wd=wd)
+    mm, n = theta.shape
+    bm = tiles.choose_block_m(mm, block_m or tiles.DEFAULT_BLOCK_M)
+    t = jnp.asarray(t, jnp.float32)
+    aux = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        1.0 - jnp.power(jnp.float32(ref.ADAM_BETA1), t),
+        1.0 - jnp.power(jnp.float32(ref.ADAM_BETA2), t),
+        jnp.asarray(wd, jnp.float32),
+    ])
+    stripe = tiles.stripe_spec(bm, n)
+    return tiles.pallas_call(
+        _adamw_kernel,
+        grid=tiles.row_grid(mm, bm),
+        in_specs=[tiles.scalar_spec(4), stripe, stripe, stripe, stripe],
+        out_specs=[stripe, stripe, stripe],
+        out_shape=[tiles.f32((mm, n))] * 3,
+    )(aux, theta, g, m, v)

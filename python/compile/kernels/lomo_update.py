@@ -1,0 +1,28 @@
+# Layer-1 kernel: the LOMO update (paper Eq. 1) -- plain SGD fused into the
+# backward pass. Elementwise, single streaming pass, one (block_m, n) stripe
+# per grid step.
+
+import jax.numpy as jnp
+
+from . import ref, tiles
+
+
+def _lomo_kernel(lr_ref, theta_ref, g_ref, out_ref):
+    out_ref[...] = theta_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def lomo_update(theta, g, lr, block_m=None):
+    """theta' = theta - lr * g for a 2-D parameter (Pallas)."""
+    if theta.ndim != 2 or theta.size < tiles.MIN_KERNEL_ELEMS:
+        return ref.lomo_ref(theta, g, lr)
+    m, n = theta.shape
+    bm = tiles.choose_block_m(m, block_m or tiles.DEFAULT_BLOCK_M)
+    lr_arr = jnp.reshape(jnp.asarray(lr, jnp.float32), (1,))
+    return tiles.pallas_call(
+        _lomo_kernel,
+        grid=tiles.row_grid(m, bm),
+        in_specs=[tiles.scalar_spec(1), tiles.stripe_spec(bm, n),
+                  tiles.stripe_spec(bm, n)],
+        out_specs=tiles.stripe_spec(bm, n),
+        out_shape=tiles.f32((m, n)),
+    )(lr_arr, theta, g)

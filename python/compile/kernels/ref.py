@@ -1,0 +1,163 @@
+# Pure-jnp correctness oracles for every optimizer update rule.
+#
+# These are the single source of truth for the math: the Pallas kernels
+# (adalomo_update.py, lomo_update.py, adamw_update.py, adafactor_update.py)
+# are tested against these functions, and the Rust-native optimizers in
+# rust/src/optim/ mirror them (cross-checked by the integration_optim_parity
+# test through the AOT artifacts).
+#
+# Paper: "AdaLomo: Low-memory Optimization with Adaptive Learning Rate"
+# (Lv et al., Findings of ACL 2024). Equation references below are to the
+# paper; see DESIGN.md "Faithfulness notes" for the Algorithm-1 line-10
+# sqrt ambiguity (we default to u = g / sqrt(v_hat + eps_div), matching the
+# released OpenLMLab/LOMO code; `no_sqrt=True` gives the literal printed
+# form).
+
+import jax.numpy as jnp
+
+# --- default hyper-parameters (released-code defaults) ---------------------
+ADALOMO_BETA = 0.85      # EMA decay for the factored second moment
+ADALOMO_EPS_RMS = 1e-3   # eps in Algorithm 1 line 11: max(eps, RMS(theta))
+ADALOMO_EPS_DIV = 1e-30  # guard inside the sqrt/division
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.999
+ADAM_EPS = 1e-8
+ADAFACTOR_DECAY_POW = 0.8   # beta2_t = 1 - t^-0.8  (Shazeer & Stern, 2018)
+ADAFACTOR_EPS1 = 1e-30
+ADAFACTOR_EPS2 = 1e-3
+ADAFACTOR_CLIP_D = 1.0
+
+
+def rms(x):
+    """Root-mean-square over all elements (paper footnote 1)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x)))
+
+
+def factored_v(r, c, eps=ADALOMO_EPS_DIV):
+    """Reconstruct the second moment from its NMF factors (paper Eq. 5).
+
+    v = r c / (1^T r); r holds row sums, c holds column sums of the EMA of
+    g^2, so dividing by sum(r) restores the magnitude of E[g^2].
+    """
+    denom = jnp.maximum(jnp.sum(r), eps)
+    return jnp.outer(r, c) / denom
+
+
+def grouped_normalize(u, theta, eps_rms=ADALOMO_EPS_RMS):
+    """Grouped update normalization (Algorithm 1, line 11).
+
+    u_hat = u / max(1, RMS(u)) * max(eps, RMS(theta)).
+    Per-parameter-matrix: RMS is taken over this parameter only, which is
+    what lets AdaLomo normalize inside a single fused backward pass.
+    """
+    scale = jnp.maximum(eps_rms, rms(theta)) / jnp.maximum(1.0, rms(u))
+    return u * scale
+
+
+def adalomo_ref(theta, g, r, c, t, lr,
+                beta=ADALOMO_BETA, eps_rms=ADALOMO_EPS_RMS,
+                eps_div=ADALOMO_EPS_DIV, no_sqrt=False):
+    """One AdaLomo step (Algorithm 1 lines 7-12) for a 2-D parameter.
+
+    theta, g: (m, n); r: (m,); c: (n,). t is the 1-based step count.
+    Returns (theta', r', c').
+    """
+    g2 = jnp.square(g)
+    r_new = beta * r + (1.0 - beta) * jnp.sum(g2, axis=1)   # line 7
+    c_new = beta * c + (1.0 - beta) * jnp.sum(g2, axis=0)   # line 8
+    v = factored_v(r_new, c_new)                             # line 9
+    bias = 1.0 - jnp.power(beta, t)
+    v_hat = v / bias
+    if no_sqrt:
+        u = g / (v_hat + eps_div)                            # literal line 10
+    else:
+        u = g / jnp.sqrt(v_hat + eps_div)                    # released code
+    u_hat = grouped_normalize(u, theta, eps_rms)             # line 11
+    theta_new = theta - lr * u_hat                           # line 12
+    return theta_new, r_new, c_new
+
+
+def adalomo_vector_ref(theta, g, v, t, lr,
+                       beta=ADALOMO_BETA, eps_rms=ADALOMO_EPS_RMS,
+                       eps_div=ADALOMO_EPS_DIV, no_sqrt=False):
+    """AdaLomo step for 1-D/0-D parameters: factorization degenerates, so a
+    full second moment is kept (same choice as Adafactor)."""
+    v_new = beta * v + (1.0 - beta) * jnp.square(g)
+    bias = 1.0 - jnp.power(beta, t)
+    v_hat = v_new / bias
+    if no_sqrt:
+        u = g / (v_hat + eps_div)
+    else:
+        u = g / jnp.sqrt(v_hat + eps_div)
+    u_hat = grouped_normalize(u, theta, eps_rms)
+    theta_new = theta - lr * u_hat
+    return theta_new, v_new
+
+
+def lomo_ref(theta, g, lr):
+    """One LOMO step: plain SGD fused into the backward pass (paper Eq. 1)."""
+    return theta - lr * g
+
+
+def sgd_momentum_ref(theta, g, m, t, lr, beta1=ADAM_BETA1):
+    """SGD keeping only the first moment (paper Eq. 3)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    m_hat = m_new / (1.0 - jnp.power(beta1, t))
+    return theta - lr * m_hat, m_new
+
+
+def sgd_variance_ref(theta, g, v, t, lr, beta2=ADAM_BETA2, eps=ADAM_EPS):
+    """SGD keeping only the second moment (paper Eq. 4)."""
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    v_hat = v_new / (1.0 - jnp.power(beta2, t))
+    return theta - lr * g / (jnp.sqrt(v_hat) + eps), v_new
+
+
+def adamw_ref(theta, g, m, v, t, lr,
+              beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS, wd=0.0):
+    """One AdamW step (paper Eq. 2 + decoupled weight decay).
+
+    wd=0 recovers plain Adam.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    m_hat = m_new / (1.0 - jnp.power(beta1, t))
+    v_hat = v_new / (1.0 - jnp.power(beta2, t))
+    update = m_hat / (jnp.sqrt(v_hat) + eps)
+    theta_new = theta - lr * (update + wd * theta)
+    return theta_new, m_new, v_new
+
+
+def adafactor_ref(theta, g, r, c, t, lr,
+                  eps1=ADAFACTOR_EPS1, eps2=ADAFACTOR_EPS2,
+                  clip_d=ADAFACTOR_CLIP_D, decay_pow=ADAFACTOR_DECAY_POW):
+    """One Adafactor step (Shazeer & Stern, 2018) for a 2-D parameter,
+    momentum-less, with relative step size and update clipping.
+
+    `lr` plays the role of rho_t; the applied step is
+    alpha_t = max(eps2, RMS(theta)) * lr.
+    """
+    beta2_t = 1.0 - jnp.power(t, -decay_pow)
+    g2 = jnp.square(g) + eps1
+    r_new = beta2_t * r + (1.0 - beta2_t) * jnp.sum(g2, axis=1)
+    c_new = beta2_t * c + (1.0 - beta2_t) * jnp.sum(g2, axis=0)
+    v = factored_v(r_new, c_new, eps1)
+    u = g / jnp.sqrt(v + eps1)
+    u = u / jnp.maximum(1.0, rms(u) / clip_d)
+    alpha = jnp.maximum(eps2, rms(theta)) * lr
+    theta_new = theta - alpha * u
+    return theta_new, r_new, c_new
+
+
+def adafactor_vector_ref(theta, g, v, t, lr,
+                         eps1=ADAFACTOR_EPS1, eps2=ADAFACTOR_EPS2,
+                         clip_d=ADAFACTOR_CLIP_D,
+                         decay_pow=ADAFACTOR_DECAY_POW):
+    """Adafactor step for 1-D/0-D parameters (full second moment)."""
+    beta2_t = 1.0 - jnp.power(t, -decay_pow)
+    v_new = beta2_t * v + (1.0 - beta2_t) * (jnp.square(g) + eps1)
+    u = g / jnp.sqrt(v_new + eps1)
+    u = u / jnp.maximum(1.0, rms(u) / clip_d)
+    alpha = jnp.maximum(eps2, rms(theta)) * lr
+    theta_new = theta - alpha * u
+    return theta_new, v_new

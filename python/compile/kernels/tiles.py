@@ -1,0 +1,89 @@
+# Shared tiling helpers for the Layer-1 Pallas update kernels.
+#
+# Hardware adaptation (DESIGN.md §2): the paper's fused CUDA update becomes a
+# row-tiled streaming kernel. Each grid step owns a (block_m, n) stripe of
+# the parameter/gradient matrix in VMEM; the row-factor r is blocked with the
+# stripe, while the column-factor c and the scalar statistics are "revisited"
+# blocks accumulated across the sequential grid — the Pallas idiom for the
+# cross-threadblock reductions the GPU version would do with atomics.
+#
+# All kernels run with interpret=True: CPU PJRT cannot execute Mosaic
+# custom-calls, and interpret-mode lowering turns the grid into plain HLO
+# control flow that the Rust runtime executes directly (see
+# /opt/xla-example/README.md).
+
+import jax
+from jax.experimental import pallas as pl
+
+# Default row-block target. 128 rows x n cols x 4 B stays well under a 16 MB
+# VMEM budget for every matrix shape in our presets (n <= 2048 -> 1 MB/stripe)
+# while keeping the sequential grid short in interpret mode.
+# ADALOMO_BLOCK_M overrides it for the perf pass's block-shape sweep
+# (EXPERIMENTS.md §Perf).
+import os
+
+DEFAULT_BLOCK_M = int(os.environ.get("ADALOMO_BLOCK_M", "128"))
+
+# Matrices smaller than this are not worth a kernel launch pipeline; callers
+# fall back to the pure-jnp reference (identical math) below this size.
+MIN_KERNEL_ELEMS = 2
+
+
+def choose_block_m(m, target=DEFAULT_BLOCK_M):
+    """Largest divisor of m that is <= target.
+
+    Non-divisor blocks would exercise Pallas' out-of-bounds padding
+    semantics, which interpret mode does not guarantee to be zero-filled —
+    so every caller snaps its requested block to a divisor (kernels pass
+    their block_m through this function).
+    """
+    if m <= target:
+        return m
+    for d in range(target, 0, -1):
+        if m % d == 0:
+            return d
+    return 1  # unreachable: 1 divides m
+
+
+def row_grid(m, block_m):
+    return (m // block_m,)
+
+
+def stripe_spec(block_m, n):
+    """BlockSpec for a (block_m, n) row stripe of an (m, n) matrix."""
+    return pl.BlockSpec((block_m, n), lambda i: (i, 0))
+
+
+def rowvec_spec(block_m):
+    """BlockSpec for the (block_m,) slice of a length-m row vector."""
+    return pl.BlockSpec((block_m,), lambda i: (i,))
+
+
+def colvec_spec(n):
+    """BlockSpec for a full length-n column vector, revisited by every grid
+    step (index map is constant -> accumulation target)."""
+    return pl.BlockSpec((n,), lambda i: (0,))
+
+
+def scalar_spec(k):
+    """BlockSpec for a small (k,) auxiliary/statistics vector, revisited by
+    every grid step."""
+    return pl.BlockSpec((k,), lambda i: (0,))
+
+
+def pallas_call(kernel, *, grid, in_specs, out_specs, out_shape):
+    """pl.pallas_call pinned to interpret mode (see module docstring)."""
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )
+
+
+def f32(shape):
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)

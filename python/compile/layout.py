@@ -1,0 +1,101 @@
+# Training-state blob layout.
+#
+# Every AOT entry point exchanges model state with the Rust coordinator as a
+# SINGLE flat f32 array ("blob"): parameters first, then optimizer state,
+# then an 8-slot metrics region. A single-array root means PJRT hands Rust
+# one non-tuple output buffer per step, which feeds straight back into the
+# next step via execute_b — the hot path never leaves the device and never
+# decomposes tuples on the host.
+#
+# The layout (segment name/kind/shape/offset) is serialized into
+# artifacts/manifest.json; the Rust side uses it for initialization,
+# checkpointing, ZeRO-3 shard planning and the memory simulator.
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+METRIC_SLOTS = 8
+# Metric slot indices (shared contract with rust/src/runtime/metrics).
+M_LOSS = 0      # mean loss over counted tokens
+M_TOKENS = 1    # number of loss-counted tokens in the batch
+M_CORRECT = 2   # correct next-token predictions among counted tokens
+M_GNORM = 3     # global gradient norm (pre-clipping)
+
+KIND_PARAM = "param"      # trainable parameter
+KIND_FROZEN = "frozen"    # present in the blob, never updated (LoRA base)
+KIND_STATE = "state"      # optimizer state
+KIND_METRIC = "metric"
+
+
+@dataclass
+class Segment:
+    name: str
+    kind: str
+    shape: tuple
+    offset: int
+
+    @property
+    def size(self):
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def build_segments(param_specs, state_specs):
+    """Assemble the blob layout.
+
+    param_specs: [(name, shape, kind)] with kind in {param, frozen};
+    state_specs: [(name, shape)].
+    """
+    segs, off = [], 0
+    for name, shape, kind in param_specs:
+        s = Segment(name, kind, tuple(shape), off)
+        segs.append(s)
+        off += s.size
+    for name, shape in state_specs:
+        s = Segment(name, KIND_STATE, tuple(shape), off)
+        segs.append(s)
+        off += s.size
+    segs.append(Segment("metrics", KIND_METRIC, (METRIC_SLOTS,), off))
+    return segs
+
+
+def blob_len(segs):
+    last = segs[-1]
+    return last.offset + last.size
+
+
+def params_len(segs):
+    """Length of the leading parameter region (param + frozen kinds)."""
+    n = 0
+    for s in segs:
+        if s.kind in (KIND_PARAM, KIND_FROZEN):
+            n += s.size
+        else:
+            break
+    return n
+
+
+def unpack(blob, segs):
+    """blob (f32[blob_len]) -> dict name -> array of segment shape."""
+    out = {}
+    for s in segs:
+        flat = jnp.ravel(blob)[s.offset:s.offset + s.size]
+        out[s.name] = jnp.reshape(flat, s.shape)
+    return out
+
+
+def pack(tensors, segs):
+    """dict name -> array back into the flat blob (inverse of unpack)."""
+    parts = [jnp.reshape(tensors[s.name], (-1,)) for s in segs]
+    return jnp.concatenate(parts)
+
+
+def segments_json(segs):
+    return [
+        {"name": s.name, "kind": s.kind, "shape": list(s.shape),
+         "offset": s.offset, "size": s.size}
+        for s in segs
+    ]

@@ -1,0 +1,34 @@
+# Loss / metric functions shared by the train, eval and toy-2D entries.
+
+import jax
+import jax.numpy as jnp
+
+PAD_ID = 0  # byte 0 never occurs in the synthetic corpora; used as ignore-id
+
+
+def lm_loss(logits, y):
+    """Causal LM cross-entropy with PAD_ID masking.
+
+    logits: (B, T, V); y: (B, T) int32 targets (next tokens).
+    Returns (mean_loss, counted_tokens, correct) — all f32 scalars.
+    """
+    mask = (y != PAD_ID).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(picked * mask) / n
+    pred = jnp.argmax(logits, axis=-1).astype(y.dtype)
+    correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+    return loss, jnp.sum(mask), correct
+
+
+def toy2d(xy):
+    """The Appendix-A landscape:
+    f(x, y) = x^2 + y^2 - 2 exp(-5[(x-1)^2 + y^2]) - 3 exp(-5[(x+1)^2 + y^2]).
+
+    Global optimum near (-1, 0) (the deeper well), local optimum near (1, 0).
+    """
+    x, y = xy[0], xy[1]
+    return (x * x + y * y
+            - 2.0 * jnp.exp(-5.0 * ((x - 1.0) ** 2 + y * y))
+            - 3.0 * jnp.exp(-5.0 * ((x + 1.0) ** 2 + y * y)))

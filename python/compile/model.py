@@ -1,0 +1,218 @@
+# Layer-2: LLaMA-architecture decoder-only transformer in pure JAX.
+#
+# The paper trains LLaMA-7B..65B (instruction tuning / further pre-training)
+# and a 1.1 B TinyLlama-architecture model (from-scratch pre-training). This
+# module implements the same architecture family — RMSNorm, rotary position
+# embeddings, causal multi-head attention, SwiGLU FFN, no biases, untied
+# output head — parameterized so the experiment presets (DESIGN.md §4
+# substitutions) pick laptop-scale sizes while the Rust memory simulator
+# uses the analytic 1.1B/7B/13B/30B/65B presets.
+#
+# Parameters live in a flat {name: array} dict whose deterministic order is
+# defined by param_specs(); layout.py packs them into the runtime blob.
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch_size: int
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+# Experiment presets (runnable on CPU-PJRT). The four sizes mirror the
+# paper's 7B/13B/30B/65B ladder in *relative* scale; vocab 256 = raw bytes.
+PRESETS = {
+    "nano": ModelConfig("nano", 256, 64, 2, 4, 176, 64, 8),
+    "micro": ModelConfig("micro", 256, 128, 4, 4, 352, 128, 8),
+    "tiny": ModelConfig("tiny", 256, 256, 6, 8, 704, 128, 8),
+    "small": ModelConfig("small", 256, 512, 8, 8, 1408, 256, 4),
+    # ~85M-parameter preset for the end-to-end driver; artifacts are built
+    # on demand (python -m compile.aot --presets base100m).
+    "base100m": ModelConfig("base100m", 256, 768, 12, 12, 2048, 256, 4),
+}
+
+# Analytic-only presets (memory simulator / Table 1 / Fig 5 / Table 8):
+# (d_model, n_layers, n_heads, d_ff, vocab) of the LLaMA family.
+ANALYTIC_PRESETS = {
+    "llama1b1": (2048, 22, 32, 5632, 32000),
+    "llama7b": (4096, 32, 32, 11008, 32000),
+    "llama13b": (5120, 40, 40, 13824, 32000),
+    "llama30b": (6656, 60, 52, 17920, 32000),
+    "llama65b": (8192, 80, 64, 22016, 32000),
+}
+
+LORA_DEFAULT_RANK = 8
+LORA_SCALE = 2.0  # alpha / rank with alpha = 16, rank = 8
+
+
+def param_specs(cfg: ModelConfig):
+    """Deterministic [(name, shape)] order for the base model parameters."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs = [("embed", (v, d))]
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        specs += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    specs += [("final_norm", (d,)), ("head", (d, v))]
+    return specs
+
+
+def lora_specs(cfg: ModelConfig, rank=LORA_DEFAULT_RANK):
+    """Adapter parameters (applied to wq and wv, the standard LoRA targets)."""
+    d = cfg.d_model
+    specs = []
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        specs += [
+            (p + "wq_a", (d, rank)), (p + "wq_b", (rank, d)),
+            (p + "wv_a", (d, rank)), (p + "wv_b", (rank, d)),
+        ]
+    return specs
+
+
+def n_params(cfg: ModelConfig):
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize parameters from an int32 seed (traceable: used inside the
+    AOT init_* entries so the Rust runtime owns reproducibility)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    residual_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for i, (name, shape) in enumerate(param_specs(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("norm"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:
+            w = 0.02 * jax.random.normal(k, shape, jnp.float32)
+            if name.endswith((".wo", ".w_down")):
+                w = w * residual_scale
+            out[name] = w
+    return out
+
+
+def init_lora(cfg: ModelConfig, seed, rank=LORA_DEFAULT_RANK):
+    """LoRA init: A ~ N(0, 0.02), B = 0 (adapter starts as identity)."""
+    key = jax.random.PRNGKey(seed + 1)
+    out = {}
+    for i, (name, shape) in enumerate(lora_specs(cfg, rank)):
+        if name.endswith("_b"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            out[name] = 0.02 * jax.random.normal(
+                jax.random.fold_in(key, i), shape, jnp.float32)
+    return out
+
+
+def rms_norm(x, gain, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope_tables(cfg: ModelConfig, tt):
+    """cos/sin tables of shape (tt, d_head/2)."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(tt, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, T, dh); rotate pairs (x1, x2) -> (x1 cos - x2 sin, ...)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg, h, t, prefix, lora, lora_scale):
+    b, tt, d = h.shape
+    hh, dh = cfg.n_heads, cfg.d_head
+
+    def proj(x, w, a_name, b_name):
+        y = x @ t[w]
+        if lora is not None and a_name in lora:
+            y = y + lora_scale * ((x @ lora[a_name]) @ lora[b_name])
+        return y
+
+    q = proj(h, prefix + "wq", prefix + "wq_a", prefix + "wq_b")
+    k = h @ t[prefix + "wk"]
+    v = proj(h, prefix + "wv", prefix + "wv_a", prefix + "wv_b")
+
+    def heads(x):
+        return jnp.transpose(jnp.reshape(x, (b, tt, hh, dh)), (0, 2, 1, 3))
+
+    q, k, v = heads(q), heads(k), heads(v)
+    cos, sin = rope_tables(cfg, tt)
+    cos, sin = cos[None, None], sin[None, None]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((tt, tt), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, jnp.float32(-1e30))
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = jnp.reshape(jnp.transpose(out, (0, 2, 1, 3)), (b, tt, d))
+    return out @ t[prefix + "wo"]
+
+
+def _ffn(t, h, prefix):
+    gate = jax.nn.silu(h @ t[prefix + "w_gate"])
+    up = h @ t[prefix + "w_up"]
+    return (gate * up) @ t[prefix + "w_down"]
+
+
+def forward(cfg: ModelConfig, tensors, x, lora=None, lora_scale=LORA_SCALE):
+    """Token ids x (B, T) int32 -> logits (B, T, vocab) f32."""
+    h = tensors["embed"][x]
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        h = h + _attention(cfg, rms_norm(h, tensors[p + "attn_norm"]),
+                           tensors, p, lora, lora_scale)
+        h = h + _ffn(tensors, rms_norm(h, tensors[p + "ffn_norm"]), p)
+    h = rms_norm(h, tensors["final_norm"])
+    return h @ tensors["head"]
+
+
+def merge_lora(cfg: ModelConfig, tensors, lora, lora_scale=LORA_SCALE):
+    """Fold adapters into the base weights (wq/wv += scale * A @ B) so the
+    shared eval entries can run on a plain parameter blob."""
+    merged = dict(tensors)
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        merged[p + "wq"] = tensors[p + "wq"] + lora_scale * (
+            lora[p + "wq_a"] @ lora[p + "wq_b"])
+        merged[p + "wv"] = tensors[p + "wv"] + lora_scale * (
+            lora[p + "wv_a"] @ lora[p + "wv_b"])
+    return merged

@@ -1,0 +1,43 @@
+# Functional per-parameter optimizer library (Layer 2).
+#
+# Each optimizer module exposes:
+#   state_specs(shape) -> [(suffix, shape)]      optimizer-state layout
+#   update(theta, g, states, t, lr, wd, use_kernels) -> (theta', states')
+# with `states` a list in state_specs order, `t` the 1-based f32 step and
+# `lr` the already-scheduled learning rate (schedules live in the Rust
+# coordinator, Layer 3). 2-D parameters route through the Pallas kernels
+# when use_kernels=True; vectors use the jnp reference math.
+
+from . import (adafactor, adalomo, adamw, lomo, sgd, sgd_momentum,
+               sgd_variance)
+
+REGISTRY = {
+    "sgd": sgd,
+    "sgd_momentum": sgd_momentum,
+    "sgd_variance": sgd_variance,
+    "adamw": adamw,
+    "adafactor": adafactor,
+    "lomo": lomo,
+    "adalomo": adalomo,
+}
+
+# Optimizers whose fused-backward formulation needs no other parameter's
+# gradient (the LOMO family property, paper §2.1/§3.2).
+FUSABLE = {"sgd", "sgd_variance", "lomo", "adalomo", "adafactor",
+           "sgd_momentum", "adamw"}
+
+
+def get(name):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def state_specs_for(opt_name, param_specs):
+    """Flattened optimizer-state specs for a list of (name, shape) params."""
+    mod = get(opt_name)
+    out = []
+    for pname, shape in param_specs:
+        for suffix, sshape in mod.state_specs(shape):
+            out.append((f"{pname}@{suffix}", sshape))
+    return out

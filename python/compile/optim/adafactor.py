@@ -1,0 +1,26 @@
+# Adafactor (Shazeer & Stern, 2018): factored second moment, momentum-less,
+# update clipping, relative step size. The memory-efficient baseline of
+# paper Table 5 / Fig. 4 / Fig. 9-10, and the source of AdaLomo's NMF
+# factorization. `lr` is rho_t (the schedule), applied relative to RMS(theta).
+
+from ..kernels import adafactor_update, ref
+
+
+def state_specs(shape):
+    if len(shape) == 2:
+        return [("r", (shape[0],)), ("c", (shape[1],))]
+    return [("v", shape)]
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    del wd
+    if theta.ndim == 2:
+        r, c = states
+        if use_kernels:
+            theta_new, r_new, c_new = adafactor_update.adafactor_update(
+                theta, g, r, c, t, lr)
+        else:
+            theta_new, r_new, c_new = ref.adafactor_ref(theta, g, r, c, t, lr)
+        return theta_new, [r_new, c_new]
+    theta_new, v_new = ref.adafactor_vector_ref(theta, g, states[0], t, lr)
+    return theta_new, [v_new]

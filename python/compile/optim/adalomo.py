@@ -1,0 +1,30 @@
+# AdaLomo (the paper's contribution, Algorithm 1): factored second moment
+# (r, c per matrix), adaptive per-parameter learning rate, grouped update
+# normalization — all computable per-parameter inside one fused backward.
+#
+# `no_sqrt=True` switches to the literal Algorithm-1 line-10 form
+# u = g / v_hat (see DESIGN.md "Faithfulness notes").
+
+from ..kernels import adalomo_update, ref
+
+
+def state_specs(shape):
+    if len(shape) == 2:
+        return [("r", (shape[0],)), ("c", (shape[1],))]
+    return [("v", shape)]
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True, no_sqrt=False):
+    del wd
+    if theta.ndim == 2:
+        r, c = states
+        if use_kernels and not no_sqrt:
+            theta_new, r_new, c_new = adalomo_update.adalomo_update(
+                theta, g, r, c, t, lr)
+        else:
+            theta_new, r_new, c_new = ref.adalomo_ref(
+                theta, g, r, c, t, lr, no_sqrt=no_sqrt)
+        return theta_new, [r_new, c_new]
+    theta_new, v_new = ref.adalomo_vector_ref(
+        theta, g, states[0], t, lr, no_sqrt=no_sqrt)
+    return theta_new, [v_new]

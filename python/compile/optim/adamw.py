@@ -1,0 +1,19 @@
+# AdamW (paper Eq. 2 + decoupled weight decay; Loshchilov & Hutter, 2019) —
+# the prevailing LLM optimizer the paper benchmarks against. wd = 0 gives
+# plain Adam (the Fig. 1 / Fig. 6 arm).
+
+from ..kernels import adamw_update, ref
+
+
+def state_specs(shape):
+    return [("m", shape), ("v", shape)]
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    m, v = states
+    if use_kernels and theta.ndim == 2:
+        theta_new, m_new, v_new = adamw_update.adamw_update(
+            theta, g, m, v, t, lr, wd=wd)
+    else:
+        theta_new, m_new, v_new = ref.adamw_ref(theta, g, m, v, t, lr, wd=wd)
+    return theta_new, [m_new, v_new]

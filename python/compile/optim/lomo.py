@@ -1,0 +1,15 @@
+# LOMO (Lv et al., 2023): plain SGD fused into the backward pass (paper
+# Eq. 1). Optimizer-state-free; the memory baseline AdaLomo improves on.
+
+from ..kernels import lomo_update, ref
+
+
+def state_specs(shape):
+    return []
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    del states, t, wd
+    if use_kernels and theta.ndim == 2:
+        return lomo_update.lomo_update(theta, g, lr), []
+    return ref.lomo_ref(theta, g, lr), []

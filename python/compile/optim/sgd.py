@@ -1,0 +1,11 @@
+# Plain SGD: theta' = theta - lr * g. No optimizer state. The from-scratch
+# pre-training baseline in paper Fig. 4 / Table 7.
+
+
+def state_specs(shape):
+    return []
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    del states, t, wd, use_kernels
+    return theta - lr * g, []

@@ -1,0 +1,14 @@
+# SGD with first-moment estimation only (paper Eq. 3) — the "momentum"
+# ablation arm of Fig. 1 / Fig. 6.
+
+from ..kernels import ref
+
+
+def state_specs(shape):
+    return [("m", shape)]
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    del wd, use_kernels
+    theta_new, m_new = ref.sgd_momentum_ref(theta, g, states[0], t, lr)
+    return theta_new, [m_new]

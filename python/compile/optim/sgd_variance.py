@@ -1,0 +1,14 @@
+# SGD with second-moment estimation only (paper Eq. 4) — the "variance"
+# ablation arm of Fig. 1 / Fig. 6, the analysis that motivates AdaLomo.
+
+from ..kernels import ref
+
+
+def state_specs(shape):
+    return [("v", shape)]
+
+
+def update(theta, g, states, t, lr, wd, use_kernels=True):
+    del wd, use_kernels
+    theta_new, v_new = ref.sgd_variance_ref(theta, g, states[0], t, lr)
+    return theta_new, [v_new]

@@ -1,0 +1,337 @@
+# Entry-point builders: the traced functions that aot.py lowers to HLO.
+#
+# Every entry returns a SINGLE array (no tuples) so the Rust runtime gets
+# exactly one non-tuple output buffer per execution — see layout.py.
+#
+# Entry kinds:
+#   init_<preset>_<opt>(seed i32[]) -> blob
+#   train_step_<preset>_<opt>[(_gnorm)](blob, x, y, sched f32[4]) -> blob'
+#   fused_<preset>_<opt>_g<k>(frozen, accum, x, y, sched) -> accum'
+#   extract_params_<preset>_<opt>(blob) -> params_blob
+#   read_metrics_<preset>_<opt>(blob) -> f32[8]
+#   eval_<preset>(params_blob, x, y) -> f32[8]
+#   next_logits_<preset>(params_blob, x) -> f32[B, V]
+#   merge_lora_<preset>(blob) -> params_blob
+#   toy2d_<opt>(state, sched) -> state'
+#
+# sched = [lr, t, wd, clip]: the LR schedule, step count, weight decay and
+# gradient-clipping threshold all live in the Rust coordinator (Layer 3).
+
+import jax
+import jax.numpy as jnp
+
+from . import layout, losses, model, optim
+
+LORA_OPT = "adamw"  # adapters are trained with AdamW (paper Table 3 setup)
+
+
+def param_layout(cfg, opt_name, lora_rank=0):
+    """Blob segments for (preset, optimizer). LoRA freezes the base model
+    and appends adapters + their AdamW state."""
+    if lora_rank:
+        base = [(n, s, layout.KIND_FROZEN) for n, s in model.param_specs(cfg)]
+        adapters = [(n, s, layout.KIND_PARAM)
+                    for n, s in model.lora_specs(cfg, lora_rank)]
+        states = optim.state_specs_for(LORA_OPT, model.lora_specs(cfg, lora_rank))
+        return layout.build_segments(base + adapters, states)
+    params = [(n, s, layout.KIND_PARAM) for n, s in model.param_specs(cfg)]
+    states = optim.state_specs_for(opt_name, model.param_specs(cfg))
+    return layout.build_segments(params, states)
+
+
+def _trainable(segs):
+    return [s for s in segs if s.kind == layout.KIND_PARAM]
+
+
+def _states_of(segs, pname):
+    prefix = pname + "@"
+    return [s for s in segs
+            if s.kind == layout.KIND_STATE and s.name.startswith(prefix)]
+
+
+def _global_norm2(grads):
+    return sum(jnp.sum(jnp.square(g)) for g in grads.values())
+
+
+def _apply_updates(opt_name, segs, tensors, grads, t, lr, wd,
+                   use_kernels=True, no_sqrt=False, only=None):
+    """Run the optimizer over every trainable leaf; returns updated tensor
+    dict (params + states)."""
+    mod = optim.get(opt_name)
+    new = dict(tensors)
+    for seg in _trainable(segs):
+        if only is not None and seg.name not in only:
+            continue
+        sstates = _states_of(segs, seg.name)
+        states = [tensors[s.name] for s in sstates]
+        kwargs = {"use_kernels": use_kernels}
+        if opt_name == "adalomo":
+            kwargs["no_sqrt"] = no_sqrt
+        theta_new, states_new = mod.update(
+            tensors[seg.name], grads[seg.name], states, t, lr, wd, **kwargs)
+        new[seg.name] = theta_new
+        for s, arr in zip(sstates, states_new):
+            new[s.name] = arr
+    return new
+
+
+def make_init(cfg, opt_name, lora_rank=0, seed_offset=0):
+    segs = param_layout(cfg, opt_name, lora_rank)
+
+    def init(seed):
+        seed = seed + seed_offset
+        tensors = {}
+        base = model.init_params(cfg, seed)
+        tensors.update(base)
+        if lora_rank:
+            tensors.update(model.init_lora(cfg, seed, lora_rank))
+        for s in segs:
+            if s.kind == layout.KIND_STATE:
+                tensors[s.name] = jnp.zeros(s.shape, jnp.float32)
+        tensors["metrics"] = jnp.zeros((layout.METRIC_SLOTS,), jnp.float32)
+        return layout.pack(tensors, segs)
+
+    return init, segs
+
+
+def _loss_and_grads(cfg, segs, tensors, x, y, lora_rank):
+    """value_and_grad over the trainable leaves only."""
+    trainable = _trainable(segs)
+    tr0 = {s.name: tensors[s.name] for s in trainable}
+
+    def loss_fn(tr):
+        full = dict(tensors)
+        full.update(tr)
+        if lora_rank:
+            lora = {n: full[n] for n, _ in model.lora_specs(cfg, lora_rank)}
+            logits = model.forward(cfg, full, x, lora=lora)
+        else:
+            logits = model.forward(cfg, full, x)
+        loss, tokens, correct = losses.lm_loss(logits, y)
+        return loss, (tokens, correct)
+
+    (loss, (tokens, correct)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(tr0)
+    return loss, tokens, correct, grads
+
+
+def make_train_step(cfg, opt_name, *, gnorm=False, lora_rank=0,
+                    use_kernels=True, no_sqrt=False):
+    """The monolithic train step (semantically identical to LOMO's fused
+    backward: all gradients taken at theta_t — see DESIGN.md §4)."""
+    segs = param_layout(cfg, opt_name, lora_rank)
+    upd_opt = LORA_OPT if lora_rank else opt_name
+
+    def step(blob, x, y, sched):
+        lr, t, wd, clip = sched[0], sched[1], sched[2], sched[3]
+        tensors = layout.unpack(blob, segs)
+        loss, tokens, correct, grads = _loss_and_grads(
+            cfg, segs, tensors, x, y, lora_rank)
+        gn2 = _global_norm2(grads)
+        gn = jnp.sqrt(gn2)
+        if gnorm:
+            # Global gradient-norm clipping: the two-backward-pass LOMO path
+            # (paper §2.1). Numerically one program; the memory/time cost of
+            # the second backward is accounted by memsim + the coordinator.
+            scale = clip / jnp.maximum(gn, clip)
+            grads = {k: g * scale for k, g in grads.items()}
+        new = _apply_updates(upd_opt, segs, tensors, grads, t, lr, wd,
+                             use_kernels=use_kernels, no_sqrt=no_sqrt)
+        m = jnp.zeros((layout.METRIC_SLOTS,), jnp.float32)
+        m = m.at[layout.M_LOSS].set(loss)
+        m = m.at[layout.M_TOKENS].set(tokens)
+        m = m.at[layout.M_CORRECT].set(correct)
+        m = m.at[layout.M_GNORM].set(gn)
+        new["metrics"] = m
+        return layout.pack(new, segs)
+
+    return step, segs
+
+
+def fused_groups(cfg):
+    """Parameter groups in backward order: head block, layers L-1..0, embed.
+    Mirrors the order LOMO visits gradients during backpropagation."""
+    groups = [["head", "final_norm"]]
+    for l in reversed(range(cfg.n_layers)):
+        p = f"l{l}."
+        groups.append([p + n for n in (
+            "attn_norm", "wq", "wk", "wv", "wo",
+            "ffn_norm", "w_gate", "w_up", "w_down")])
+    groups.append(["embed"])
+    return groups
+
+
+def make_fused_group_step(cfg, opt_name, group_index, use_kernels=True):
+    """One fused-backward group program.
+
+    Gradients are computed from `frozen` (theta_t, constant across the whole
+    fused step) and updates are written into `accum`; the Rust coordinator
+    chains the G programs and then drops the frozen buffer. Because every
+    group's gradient is evaluated at theta_t, the chained result is exactly
+    the monolithic step (integration_coordinator asserts this), while XLA
+    dead-code-eliminates every other group's weight gradients from each
+    program — reproducing LOMO's "at most one group's gradients live"
+    memory profile at program granularity.
+    """
+    segs = param_layout(cfg, opt_name)
+    group = set(fused_groups(cfg)[group_index])
+
+    def step(frozen, accum, x, y, sched):
+        lr, t, wd = sched[0], sched[1], sched[2]
+        tensors = layout.unpack(frozen, segs)
+        acc = layout.unpack(accum, segs)
+        trainable = [s for s in _trainable(segs) if s.name in group]
+        tr0 = {s.name: tensors[s.name] for s in trainable}
+
+        def loss_fn(tr):
+            full = dict(tensors)
+            full.update(tr)
+            logits = model.forward(cfg, full, x)
+            loss, tokens, correct = losses.lm_loss(logits, y)
+            return loss, (tokens, correct)
+
+        (loss, (tokens, correct)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(tr0)
+        new = _apply_updates(opt_name, segs, tensors, grads, t, lr, wd,
+                             use_kernels=use_kernels, only=group)
+        out = dict(acc)
+        for s in trainable:
+            out[s.name] = new[s.name]
+            for st in _states_of(segs, s.name):
+                out[st.name] = new[st.name]
+        m = acc["metrics"]
+        m = m.at[layout.M_LOSS].set(loss)
+        m = m.at[layout.M_TOKENS].set(tokens)
+        m = m.at[layout.M_CORRECT].set(correct)
+        out["metrics"] = m
+        return layout.pack(out, segs)
+
+    return step, segs
+
+
+def make_extract_params(cfg, opt_name, lora_rank=0):
+    segs = param_layout(cfg, opt_name, lora_rank)
+    plen = layout.params_len(segs)
+
+    def extract(blob):
+        return jax.lax.slice(blob, (0,), (plen,))
+
+    return extract, segs
+
+
+def make_read_metrics(cfg, opt_name, lora_rank=0):
+    segs = param_layout(cfg, opt_name, lora_rank)
+    moff = [s for s in segs if s.kind == layout.KIND_METRIC][0].offset
+
+    def read(blob):
+        return jax.lax.slice(blob, (moff,), (moff + layout.METRIC_SLOTS,))
+
+    return read, segs
+
+
+def params_only_segments(cfg):
+    return layout.build_segments(
+        [(n, s, layout.KIND_PARAM) for n, s in model.param_specs(cfg)], [])
+
+
+def make_eval(cfg):
+    """Validation step on a bare parameter blob: [mean_loss, tokens, correct,
+    0...] — the Rust side aggregates sums for perplexity/accuracy."""
+    specs = model.param_specs(cfg)
+
+    def ev(params_blob, x, y):
+        tensors = _unpack_params(params_blob, specs)
+        logits = model.forward(cfg, tensors, x)
+        loss, tokens, correct = losses.lm_loss(logits, y)
+        m = jnp.zeros((layout.METRIC_SLOTS,), jnp.float32)
+        m = m.at[layout.M_LOSS].set(loss)
+        m = m.at[layout.M_TOKENS].set(tokens)
+        m = m.at[layout.M_CORRECT].set(correct)
+        return m
+
+    return ev
+
+
+def make_seq_loss(cfg):
+    """Per-sequence scores for likelihood-based benchmark scoring
+    (lm-eval-harness style): returns (2, B) with row 0 = summed loss over
+    counted tokens and row 1 = counted-token counts, per batch row."""
+    specs = model.param_specs(cfg)
+
+    def sl(params_blob, x, y):
+        tensors = _unpack_params(params_blob, specs)
+        logits = model.forward(cfg, tensors, x)
+        mask = (y != losses.PAD_ID).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        picked = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        loss_sums = -jnp.sum(picked * mask, axis=-1)
+        counts = jnp.sum(mask, axis=-1)
+        return jnp.stack([loss_sums, counts])
+
+    return sl
+
+
+def make_next_logits(cfg):
+    """Last-position logits (B, V) for greedy decoding in the Rust eval
+    harness (synthetic benchmark suite)."""
+    specs = model.param_specs(cfg)
+
+    def nl(params_blob, x):
+        tensors = _unpack_params(params_blob, specs)
+        logits = model.forward(cfg, tensors, x)
+        return logits[:, -1, :]
+
+    return nl
+
+
+def make_merge_lora(cfg, lora_rank):
+    segs = param_layout(cfg, "adamw", lora_rank)
+    specs = model.param_specs(cfg)
+
+    def merge(blob):
+        tensors = layout.unpack(blob, segs)
+        lora = {n: tensors[n] for n, _ in model.lora_specs(cfg, lora_rank)}
+        merged = model.merge_lora(cfg, tensors, lora)
+        flat = [jnp.reshape(merged[n], (-1,)) for n, _ in specs]
+        return jnp.concatenate(flat)
+
+    return merge
+
+
+def _unpack_params(params_blob, specs):
+    out, off = {}, 0
+    for name, shape in specs:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jnp.reshape(
+            jax.lax.slice(params_blob, (off,), (off + n,)), shape)
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Toy 2-D landscape (paper Appendix A / Fig. 6)
+# ---------------------------------------------------------------------------
+
+def toy2d_layout(opt_name):
+    params = [("xy", (2,), layout.KIND_PARAM)]
+    states = optim.state_specs_for(opt_name, [("xy", (2,))])
+    return layout.build_segments(params, states)
+
+
+def make_toy2d_step(opt_name):
+    segs = toy2d_layout(opt_name)
+
+    def step(blob, sched):
+        lr, t = sched[0], sched[1]
+        tensors = layout.unpack(blob, segs)
+        f, grad = jax.value_and_grad(losses.toy2d)(tensors["xy"])
+        new = _apply_updates(opt_name, segs, tensors, {"xy": grad},
+                             t, lr, 0.0, use_kernels=False)
+        m = jnp.zeros((layout.METRIC_SLOTS,), jnp.float32)
+        m = m.at[layout.M_LOSS].set(f)
+        new["metrics"] = m
+        return layout.pack(new, segs)
+
+    return step, segs

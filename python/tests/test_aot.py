@@ -1,0 +1,90 @@
+# AOT pipeline: lowering produces valid single-output HLO text, the entry
+# plan covers every experiment, and the manifest stays consistent with the
+# layouts the runtime will trust.
+
+import json
+import os
+
+import pytest
+
+from compile import aot, layout, model, steps
+
+
+def test_plan_covers_experiments():
+    entries = aot.plan_entries(["nano"], use_kernels=True)
+    names = {e[0] for e in entries}
+    # Table 2 needs every optimizer + lora; Fig 1 the ablation arms.
+    for opt in ["sgd", "sgd_momentum", "sgd_variance", "adamw",
+                "adafactor", "lomo", "adalomo", "lora"]:
+        assert f"train_step_nano_{opt}" in names
+    # Appendix B: gnorm variants.
+    assert "train_step_nano_adalomo_gnorm" in names
+    assert "train_step_nano_lomo_gnorm" in names
+    # Fused groups (nano: L+2 = 4).
+    for k in range(4):
+        assert f"fused_nano_adalomo_g{k}" in names
+    # Shared eval surface.
+    for e in ["eval_nano", "seq_loss_nano", "next_logits_nano",
+              "merge_lora_nano", "init_nano_adalomo",
+              "extract_params_nano_adalomo", "read_metrics_nano_adalomo"]:
+        assert e in names
+    # Fig 6.
+    for opt in aot.TOY2D_OPTS:
+        assert f"toy2d_{opt}" in names
+
+
+def test_lower_entry_produces_hlo_text():
+    cfg = model.PRESETS["nano"]
+    step_fn, segs = steps.make_toy2d_step("sgd")
+    text = aot.lower_entry(
+        "toy2d_sgd", lambda: step_fn,
+        [{"shape": [layout.blob_len(segs)], "dtype": "f32"},
+         {"shape": [4], "dtype": "f32"}])
+    assert "HloModule" in text
+    assert "ROOT" in text
+    del cfg
+
+
+def test_layouts_json_offsets_tile_blob():
+    out = aot.layouts_json(["nano"])
+    for key, rec in out.items():
+        off = 0
+        for seg in rec["segments"]:
+            assert seg["offset"] == off, f"{key}/{seg['name']}"
+            expect = 1
+            for d in seg["shape"]:
+                expect *= d
+            assert seg["size"] == max(expect, 1)
+            off += seg["size"]
+        assert off == rec["blob_len"], key
+        assert rec["params_len"] <= rec["blob_len"]
+
+
+def test_presets_json_param_counts():
+    out = aot.presets_json(["nano", "micro"])
+    for name, rec in out.items():
+        assert rec["n_params"] == model.n_params(model.PRESETS[name])
+        assert rec["fused_groups"] == rec["n_layers"] + 2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "artifacts",
+                                    "manifest.json")),
+    reason="artifacts not built")
+def test_built_manifest_is_consistent():
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["entries"], "manifest has entries"
+    for name, e in manifest["entries"].items():
+        hlo = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(hlo), f"{name}: missing {e['file']}"
+        if e["kind"] == "train_step":
+            lay = manifest["layouts"][e["layout"]]
+            assert e["inputs"][0]["shape"] == [lay["blob_len"]]
+            assert e["output"]["shape"] == [lay["blob_len"]]
+        if e["kind"] == "init":
+            lay = manifest["layouts"][e["layout"]]
+            assert e["output"]["shape"] == [lay["blob_len"]]

@@ -1,0 +1,137 @@
+# Layer-1 correctness: every Pallas kernel against its pure-jnp oracle,
+# with hypothesis sweeping shapes and magnitudes. This is the CORE
+# correctness signal for the compute layer.
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (adafactor_update, adalomo_update, adamw_update,
+                             lomo_update, ref, tiles)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape), jnp.float32)
+
+
+@st.composite
+def matrix_case(draw):
+    m = draw(st.integers(2, 96))
+    n = draw(st.integers(2, 64))
+    t = draw(st.integers(1, 50))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lr = draw(st.sampled_from([1e-4, 1e-3, 1e-2, 0.3]))
+    return m, n, t, seed, lr
+
+
+@given(matrix_case())
+@settings(**SETTINGS)
+def test_adalomo_kernel_matches_ref(case):
+    m, n, t, seed, lr = case
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, (m, n), 0.1)
+    g = rand(rng, (m, n), 0.02)
+    r = jnp.asarray(rng.uniform(0, 1e-4, (m,)), jnp.float32)
+    c = jnp.asarray(rng.uniform(0, 1e-4, (n,)), jnp.float32)
+    got = adalomo_update.adalomo_update(theta, g, r, c, float(t), lr)
+    want = ref.adalomo_ref(theta, g, r, c, float(t), lr)
+    for a, b, name in zip(got, want, ["theta", "r", "c"]):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=1e-7, err_msg=name)
+
+
+@given(matrix_case())
+@settings(**SETTINGS)
+def test_adamw_kernel_matches_ref(case):
+    m, n, t, seed, lr = case
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, (m, n), 0.1)
+    g = rand(rng, (m, n), 0.02)
+    mm = rand(rng, (m, n), 0.01)
+    vv = jnp.asarray(rng.uniform(0, 1e-4, (m, n)), jnp.float32)
+    got = adamw_update.adamw_update(theta, g, mm, vv, float(t), lr, wd=0.01)
+    want = ref.adamw_ref(theta, g, mm, vv, float(t), lr, wd=0.01)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=5e-8)
+
+
+@given(matrix_case())
+@settings(**SETTINGS)
+def test_adafactor_kernel_matches_ref(case):
+    m, n, t, seed, lr = case
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, (m, n), 0.1)
+    g = rand(rng, (m, n), 0.02)
+    r = jnp.asarray(rng.uniform(0, 1e-4, (m,)), jnp.float32)
+    c = jnp.asarray(rng.uniform(0, 1e-4, (n,)), jnp.float32)
+    got = adafactor_update.adafactor_update(theta, g, r, c, float(t), lr)
+    want = ref.adafactor_ref(theta, g, r, c, float(t), lr)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=5e-8)
+
+
+@given(matrix_case())
+@settings(**SETTINGS)
+def test_lomo_kernel_matches_ref(case):
+    m, n, _, seed, lr = case
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, (m, n), 0.1)
+    g = rand(rng, (m, n), 0.02)
+    got = lomo_update.lomo_update(theta, g, lr)
+    np.testing.assert_allclose(got, ref.lomo_ref(theta, g, lr), rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("block_m", [1, 2, 16, 37, 128])
+def test_adalomo_block_size_invariance(block_m):
+    # The kernel result must not depend on the tiling choice. Requested
+    # blocks are snapped to divisors of m (non-divisor tiles would hit
+    # interpret-mode OOB padding, which is not zero-guaranteed).
+    rng = np.random.default_rng(7)
+    m, n = 74, 33  # awkward m: snapping must still cover all rows
+    theta = rand(rng, (m, n), 0.1)
+    g = rand(rng, (m, n), 0.05)
+    r = jnp.zeros((m,), jnp.float32)
+    c = jnp.zeros((n,), jnp.float32)
+    got = adalomo_update.adalomo_update(
+        theta, g, r, c, 1.0, 1e-3, block_m=min(block_m, m))
+    want = ref.adalomo_ref(theta, g, r, c, 1.0, 1e-3)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=1e-7)
+
+
+def test_choose_block_m_divides():
+    for m in [1, 2, 7, 64, 100, 128, 129, 1000, 4096]:
+        b = tiles.choose_block_m(m)
+        assert m % b == 0
+        assert b <= max(m, tiles.DEFAULT_BLOCK_M)
+
+
+def test_adalomo_huge_gradient_is_clipped():
+    # Grouped normalization caps the applied update at
+    # lr * max(eps, RMS(theta)) per RMS unit, whatever the gradient scale.
+    rng = np.random.default_rng(3)
+    theta = rand(rng, (32, 16), 0.1)
+    g = rand(rng, (32, 16), 1e6)
+    r = jnp.zeros((32,), jnp.float32)
+    c = jnp.zeros((16,), jnp.float32)
+    theta_new, _, _ = adalomo_update.adalomo_update(
+        theta, g, r, c, 1.0, 1e-3)
+    delta = np.asarray(theta_new - theta)
+    rms_delta = np.sqrt((delta ** 2).mean())
+    rms_theta = float(jnp.sqrt(jnp.mean(theta ** 2)))
+    assert rms_delta <= 1e-3 * max(1e-3, rms_theta) * 1.01
+
+
+def test_adalomo_zero_grad_zero_update():
+    rng = np.random.default_rng(4)
+    theta = rand(rng, (8, 8), 0.1)
+    g = jnp.zeros((8, 8), jnp.float32)
+    r = jnp.zeros((8,), jnp.float32)
+    c = jnp.zeros((8,), jnp.float32)
+    theta_new, r_new, c_new = adalomo_update.adalomo_update(
+        theta, g, r, c, 1.0, 1e-2)
+    np.testing.assert_allclose(theta_new, theta, atol=1e-7)
+    np.testing.assert_allclose(r_new, 0.0)
+    np.testing.assert_allclose(c_new, 0.0)

@@ -1,0 +1,135 @@
+# Layer-2 model: shapes, causality, normalization and LoRA semantics.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import losses, model
+
+
+def cfg():
+    return model.PRESETS["nano"]
+
+
+def params(seed=0):
+    return model.init_params(cfg(), seed)
+
+
+def tokens(rng, b, t):
+    return jnp.asarray(rng.integers(1, 256, (b, t)), jnp.int32)
+
+
+def test_forward_shape_and_finite():
+    c = cfg()
+    rng = np.random.default_rng(0)
+    x = tokens(rng, 2, 16)
+    logits = model.forward(c, params(), x)
+    assert logits.shape == (2, 16, c.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality_no_future_leakage():
+    # Changing token at position k must not change logits at positions < k.
+    c = cfg()
+    rng = np.random.default_rng(1)
+    p = params()
+    x = tokens(rng, 1, 12)
+    k = 7
+    x2 = x.at[0, k].set((int(x[0, k]) % 255) + 1)
+    l1 = model.forward(c, p, x)
+    l2 = model.forward(c, p, x2)
+    np.testing.assert_allclose(l1[0, :k], l2[0, :k], atol=1e-5)
+    assert not np.allclose(l1[0, k:], l2[0, k:], atol=1e-5)
+
+
+def test_param_specs_order_deterministic():
+    s1 = model.param_specs(cfg())
+    s2 = model.param_specs(cfg())
+    assert s1 == s2
+    assert s1[0][0] == "embed"
+    assert s1[-1][0] == "head"
+    assert model.n_params(cfg()) == sum(
+        int(np.prod(shape)) for _, shape in s1)
+
+
+def test_init_is_seed_deterministic():
+    a = model.init_params(cfg(), 5)
+    b = model.init_params(cfg(), 5)
+    c2 = model.init_params(cfg(), 6)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.allclose(a[k], c2[k]) for k in a if k != "final_norm")
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 10, (4, 8)),
+                    jnp.float32)
+    y = model.rms_norm(x, jnp.ones((8,), jnp.float32))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm():
+    c = cfg()
+    cos, sin = model.rope_tables(c, 16)
+    x = jnp.asarray(
+        np.random.default_rng(3).normal(0, 1, (1, c.n_heads, 16, c.d_head)),
+        jnp.float32)
+    y = model.apply_rope(x, cos[None, None], sin[None, None])
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+def test_rope_position_zero_is_identity():
+    c = cfg()
+    cos, sin = model.rope_tables(c, 4)
+    x = jnp.asarray(
+        np.random.default_rng(4).normal(0, 1, (1, 1, 4, c.d_head)),
+        jnp.float32)
+    y = model.apply_rope(x, cos[None, None], sin[None, None])
+    np.testing.assert_allclose(y[0, 0, 0], x[0, 0, 0], atol=1e-6)
+
+
+def test_lora_zero_b_is_identity():
+    # Freshly initialized LoRA (B = 0) must not change the forward pass.
+    c = cfg()
+    rng = np.random.default_rng(5)
+    p = params()
+    lora = model.init_lora(c, 0)
+    x = tokens(rng, 1, 8)
+    base = model.forward(c, p, x)
+    with_lora = model.forward(c, p, x, lora=lora)
+    np.testing.assert_allclose(base, with_lora, atol=1e-6)
+
+
+def test_lora_merge_matches_adapter_forward():
+    c = cfg()
+    rng = np.random.default_rng(6)
+    p = params()
+    key = jax.random.PRNGKey(9)
+    lora = {
+        k: 0.02 * jax.random.normal(jax.random.fold_in(key, i),
+                                    v.shape, jnp.float32)
+        for i, (k, v) in enumerate(model.init_lora(c, 0).items())
+    }
+    x = tokens(rng, 1, 8)
+    via_adapter = model.forward(c, p, x, lora=lora)
+    merged = model.merge_lora(c, p, lora)
+    via_merge = model.forward(c, merged, x)
+    np.testing.assert_allclose(via_adapter, via_merge, rtol=2e-4, atol=1e-5)
+
+
+def test_lm_loss_masks_pad():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    y = jnp.asarray([[1, 2, 0, 0]], jnp.int32)
+    loss, n, correct = losses.lm_loss(logits, y)
+    assert float(n) == 2.0
+    np.testing.assert_allclose(loss, np.log(8.0), rtol=1e-5)
+    assert float(correct) <= 2.0
+
+
+def test_toy2d_landscape_values():
+    # Minima depths: f(-1,0) ~ 1 - 3 = -2ish, f(1,0) ~ 1 - 2 = -1ish.
+    f_global = losses.toy2d(jnp.array([-0.94, 0.0]))
+    f_local = losses.toy2d(jnp.array([0.9, 0.0]))
+    assert float(f_global) < float(f_local) < 0.0

@@ -1,0 +1,133 @@
+# Optimizer semantics: the paper's mathematical claims about the update
+# rules, independent of any kernel.
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import optim
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def test_factorization_identity_rank1():
+    # Eq. 5 is exact when the EMA of g^2 is rank-1.
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.1, 1.0, (12,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0.1, 1.0, (7,)), jnp.float32)
+    v_true = jnp.outer(a, b)
+    r = jnp.sum(v_true, axis=1)
+    c = jnp.sum(v_true, axis=0)
+    v_rec = ref.factored_v(r, c)
+    np.testing.assert_allclose(v_rec, v_true, rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_factored_v_nonnegative_and_scale(seed):
+    rng = np.random.default_rng(seed)
+    g2 = jnp.asarray(rng.uniform(0, 1.0, (9, 5)), jnp.float32)
+    r = jnp.sum(g2, axis=1)
+    c = jnp.sum(g2, axis=0)
+    v = ref.factored_v(r, c)
+    assert (np.asarray(v) >= 0).all()
+    # Total mass is preserved: sum(v) == sum(g2).
+    np.testing.assert_allclose(jnp.sum(v), jnp.sum(g2), rtol=1e-4)
+
+
+def test_bias_correction_first_step():
+    # At t=1, v_hat = g^2 exactly, so the sgd_variance update is
+    # lr * sign(g) regardless of |g| (the adaptivity the paper leans on).
+    for mag in [1e-4, 1.0, 1e4]:
+        theta = jnp.zeros((1,), jnp.float32)
+        v = jnp.zeros((1,), jnp.float32)
+        g = jnp.full((1,), mag, jnp.float32)
+        theta_new, _ = ref.sgd_variance_ref(theta, g, v, 1.0, 0.1)
+        np.testing.assert_allclose(theta_new, -0.1, rtol=1e-3)
+
+
+def test_ema_fixed_point():
+    # Constant gradients: r converges to rowsum(g^2).
+    g = jnp.full((4, 3), 0.5, jnp.float32)
+    r = jnp.zeros((4,), jnp.float32)
+    c = jnp.zeros((3,), jnp.float32)
+    theta = jnp.ones((4, 3), jnp.float32)
+    for t in range(1, 200):
+        theta, r, c = ref.adalomo_ref(theta, g, r, c, float(t), 0.0)
+    np.testing.assert_allclose(r, 3 * 0.25, rtol=1e-3)
+    np.testing.assert_allclose(c, 4 * 0.25, rtol=1e-3)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_grouped_norm_bounds(seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(0, 10 ** rng.uniform(-3, 3), (6, 6)),
+                    jnp.float32)
+    theta = jnp.asarray(rng.normal(0, 0.3, (6, 6)), jnp.float32)
+    u_hat = ref.grouped_normalize(u, theta)
+    rms_u_hat = float(ref.rms(u_hat))
+    bound = max(1e-3, float(ref.rms(theta)))
+    assert rms_u_hat <= bound * 1.001
+    # Direction preserved.
+    assert jnp.sum(u * u_hat) >= 0
+
+
+def test_grouped_norm_passthrough_for_small_updates():
+    # RMS(u) < 1: no clipping, just relative scaling by RMS(theta).
+    u = jnp.full((4,), 0.5, jnp.float32)
+    theta = jnp.full((4,), 2.0, jnp.float32)
+    u_hat = ref.grouped_normalize(u, theta)
+    np.testing.assert_allclose(u_hat, 1.0, rtol=1e-5)
+
+
+def test_no_sqrt_variant_differs_but_same_direction():
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(rng.normal(0, 0.1, (8, 8)), jnp.float32)
+    g = jnp.asarray(rng.normal(0, 0.01, (8, 8)), jnp.float32)
+    r = jnp.zeros((8,), jnp.float32)
+    c = jnp.zeros((8,), jnp.float32)
+    a, _, _ = ref.adalomo_ref(theta, g, r, c, 1.0, 1e-3, no_sqrt=False)
+    b, _, _ = ref.adalomo_ref(theta, g, r, c, 1.0, 1e-3, no_sqrt=True)
+    da, db = np.asarray(a - theta), np.asarray(b - theta)
+    assert not np.allclose(da, db)
+    # Both scale-invariant forms step within the grouped-norm bound.
+    for d in (da, db):
+        assert np.sqrt((d ** 2).mean()) <= 1e-3 * max(
+            1e-3, float(ref.rms(theta))) * 1.01
+
+
+def test_registry_state_specs():
+    specs = [("w", (8, 4)), ("b", (4,))]
+    assert optim.state_specs_for("adalomo", specs) == [
+        ("w@r", (8,)), ("w@c", (4,)), ("b@v", (4,))]
+    assert optim.state_specs_for("adamw", specs) == [
+        ("w@m", (8, 4)), ("w@v", (8, 4)), ("b@m", (4,)), ("b@v", (4,))]
+    assert optim.state_specs_for("sgd", specs) == []
+    assert optim.state_specs_for("lomo", specs) == []
+
+
+def test_adamw_weight_decay_decoupled():
+    # With zero gradient, AdamW still shrinks weights by lr*wd.
+    theta = jnp.ones((3,), jnp.float32)
+    g = jnp.zeros((3,), jnp.float32)
+    m = jnp.zeros((3,), jnp.float32)
+    v = jnp.zeros((3,), jnp.float32)
+    theta_new, _, _ = ref.adamw_ref(theta, g, m, v, 1.0, 0.1, wd=0.5)
+    np.testing.assert_allclose(theta_new, 0.95, rtol=1e-6)
+
+
+def test_adafactor_relative_step():
+    # The applied step scales with RMS(theta) (relative step size).
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(0, 0.01, (6, 6)), jnp.float32)
+    r = jnp.zeros((6,), jnp.float32)
+    c = jnp.zeros((6,), jnp.float32)
+    small = jnp.full((6, 6), 0.01, jnp.float32)
+    big = jnp.full((6, 6), 1.0, jnp.float32)
+    s_new, _, _ = ref.adafactor_ref(small, g, r, c, 1.0, 0.1)
+    b_new, _, _ = ref.adafactor_ref(big, g, r, c, 1.0, 0.1)
+    d_small = float(ref.rms(s_new - small))
+    d_big = float(ref.rms(b_new - big))
+    assert d_big > d_small * 10

@@ -1,0 +1,216 @@
+# Entry-point builders: blob layout round-trips, train-step semantics,
+# fused-group equivalence with the monolithic step, toy-2D consistency.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layout, losses, model, steps
+
+
+CFG = model.PRESETS["nano"]
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.integers(1, 256, (CFG.batch_size, CFG.seq_len)), jnp.int32)
+    y = jnp.asarray(
+        rng.integers(1, 256, (CFG.batch_size, CFG.seq_len)), jnp.int32)
+    return x, y
+
+
+def sched(lr=1e-3, t=1.0, wd=0.0, clip=1.0):
+    return jnp.asarray([lr, t, wd, clip], jnp.float32)
+
+
+def init_blob(opt, seed=0):
+    init, segs = steps.make_init(CFG, opt)
+    return jax.jit(init)(jnp.int32(seed)), segs
+
+
+def test_layout_pack_unpack_roundtrip():
+    _, segs = init_blob("adalomo")
+    rng = np.random.default_rng(1)
+    blob = jnp.asarray(
+        rng.normal(0, 1, (layout.blob_len(segs),)), jnp.float32)
+    tensors = layout.unpack(blob, segs)
+    blob2 = layout.pack(tensors, segs)
+    np.testing.assert_array_equal(blob, blob2)
+
+
+def test_layouts_params_prefix_shared_across_opts():
+    # The parameter prefix must be identical for every optimizer so that
+    # checkpoints repack across optimizers (runtime/blob.rs relies on it).
+    reference = None
+    for opt in ["sgd", "adamw", "adafactor", "lomo", "adalomo"]:
+        segs = steps.param_layout(CFG, opt)
+        params = [(s.name, s.shape, s.offset) for s in segs
+                  if s.kind == layout.KIND_PARAM]
+        if reference is None:
+            reference = params
+        assert params == reference, opt
+
+
+def test_train_step_decreases_loss_over_steps():
+    blob, segs = init_blob("adalomo")
+    step, _ = steps.make_train_step(CFG, "adalomo")
+    jstep = jax.jit(step)
+    x, y = batch()
+    moff = [s for s in segs if s.kind == layout.KIND_METRIC][0].offset
+    losses_seen = []
+    for t in range(1, 9):
+        blob = jstep(blob, x, y, sched(lr=5e-3, t=float(t)))
+        losses_seen.append(float(blob[moff]))
+    assert losses_seen[-1] < losses_seen[0] - 0.05, losses_seen
+
+
+def test_metrics_slots_populated():
+    blob, segs = init_blob("adamw")
+    step, _ = steps.make_train_step(CFG, "adamw")
+    x, y = batch()
+    out = jax.jit(step)(blob, x, y, sched())
+    moff = [s for s in segs if s.kind == layout.KIND_METRIC][0].offset
+    m = np.asarray(out[moff:moff + layout.METRIC_SLOTS])
+    assert 0 < m[layout.M_LOSS] < 10
+    assert m[layout.M_TOKENS] == CFG.batch_size * CFG.seq_len
+    assert 0 <= m[layout.M_CORRECT] <= m[layout.M_TOKENS]
+    assert m[layout.M_GNORM] > 0
+
+
+def test_gnorm_variant_clips_global_norm():
+    # With a tiny clip threshold, the gnorm variant's applied update is
+    # scaled down; the resulting parameters differ from the unclipped run.
+    blob, segs = init_blob("lomo")
+    plain, _ = steps.make_train_step(CFG, "lomo")
+    gnorm, _ = steps.make_train_step(CFG, "lomo", gnorm=True)
+    x, y = batch()
+    lr = 1e-2
+    out_plain = jax.jit(plain)(blob, x, y, sched(lr=lr))
+    out_gnorm = jax.jit(gnorm)(blob, x, y, sched(lr=lr, clip=1e-3))
+    plen = layout.params_len(segs)
+    d_plain = np.abs(np.asarray(out_plain[:plen] - blob[:plen])).max()
+    d_gnorm = np.abs(np.asarray(out_gnorm[:plen] - blob[:plen])).max()
+    assert d_gnorm < d_plain / 10
+
+
+def test_fused_groups_cover_all_trainables_once():
+    groups = steps.fused_groups(CFG)
+    assert len(groups) == CFG.n_layers + 2
+    flat = [name for g in groups for name in g]
+    expected = [n for n, _ in model.param_specs(CFG)]
+    assert sorted(flat) == sorted(expected)
+
+
+def test_fused_chain_equals_monolithic_step():
+    # The coordinator's chained group programs must reproduce the
+    # monolithic train step exactly (all grads at theta_t) — the key
+    # fused-backward semantics check.
+    opt = "adalomo"
+    blob, segs = init_blob(opt)
+    x, y = batch(3)
+    s = sched(lr=5e-4, t=1.0)
+    mono, _ = steps.make_train_step(CFG, opt)
+    expected = jax.jit(mono)(blob, x, y, s)
+
+    accum = blob
+    for k in range(len(steps.fused_groups(CFG))):
+        fstep, _ = steps.make_fused_group_step(CFG, opt, k)
+        accum = jax.jit(fstep)(blob, accum, x, y, s)
+    plen = layout.params_len(segs)
+    np.testing.assert_allclose(
+        accum[:plen], expected[:plen], rtol=2e-5, atol=1e-7)
+    # Optimizer state matches too.
+    moff = [s2 for s2 in segs if s2.kind == layout.KIND_METRIC][0].offset
+    np.testing.assert_allclose(
+        accum[plen:moff], expected[plen:moff], rtol=2e-5, atol=1e-7)
+
+
+def test_extract_and_read_metrics():
+    blob, segs = init_blob("adalomo")
+    extract, _ = steps.make_extract_params(CFG, "adalomo")
+    read, _ = steps.make_read_metrics(CFG, "adalomo")
+    p = jax.jit(extract)(blob)
+    m = jax.jit(read)(blob)
+    assert p.shape == (layout.params_len(segs),)
+    assert m.shape == (layout.METRIC_SLOTS,)
+    np.testing.assert_array_equal(p, blob[:layout.params_len(segs)])
+
+
+def test_eval_matches_train_loss_at_same_params():
+    blob, segs = init_blob("adalomo")
+    extract, _ = steps.make_extract_params(CFG, "adalomo")
+    ev = steps.make_eval(CFG)
+    x, y = batch(5)
+    m = jax.jit(ev)(jax.jit(extract)(blob), x, y)
+    tensors = layout.unpack(blob, segs)
+    logits = model.forward(CFG, tensors, x)
+    loss, tokens, correct = losses.lm_loss(logits, y)
+    np.testing.assert_allclose(m[layout.M_LOSS], loss, rtol=1e-5)
+    np.testing.assert_allclose(m[layout.M_TOKENS], tokens)
+    np.testing.assert_allclose(m[layout.M_CORRECT], correct)
+
+
+def test_seq_loss_consistent_with_eval():
+    blob, segs = init_blob("adalomo")
+    extract, _ = steps.make_extract_params(CFG, "adalomo")
+    params = jax.jit(extract)(blob)
+    sl = steps.make_seq_loss(CFG)
+    ev = steps.make_eval(CFG)
+    x, y = batch(6)
+    per_seq = jax.jit(sl)(params, x, y)
+    m = jax.jit(ev)(params, x, y)
+    total_loss = float(jnp.sum(per_seq[0]))
+    total_count = float(jnp.sum(per_seq[1]))
+    np.testing.assert_allclose(
+        total_loss / total_count, m[layout.M_LOSS], rtol=1e-5)
+
+
+def test_lora_train_step_freezes_base():
+    blob, segs = init_blob_lora()
+    step, _ = steps.make_train_step(
+        CFG, "adamw", lora_rank=model.LORA_DEFAULT_RANK)
+    x, y = batch(7)
+    out = jax.jit(step)(blob, x, y, sched(lr=1e-3))
+    frozen = [s for s in segs if s.kind == layout.KIND_FROZEN]
+    for s in frozen[:5] + frozen[-2:]:
+        np.testing.assert_array_equal(
+            out[s.offset:s.offset + s.size],
+            blob[s.offset:s.offset + s.size], err_msg=s.name)
+    # Adapters did move (B starts at 0 but has gradients).
+    trainable = [s for s in segs if s.kind == layout.KIND_PARAM]
+    moved = any(
+        not np.allclose(out[s.offset:s.offset + s.size],
+                        blob[s.offset:s.offset + s.size])
+        for s in trainable)
+    assert moved
+
+
+def init_blob_lora(seed=0):
+    init, segs = steps.make_init(
+        CFG, "adamw", lora_rank=model.LORA_DEFAULT_RANK)
+    return jax.jit(init)(jnp.int32(seed)), segs
+
+
+@pytest.mark.parametrize("opt", ["sgd", "sgd_momentum", "sgd_variance",
+                                 "adamw", "adafactor", "lomo", "adalomo"])
+def test_every_optimizer_one_step_finite(opt):
+    blob, segs = init_blob(opt)
+    step, _ = steps.make_train_step(CFG, opt)
+    x, y = batch(8)
+    out = jax.jit(step)(blob, x, y, sched(lr=1e-3))
+    assert out.shape == (layout.blob_len(segs),)
+    assert bool(jnp.isfinite(out).all()), opt
+
+
+def test_toy2d_step_matches_closed_form():
+    step, segs = steps.make_toy2d_step("sgd")
+    blob = jnp.zeros((layout.blob_len(segs),), jnp.float32)
+    blob = blob.at[0].set(0.3).at[1].set(0.9)
+    out = jax.jit(step)(blob, sched(lr=0.1, t=1.0))
+    xy = jnp.array([0.3, 0.9])
+    f, grad = jax.value_and_grad(losses.toy2d)(xy)
+    np.testing.assert_allclose(out[:2], xy - 0.1 * grad, rtol=1e-5)
+    moff = [s for s in segs if s.kind == layout.KIND_METRIC][0].offset
+    np.testing.assert_allclose(out[moff], f, rtol=1e-5)

@@ -1,0 +1,77 @@
+//! Regenerates paper Figs. 2-3 (§4.2) and Figs. 9-10 (Appendix D):
+//! further pre-training on the chinese / python_code domains; loss,
+//! validation perplexity and next-token accuracy per optimizer.
+
+use adalomo::data::Domain;
+use adalomo::experiments as exp;
+use adalomo::util::bench::{banner, fast_mode};
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    banner(
+        "Figs. 2-3 (+9-10) — further pre-training on Chinese / Python code",
+        "AdaLomo paper: AdaLomo ≈ AdamW on both domains; Chinese ppl drops far more",
+    );
+    if !exp::artifacts_available() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let all = std::env::args().any(|a| a == "--all");
+    let steps = if fast_mode() { 40 } else { 160 };
+    let session = exp::open_session().unwrap();
+    let base = exp::ensure_base_checkpoint(&session, "nano", 300, 42, "runs/bench")
+        .unwrap();
+
+    let opts: Vec<&str> = if all {
+        vec!["adamw", "adalomo", "adafactor", "sgd"] // Appendix D arms
+    } else {
+        vec!["adamw", "adalomo"]
+    };
+    let mut t = Table::new(&format!(
+        "further pre-training, {steps} steps from a 300-step base"
+    ))
+    .header(&["domain", "optimizer", "ppl start", "ppl end", "acc end"]);
+    let mut final_ppl = std::collections::BTreeMap::new();
+    for domain in [Domain::Chinese, Domain::PythonCode] {
+        for opt in &opts {
+            let report = exp::further_pretrain(
+                &session, "nano", opt, domain, steps, &base, 42, "runs/bench",
+            )
+            .unwrap();
+            let first = report.eval_curve.first().copied().unwrap();
+            let last = report.eval_curve.last().copied().unwrap();
+            t.row(vec![
+                domain.name().into(),
+                (*opt).into(),
+                fnum(first.1),
+                fnum(last.1),
+                fnum(last.2),
+            ]);
+            final_ppl.insert((domain.name(), opt.to_string()), (first.1, last.1));
+        }
+    }
+    t.print();
+
+    // Shape checks.
+    let zh_adamw = final_ppl[&("chinese", "adamw".to_string())];
+    let py_adamw = final_ppl[&("python_code", "adamw".to_string())];
+    println!(
+        "\nchinese starts harder than python ({}): {:.1} vs {:.1}",
+        if zh_adamw.0 > py_adamw.0 { "✓" } else { "✗" },
+        zh_adamw.0,
+        py_adamw.0
+    );
+    let zh_gain = zh_adamw.0 / zh_adamw.1;
+    let py_gain = py_adamw.0 / py_adamw.1;
+    println!(
+        "chinese improves more than python ({}): {zh_gain:.2}x vs {py_gain:.2}x",
+        if zh_gain > py_gain { "✓" } else { "✗" }
+    );
+    let zh_al = final_ppl[&("chinese", "adalomo".to_string())].1;
+    println!(
+        "AdaLomo ends within 15% of AdamW on chinese ({}): {:.2} vs {:.2}",
+        if (zh_al - zh_adamw.1).abs() / zh_adamw.1 < 0.15 { "✓" } else { "≈" },
+        zh_al,
+        zh_adamw.1
+    );
+}

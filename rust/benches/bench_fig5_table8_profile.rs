@@ -1,0 +1,114 @@
+//! Regenerates paper Fig. 5 + Table 8 (§4.4): memory footprint and
+//! throughput per method & model size — the calibrated analytic models
+//! against the paper's published numbers, plus measured local step times.
+
+use adalomo::data::{loader::DataLoader, Domain};
+use adalomo::experiments as exp;
+use adalomo::memsim::{memory, paper, throughput, Arch};
+use adalomo::runtime::Manifest;
+use adalomo::util::bench::{banner, bench_units, fast_mode};
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    banner(
+        "Fig. 5 / Table 8 — memory & throughput profile",
+        "AdaLomo paper §4.4: AdaLomo ~ LOMO ~ LoRA memory; TGS same level, AdaLomo lowest",
+    );
+
+    // ---- memory ------------------------------------------------------------
+    let act = memory::calibrate();
+    let mut tm = Table::new("memory (GB): modeled vs paper")
+        .header(&["model", "method", "modeled", "paper", "err"]);
+    let mut worst: f64 = 0.0;
+    for &(arch_name, method, gpus, mb, paper_gb, _) in paper::TABLE8 {
+        let est = memory::estimate(
+            &memory::TrainSetup {
+                arch: Arch::analytic(arch_name).unwrap(),
+                method: memory::Method::parse(method).unwrap(),
+                n_gpus: gpus,
+                micro_batch: mb,
+                seq_len: paper::PROFILE_SEQ_LEN,
+            },
+            act,
+        )
+        .total_gb();
+        worst = worst.max(((est - paper_gb) / paper_gb).abs());
+        tm.row(vec![
+            arch_name.into(),
+            method.into(),
+            fnum(est),
+            fnum(paper_gb),
+            format!("{:+.0}%", 100.0 * (est - paper_gb) / paper_gb),
+        ]);
+    }
+    tm.print();
+    println!("worst memory error: {:.0}%\n", worst * 100.0);
+
+    // ---- throughput ---------------------------------------------------------
+    let hw = throughput::Hardware::default();
+    let eff = throughput::calibrate();
+    println!(
+        "calibrated: mxu_eff {:.3}, exposed_comm {:.3}",
+        eff.mxu_eff, eff.exposed_comm
+    );
+    let mut tt = Table::new("throughput (TGS): modeled vs paper")
+        .header(&["model", "method", "modeled", "paper", "err"]);
+    for &(arch_name, method, gpus, mb, _, paper_tgs) in paper::TABLE8 {
+        let tgs = throughput::tgs(
+            &memory::TrainSetup {
+                arch: Arch::analytic(arch_name).unwrap(),
+                method: memory::Method::parse(method).unwrap(),
+                n_gpus: gpus,
+                micro_batch: mb,
+                seq_len: paper::PROFILE_SEQ_LEN,
+            },
+            hw,
+            eff,
+        );
+        tt.row(vec![
+            arch_name.into(),
+            method.into(),
+            fnum(tgs),
+            fnum(paper_tgs),
+            format!("{:+.0}%", 100.0 * (tgs - paper_tgs) / paper_tgs),
+        ]);
+    }
+    tt.print();
+
+    // ---- measured: real per-method step cost on this host ------------------
+    if exp::artifacts_available() {
+        let session = exp::open_session().unwrap();
+        let preset = "nano";
+        let p = session.manifest.preset(preset).unwrap().clone();
+        let (b, t) = (p.batch_size, p.seq_len);
+        let tokens = (b * t) as f64;
+        let methods: &[&str] = if fast_mode() {
+            &["lomo", "adalomo"]
+        } else {
+            &["sgd", "adamw", "adafactor", "lora", "lomo", "adalomo"]
+        };
+        println!("\nmeasured end-to-end step (nano, CPU PJRT):");
+        for opt in methods {
+            let entry = Manifest::train_step_name(preset, opt);
+            session.compile(&entry).unwrap();
+            let seed = session.upload_i32(&[1], &[]).unwrap();
+            let mut blob = session
+                .execute_buf(&Manifest::init_name(preset, opt), &[&seed])
+                .unwrap();
+            let mut loader = DataLoader::lm(Domain::C4, 3, b, t, 200_000);
+            let mut step = 0f32;
+            bench_units(&format!("train_step_{preset}_{opt}"), tokens, || {
+                step += 1.0;
+                let batch = loader.next_batch();
+                let x = session.upload_i32(&batch.x, &[b, t]).unwrap();
+                let y = session.upload_i32(&batch.y, &[b, t]).unwrap();
+                let sched = session
+                    .upload_f32(&[1e-3, step, 0.0, 1.0], &[4])
+                    .unwrap();
+                blob = session
+                    .execute_buf(&entry, &[&blob, &x, &y, &sched])
+                    .unwrap();
+            });
+        }
+    }
+}

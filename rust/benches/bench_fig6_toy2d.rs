@@ -1,0 +1,79 @@
+//! Regenerates paper Fig. 6 (Appendix A): optimizer trajectories on the
+//! two-well landscape, through both the native and the AOT path.
+
+use adalomo::experiments as exp;
+use adalomo::optim::OptKind;
+use adalomo::util::bench::{banner, bench};
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    banner(
+        "Fig. 6 — toy 2-D landscape trajectories",
+        "AdaLomo paper, Appendix A: SGD & momentum -> local well; variance & Adam -> global",
+    );
+    let mut t = Table::new("final basins")
+        .header(&["optimizer", "x", "y", "f", "basin", "paper"]);
+    let expect = [
+        (OptKind::Sgd, "local"),
+        (OptKind::SgdMomentum, "local"),
+        (OptKind::SgdVariance, "global"),
+        (OptKind::AdamW, "global"),
+    ];
+    for (kind, paper) in expect {
+        let traj = exp::toy2d_trajectory(
+            kind,
+            exp::TOY2D_LR,
+            exp::TOY2D_STEPS,
+            exp::TOY2D_START,
+        );
+        let basin = exp::toy2d_basin(&traj);
+        let last = traj.last().unwrap();
+        t.row(vec![
+            kind.name().into(),
+            fnum(last.0 as f64),
+            fnum(last.1 as f64),
+            fnum(last.2 as f64),
+            basin.into(),
+            paper.into(),
+        ]);
+        assert!(basin.starts_with(paper), "{kind:?}");
+    }
+    t.print();
+    println!("✓ all four basins match the paper\n");
+
+    bench("toy2d 1000-step trajectory (native, 4 optimizers)", || {
+        for kind in [
+            OptKind::Sgd,
+            OptKind::SgdMomentum,
+            OptKind::SgdVariance,
+            OptKind::AdamW,
+        ] {
+            std::hint::black_box(exp::toy2d_trajectory(
+                kind, 0.02, 1000, exp::TOY2D_START,
+            ));
+        }
+    });
+
+    if exp::artifacts_available() {
+        let session = exp::open_session().unwrap();
+        session.compile("toy2d_adamw").unwrap();
+        let layout = session.manifest.layout("toy2d/adamw").unwrap().clone();
+        let mut blob = vec![0f32; layout.blob_len];
+        blob[0] = exp::TOY2D_START.0;
+        blob[1] = exp::TOY2D_START.1;
+        bench("toy2d 100 steps through PJRT (adamw artifact)", || {
+            let mut buf = session
+                .upload_f32(&blob, &[layout.blob_len])
+                .unwrap();
+            for step in 1..=100 {
+                let sched = session
+                    .upload_f32(&[0.02, step as f32, 0.0, 1.0], &[4])
+                    .unwrap();
+                buf = session
+                    .execute_buf("toy2d_adamw", &[&buf, &sched])
+                    .unwrap();
+            }
+            std::hint::black_box(session.fetch_f32_raw(&buf, 2).unwrap());
+        });
+    }
+}

@@ -1,0 +1,51 @@
+//! Micro-benchmarks of the Rust-native optimizer updates (the host-side
+//! mirror of the L1 kernels) — the L3 perf-pass baseline for update math.
+
+use adalomo::optim::{OptKind, ParamOpt, ALL_OPTS};
+use adalomo::tensor::Tensor;
+use adalomo::util::bench::{banner, bench_units};
+use adalomo::util::rng::Pcg32;
+
+fn main() {
+    banner(
+        "micro — native optimizer step cost",
+        "supports EXPERIMENTS.md §Perf; shapes of Table-1 memory trade-offs in time",
+    );
+    let mut rng = Pcg32::seeded(1);
+    let shape = [512, 512];
+    let elems = (shape[0] * shape[1]) as f64;
+    let g = Tensor::from_fn(&shape, |_| rng.normal() * 0.01);
+
+    for kind in ALL_OPTS {
+        let mut theta = Tensor::from_fn(&shape, |_| rng.normal() * 0.1);
+        let mut opt = ParamOpt::new(kind, &shape);
+        let mut t = 0u64;
+        bench_units(
+            &format!("{} step 512x512", kind.name()),
+            elems,
+            || {
+                t += 1;
+                opt.step(&mut theta, &g, t, 1e-3, 0.01);
+            },
+        );
+    }
+
+    // Factored vs full second moment: the memory trade in time terms.
+    println!();
+    for (label, kind) in [
+        ("adalomo (factored v: r,c = m+n floats)", OptKind::AdaLomo),
+        ("adamw   (full m,v = 2mn floats)", OptKind::AdamW),
+    ] {
+        let mut theta = Tensor::from_fn(&shape, |_| rng.normal() * 0.1);
+        let mut opt = ParamOpt::new(kind, &shape);
+        println!(
+            "{label}: state {} floats",
+            opt.state_floats()
+        );
+        let mut t = 0u64;
+        bench_units(&format!("{} (state bytes above)", kind.name()), elems, || {
+            t += 1;
+            opt.step(&mut theta, &g, t, 1e-3, 0.0);
+        });
+    }
+}

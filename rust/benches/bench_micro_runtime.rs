@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the PJRT runtime path: dispatch overhead, host
+//! uploads, metrics reads — the L3 hot-path components the perf pass
+//! optimizes (EXPERIMENTS.md §Perf).
+
+use adalomo::data::{loader::DataLoader, Domain};
+use adalomo::experiments as exp;
+use adalomo::runtime::Manifest;
+use adalomo::util::bench::{banner, bench, bench_units};
+
+fn main() {
+    banner(
+        "micro — runtime dispatch & transfer overhead",
+        "hot-path budget: dispatch+upload must be <5% of step time at tiny+",
+    );
+    if !exp::artifacts_available() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let session = exp::open_session().unwrap();
+    let preset = "nano";
+    let p = session.manifest.preset(preset).unwrap().clone();
+    let (b, t) = (p.batch_size, p.seq_len);
+
+    // Dispatch floor: the cheapest possible program (8-float slice).
+    let entry_metrics = Manifest::read_metrics_name(preset, "adalomo");
+    let seed = session.upload_i32(&[1], &[]).unwrap();
+    let blob = session
+        .execute_buf(&Manifest::init_name(preset, "adalomo"), &[&seed])
+        .unwrap();
+    session.compile(&entry_metrics).unwrap();
+    bench("dispatch floor: read_metrics (slice of 8 floats)", || {
+        std::hint::black_box(
+            session.execute_buf(&entry_metrics, &[&blob]).unwrap(),
+        );
+    });
+    bench("metrics fetch to host (8 f32)", || {
+        let m = session.execute_buf(&entry_metrics, &[&blob]).unwrap();
+        std::hint::black_box(session.fetch_f32_raw(&m, 8).unwrap());
+    });
+
+    // Host uploads.
+    let batch_elems = (b * t) as f64;
+    let mut loader = DataLoader::lm(Domain::C4, 5, b, t, 100_000);
+    bench_units("batch upload x+y (i32)", 2.0 * batch_elems, || {
+        let batch = loader.next_batch();
+        std::hint::black_box(session.upload_i32(&batch.x, &[b, t]).unwrap());
+        std::hint::black_box(session.upload_i32(&batch.y, &[b, t]).unwrap());
+    });
+    bench("sched upload (4 f32)", || {
+        std::hint::black_box(
+            session.upload_f32(&[1e-3, 1.0, 0.0, 1.0], &[4]).unwrap(),
+        );
+    });
+
+    // The full step for comparison (dispatch share = floor / step).
+    let entry = Manifest::train_step_name(preset, "adalomo");
+    session.compile(&entry).unwrap();
+    let mut blob2 = session
+        .execute_buf(&Manifest::init_name(preset, "adalomo"), &[&seed])
+        .unwrap();
+    let mut step = 0f32;
+    bench_units("full train step (nano/adalomo)", batch_elems, || {
+        step += 1.0;
+        let batch = loader.next_batch();
+        let x = session.upload_i32(&batch.x, &[b, t]).unwrap();
+        let y = session.upload_i32(&batch.y, &[b, t]).unwrap();
+        let sched = session
+            .upload_f32(&[1e-3, step, 0.0, 1.0], &[4])
+            .unwrap();
+        blob2 = session
+            .execute_buf(&entry, &[&blob2, &x, &y, &sched])
+            .unwrap();
+    });
+
+    // Blob checkpoint round-trip (cold path, but should stay sane).
+    let layout = session.manifest.layout("nano/adalomo").unwrap();
+    bench_units(
+        "blob fetch to host (checkpoint path)",
+        layout.blob_len as f64,
+        || {
+            std::hint::black_box(
+                session.fetch_f32_raw(&blob2, layout.blob_len).unwrap(),
+            );
+        },
+    );
+
+    let stats = session.stats();
+    println!(
+        "\nsession totals: {} compiles ({:.2}s), {} executions ({:.2}s), {} uploads ({:.1} MB)",
+        stats.compiles,
+        stats.compile_secs,
+        stats.executions,
+        stats.execute_secs,
+        stats.host_uploads,
+        stats.upload_bytes as f64 / 1e6
+    );
+}

@@ -1,0 +1,52 @@
+//! Regenerates paper Table 1 (model-state memory under mixed precision)
+//! and benches the memory-model evaluation itself.
+
+use adalomo::memsim::{memory, Arch};
+use adalomo::util::bench::{banner, bench};
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    banner(
+        "Table 1 — trainable params & model-state memory",
+        "AdaLomo paper, Table 1 (LoRA ~2M / AdamW 16M / AdaLomo ~2M bytes per param)",
+    );
+    let arch = Arch::analytic("llama7b").unwrap();
+    let n = arch.n_params() as f64;
+    let mut t = Table::new("regenerated Table 1 (bytes per parameter, M units)")
+        .header(&["method", "trainable", "param", "grad", "opt state", "total", "paper"]);
+    let rows: [(memory::Method, &str, &str); 3] = [
+        (memory::Method::LoRA { rank: 8 }, "N (adapters)", "~2M"),
+        (memory::Method::AdamW, "M (all)", "16M"),
+        (memory::Method::AdaLomo, "M (all)", "~2M"),
+    ];
+    for (m, trainable, paper) in rows {
+        let b = memory::model_state_bytes(&arch, m);
+        t.row(vec![
+            m.name().into(),
+            trainable.into(),
+            fnum(b.params / n),
+            fnum(b.gradients / n),
+            fnum(b.optimizer_state / n),
+            fnum(b.model_state() / n),
+            paper.into(),
+        ]);
+    }
+    t.print();
+
+    // Shape assertions (who wins, by what factor).
+    let total = |m| memory::model_state_bytes(&arch, m).model_state();
+    let ratio = total(memory::Method::AdamW) / total(memory::Method::AdaLomo);
+    println!("AdamW / AdaLomo model-state ratio: {ratio:.2} (paper: 16M / ~2M ≈ 8)");
+    assert!(ratio > 7.0 && ratio < 8.5);
+
+    // Micro: the closed-form evaluation cost (used inside sweeps).
+    bench("memsim::model_state_bytes(llama65b)", || {
+        let a = Arch::analytic("llama65b").unwrap();
+        for m in memory::PROFILE_METHODS {
+            std::hint::black_box(memory::model_state_bytes(&a, m));
+        }
+    });
+    bench("memsim::calibrate (20-row fit)", || {
+        std::hint::black_box(memory::calibrate());
+    });
+}

@@ -1,0 +1,70 @@
+//! Regenerates paper Table 2 (§4.1) and Table 5 (Appendix C): instruction
+//! tuning with {none, LoRA, AdamW, LOMO, AdaLomo} (+ Adafactor with
+//! --adafactor), scored on the five-benchmark synthetic suite.
+
+use adalomo::experiments as exp;
+use adalomo::memsim::paper::TABLE2_7B_AVG;
+use adalomo::util::bench::{banner, fast_mode};
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    banner(
+        "Table 2/5 — instruction tuning + five-benchmark suite",
+        "AdaLomo paper Table 2: AdaLomo ≈ AdamW > LoRA > LOMO > base (avg)",
+    );
+    if !exp::artifacts_available() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let with_adafactor = std::env::args().any(|a| a == "--adafactor");
+    let (steps, items) = if fast_mode() { (60, 10) } else { (800, 24) };
+    let session = exp::open_session().unwrap();
+    let base =
+        exp::ensure_base_checkpoint(&session, "nano", 400, 42, "runs/bench")
+            .unwrap();
+
+    let mut methods = vec!["none", "lora", "adamw", "lomo", "adalomo"];
+    if with_adafactor {
+        methods.push("adafactor"); // Table 5 row
+    }
+    let mut t = Table::new(&format!(
+        "nano, {steps} tuning steps, {items} items/benchmark (scores 0-100)"
+    ))
+    .header(&[
+        "method", "knowledge", "reasoning", "arithmetic", "code", "writing",
+        "avg", "paper avg (7B)",
+    ]);
+    let mut avgs = std::collections::BTreeMap::new();
+    for method in &methods {
+        let outcome = exp::instruction_tune(
+            &session, "nano", method, steps, &base, 42, "runs/bench", items,
+        )
+        .unwrap();
+        let paper_avg = TABLE2_7B_AVG
+            .iter()
+            .find(|(m, _)| m == method)
+            .map(|(_, v)| fnum(*v))
+            .unwrap_or_else(|| "30.0 (T5)".into());
+        t.row(vec![
+            (*method).into(),
+            fnum(outcome.suite.scores["knowledge"]),
+            fnum(outcome.suite.scores["reasoning"]),
+            fnum(outcome.suite.scores["arithmetic"]),
+            fnum(outcome.suite.scores["code"]),
+            fnum(outcome.suite.scores["writing"]),
+            fnum(outcome.suite.avg),
+            paper_avg,
+        ]);
+        avgs.insert(method.to_string(), outcome.suite.avg);
+    }
+    t.print();
+
+    println!("\nshape checks (paper Table 2 orderings):");
+    let check = |label: &str, ok: bool| {
+        println!("  {} {label}", if ok { "✓" } else { "✗" });
+    };
+    check("tuned AdaLomo ≥ base model", avgs["adalomo"] >= avgs["none"]);
+    check("AdaLomo ≥ LOMO (second moment closes the gap)",
+          avgs["adalomo"] >= avgs["lomo"]);
+    check("AdamW ≥ base model", avgs["adamw"] >= avgs["none"]);
+}

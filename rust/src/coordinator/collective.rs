@@ -1,0 +1,99 @@
+//! Ring-collective cost model (the NVLink fabric substitute).
+//!
+//! Standard alpha-beta model on a ring of `n` ranks: each of the (n-1)
+//! steps moves `bytes/n` per rank, so
+//! `time = (n-1) * (alpha + bytes / (n * bw))`.
+//! All-reduce = reduce-scatter + all-gather. Used by the throughput report
+//! and by the worker pool to model what real NCCL collectives would cost
+//! alongside the measured local step times.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Fabric {
+    /// Per-hop latency, seconds.
+    pub alpha: f64,
+    /// Per-link bandwidth, bytes/second.
+    pub bw: f64,
+}
+
+impl Default for Fabric {
+    fn default() -> Self {
+        // NVLink-class: ~8 µs hop latency, 170 GB/s effective per link.
+        Fabric { alpha: 8e-6, bw: 170e9 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    Broadcast,
+}
+
+pub fn time(op: Op, bytes: f64, n_ranks: usize, fabric: Fabric) -> f64 {
+    if n_ranks <= 1 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    let ring = |b: f64| (n - 1.0) * (fabric.alpha + b / (n * fabric.bw));
+    match op {
+        Op::AllGather | Op::ReduceScatter => ring(bytes),
+        Op::AllReduce => 2.0 * ring(bytes),
+        // Pipelined ring broadcast ~= one all-gather of the full payload.
+        Op::Broadcast => ring(bytes),
+    }
+}
+
+/// Total collective time for one ZeRO-3 training step (params gathered for
+/// fwd and bwd, gradients reduce-scattered).
+pub fn zero3_step_time(param_bytes: f64, grad_bytes: f64, n_ranks: usize, fabric: Fabric) -> f64 {
+    2.0 * time(Op::AllGather, param_bytes, n_ranks, fabric)
+        + time(Op::ReduceScatter, grad_bytes, n_ranks, fabric)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(time(Op::AllReduce, 1e9, 1, Fabric::default()), 0.0);
+    }
+
+    #[test]
+    fn allreduce_is_double_allgather() {
+        let f = Fabric::default();
+        let ag = time(Op::AllGather, 1e9, 8, f);
+        let ar = time(Op::AllReduce, 1e9, 8, f);
+        assert!((ar - 2.0 * ag).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_term_saturates_with_ranks() {
+        // For large payloads, ring time tends to bytes/bw regardless of n.
+        let f = Fabric { alpha: 0.0, bw: 100e9 };
+        let t4 = time(Op::AllGather, 1e10, 4, f);
+        let t32 = time(Op::AllGather, 1e10, 32, f);
+        assert!((t4 - 0.075).abs() < 1e-3);
+        assert!((t32 - 0.0969).abs() < 1e-3);
+        assert!(t32 < 0.1 / 100e9 * 1e12); // bounded by bytes/bw
+    }
+
+    #[test]
+    fn latency_term_grows_with_ranks() {
+        let f = Fabric { alpha: 1e-5, bw: 1e30 };
+        assert!(
+            time(Op::AllGather, 8.0, 32, f)
+                > time(Op::AllGather, 8.0, 4, f)
+        );
+    }
+
+    #[test]
+    fn zero3_composition() {
+        let f = Fabric::default();
+        let t = zero3_step_time(2e9, 2e9, 8, f);
+        let expect = 2.0 * time(Op::AllGather, 2e9, 8, f)
+            + time(Op::ReduceScatter, 2e9, 8, f);
+        assert_eq!(t, expect);
+    }
+}

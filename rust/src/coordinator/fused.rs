@@ -1,0 +1,99 @@
+//! Fused-backward group scheduler.
+//!
+//! LOMO/AdaLomo's memory contribution is that parameter gradients die
+//! immediately after their update (paper §2.1). Inside a single XLA
+//! program the compiler owns buffer lifetimes, so the coordinator
+//! reproduces the schedule at *program granularity*: the step is split
+//! into G = L+2 group programs (`fused_<preset>_<opt>_g<k>`, backward
+//! order: head block, layers L-1..0, embedding), each computing gradients
+//! **from the frozen theta_t blob** and updating only its group. XLA
+//! dead-code-eliminates every other group's weight gradients from program
+//! k, so at most one group's gradients are ever materialized — and because
+//! every group's gradient is evaluated at theta_t, the chained result is
+//! *exactly* the monolithic train step (integration test asserts this).
+//!
+//! Cost: one full forward+backward per group (G× compute) + a second blob
+//! buffer — this mode is a scheduling/liveness demonstrator and test rig,
+//! not the fast path. The analytic story lives in `memsim::liveness`.
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::{Manifest, Session};
+
+/// Number of fused group programs available for (preset, opt), if any.
+pub fn fused_groups(session: &Session, preset: &str, opt: &str) -> Option<usize> {
+    let name = Manifest::fused_name(preset, opt, 0);
+    session
+        .manifest
+        .entries
+        .get(&name)
+        .and_then(|e| e.group.map(|(_, n)| n))
+}
+
+/// One fused-backward step: chains the G group programs.
+///
+/// `frozen` holds theta_t (and its optimizer state); the returned buffer is
+/// the fully-updated blob theta_{t+1}.
+pub fn fused_step(
+    session: &Session,
+    preset: &str,
+    opt: &str,
+    frozen: &PjRtBuffer,
+    x: &PjRtBuffer,
+    y: &PjRtBuffer,
+    sched: &PjRtBuffer,
+) -> Result<PjRtBuffer> {
+    let Some(n_groups) = fused_groups(session, preset, opt) else {
+        bail!("no fused artifacts for {preset}/{opt} (see aot.py FUSED_PRESETS)")
+    };
+    let mut accum: Option<PjRtBuffer> = None;
+    for k in 0..n_groups {
+        let entry = Manifest::fused_name(preset, opt, k);
+        let acc_ref = accum.as_ref().unwrap_or(frozen);
+        let next =
+            session.execute_buf(&entry, &[frozen, acc_ref, x, y, sched])?;
+        accum = Some(next);
+    }
+    Ok(accum.expect("n_groups >= 1"))
+}
+
+/// Per-group *live gradient* sizes in f32 elements — what each fused
+/// program materializes. Mirrors `steps.fused_groups` grouping: head block,
+/// layers in reverse, embedding.
+pub fn group_grad_sizes(session: &Session, preset: &str, opt: &str) -> Result<Vec<usize>> {
+    let layout = session
+        .manifest
+        .layout(&Manifest::layout_key(preset, opt))?;
+    let n_layers = session.manifest.preset(preset)?.n_layers;
+    let size_of = |name: &str| -> usize {
+        layout.segment(name).map(|s| s.size).unwrap_or(0)
+    };
+    let mut groups =
+        vec![size_of("head") + size_of("final_norm")];
+    for l in (0..n_layers).rev() {
+        let p = format!("l{l}.");
+        groups.push(
+            ["attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate",
+             "w_up", "w_down"]
+            .iter()
+            .map(|n| size_of(&format!("{p}{n}")))
+            .sum(),
+        );
+    }
+    groups.push(size_of("embed"));
+    Ok(groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_name_format() {
+        assert_eq!(
+            Manifest::fused_name("nano", "adalomo", 2),
+            "fused_nano_adalomo_g2"
+        );
+    }
+}

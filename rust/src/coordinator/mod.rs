@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the training orchestrator.
+//!
+//! * [`schedule`] — warmup + cosine LR (the schedules live here, not in the
+//!   HLO: every train-step artifact takes the scheduled LR as an input).
+//! * [`trainer`] — the step loop over the device-resident state blob.
+//! * [`fused`] — fused-backward group scheduler (LOMO/AdaLomo liveness at
+//!   program granularity; chains `fused_*_g<k>` artifacts).
+//! * [`sharding`] — ZeRO-3 shard planner over manifest segments.
+//! * [`collective`] — ring-collective cost model used by the throughput
+//!   simulation and the worker pool.
+//! * [`workers`] — thread-per-rank data-parallel execution (local-SGD
+//!   periodic parameter averaging; each rank owns a PJRT session).
+
+pub mod collective;
+pub mod fused;
+pub mod schedule;
+pub mod sharding;
+pub mod trainer;
+pub mod workers;
+
+pub use schedule::Schedule;
+pub use trainer::{TrainReport, Trainer};

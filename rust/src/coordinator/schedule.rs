@@ -1,0 +1,101 @@
+//! Learning-rate schedules (paper setup: linear warmup over 3% of steps,
+//! then cosine decay — Tables 3/6 and §4.3).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decay {
+    Constant,
+    Cosine,
+    Linear,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub decay: Decay,
+    /// Final LR as a fraction of base (cosine floor).
+    pub min_factor: f32,
+}
+
+impl Schedule {
+    pub fn cosine(base_lr: f32, warmup_steps: usize, total_steps: usize) -> Self {
+        Schedule {
+            base_lr,
+            warmup_steps,
+            total_steps,
+            decay: Decay::Cosine,
+            min_factor: 0.1,
+        }
+    }
+
+    pub fn constant(base_lr: f32) -> Self {
+        Schedule {
+            base_lr,
+            warmup_steps: 0,
+            total_steps: 1,
+            decay: Decay::Constant,
+            min_factor: 1.0,
+        }
+    }
+
+    /// LR at 1-based step t.
+    pub fn lr_at(&self, t: usize) -> f32 {
+        debug_assert!(t >= 1);
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.base_lr * t as f32 / self.warmup_steps as f32;
+        }
+        let total = self.total_steps.max(t);
+        let progress = (t - self.warmup_steps) as f32
+            / (total - self.warmup_steps).max(1) as f32;
+        let factor = match self.decay {
+            Decay::Constant => 1.0,
+            Decay::Linear => 1.0 - (1.0 - self.min_factor) * progress,
+            Decay::Cosine => {
+                let cos =
+                    0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+                self.min_factor + (1.0 - self.min_factor) * cos
+            }
+        };
+        self.base_lr * factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::cosine(1.0, 10, 100);
+        assert!((s.lr_at(1) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::cosine(1.0, 10, 100);
+        assert!(s.lr_at(11) > s.lr_at(50));
+        assert!(s.lr_at(50) > s.lr_at(100));
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::constant(0.5);
+        assert_eq!(s.lr_at(1), 0.5);
+        assert_eq!(s.lr_at(1000), 0.5);
+    }
+
+    #[test]
+    fn monotone_decrease_after_warmup() {
+        let s = Schedule::cosine(3e-4, 3, 50);
+        let mut prev = f32::INFINITY;
+        for t in 4..=50 {
+            let lr = s.lr_at(t);
+            assert!(lr <= prev + 1e-9, "t={t}");
+            prev = lr;
+        }
+    }
+}

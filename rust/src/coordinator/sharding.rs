@@ -1,0 +1,148 @@
+//! ZeRO-3 shard planner (Rajbhandari et al., 2020 — the paper's
+//! distributed substrate).
+//!
+//! Partitions the blob's parameter + optimizer-state region across ranks.
+//! Two granularities:
+//! * `plan_contiguous` — equal byte ranges (what DeepSpeed's flat ZeRO-3
+//!   partitioning does); used by the memory simulator per-GPU numbers.
+//! * `plan_segments` — whole-tensor assignment balancing bytes (greedy
+//!   LPT), used by the worker pool to decide ownership for averaging and
+//!   by reports that show per-rank tensor lists.
+
+use anyhow::Result;
+
+use crate::runtime::{Layout, Segment};
+
+#[derive(Debug, Clone)]
+pub struct ContiguousShard {
+    pub rank: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Equal contiguous ranges over [0, shardable_len). The metrics region is
+/// never sharded (it is replicated coordinator state).
+pub fn plan_contiguous(layout: &Layout, n_ranks: usize) -> Vec<ContiguousShard> {
+    let shardable = layout.metrics_offset();
+    let base = shardable / n_ranks;
+    let rem = shardable % n_ranks;
+    let mut shards = Vec::with_capacity(n_ranks);
+    let mut off = 0;
+    for rank in 0..n_ranks {
+        let len = base + usize::from(rank < rem);
+        shards.push(ContiguousShard { rank, offset: off, len });
+        off += len;
+    }
+    shards
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentShard {
+    pub rank: usize,
+    pub segments: Vec<Segment>,
+    pub floats: usize,
+}
+
+/// Greedy longest-processing-time assignment of whole segments to ranks.
+pub fn plan_segments(layout: &Layout, n_ranks: usize) -> Vec<SegmentShard> {
+    let mut shards: Vec<SegmentShard> = (0..n_ranks)
+        .map(|rank| SegmentShard { rank, segments: Vec::new(), floats: 0 })
+        .collect();
+    let mut segs: Vec<&Segment> = layout
+        .segments
+        .iter()
+        .filter(|s| s.kind != "metric")
+        .collect();
+    segs.sort_by_key(|s| std::cmp::Reverse(s.size));
+    for seg in segs {
+        let lightest = shards
+            .iter_mut()
+            .min_by_key(|s| s.floats)
+            .expect("n_ranks >= 1");
+        lightest.floats += seg.size;
+        lightest.segments.push(seg.clone());
+    }
+    shards
+}
+
+/// Validate that a contiguous plan exactly tiles the shardable region.
+pub fn validate_contiguous(layout: &Layout, shards: &[ContiguousShard]) -> Result<()> {
+    let mut expect = 0usize;
+    for (i, s) in shards.iter().enumerate() {
+        anyhow::ensure!(s.rank == i, "rank order");
+        anyhow::ensure!(s.offset == expect, "gap/overlap at rank {i}");
+        expect += s.len;
+    }
+    anyhow::ensure!(
+        expect == layout.metrics_offset(),
+        "plan covers {} of {}",
+        expect,
+        layout.metrics_offset()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        let mk = |name: &str, kind: &str, size: usize, offset: usize| Segment {
+            name: name.into(),
+            kind: kind.into(),
+            shape: vec![size],
+            offset,
+            size,
+        };
+        Layout {
+            blob_len: 108,
+            params_len: 70,
+            segments: vec![
+                mk("a", "param", 40, 0),
+                mk("b", "param", 30, 40),
+                mk("a@r", "state", 20, 70),
+                mk("b@c", "state", 10, 90),
+                mk("metrics", "metric", 8, 100),
+            ],
+        }
+    }
+
+    #[test]
+    fn contiguous_tiles_exactly() {
+        let l = layout();
+        for n in [1, 2, 3, 7] {
+            let plan = plan_contiguous(&l, n);
+            validate_contiguous(&l, &plan).unwrap();
+            let total: usize = plan.iter().map(|s| s.len).sum();
+            assert_eq!(total, 100);
+            // Balance: lengths differ by at most 1.
+            let max = plan.iter().map(|s| s.len).max().unwrap();
+            let min = plan.iter().map(|s| s.len).min().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn segment_plan_covers_all_once() {
+        let l = layout();
+        let plan = plan_segments(&l, 2);
+        let mut names: Vec<String> = plan
+            .iter()
+            .flat_map(|s| s.segments.iter().map(|g| g.name.clone()))
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["a", "a@r", "b", "b@c"]);
+        // LPT puts the 40 alone vs 30+20+10.
+        let loads: Vec<usize> = plan.iter().map(|s| s.floats).collect();
+        assert_eq!(loads.iter().sum::<usize>(), 100);
+        assert!(loads.iter().all(|&f| f >= 40));
+    }
+
+    #[test]
+    fn more_ranks_less_per_rank() {
+        let l = layout();
+        let p2 = plan_contiguous(&l, 2);
+        let p5 = plan_contiguous(&l, 5);
+        assert!(p5[0].len < p2[0].len);
+    }
+}

@@ -1,0 +1,226 @@
+//! The training loop: drives a `train_step_*` artifact over the
+//! device-resident state blob.
+//!
+//! Hot-path discipline (perf deliverable): per step the host does exactly
+//! (a) one x upload + one y upload (the batch), (b) one 4-float sched
+//! upload, (c) one execute_b — the blob output buffer becomes the next
+//! step's input. Metrics are read back only every `log_every` steps via
+//! the 8-float `read_metrics_*` program.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::config::RunConfig;
+use crate::data::DataLoader;
+use crate::metrics::{EvalAccum, RunLog, StepMetrics};
+use crate::runtime::{HostBlob, Manifest, Session};
+
+use super::schedule::Schedule;
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub curve: Vec<(usize, f64)>,
+    pub eval_curve: Vec<(usize, f64, f64)>, // (step, ppl, acc)
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+pub struct Trainer<'s> {
+    pub session: &'s Session,
+    pub cfg: RunConfig,
+    train_entry: String,
+    metrics_entry: String,
+    extract_entry: String,
+    eval_entry: String,
+    layout_key: String,
+    blob: Option<PjRtBuffer>,
+    pub loader: DataLoader,
+    val_loader: Option<DataLoader>,
+    log: Option<RunLog>,
+}
+
+impl<'s> Trainer<'s> {
+    pub fn new(
+        session: &'s Session,
+        cfg: RunConfig,
+        loader: DataLoader,
+        val_loader: Option<DataLoader>,
+    ) -> Result<Trainer<'s>> {
+        let preset = &cfg.preset;
+        let opt = &cfg.opt;
+        let train_entry = Manifest::train_step_name(preset, opt);
+        session
+            .manifest
+            .entry(&train_entry)
+            .with_context(|| format!("preset {preset} / optimizer {opt}"))?;
+        Ok(Trainer {
+            session,
+            train_entry,
+            metrics_entry: Manifest::read_metrics_name(preset, opt),
+            extract_entry: Manifest::extract_params_name(preset, opt),
+            eval_entry: Manifest::eval_name(preset),
+            layout_key: Manifest::layout_key(preset, opt),
+            cfg,
+            blob: None,
+            loader,
+            val_loader,
+            log: None,
+        })
+    }
+
+    pub fn with_logging(mut self) -> Result<Self> {
+        self.log = Some(RunLog::create(
+            &self.cfg.out_dir,
+            &self.cfg.run_name(),
+        )?);
+        Ok(self)
+    }
+
+    /// Initialize the device blob from the AOT `init_*` program (seeded,
+    /// fully reproducible from Rust).
+    pub fn init_from_seed(&mut self) -> Result<()> {
+        let entry = Manifest::init_name(&self.cfg.preset, &self.cfg.opt);
+        let seed = self.session.upload_i32(&[self.cfg.seed as i32], &[])?;
+        let blob = self.session.execute_buf(&entry, &[&seed])?;
+        self.blob = Some(blob);
+        Ok(())
+    }
+
+    /// Start from a host checkpoint (e.g. a repacked pre-trained blob).
+    pub fn set_host_blob(&mut self, blob: &HostBlob) -> Result<()> {
+        let layout = self.session.manifest.layout(&self.layout_key)?;
+        if blob.data.len() != layout.blob_len {
+            anyhow::bail!(
+                "checkpoint blob len {} != layout {} ({})",
+                blob.data.len(),
+                layout.blob_len,
+                self.layout_key
+            );
+        }
+        self.blob =
+            Some(self.session.upload_f32(&blob.data, &[layout.blob_len])?);
+        Ok(())
+    }
+
+    pub fn host_blob(&self) -> Result<HostBlob> {
+        let layout = self.session.manifest.layout(&self.layout_key)?;
+        let buf = self.blob.as_ref().ok_or_else(|| anyhow!("no blob"))?;
+        let data = self.session.fetch_f32_raw(buf, layout.blob_len)?;
+        HostBlob::new(data, &self.layout_key, layout)
+    }
+
+    /// Extract the bare parameter blob (on device) for eval entries.
+    pub fn params_buffer(&self) -> Result<PjRtBuffer> {
+        let buf = self.blob.as_ref().ok_or_else(|| anyhow!("no blob"))?;
+        self.session.execute_buf(&self.extract_entry, &[buf])
+    }
+
+    pub fn read_metrics(&self) -> Result<Vec<f32>> {
+        let buf = self.blob.as_ref().ok_or_else(|| anyhow!("no blob"))?;
+        let m = self.session.execute_buf(&self.metrics_entry, &[buf])?;
+        self.session.fetch_f32_raw(&m, 8)
+    }
+
+    /// Run `cfg.steps` training steps. Requires an initialized blob.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let schedule = Schedule::cosine(
+            self.cfg.lr,
+            self.cfg.warmup_steps,
+            self.cfg.steps,
+        );
+        self.train_with_schedule(schedule)
+    }
+
+    pub fn train_with_schedule(&mut self, schedule: Schedule) -> Result<TrainReport> {
+        if self.blob.is_none() {
+            self.init_from_seed()?;
+        }
+        // Move compile time off the timed loop.
+        self.session.compile(&self.train_entry)?;
+        self.session.compile(&self.metrics_entry)?;
+
+        let (b, t) = (self.loader.b, self.loader.t);
+        let mut curve = Vec::new();
+        let mut eval_curve = Vec::new();
+        let mut last_loss = f32::NAN;
+        let started = Instant::now();
+        let mut step_t0 = Instant::now();
+
+        for step in 1..=self.cfg.steps {
+            let batch = self.loader.next_batch();
+            let lr = schedule.lr_at(step);
+            let x = self.session.upload_i32(&batch.x, &[b, t])?;
+            let y = self.session.upload_i32(&batch.y, &[b, t])?;
+            let sched = self.session.upload_f32(
+                &[lr, step as f32, self.cfg.wd, self.cfg.clip],
+                &[4],
+            )?;
+            let blob = self.blob.take().expect("initialized above");
+            let next = self
+                .session
+                .execute_buf(&self.train_entry, &[&blob, &x, &y, &sched])?;
+            self.blob = Some(next);
+
+            if step % self.cfg.log_every == 0 || step == self.cfg.steps {
+                let slots = self.read_metrics()?;
+                let dt = step_t0.elapsed().as_secs_f64()
+                    / self.cfg.log_every as f64;
+                step_t0 = Instant::now();
+                let m = StepMetrics::from_slots(step, &slots, lr, dt);
+                last_loss = m.loss;
+                curve.push((step, m.loss as f64));
+                if let Some(log) = &mut self.log {
+                    log.log_train(&m)?;
+                }
+            }
+            if self.cfg.eval_every > 0
+                && self.val_loader.is_some()
+                && (step % self.cfg.eval_every == 0 || step == self.cfg.steps)
+            {
+                let e = self.evaluate()?;
+                eval_curve.push((step, e.perplexity(), e.accuracy()));
+                if let Some(log) = &mut self.log {
+                    log.log_eval(step, &e)?;
+                }
+            }
+        }
+        let wall = started.elapsed().as_secs_f64();
+        let tokens = (self.cfg.steps * b * t) as f64;
+        Ok(TrainReport {
+            steps: self.cfg.steps,
+            final_loss: last_loss,
+            curve,
+            eval_curve,
+            wall_secs: wall,
+            tokens_per_sec: tokens / wall,
+        })
+    }
+
+    /// Evaluate on the validation loader (one epoch's worth of batches,
+    /// capped for tractability).
+    pub fn evaluate(&mut self) -> Result<EvalAccum> {
+        let params = self.params_buffer()?;
+        let val = self
+            .val_loader
+            .as_mut()
+            .ok_or_else(|| anyhow!("no validation loader"))?;
+        let n_batches = val.batches_per_epoch().clamp(1, 8);
+        let (b, t) = (val.b, val.t);
+        let mut accum = EvalAccum::default();
+        for _ in 0..n_batches {
+            let batch = val.next_batch();
+            let x = self.session.upload_i32(&batch.x, &[b, t])?;
+            let y = self.session.upload_i32(&batch.y, &[b, t])?;
+            let m = self
+                .session
+                .execute_buf(&self.eval_entry, &[&params, &x, &y])?;
+            let slots = self.session.fetch_f32_raw(&m, 8)?;
+            accum.add_slots(&slots);
+        }
+        Ok(accum)
+    }
+}

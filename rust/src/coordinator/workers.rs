@@ -1,0 +1,170 @@
+//! Thread-per-rank data-parallel execution.
+//!
+//! Each rank owns its own PJRT CPU session and trains on an independent
+//! data stream (forked PRNG); every `sync_every` steps the leader gathers
+//! the ranks' parameter regions, averages them (local-SGD synchronization
+//! — the collective our artifacts support without exposing raw gradients),
+//! and broadcasts the average back. Optimizer state stays rank-local, as
+//! in DeepSpeed's ZeRO-3 where state is sharded anyway.
+//!
+//! This is the "runs for real" half of the distributed story; the
+//! analytic half (exact ZeRO-3 memory and NCCL timing) lives in `memsim`
+//! and [`super::collective`].
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::data::{loader::DataLoader, Domain};
+use crate::runtime::{HostBlob, Manifest, Session};
+use crate::util::rng::Pcg32;
+
+use super::schedule::Schedule;
+use super::trainer::Trainer;
+
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub n_ranks: usize,
+    pub rounds: usize,
+    pub per_rank_final_loss: Vec<f32>,
+    /// Validation loss of the averaged model after the final round.
+    pub averaged_eval_loss: f64,
+    pub wall_secs: f64,
+    pub aggregate_tokens_per_sec: f64,
+}
+
+/// Run `rounds` x `sync_every` steps on `n_ranks` threads with parameter
+/// averaging between rounds.
+pub fn run_local_sgd(
+    artifacts_dir: PathBuf,
+    base_cfg: RunConfig,
+    domain: Domain,
+    n_ranks: usize,
+    rounds: usize,
+    sync_every: usize,
+) -> Result<WorkerReport> {
+    let started = std::time::Instant::now();
+    let layout_key = Manifest::layout_key(&base_cfg.preset, &base_cfg.opt);
+
+    // Rank threads live for the whole run; channel pairs carry blobs
+    // leader <-> rank between rounds.
+    let mut to_ranks = Vec::new();
+    let mut from_ranks = Vec::new();
+    let mut handles = Vec::new();
+    for rank in 0..n_ranks {
+        let (tx_cmd, rx_cmd) = mpsc::channel::<Option<HostBlob>>();
+        let (tx_res, rx_res) = mpsc::channel::<Result<(HostBlob, f32)>>();
+        to_ranks.push(tx_cmd);
+        from_ranks.push(rx_res);
+        let cfg = {
+            let mut c = base_cfg.clone();
+            c.steps = sync_every;
+            c.seed = base_cfg.seed + 1000 * rank as u64;
+            c.eval_every = 0;
+            c.log_every = sync_every;
+            c
+        };
+        let dir = artifacts_dir.clone();
+        handles.push(thread::spawn(move || -> Result<()> {
+            let session = Session::open(&dir)?;
+            let mut stream_rng = Pcg32::new(cfg.seed, 7);
+            let preset = session.manifest.preset(&cfg.preset)?.clone();
+            let (b, t) = (preset.batch_size, preset.seq_len);
+            let schedule =
+                Schedule::constant(cfg.lr * 0.5); // stable for local-SGD
+            while let Ok(cmd) = rx_cmd.recv() {
+                // None is the shutdown signal from the leader.
+                let Some(start_blob) = cmd else { break };
+                let loader = DataLoader::lm(
+                    domain,
+                    stream_rng.next_u64(),
+                    b,
+                    t,
+                    sync_every * b * t + b * (t + 1),
+                );
+                let mut trainer =
+                    Trainer::new(&session, cfg.clone(), loader, None)?;
+                trainer.set_host_blob(&start_blob)?;
+                let report = trainer.train_with_schedule(schedule)?;
+                let blob = trainer.host_blob()?;
+                tx_res.send(Ok((blob, report.final_loss)))?;
+            }
+            Ok(())
+        }));
+    }
+
+    // Leader: init once, then rounds of (broadcast, train, gather, average).
+    let leader_session = Session::open(&artifacts_dir)?;
+    let layout = leader_session.manifest.layout(&layout_key)?.clone();
+    let mut leader_cfg = base_cfg.clone();
+    leader_cfg.steps = 1;
+    let preset = leader_session.manifest.preset(&base_cfg.preset)?;
+    let (b, t) = (preset.batch_size, preset.seq_len);
+    let seed_loader = DataLoader::lm(domain, base_cfg.seed, b, t, 2 * b * (t + 1));
+    let mut init_trainer =
+        Trainer::new(&leader_session, leader_cfg, seed_loader, None)?;
+    init_trainer.init_from_seed()?;
+    let mut global = init_trainer.host_blob()?;
+
+    let mut per_rank_final_loss = vec![0f32; n_ranks];
+    for _round in 0..rounds {
+        for tx in &to_ranks {
+            tx.send(Some(global.clone()))
+                .map_err(|e| anyhow!("send: {e}"))?;
+        }
+        let mut blobs = Vec::with_capacity(n_ranks);
+        for (rank, rx) in from_ranks.iter().enumerate() {
+            let (blob, loss) = rx.recv().map_err(|e| anyhow!("recv: {e}"))??;
+            per_rank_final_loss[rank] = loss;
+            blobs.push(blob);
+        }
+        // Average the parameter region; keep leader's metrics/state zeroed
+        // (state is rank-local by design).
+        let plen = layout.params_len;
+        let mut avg = vec![0f32; layout.blob_len];
+        for blob in &blobs {
+            for i in 0..plen {
+                avg[i] += blob.data[i];
+            }
+        }
+        let scale = 1.0 / n_ranks as f32;
+        for v in avg[..plen].iter_mut() {
+            *v *= scale;
+        }
+        global = HostBlob::new(avg, &layout_key, &layout)?;
+    }
+    for tx in &to_ranks {
+        let _ = tx.send(None);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+
+    // Evaluate the averaged model.
+    let val_loader =
+        DataLoader::lm(domain, base_cfg.seed + 999, b, t, 4 * b * (t + 1));
+    let mut eval_cfg = base_cfg.clone();
+    eval_cfg.steps = 0;
+    let mut eval_trainer = Trainer::new(
+        &leader_session,
+        eval_cfg,
+        DataLoader::lm(domain, base_cfg.seed, b, t, 2 * b * (t + 1)),
+        Some(val_loader),
+    )?;
+    eval_trainer.set_host_blob(&global)?;
+    let accum = eval_trainer.evaluate()?;
+
+    let wall = started.elapsed().as_secs_f64();
+    let tokens = (n_ranks * rounds * sync_every * b * t) as f64;
+    Ok(WorkerReport {
+        n_ranks,
+        rounds,
+        per_rank_final_loss,
+        averaged_eval_loss: accum.mean_loss(),
+        wall_secs: wall,
+        aggregate_tokens_per_sec: tokens / wall,
+    })
+}

@@ -1,0 +1,326 @@
+//! Domain corpus generators (DESIGN.md §4 substitutions).
+//!
+//! Each domain is a deterministic generative process over bytes whose
+//! distance from the pre-training mixture encodes the paper's setup:
+//!
+//! * `general` — synthetic English-like prose (syllabic words, Zipf-ish
+//!   frequencies): the bulk of the pre-training mix.
+//! * `c4` — the pre-training mixture itself: mostly `general` plus a
+//!   sprinkle of code and numerals (paper §4.3 trains from scratch on C4).
+//! * `chinese` — GB2312-style two-byte symbols, no ASCII words: maximal
+//!   distance from the mix, so further pre-training shows a large
+//!   perplexity drop (paper Fig. 2).
+//! * `python_code` — grammar-generated Python: shares ASCII with the mix,
+//!   so the initial perplexity is lower and the improvement smaller
+//!   (paper Fig. 3's contrast with Fig. 2).
+//!
+//! The *language* of each domain (word banks, grammar tables) is fixed by
+//! internal constants; user seeds only vary which documents are sampled —
+//! so train/validation splits from different seeds share a language.
+
+use crate::util::rng::Pcg32;
+
+use super::tokenizer::DOC_SEP;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    General,
+    Chinese,
+    PythonCode,
+    C4,
+}
+
+impl Domain {
+    pub fn parse(name: &str) -> anyhow::Result<Domain> {
+        Ok(match name {
+            "general" => Domain::General,
+            "chinese" => Domain::Chinese,
+            "python_code" | "python" => Domain::PythonCode,
+            "c4" => Domain::C4,
+            other => anyhow::bail!("unknown domain {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::General => "general",
+            Domain::Chinese => "chinese",
+            Domain::PythonCode => "python_code",
+            Domain::C4 => "c4",
+        }
+    }
+}
+
+/// Fixed internal seed for language construction (NOT document sampling).
+const LANG_SEED: u64 = 0xADA1030;
+
+const CONSONANTS: &[&str] = &[
+    "b", "c", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s",
+    "t", "v", "w", "z", "st", "tr", "ch", "sh",
+];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+
+/// Deterministic word bank shared by every `general`/`c4` generator.
+fn word_bank(n: usize) -> Vec<String> {
+    let mut rng = Pcg32::new(LANG_SEED, 1);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(*rng.choose(CONSONANTS));
+            w.push_str(*rng.choose(VOWELS));
+        }
+        if rng.f32() < 0.3 {
+            w.push_str(*rng.choose(CONSONANTS));
+        }
+        if !out.contains(&w) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// GB2312-style symbol bank: two-byte codes in 0xB0..0xE0 x 0xA1..0xF0.
+fn symbol_bank(n: usize) -> Vec<[u8; 2]> {
+    let mut rng = Pcg32::new(LANG_SEED, 2);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let s = [
+            0xB0 + rng.below(0x30) as u8,
+            0xA1 + rng.below(0x4F) as u8,
+        ];
+        if !out.contains(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+const PY_IDENTS: &[&str] = &[
+    "x", "y", "n", "acc", "total", "data", "item", "value", "count", "idx",
+    "result", "buf", "key", "node", "left", "right",
+];
+const PY_FUNCS: &[&str] = &[
+    "process", "compute", "merge", "split_items", "reduce_all", "scan",
+    "lookup", "apply_fn", "normalize", "pack",
+];
+
+/// Zipf-ish rank sampling: weight 1/(rank + 3).
+fn zipf(rng: &mut Pcg32, n: usize) -> usize {
+    // Inverse-CDF-free rejection-ish approach: few iterations, cheap.
+    loop {
+        let r = rng.below(n);
+        if rng.f32() < 3.0 / (r as f32 + 3.0) {
+            return r;
+        }
+    }
+}
+
+/// Streaming document generator for one domain.
+pub struct CorpusGen {
+    pub domain: Domain,
+    rng: Pcg32,
+    words: Vec<String>,
+    symbols: Vec<[u8; 2]>,
+}
+
+impl CorpusGen {
+    pub fn new(domain: Domain, seed: u64) -> CorpusGen {
+        CorpusGen {
+            domain,
+            rng: Pcg32::new(seed, domain as u64 + 10),
+            words: word_bank(512),
+            symbols: symbol_bank(384),
+        }
+    }
+
+    /// One document (sentence/paragraph/function), as bytes. Never
+    /// contains NUL (PAD) or DOC_SEP.
+    pub fn doc(&mut self) -> Vec<u8> {
+        match self.domain {
+            Domain::General => {
+                let n = 2 + self.rng.below(3);
+                self.general_paragraph(n)
+            }
+            Domain::Chinese => self.chinese_paragraph(),
+            Domain::PythonCode => self.python_function(),
+            Domain::C4 => {
+                let roll = self.rng.f32();
+                if roll < 0.85 {
+                    let n = 1 + self.rng.below(4);
+                    self.general_paragraph(n)
+                } else if roll < 0.95 {
+                    self.python_function()
+                } else {
+                    self.numeric_fragment()
+                }
+            }
+        }
+    }
+
+    /// Pack documents (joined by DOC_SEP) until at least `n_bytes`.
+    pub fn stream(&mut self, n_bytes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n_bytes + 256);
+        while out.len() < n_bytes {
+            out.extend_from_slice(&self.doc());
+            out.push(DOC_SEP);
+        }
+        out
+    }
+
+    fn sentence(&mut self) -> String {
+        let n = 4 + self.rng.below(9);
+        let mut parts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = zipf(&mut self.rng, self.words.len());
+            parts.push(self.words[idx].clone());
+        }
+        let mut s = parts.join(" ");
+        // Capitalize first letter; safe: bank words are ASCII.
+        s[..1].make_ascii_uppercase();
+        s.push('.');
+        s
+    }
+
+    fn general_paragraph(&mut self, sentences: usize) -> Vec<u8> {
+        let mut out = String::new();
+        for i in 0..sentences {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.sentence());
+        }
+        out.into_bytes()
+    }
+
+    fn chinese_paragraph(&mut self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let sentences = 1 + self.rng.below(4);
+        for _ in 0..sentences {
+            let chars = 6 + self.rng.below(18);
+            for _ in 0..chars {
+                let idx = zipf(&mut self.rng, self.symbols.len());
+                out.extend_from_slice(&self.symbols[idx]);
+            }
+            // GB2312 full-width period 0xA1 0xA3.
+            out.extend_from_slice(&[0xA1, 0xA3]);
+        }
+        out
+    }
+
+    fn python_function(&mut self) -> Vec<u8> {
+        let fname = *self.rng.choose(PY_FUNCS);
+        let arg = *self.rng.choose(PY_IDENTS);
+        let mut out = format!("def {fname}({arg}):");
+        let body_lines = 1 + self.rng.below(4);
+        for _ in 0..body_lines {
+            let v = *self.rng.choose(PY_IDENTS);
+            let w = *self.rng.choose(PY_IDENTS);
+            let stmt = match self.rng.below(4) {
+                0 => format!("    {v} = {w} + {}", self.rng.below(100)),
+                1 => format!("    if {v} > {}: {w} = {v}", self.rng.below(10)),
+                2 => format!("    {v} = [{w} for {w} in range({})]",
+                             1 + self.rng.below(20)),
+                _ => format!("    {v} = {w} * {}", 1 + self.rng.below(9)),
+            };
+            out.push('\r'); // avoid DOC_SEP inside docs; '\r' plays newline
+            out.push_str(&stmt);
+        }
+        let ret = *self.rng.choose(PY_IDENTS);
+        out.push('\r');
+        out.push_str(&format!("    return {ret}"));
+        out.into_bytes()
+    }
+
+    fn numeric_fragment(&mut self) -> Vec<u8> {
+        let n = 3 + self.rng.below(8);
+        let nums: Vec<String> = (0..n)
+            .map(|_| format!("{}", self.rng.below(10_000)))
+            .collect();
+        nums.join(", ").into_bytes()
+    }
+}
+
+/// Byte histogram (for the distribution-distance tests and DESIGN claims).
+pub fn byte_histogram(bytes: &[u8]) -> [f64; 256] {
+    let mut h = [0f64; 256];
+    for &b in bytes {
+        h[b as usize] += 1.0;
+    }
+    let total: f64 = h.iter().sum::<f64>().max(1.0);
+    for v in h.iter_mut() {
+        *v /= total;
+    }
+    h
+}
+
+/// Total-variation distance between two byte distributions.
+pub fn tv_distance(a: &[f64; 256], b: &[f64; 256]) -> f64 {
+    0.5 * a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d1 = CorpusGen::new(Domain::General, 7).stream(1000);
+        let d2 = CorpusGen::new(Domain::General, 7).stream(1000);
+        let d3 = CorpusGen::new(Domain::General, 8).stream(1000);
+        assert_eq!(d1, d2);
+        assert_ne!(d1, d3);
+    }
+
+    #[test]
+    fn no_pad_bytes_emitted() {
+        for domain in [
+            Domain::General,
+            Domain::Chinese,
+            Domain::PythonCode,
+            Domain::C4,
+        ] {
+            let s = CorpusGen::new(domain, 1).stream(5000);
+            assert!(!s.contains(&0u8), "{domain:?} emitted NUL");
+        }
+    }
+
+    #[test]
+    fn chinese_is_far_python_is_near() {
+        // The domain-distance ordering that drives Fig. 2 vs Fig. 3.
+        let c4 = byte_histogram(&CorpusGen::new(Domain::C4, 1).stream(40_000));
+        let zh =
+            byte_histogram(&CorpusGen::new(Domain::Chinese, 1).stream(40_000));
+        let py = byte_histogram(
+            &CorpusGen::new(Domain::PythonCode, 1).stream(40_000),
+        );
+        let d_zh = tv_distance(&c4, &zh);
+        let d_py = tv_distance(&c4, &py);
+        assert!(d_zh > 0.9, "chinese should be almost disjoint: {d_zh}");
+        assert!(d_py < 0.6, "python shares ASCII: {d_py}");
+        assert!(d_zh > d_py + 0.3);
+    }
+
+    #[test]
+    fn python_docs_look_like_code() {
+        let doc = CorpusGen::new(Domain::PythonCode, 3).doc();
+        let text = String::from_utf8(doc).unwrap();
+        assert!(text.starts_with("def "));
+        assert!(text.contains("return "));
+    }
+
+    #[test]
+    fn chinese_uses_two_byte_symbols() {
+        let doc = CorpusGen::new(Domain::Chinese, 3).doc();
+        assert!(doc.iter().all(|&b| b >= 0xA1), "{doc:?}");
+        assert_eq!(doc.len() % 2, 0);
+    }
+
+    #[test]
+    fn stream_reaches_length_and_separates_docs() {
+        let s = CorpusGen::new(Domain::C4, 5).stream(10_000);
+        assert!(s.len() >= 10_000);
+        assert!(s.iter().filter(|&&b| b == DOC_SEP).count() > 3);
+    }
+}

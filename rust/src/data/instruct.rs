@@ -1,0 +1,442 @@
+//! Synthetic instruction-tuning data + the five-benchmark evaluation
+//! questions (paper §4.1 substitution, DESIGN.md §4).
+//!
+//! Five task families probe the same axes as the paper's benchmarks:
+//!
+//! | paper      | here                                           |
+//! |------------|------------------------------------------------|
+//! | MMLU       | Knowledge: synthetic atlas facts, 4-way MC     |
+//! | BBH        | Reasoning: periodic pattern continuation, MC   |
+//! | GSM8K      | Arithmetic: 2-digit add/sub, MC over numbers   |
+//! | HumanEval  | Code: bracket-sequence completion, MC          |
+//! | AlpacaFarm | Writing: instruction-following win rate        |
+//!
+//! Training examples are rendered through the paper's exact Alpaca
+//! templates (Table 4); answers are scored by per-sequence likelihood
+//! (lm-eval-harness style), so evaluation shares the AOT `seq loss` path
+//! with training and needs no sampling loop.
+
+use crate::util::rng::Pcg32;
+
+use super::tokenizer::{encode, PAD};
+
+/// Alpaca template WITH input (paper Table 4, verbatim).
+pub const TEMPLATE_WITH_INPUT: &str = "Below is an instruction that describes a task, paired with an input that provides further context. Write a response that appropriately completes the request.\n\n### Instruction:\n{instruction}\n\n### Input:\n{input}\n\n### Response: ";
+/// Alpaca template WITHOUT input (paper Table 4, verbatim).
+pub const TEMPLATE_NO_INPUT: &str = "Below is an instruction that describes a task. Write a response that appropriately completes the request.\n\n### Instruction:\n{instruction}\n\n### Response: ";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Knowledge,
+    Reasoning,
+    Arithmetic,
+    Code,
+    Writing,
+}
+
+pub const FAMILIES: [Family; 5] = [
+    Family::Knowledge,
+    Family::Reasoning,
+    Family::Arithmetic,
+    Family::Code,
+    Family::Writing,
+];
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Knowledge => "knowledge",
+            Family::Reasoning => "reasoning",
+            Family::Arithmetic => "arithmetic",
+            Family::Code => "code",
+            Family::Writing => "writing",
+        }
+    }
+
+    /// The paper benchmark this family stands in for.
+    pub fn paper_benchmark(&self) -> &'static str {
+        match self {
+            Family::Knowledge => "MMLU",
+            Family::Reasoning => "BBH",
+            Family::Arithmetic => "GSM8K",
+            Family::Code => "HumanEval",
+            Family::Writing => "AlpacaFarm",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub instruction: String,
+    pub input: String,
+    pub response: String,
+}
+
+impl Example {
+    pub fn prompt(&self) -> String {
+        if self.input.is_empty() {
+            TEMPLATE_NO_INPUT.replace("{instruction}", &self.instruction)
+        } else {
+            TEMPLATE_WITH_INPUT
+                .replace("{instruction}", &self.instruction)
+                .replace("{input}", &self.input)
+        }
+    }
+
+    /// Tokenize to (x, y) with the prompt masked out of the loss (standard
+    /// instruction-tuning recipe).
+    pub fn tokenize(&self) -> (Vec<i32>, Vec<i32>) {
+        let prompt = encode(&self.prompt());
+        let response = encode(&self.response);
+        let mut x = prompt.clone();
+        x.extend_from_slice(&response);
+        // y[i] predicts x[i+1]; prompt positions are PAD-masked, response
+        // tokens (and nothing after) are counted.
+        let mut y = vec![PAD; x.len()];
+        for i in 0..response.len() {
+            y[prompt.len() - 1 + i] = response[i];
+        }
+        (x, y)
+    }
+}
+
+/// A 4-way multiple-choice evaluation item.
+#[derive(Debug, Clone)]
+pub struct McItem {
+    pub family: Family,
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+/// Synthetic knowledge base: a fictional atlas (regions -> capitals),
+/// fixed by an internal seed so training and evaluation agree on facts.
+pub struct Kb {
+    pub regions: Vec<String>,
+    pub capitals: Vec<String>,
+}
+
+const KB_SEED: u64 = 0xFAC75;
+pub const KB_SIZE: usize = 48;
+
+impl Kb {
+    pub fn build() -> Kb {
+        let mut rng = Pcg32::new(KB_SEED, 3);
+        let syll = ["var", "men", "dor", "kal", "ith", "pra", "zun", "bel",
+                    "tor", "ash", "gla", "nim"];
+        let mut mk = |suffix: &str, cap: bool| {
+            let n = 2 + rng.below(2);
+            let mut w = String::new();
+            for _ in 0..n {
+                w.push_str(syll[rng.below(syll.len())]);
+            }
+            w.push_str(suffix);
+            if cap {
+                w[..1].make_ascii_uppercase();
+            }
+            w
+        };
+        let mut regions = Vec::new();
+        let mut capitals = Vec::new();
+        while regions.len() < KB_SIZE {
+            let r = mk("ia", true);
+            let c = mk("grad", true);
+            if !regions.contains(&r) && !capitals.contains(&c) {
+                regions.push(r);
+                capitals.push(c);
+            }
+        }
+        Kb { regions, capitals }
+    }
+}
+
+/// Pattern alphabets for the reasoning family.
+const PATTERN_TOKENS: &[&str] = &["red", "blue", "gold", "iron", "moss"];
+
+/// Writing-task topics.
+const TOPICS: &[&str] = &[
+    "rivers", "lanterns", "gardens", "engines", "harbors", "orchards",
+    "mirrors", "bridges", "clocks", "meadows",
+];
+
+fn knowledge_example(kb: &Kb, i: usize) -> Example {
+    Example {
+        instruction: format!(
+            "What is the capital of {}?",
+            kb.regions[i % kb.regions.len()]
+        ),
+        input: String::new(),
+        response: format!(
+            "The capital of {} is {}.",
+            kb.regions[i % kb.regions.len()],
+            kb.capitals[i % kb.capitals.len()]
+        ),
+    }
+}
+
+fn reasoning_example(rng: &mut Pcg32) -> (Example, usize, Vec<String>) {
+    // Periodic pattern a b c a b c ... -> next element.
+    let period = 2 + rng.below(3);
+    let offset = rng.below(PATTERN_TOKENS.len());
+    let pattern: Vec<&str> = (0..period)
+        .map(|k| PATTERN_TOKENS[(offset + k) % PATTERN_TOKENS.len()])
+        .collect();
+    let shown = period * 2 + rng.below(period);
+    let seq: Vec<&str> = (0..shown).map(|k| pattern[k % period]).collect();
+    let answer_tok = pattern[shown % period];
+    let ex = Example {
+        instruction: "Continue the repeating pattern with the next word."
+            .to_string(),
+        input: seq.join(" "),
+        response: answer_tok.to_string(),
+    };
+    let answer_idx = PATTERN_TOKENS.iter().position(|&t| t == answer_tok).unwrap();
+    let options: Vec<String> =
+        PATTERN_TOKENS.iter().take(4).map(|s| s.to_string()).collect();
+    // Ensure the right answer is among the first 4 tokens.
+    let (options, answer) = if answer_idx < 4 {
+        (options, answer_idx)
+    } else {
+        let mut o = options;
+        o[0] = answer_tok.to_string();
+        (o, 0)
+    };
+    (ex, answer, options)
+}
+
+fn arithmetic_example(rng: &mut Pcg32) -> (Example, i64) {
+    let a = 10 + rng.below(90) as i64;
+    let b = 10 + rng.below(90) as i64;
+    let (text, val) = if rng.f32() < 0.5 {
+        (format!("{a} + {b}"), a + b)
+    } else {
+        (format!("{} - {b}", a + b), a)
+    };
+    (
+        Example {
+            instruction: format!("Compute {text}."),
+            input: String::new(),
+            response: format!("{val}"),
+        },
+        val,
+    )
+}
+
+fn code_example(rng: &mut Pcg32) -> (Example, String) {
+    // Close an open bracket sequence (HumanEval-in-miniature: syntactic
+    // completion with an exact checkable answer).
+    let depth = 1 + rng.below(4);
+    let kinds = ["()", "[]", "{}"];
+    let mut open = String::new();
+    let mut close = String::new();
+    for _ in 0..depth {
+        let k = kinds[rng.below(3)];
+        open.push(k.as_bytes()[0] as char);
+        close.insert(0, k.as_bytes()[1] as char);
+    }
+    (
+        Example {
+            instruction: "Write the closing brackets that complete the sequence.".to_string(),
+            input: open,
+            response: close.clone(),
+        },
+        close,
+    )
+}
+
+fn writing_example(rng: &mut Pcg32, kb: &Kb) -> Example {
+    let topic = TOPICS[rng.below(TOPICS.len())];
+    let region = &kb.regions[rng.below(kb.regions.len())];
+    Example {
+        instruction: format!("Write one sentence about the {topic} of {region}."),
+        input: String::new(),
+        response: format!(
+            "The {topic} of {region} are known across the land for their quiet beauty."
+        ),
+    }
+}
+
+/// Instruction-tuning training set: a balanced mixture of all families
+/// rendered through the Alpaca templates (the 52k GPT-4-Alpaca stand-in).
+pub fn training_set(seed: u64, n: usize) -> Vec<Example> {
+    let kb = Kb::build();
+    let mut rng = Pcg32::new(seed, 21);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let ex = match i % 5 {
+            0 => knowledge_example(&kb, rng.below(KB_SIZE)),
+            1 => reasoning_example(&mut rng).0,
+            2 => arithmetic_example(&mut rng).0,
+            3 => code_example(&mut rng).0,
+            _ => writing_example(&mut rng, &kb),
+        };
+        out.push(ex);
+    }
+    out
+}
+
+/// Evaluation items for one family. `seed` controls instance sampling;
+/// reasoning/arithmetic/code items generalize (fresh instances), knowledge
+/// items probe the shared KB.
+pub fn eval_items(family: Family, seed: u64, n: usize) -> Vec<McItem> {
+    let kb = Kb::build();
+    let mut rng = Pcg32::new(seed, 31);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let item = match family {
+            Family::Knowledge => {
+                let i = rng.below(KB_SIZE);
+                let mut options = vec![kb.capitals[i].clone()];
+                while options.len() < 4 {
+                    let d = kb.capitals[rng.below(KB_SIZE)].clone();
+                    if !options.contains(&d) {
+                        options.push(d);
+                    }
+                }
+                rng.shuffle(&mut options);
+                let answer =
+                    options.iter().position(|c| *c == kb.capitals[i]).unwrap();
+                McItem {
+                    family,
+                    prompt: knowledge_example(&kb, i).prompt(),
+                    options: options
+                        .iter()
+                        .map(|c| format!("The capital of {} is {c}.", kb.regions[i]))
+                        .collect(),
+                    answer,
+                }
+            }
+            Family::Reasoning => {
+                let (ex, answer, options) = reasoning_example(&mut rng);
+                McItem { family, prompt: ex.prompt(), options, answer }
+            }
+            Family::Arithmetic => {
+                let (ex, val) = arithmetic_example(&mut rng);
+                let mut options = vec![format!("{val}")];
+                for delta in [-10i64, 1, 10] {
+                    options.push(format!("{}", val + delta));
+                }
+                let answer = 0;
+                // Keep answer position fixed at 0 then rotate by rng for
+                // balance.
+                let rot = rng.below(4);
+                options.rotate_right(rot);
+                McItem {
+                    family,
+                    prompt: ex.prompt(),
+                    options,
+                    answer: (answer + rot) % 4,
+                }
+            }
+            Family::Code => {
+                let (ex, close) = code_example(&mut rng);
+                let mut options = vec![close.clone()];
+                while options.len() < 4 {
+                    let (_, alt) = code_example(&mut rng);
+                    if !options.contains(&alt) {
+                        options.push(alt);
+                    }
+                }
+                rng.shuffle(&mut options);
+                let answer =
+                    options.iter().position(|o| *o == close).unwrap();
+                McItem { family, prompt: ex.prompt(), options, answer }
+            }
+            Family::Writing => {
+                // Writing is scored as win-rate, not MC; represented as a
+                // 1-option item holding the gold response.
+                let ex = writing_example(&mut rng, &kb);
+                McItem {
+                    family,
+                    prompt: ex.prompt(),
+                    options: vec![ex.response],
+                    answer: 0,
+                }
+            }
+        };
+        out.push(item);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_match_table4() {
+        assert!(TEMPLATE_WITH_INPUT.contains("### Instruction:"));
+        assert!(TEMPLATE_WITH_INPUT.contains("### Input:"));
+        assert!(TEMPLATE_NO_INPUT.contains("### Response:"));
+        assert!(!TEMPLATE_NO_INPUT.contains("### Input:"));
+    }
+
+    #[test]
+    fn tokenize_masks_prompt() {
+        let ex = Example {
+            instruction: "Say hi.".into(),
+            input: String::new(),
+            response: "hi".into(),
+        };
+        let (x, y) = ex.tokenize();
+        assert_eq!(x.len(), y.len());
+        let counted = y.iter().filter(|&&v| v != 0).count();
+        assert_eq!(counted, 2); // exactly the response bytes
+        // The first response target sits at prompt_len - 1.
+        let plen = encode(&ex.prompt()).len();
+        assert_eq!(y[plen - 1], 'h' as i32);
+    }
+
+    #[test]
+    fn kb_is_stable_and_unique() {
+        let a = Kb::build();
+        let b = Kb::build();
+        assert_eq!(a.regions, b.regions);
+        assert_eq!(a.capitals.len(), KB_SIZE);
+        let mut caps = a.capitals.clone();
+        caps.dedup();
+        assert_eq!(caps.len(), KB_SIZE);
+    }
+
+    #[test]
+    fn training_set_mixes_families() {
+        let set = training_set(1, 50);
+        assert_eq!(set.len(), 50);
+        assert!(set.iter().any(|e| e.instruction.contains("capital")));
+        assert!(set.iter().any(|e| e.instruction.contains("Compute")));
+        assert!(set.iter().any(|e| e.instruction.contains("closing brackets")));
+    }
+
+    #[test]
+    fn eval_items_have_valid_answers() {
+        for family in FAMILIES {
+            let items = eval_items(family, 9, 20);
+            for item in items {
+                assert!(item.answer < item.options.len(), "{family:?}");
+                if family != Family::Writing {
+                    assert_eq!(item.options.len(), 4);
+                    // Options must be distinct for MC scoring to make sense.
+                    let mut o = item.options.clone();
+                    o.sort();
+                    o.dedup();
+                    assert_eq!(o.len(), 4, "{family:?}: {:?}", item.options);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_options_contain_answer() {
+        let items = eval_items(Family::Arithmetic, 3, 30);
+        for item in items {
+            // Reconstruct: correct answer is options[answer]; verify it
+            // differs from distractors and parses as integer.
+            let v: i64 = item.options[item.answer].parse().unwrap();
+            for (i, o) in item.options.iter().enumerate() {
+                if i != item.answer {
+                    assert_ne!(o.parse::<i64>().unwrap(), v);
+                }
+            }
+        }
+    }
+}

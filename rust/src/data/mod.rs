@@ -1,0 +1,15 @@
+//! Synthetic data substrate.
+//!
+//! The paper's corpora (GPT-4-Alpaca, Baidu-baike, StarCoder-Python, C4)
+//! are substituted with deterministic generators whose *statistics* encode
+//! what each experiment needs (DESIGN.md §4): domain distance drives the
+//! further-pre-training story, instruction structure drives the tuning
+//! story. Everything is byte-level (vocab 256, pad/ignore id 0).
+
+pub mod corpus;
+pub mod instruct;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::Domain;
+pub use loader::{Batch, DataLoader};

@@ -1,0 +1,47 @@
+//! Byte-level tokenizer. Vocab = 256 raw bytes; id 0 is PAD/ignore (the
+//! generators never emit NUL), so loss masks are just `y != 0`.
+
+pub const VOCAB: usize = 256;
+pub const PAD: i32 = 0;
+/// Document separator in packed streams.
+pub const DOC_SEP: u8 = b'\n';
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn encode_bytes(bytes: &[u8]) -> Vec<i32> {
+    bytes.iter().map(|&b| b as i32).collect()
+}
+
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&t| t != PAD)
+        .map(|&t| (t & 0xff) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let ids = encode("hello, world");
+        assert_eq!(decode(&ids), "hello, world");
+        assert!(ids.iter().all(|&t| t > 0 && t < 256));
+    }
+
+    #[test]
+    fn pad_dropped_on_decode() {
+        assert_eq!(decode(&[104, 0, 105]), "hi");
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let ids = encode_bytes(&[200, 201, 10]);
+        assert_eq!(ids, vec![200, 201, 10]);
+    }
+}

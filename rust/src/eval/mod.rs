@@ -1,0 +1,174 @@
+//! Synthetic five-benchmark evaluation suite (paper §4.1 / Table 2
+//! substitution — see `data::instruct` for the task families and what each
+//! stands in for).
+//!
+//! Scoring is likelihood-based (lm-eval-harness style) through the
+//! `seq_loss_<preset>` artifact: a multiple-choice item is correct when
+//! the gold option has the lowest length-normalized loss; the writing task
+//! is a win rate of the tuned model against the untuned base model on gold
+//! responses. Scores are 0-100, directly comparable to Table 2's rows.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::data::instruct::{eval_items, Family, McItem, FAMILIES};
+use crate::data::tokenizer::{encode, PAD};
+use crate::runtime::Session;
+
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub scores: BTreeMap<&'static str, f64>,
+    pub avg: f64,
+}
+
+impl SuiteResult {
+    pub fn score(&self, family: Family) -> f64 {
+        self.scores[family.name()]
+    }
+}
+
+/// Tokenize prompt+continuation with the loss mask on the continuation
+/// (same recipe as instruct::Example::tokenize).
+fn rows_for(prompt: &str, continuation: &str) -> (Vec<i32>, Vec<i32>) {
+    let p = encode(prompt);
+    let c = encode(continuation);
+    let mut x = p.clone();
+    x.extend_from_slice(&c);
+    let mut y = vec![PAD; x.len()];
+    for i in 0..c.len() {
+        y[p.len() - 1 + i] = c[i];
+    }
+    (x, y)
+}
+
+/// Mean per-token loss for each (x, y) row, batched through seq_loss.
+pub fn seq_mean_losses(
+    session: &Session,
+    preset: &str,
+    params: &PjRtBuffer,
+    rows: &[(Vec<i32>, Vec<i32>)],
+) -> Result<Vec<f64>> {
+    let info = session.manifest.preset(preset)?;
+    let (b, t) = (info.batch_size, info.seq_len);
+    let entry = format!("seq_loss_{preset}");
+    let mut out = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(b) {
+        let mut x = vec![PAD; b * t];
+        let mut y = vec![PAD; b * t];
+        for (row, (rx, ry)) in chunk.iter().enumerate() {
+            // Left-truncate (keep the scored continuation) when the prompt
+            // exceeds the context window — mirrors the training loader.
+            let start = rx.len().saturating_sub(t);
+            let n = rx.len() - start;
+            x[row * t..row * t + n].copy_from_slice(&rx[start..]);
+            y[row * t..row * t + n].copy_from_slice(&ry[start..]);
+        }
+        let xb = session.upload_i32(&x, &[b, t])?;
+        let yb = session.upload_i32(&y, &[b, t])?;
+        let res = session.execute_buf(&entry, &[params, &xb, &yb])?;
+        let flat = session.fetch_f32(&res)?; // (2, b): loss sums; counts
+        for row in 0..chunk.len() {
+            let loss_sum = flat[row] as f64;
+            let count = flat[b + row] as f64;
+            out.push(if count > 0.0 { loss_sum / count } else { f64::MAX });
+        }
+    }
+    Ok(out)
+}
+
+/// Score one MC family: % of items whose gold option minimizes loss.
+fn score_mc(
+    session: &Session,
+    preset: &str,
+    params: &PjRtBuffer,
+    items: &[McItem],
+) -> Result<f64> {
+    let mut rows = Vec::new();
+    for item in items {
+        for opt in &item.options {
+            rows.push(rows_for(&item.prompt, opt));
+        }
+    }
+    let losses = seq_mean_losses(session, preset, params, &rows)?;
+    let mut correct = 0usize;
+    let mut cursor = 0;
+    for item in items {
+        let k = item.options.len();
+        let slice = &losses[cursor..cursor + k];
+        cursor += k;
+        let best = slice
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / items.len() as f64)
+}
+
+/// Writing win rate: tuned model beats the base model on gold-response
+/// likelihood (the AlpacaFarm-vs-reference substitution).
+fn score_winrate(
+    session: &Session,
+    preset: &str,
+    params: &PjRtBuffer,
+    base: &PjRtBuffer,
+    items: &[McItem],
+) -> Result<f64> {
+    let rows: Vec<_> = items
+        .iter()
+        .map(|i| rows_for(&i.prompt, &i.options[0]))
+        .collect();
+    let tuned = seq_mean_losses(session, preset, params, &rows)?;
+    let reference = seq_mean_losses(session, preset, base, &rows)?;
+    let wins = tuned
+        .iter()
+        .zip(&reference)
+        .filter(|(t, r)| t < r)
+        .count();
+    Ok(100.0 * wins as f64 / items.len() as f64)
+}
+
+/// Run the full five-benchmark suite.
+pub fn run_suite(
+    session: &Session,
+    preset: &str,
+    params: &PjRtBuffer,
+    base_params: &PjRtBuffer,
+    n_items: usize,
+    seed: u64,
+) -> Result<SuiteResult> {
+    let mut scores = BTreeMap::new();
+    for family in FAMILIES {
+        let items = eval_items(family, seed, n_items);
+        let score = match family {
+            Family::Writing => {
+                score_winrate(session, preset, params, base_params, &items)?
+            }
+            _ => score_mc(session, preset, params, &items)?,
+        };
+        scores.insert(family.name(), score);
+    }
+    let avg = scores.values().sum::<f64>() / scores.len() as f64;
+    Ok(SuiteResult { scores, avg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_mask_prompt_only() {
+        let (x, y) = rows_for("ab", "cd");
+        assert_eq!(x, encode("abcd"));
+        assert_eq!(y[0], 0);
+        assert_eq!(y[1], 'c' as i32);
+        assert_eq!(y[2], 'd' as i32);
+        assert_eq!(y[3], 0);
+    }
+}

@@ -1,0 +1,382 @@
+//! Experiment drivers shared by the CLI, the examples and the benches —
+//! one function per paper experiment family, so every surface regenerates
+//! the same numbers.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{paper_lr, Phase, RunConfig, SMALL_MODEL_LR_SCALE};
+use crate::coordinator::{Trainer, TrainReport};
+use crate::data::{instruct, loader::DataLoader, Domain};
+use crate::eval::{run_suite, SuiteResult};
+use crate::optim::{OptKind, ParamOpt};
+use crate::runtime::{HostBlob, Manifest, Session};
+use crate::tensor::Tensor;
+
+/// Default token budgets (tokens of train stream per step-budget unit).
+fn lm_loader(
+    session: &Session,
+    preset: &str,
+    domain: Domain,
+    seed: u64,
+    steps: usize,
+) -> Result<(DataLoader, DataLoader)> {
+    let p = session.manifest.preset(preset)?;
+    let (b, t) = (p.batch_size, p.seq_len);
+    // Enough stream for the run without epoch-cycling too aggressively.
+    let train_tokens = (steps * b * t).clamp(b * (t + 1) * 2, 8_000_000);
+    let train = DataLoader::lm(domain, seed, b, t, train_tokens);
+    let val = DataLoader::lm(domain, seed + 104_729, b, t, 16 * b * (t + 1));
+    Ok((train, val))
+}
+
+/// Effective LR for a (opt, phase) on our scaled-down models.
+///
+/// AdaLomo and Adafactor keep the PAPER's values untouched: their steps
+/// are relative to RMS(theta) (grouped normalization / relative step
+/// size), so the LRs transfer across model scales — one of the paper's
+/// selling points, demonstrated here by construction. Absolute-step
+/// optimizers need small-model retuning (tiny models tolerate and require
+/// larger steps): SGD-family gets the generic x10 rescale; AdamW's 2e-5,
+/// tuned for 7B+, is lifted to the standard small-transformer 1e-3.
+pub fn effective_lr(opt: &str, phase: Phase) -> f32 {
+    let base = paper_lr(opt, phase);
+    match opt {
+        // From-scratch is step-budget-compressed (paper: 8000 steps of
+        // 1e-3 relative movement; our runs: 150-400 steps). Matching the
+        // TOTAL relative movement gives 1e-3 * 8000 / ~250 ≈ 3e-2.
+        // Fine-tuning phases keep the paper values verbatim.
+        "adalomo" | "adalomo_gnorm" | "adafactor"
+            if phase == Phase::Scratch =>
+        {
+            3e-2
+        }
+        "adalomo" | "adalomo_gnorm" | "adafactor" => base,
+        "adamw" | "adam" => 1e-3,
+        "lora" => 3e-3, // paper 3e-4, same x10 as the SGD family
+        // LOMO is plain SGD: x10 like SGD but capped where the paper's
+        // already-large 1e-2 would overshoot on tiny models.
+        "lomo" | "lomo_gnorm" => (base * SMALL_MODEL_LR_SCALE).min(2e-2),
+        _ => base * SMALL_MODEL_LR_SCALE,
+    }
+}
+
+/// From-scratch pre-training (paper §4.3 / Fig. 4).
+pub fn scratch_run(
+    session: &Session,
+    preset: &str,
+    opt: &str,
+    steps: usize,
+    seed: u64,
+    out_dir: &str,
+) -> Result<TrainReport> {
+    let mut cfg = RunConfig::new(preset, opt, Phase::Scratch, steps);
+    cfg.lr = effective_lr(opt, Phase::Scratch);
+    cfg.seed = seed;
+    cfg.out_dir = out_dir.to_string();
+    cfg.eval_every = (steps / 8).max(1);
+    cfg.log_every = (steps / 50).max(1);
+    let (train, val) = lm_loader(session, preset, Domain::C4, seed, steps)?;
+    let mut trainer =
+        Trainer::new(session, cfg, train, Some(val))?.with_logging()?;
+    trainer.train()
+}
+
+/// Build (or load from cache) the "pre-trained LLaMA" stand-in: a short
+/// AdamW pre-train on the C4 mixture. Further pre-training and instruction
+/// tuning start from this checkpoint, as the paper starts from LLaMA.
+pub fn ensure_base_checkpoint(
+    session: &Session,
+    preset: &str,
+    steps: usize,
+    seed: u64,
+    cache_dir: &str,
+) -> Result<HostBlob> {
+    let path = PathBuf::from(cache_dir)
+        .join(format!("base_{preset}_{steps}_{seed}.ckpt"));
+    if path.exists() {
+        if let Ok(blob) = HostBlob::load(&path) {
+            return Ok(blob);
+        }
+    }
+    let mut cfg = RunConfig::new(preset, "adamw", Phase::Scratch, steps);
+    cfg.lr = effective_lr("adamw", Phase::Scratch);
+    cfg.seed = seed;
+    cfg.eval_every = 0;
+    cfg.log_every = (steps / 10).max(1);
+    let (train, _) = lm_loader(session, preset, Domain::C4, seed, steps)?;
+    let mut trainer = Trainer::new(session, cfg, train, None)?;
+    trainer.train()?;
+    let blob = trainer.host_blob()?;
+    std::fs::create_dir_all(cache_dir).ok();
+    blob.save(&path).context("saving base checkpoint")?;
+    Ok(blob)
+}
+
+/// Repack a checkpoint into another optimizer's layout (params carry over,
+/// optimizer state restarts at zero).
+pub fn repack_checkpoint(
+    session: &Session,
+    blob: &HostBlob,
+    preset: &str,
+    opt: &str,
+) -> Result<HostBlob> {
+    let from = session.manifest.layout(&blob.layout_key)?;
+    let to_key = Manifest::layout_key(preset, opt);
+    let to = session.manifest.layout(&to_key)?;
+    blob.repack(from, to, &to_key)
+}
+
+/// Further pre-training on a domain from the base checkpoint
+/// (paper §4.2 / Figs. 2-3; with `opt = "*_gnorm"`, Appendix B Figs. 7-8).
+pub fn further_pretrain(
+    session: &Session,
+    preset: &str,
+    opt: &str,
+    domain: Domain,
+    steps: usize,
+    base: &HostBlob,
+    seed: u64,
+    out_dir: &str,
+) -> Result<TrainReport> {
+    let mut cfg = RunConfig::new(preset, opt, Phase::FurtherPretrain, steps);
+    cfg.lr = effective_lr(opt, Phase::FurtherPretrain);
+    cfg.seed = seed;
+    cfg.domain = domain.name().to_string();
+    cfg.out_dir = out_dir.to_string();
+    cfg.eval_every = (steps / 10).max(1);
+    cfg.log_every = (steps / 50).max(1);
+    let (train, val) = lm_loader(session, preset, domain, seed, steps)?;
+    let mut trainer =
+        Trainer::new(session, cfg, train, Some(val))?.with_logging()?;
+    let repacked = repack_checkpoint(session, base, preset, opt)?;
+    trainer.set_host_blob(&repacked)?;
+    trainer.train()
+}
+
+#[derive(Debug, Clone)]
+pub struct InstructOutcome {
+    pub report: Option<TrainReport>,
+    pub suite: SuiteResult,
+}
+
+/// Instruction tuning from the base checkpoint + five-benchmark scores
+/// (paper §4.1 / Tables 2 & 5). `opt = "none"` evaluates the raw base
+/// model (the paper's "N/A" row).
+pub fn instruction_tune(
+    session: &Session,
+    preset: &str,
+    opt: &str,
+    steps: usize,
+    base: &HostBlob,
+    seed: u64,
+    out_dir: &str,
+    n_eval_items: usize,
+) -> Result<InstructOutcome> {
+    let p = session.manifest.preset(preset)?.clone();
+    let (b, t) = (p.batch_size, p.seq_len);
+
+    // Base ("N/A") parameters for the reference side of the win rate.
+    let base_adamw = repack_checkpoint(session, base, preset, "adamw")?;
+    let base_params = {
+        let layout_key = Manifest::layout_key(preset, "adamw");
+        let layout = session.manifest.layout(&layout_key)?;
+        let buf = session.upload_f32(&base_adamw.data, &[layout.blob_len])?;
+        session.execute_buf(
+            &Manifest::extract_params_name(preset, "adamw"),
+            &[&buf],
+        )?
+    };
+
+    if opt == "none" {
+        let suite = run_suite(
+            session, preset, &base_params, &base_params, n_eval_items, seed,
+        )?;
+        return Ok(InstructOutcome { report: None, suite });
+    }
+
+    let examples: Vec<_> = instruct::training_set(seed, 512)
+        .iter()
+        .map(|e| e.tokenize())
+        .collect();
+    let loader = DataLoader::from_examples(examples, seed, b, t);
+    let mut cfg = RunConfig::new(preset, opt, Phase::Instruct, steps);
+    cfg.lr = effective_lr(opt, Phase::Instruct);
+    cfg.seed = seed;
+    cfg.domain = "instruct".into();
+    cfg.out_dir = out_dir.to_string();
+    cfg.eval_every = 0;
+    cfg.log_every = (steps / 20).max(1);
+    let mut trainer = Trainer::new(session, cfg, loader, None)?.with_logging()?;
+    let repacked = if opt == "lora" {
+        // Repacking zeroes the optimizer state AND the adapters — but LoRA
+        // needs A ~ N(0, 0.02) (with A = B = 0 both adapter gradients
+        // vanish identically and nothing trains). Take a fresh seeded LoRA
+        // init and overlay the base checkpoint onto its frozen region.
+        let layout_key = Manifest::layout_key(preset, "lora");
+        let layout = session.manifest.layout(&layout_key)?.clone();
+        let seed_buf = session.upload_i32(&[seed as i32], &[])?;
+        let init_buf = session
+            .execute_buf(&Manifest::init_name(preset, "lora"), &[&seed_buf])?;
+        let mut data = session.fetch_f32_raw(&init_buf, layout.blob_len)?;
+        let from = session.manifest.layout(&base.layout_key)?;
+        let ncopy = from.params_len.min(layout.params_len);
+        data[..ncopy].copy_from_slice(&base.data[..ncopy]);
+        HostBlob::new(data, &layout_key, &layout)?
+    } else {
+        repack_checkpoint(session, base, preset, opt)?
+    };
+    trainer.set_host_blob(&repacked)?;
+    let report = trainer.train()?;
+
+    // LoRA evaluates through the merged weights; others extract directly.
+    let params = if opt == "lora" {
+        let layout_key = Manifest::layout_key(preset, "lora");
+        let layout = session.manifest.layout(&layout_key)?;
+        let blob = trainer.host_blob()?;
+        let buf = session.upload_f32(&blob.data, &[layout.blob_len])?;
+        session.execute_buf(&format!("merge_lora_{preset}"), &[&buf])?
+    } else {
+        trainer.params_buffer()?
+    };
+    let suite = run_suite(
+        session, preset, &params, &base_params, n_eval_items, seed,
+    )?;
+    Ok(InstructOutcome { report: Some(report), suite })
+}
+
+/// Canonical Fig-6 configuration: from this start, SGD and SGD+momentum
+/// descend into the local well at (+1, 0) while SGD+variance and Adam
+/// reach the global optimum at (-1, 0) — the paper's Appendix-A result.
+pub const TOY2D_START: (f32, f32) = (0.3, 0.9);
+pub const TOY2D_LR: f32 = 0.02;
+pub const TOY2D_STEPS: usize = 1000;
+
+/// Rust-native toy-2D trajectory (paper Appendix A / Fig. 6). Cross-checked
+/// against the `toy2d_*` artifacts by integration tests.
+pub fn toy2d_trajectory(
+    opt: OptKind,
+    lr: f32,
+    steps: usize,
+    start: (f32, f32),
+) -> Vec<(f32, f32, f32)> {
+    let mut theta = Tensor::new(&[2], vec![start.0, start.1]).unwrap();
+    let mut popt = ParamOpt::new(opt, &[2]);
+    let mut out = Vec::with_capacity(steps + 1);
+    for t in 1..=steps {
+        let (f, g) = toy2d_value_grad(theta.data()[0], theta.data()[1]);
+        out.push((theta.data()[0], theta.data()[1], f));
+        let grad = Tensor::new(&[2], vec![g.0, g.1]).unwrap();
+        popt.step(&mut theta, &grad, t as u64, lr, 0.0);
+    }
+    let (f, _) = toy2d_value_grad(theta.data()[0], theta.data()[1]);
+    out.push((theta.data()[0], theta.data()[1], f));
+    out
+}
+
+/// f(x, y) = x^2 + y^2 - 2 e^{-5[(x-1)^2+y^2]} - 3 e^{-5[(x+1)^2+y^2]}
+/// and its analytic gradient.
+pub fn toy2d_value_grad(x: f32, y: f32) -> (f32, (f32, f32)) {
+    let e1 = (-5.0 * ((x - 1.0).powi(2) + y * y)).exp();
+    let e2 = (-5.0 * ((x + 1.0).powi(2) + y * y)).exp();
+    let f = x * x + y * y - 2.0 * e1 - 3.0 * e2;
+    let dx = 2.0 * x + 20.0 * (x - 1.0) * e1 + 30.0 * (x + 1.0) * e2;
+    let dy = 2.0 * y + 20.0 * y * e1 + 30.0 * y * e2;
+    (f, (dx, dy))
+}
+
+/// Which minimum a trajectory ends in: the global well near (-1, 0) or the
+/// local well near (+1, 0).
+pub fn toy2d_basin(traj: &[(f32, f32, f32)]) -> &'static str {
+    let last = traj.last().expect("non-empty trajectory");
+    if last.0 < 0.0 {
+        "global(-1,0)"
+    } else {
+        "local(+1,0)"
+    }
+}
+
+/// Run a family of optimizers through the same scratch workload and return
+/// name -> loss curve (paper Fig. 1 ablation / Fig. 4 comparison).
+pub fn optimizer_comparison(
+    session: &Session,
+    preset: &str,
+    opts: &[&str],
+    steps: usize,
+    seed: u64,
+    out_dir: &str,
+) -> Result<BTreeMap<String, TrainReport>> {
+    let mut out = BTreeMap::new();
+    for opt in opts {
+        let report = scratch_run(session, preset, opt, steps, seed, out_dir)?;
+        out.insert(opt.to_string(), report);
+    }
+    Ok(out)
+}
+
+/// Default artifacts directory (respects ADALOMO_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("ADALOMO_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}
+
+/// True when the artifacts (and hence Session) are available — lets tests
+/// and benches degrade gracefully before `make artifacts`.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+pub fn open_session() -> Result<Session> {
+    Session::open(Path::new(&artifacts_dir()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy2d_gradient_matches_finite_difference() {
+        let (x, y) = (0.3, -0.4);
+        let eps = 1e-3;
+        let (_, (dx, dy)) = toy2d_value_grad(x, y);
+        let fd_x = (toy2d_value_grad(x + eps, y).0
+            - toy2d_value_grad(x - eps, y).0)
+            / (2.0 * eps);
+        let fd_y = (toy2d_value_grad(x, y + eps).0
+            - toy2d_value_grad(x, y - eps).0)
+            / (2.0 * eps);
+        assert!((dx - fd_x).abs() < 1e-2, "{dx} vs {fd_x}");
+        assert!((dy - fd_y).abs() < 1e-2, "{dy} vs {fd_y}");
+    }
+
+    #[test]
+    fn toy2d_fig6_basins() {
+        // Paper Fig. 6: from the same start, SGD and SGD+momentum fall into
+        // the local well; Adam and SGD+variance reach the global one.
+        let (start, lr, n) = (TOY2D_START, TOY2D_LR, TOY2D_STEPS);
+        let sgd = toy2d_trajectory(OptKind::Sgd, lr, n, start);
+        let mom = toy2d_trajectory(OptKind::SgdMomentum, lr, n, start);
+        let var = toy2d_trajectory(OptKind::SgdVariance, lr, n, start);
+        let adam = toy2d_trajectory(OptKind::AdamW, lr, n, start);
+        assert_eq!(toy2d_basin(&sgd), "local(+1,0)");
+        assert_eq!(toy2d_basin(&mom), "local(+1,0)");
+        assert_eq!(toy2d_basin(&var), "global(-1,0)");
+        assert_eq!(toy2d_basin(&adam), "global(-1,0)");
+    }
+
+    #[test]
+    fn effective_lr_scales_absolute_not_relative() {
+        // AdamW: small-model retune; AdaLomo: the paper value verbatim.
+        assert_eq!(effective_lr("adamw", Phase::Instruct), 1e-3);
+        assert_eq!(effective_lr("adalomo", Phase::Instruct), 5e-4);
+        assert_eq!(effective_lr("adalomo", Phase::FurtherPretrain), 3e-1);
+        assert_eq!(
+            effective_lr("sgd", Phase::Scratch),
+            1e-3 * SMALL_MODEL_LR_SCALE
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! AdaLomo: Low-memory Optimization with Adaptive Learning Rate —
+//! full-system reproduction of Lv et al., Findings of ACL 2024.
+//!
+//! Three-layer architecture (DESIGN.md):
+//! - **Layer 1** (build time): Pallas update kernels, `python/compile/kernels/`.
+//! - **Layer 2** (build time): JAX LLaMA-style model + functional optimizer
+//!   library, lowered once to HLO text by `python -m compile.aot`.
+//! - **Layer 3** (this crate): the runtime coordinator. Loads the AOT
+//!   artifacts through PJRT ([`runtime`]), drives training ([`coordinator`]),
+//!   generates the synthetic workloads ([`data`]), evaluates the benchmark
+//!   suite ([`eval`]), and reproduces every table/figure of the paper through
+//!   the analytic memory/throughput simulator ([`memsim`]) and the bench
+//!   harness ([`util::bench`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `adalomo` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod memsim;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

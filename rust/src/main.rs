@@ -1,0 +1,483 @@
+//! `adalomo` — the Layer-3 leader binary.
+//!
+//! Subcommands map to the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! adalomo scratch    --preset tiny --opt adalomo --steps 400      (§4.3, Fig 4)
+//! adalomo pretrain   --preset tiny --opt adalomo --domain chinese (§4.2, Fig 2/3)
+//! adalomo instruct   --preset micro --opt adalomo --steps 300     (§4.1, Table 2)
+//! adalomo toy2d                                                    (App A, Fig 6)
+//! adalomo memreport  [--scope table1|fig5|table8]                 (Table 1, Fig 5a)
+//! adalomo throughput                                              (Fig 5b, Table 8)
+//! adalomo liveness   --arch llama7b                               (§2.1 analysis)
+//! adalomo fused      --preset nano --steps 5                      (fused backward demo)
+//! adalomo workers    --ranks 2 --rounds 2                         (data-parallel demo)
+//! adalomo hparams                                                 (Tables 3/6/7)
+//! adalomo info                                                    (artifacts summary)
+//! ```
+
+use anyhow::{bail, Result};
+
+use adalomo::config::{paper_lr, Phase, RunConfig};
+use adalomo::coordinator::{fused, workers, Trainer};
+use adalomo::data::{loader::DataLoader, Domain};
+use adalomo::experiments as exp;
+use adalomo::memsim::{self, liveness, memory, throughput, Arch};
+use adalomo::metrics::ascii_curve;
+use adalomo::util::cli::Args;
+use adalomo::util::table::{fnum, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "scratch" => cmd_scratch(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "instruct" => cmd_instruct(&args),
+        "toy2d" => cmd_toy2d(&args),
+        "memreport" => cmd_memreport(&args),
+        "throughput" => cmd_throughput(&args),
+        "liveness" => cmd_liveness(&args),
+        "fused" => cmd_fused(&args),
+        "workers" => cmd_workers(&args),
+        "hparams" => cmd_hparams(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; see `adalomo help`"),
+    }
+}
+
+const HELP: &str = "\
+adalomo — AdaLomo (ACL 2024 Findings) full-system reproduction
+
+USAGE: adalomo <subcommand> [--flag value ...]
+
+  scratch     from-scratch pre-training on the C4 stand-in (Fig 4)
+  pretrain    further pre-training on chinese/python_code (Fig 2/3, 7/8)
+  instruct    instruction tuning + 5-benchmark suite (Table 2/5)
+  toy2d       Appendix-A optimizer trajectories (Fig 6)
+  memreport   analytic memory model (Table 1, Fig 5a, Table 8)
+  throughput  analytic TGS model (Fig 5b, Table 8)
+  liveness    gradient-liveness simulation (fused vs standard backward)
+  fused       run real fused-backward group programs (nano/micro)
+  workers     thread-per-rank data-parallel training demo
+  hparams     the paper's hyper-parameter tables (3/6/7)
+  info        artifacts + manifest summary
+
+Common flags: --preset nano|micro|tiny|small   --opt sgd|sgd_momentum|
+  sgd_variance|adamw|adafactor|lomo|adalomo|lora|adalomo_gnorm|lomo_gnorm
+  --steps N --lr F --seed N --domain c4|chinese|python_code|general
+  --out DIR
+";
+
+fn loaders(
+    session: &adalomo::runtime::Session,
+    preset: &str,
+    domain: Domain,
+    seed: u64,
+    steps: usize,
+) -> Result<(DataLoader, DataLoader)> {
+    let p = session.manifest.preset(preset)?;
+    let (b, t) = (p.batch_size, p.seq_len);
+    let tokens = (steps * b * t).clamp(2 * b * (t + 1), 8_000_000);
+    Ok((
+        DataLoader::lm(domain, seed, b, t, tokens),
+        DataLoader::lm(domain, seed + 104_729, b, t, 16 * b * (t + 1)),
+    ))
+}
+
+fn print_report(report: &adalomo::coordinator::TrainReport) {
+    println!("{}", ascii_curve(&report.curve, 64, 10));
+    println!(
+        "final loss {:.4} | {:.1} steps/s | {:.0} tokens/s | wall {:.1}s",
+        report.final_loss,
+        report.steps as f64 / report.wall_secs,
+        report.tokens_per_sec,
+        report.wall_secs
+    );
+    for (step, ppl, acc) in &report.eval_curve {
+        println!("  eval@{step}: ppl {ppl:.3} acc {acc:.3}");
+    }
+}
+
+fn cmd_scratch(args: &Args) -> Result<()> {
+    let session = exp::open_session()?;
+    let preset = args.str_or("preset", "nano");
+    let opt = args.str_or("opt", "adalomo");
+    let steps = args.usize_or("steps", 200)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut cfg = RunConfig::new(&preset, &opt, Phase::Scratch, steps);
+    cfg.lr = exp::effective_lr(&opt, Phase::Scratch);
+    cfg = cfg.override_from(args)?;
+    args.finish()?;
+    println!(
+        "scratch pre-training: {preset}/{opt}, {steps} steps, lr {}",
+        cfg.lr
+    );
+    let domain = Domain::parse(&cfg.domain)?;
+    let (train, val) = loaders(&session, &preset, domain, seed, steps)?;
+    let out = cfg.out_dir.clone();
+    let mut trainer =
+        Trainer::new(&session, cfg, train, Some(val))?.with_logging()?;
+    let report = trainer.train()?;
+    print_report(&report);
+    println!("run dir: {out}/");
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let session = exp::open_session()?;
+    let preset = args.str_or("preset", "nano");
+    let opt = args.str_or("opt", "adalomo");
+    let steps = args.usize_or("steps", 200)?;
+    let base_steps = args.usize_or("base-steps", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let domain = Domain::parse(&args.str_or("domain", "chinese"))?;
+    let out = args.str_or("out", "runs");
+    args.finish()?;
+    println!("building base checkpoint ({base_steps} AdamW steps on c4)...");
+    let base =
+        exp::ensure_base_checkpoint(&session, &preset, base_steps, seed, &out)?;
+    println!("further pre-training {preset}/{opt} on {}...", domain.name());
+    let report = exp::further_pretrain(
+        &session, &preset, &opt, domain, steps, &base, seed, &out,
+    )?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_instruct(args: &Args) -> Result<()> {
+    let session = exp::open_session()?;
+    let preset = args.str_or("preset", "nano");
+    let opt = args.str_or("opt", "adalomo");
+    let steps = args.usize_or("steps", 200)?;
+    let base_steps = args.usize_or("base-steps", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let n_items = args.usize_or("eval-items", 24)?;
+    let out = args.str_or("out", "runs");
+    args.finish()?;
+    let base =
+        exp::ensure_base_checkpoint(&session, &preset, base_steps, seed, &out)?;
+    let outcome = exp::instruction_tune(
+        &session, &preset, &opt, steps, &base, seed, &out, n_items,
+    )?;
+    let mut table = Table::new(&format!(
+        "Instruction tuning — {preset}/{opt} (paper Table 2 row)"
+    ))
+    .header(&["knowledge", "reasoning", "arithmetic", "code", "writing", "avg"]);
+    table.row(vec![
+        fnum(outcome.suite.scores["knowledge"]),
+        fnum(outcome.suite.scores["reasoning"]),
+        fnum(outcome.suite.scores["arithmetic"]),
+        fnum(outcome.suite.scores["code"]),
+        fnum(outcome.suite.scores["writing"]),
+        fnum(outcome.suite.avg),
+    ]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_toy2d(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", exp::TOY2D_STEPS)?;
+    let lr = args.f32_or("lr", exp::TOY2D_LR)?;
+    args.finish()?;
+    let mut table = Table::new(
+        "Toy 2-D landscape (paper Fig. 6): final basin per optimizer",
+    )
+    .header(&["optimizer", "final x", "final y", "f(x,y)", "basin"]);
+    for kind in [
+        adalomo::optim::OptKind::Sgd,
+        adalomo::optim::OptKind::SgdMomentum,
+        adalomo::optim::OptKind::SgdVariance,
+        adalomo::optim::OptKind::AdamW,
+    ] {
+        let traj = exp::toy2d_trajectory(kind, lr, steps, exp::TOY2D_START);
+        let last = traj.last().unwrap();
+        table.row(vec![
+            kind.name().into(),
+            fnum(last.0 as f64),
+            fnum(last.1 as f64),
+            fnum(last.2 as f64),
+            exp::toy2d_basin(&traj).into(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_memreport(args: &Args) -> Result<()> {
+    let scope = args.str_or("scope", "all");
+    args.finish()?;
+    if scope == "table1" || scope == "all" {
+        let arch = Arch::analytic("llama7b").unwrap();
+        let mut t = Table::new(
+            "Paper Table 1 — model-state bytes per parameter (mixed precision)",
+        )
+        .header(&["method", "param", "gradient", "opt state", "total (xM)"]);
+        for m in [
+            memory::Method::LoRA { rank: 8 },
+            memory::Method::AdamW,
+            memory::Method::AdaLomo,
+            memory::Method::Lomo,
+            memory::Method::Adafactor,
+        ] {
+            let b = memory::model_state_bytes(&arch, m);
+            let n = arch.n_params() as f64;
+            t.row(vec![
+                m.name().into(),
+                fnum(b.params / n),
+                fnum(b.gradients / n),
+                fnum(b.optimizer_state / n),
+                fnum(b.model_state() / n),
+            ]);
+        }
+        t.print();
+    }
+    if scope == "table8" || scope == "fig5" || scope == "all" {
+        let act = memory::calibrate();
+        let mut t = Table::new(
+            "Paper Table 8 / Fig 5a — total memory (GB): model vs paper",
+        )
+        .header(&["model", "method", "gpus", "modeled", "paper", "rel err"]);
+        for &(arch, method, gpus, mb, paper_gb, _) in memsim::paper::TABLE8 {
+            let setup = memory::TrainSetup {
+                arch: Arch::analytic(arch).unwrap(),
+                method: memory::Method::parse(method)?,
+                n_gpus: gpus,
+                micro_batch: mb,
+                seq_len: memsim::paper::PROFILE_SEQ_LEN,
+            };
+            let est = memory::estimate(&setup, act).total_gb();
+            t.row(vec![
+                arch.into(),
+                method.into(),
+                gpus.to_string(),
+                fnum(est),
+                fnum(paper_gb),
+                format!("{:+.1}%", 100.0 * (est - paper_gb) / paper_gb),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    args.finish()?;
+    let hw = throughput::Hardware::default();
+    let eff = throughput::calibrate();
+    println!(
+        "calibrated: mxu_eff {:.3}, exposed_comm {:.3}",
+        eff.mxu_eff, eff.exposed_comm
+    );
+    let mut t = Table::new(
+        "Paper Table 8 / Fig 5b — throughput (tokens/GPU/s): model vs paper",
+    )
+    .header(&["model", "method", "gpus", "modeled", "paper", "rel err"]);
+    for &(arch, method, gpus, mb, _, paper_tgs) in memsim::paper::TABLE8 {
+        let setup = memory::TrainSetup {
+            arch: Arch::analytic(arch).unwrap(),
+            method: memory::Method::parse(method)?,
+            n_gpus: gpus,
+            micro_batch: mb,
+            seq_len: memsim::paper::PROFILE_SEQ_LEN,
+        };
+        let tgs = throughput::tgs(&setup, hw, eff);
+        t.row(vec![
+            arch.into(),
+            method.into(),
+            gpus.to_string(),
+            fnum(tgs),
+            fnum(paper_tgs),
+            format!("{:+.1}%", 100.0 * (tgs - paper_tgs) / paper_tgs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_liveness(args: &Args) -> Result<()> {
+    let arch_name = args.str_or("arch", "llama7b");
+    args.finish()?;
+    let arch = Arch::lookup(&arch_name)?;
+    let standard = liveness::simulate(&arch, liveness::BackwardMode::Standard);
+    let mut t = Table::new(&format!(
+        "Gradient liveness during backward — {arch_name} (paper §2.1)"
+    ))
+    .header(&["mode", "peak grad bytes", "vs standard", "backward passes"]);
+    for (name, mode) in [
+        ("standard (AdamW et al.)", liveness::BackwardMode::Standard),
+        ("fused (LOMO/AdaLomo)", liveness::BackwardMode::Fused),
+        ("fused + grad-norm (LOMO)", liveness::BackwardMode::FusedTwoPass),
+    ] {
+        let r = liveness::simulate(&arch, mode);
+        t.row(vec![
+            name.into(),
+            format!("{:.3} GB", r.peak_bytes as f64 / memory::GB),
+            format!(
+                "{:.2}%",
+                100.0 * r.peak_bytes as f64 / standard.peak_bytes as f64
+            ),
+            r.backward_passes.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fused(args: &Args) -> Result<()> {
+    let session = exp::open_session()?;
+    let preset = args.str_or("preset", "nano");
+    let steps = args.usize_or("steps", 5)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+    let opt = "adalomo";
+    let Some(groups) = fused::fused_groups(&session, &preset, opt) else {
+        bail!("no fused artifacts for preset {preset} (nano/micro only)");
+    };
+    println!("fused backward: {groups} group programs per step");
+    let sizes = fused::group_grad_sizes(&session, &preset, opt)?;
+    println!(
+        "per-group live gradient floats: {:?} (peak {} of {} total)",
+        sizes,
+        sizes.iter().max().unwrap(),
+        sizes.iter().sum::<usize>()
+    );
+    let p = session.manifest.preset(&preset)?.clone();
+    let (b, t) = (p.batch_size, p.seq_len);
+    let mut loader = DataLoader::lm(Domain::C4, seed, b, t, 64 * b * (t + 1));
+    let seed_buf = session.upload_i32(&[seed as i32], &[])?;
+    let mut blob = session.execute_buf(
+        &adalomo::runtime::Manifest::init_name(&preset, opt),
+        &[&seed_buf],
+    )?;
+    for step in 1..=steps {
+        let batch = loader.next_batch();
+        let x = session.upload_i32(&batch.x, &[b, t])?;
+        let y = session.upload_i32(&batch.y, &[b, t])?;
+        let sched =
+            session.upload_f32(&[5e-4, step as f32, 0.0, 1.0], &[4])?;
+        blob =
+            fused::fused_step(&session, &preset, opt, &blob, &x, &y, &sched)?;
+        let m = session.execute_buf(
+            &adalomo::runtime::Manifest::read_metrics_name(&preset, opt),
+            &[&blob],
+        )?;
+        let slots = session.fetch_f32_raw(&m, 8)?;
+        println!("fused step {step}: loss {:.4}", slots[0]);
+    }
+    println!("fused backward OK");
+    Ok(())
+}
+
+fn cmd_workers(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "nano");
+    let opt = args.str_or("opt", "adalomo");
+    let ranks = args.usize_or("ranks", 2)?;
+    let rounds = args.usize_or("rounds", 2)?;
+    let sync_every = args.usize_or("sync-every", 10)?;
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+    let mut cfg = RunConfig::new(&preset, &opt, Phase::Scratch, sync_every);
+    cfg.lr = exp::effective_lr(&opt, Phase::Scratch);
+    cfg.seed = seed;
+    let report = workers::run_local_sgd(
+        exp::artifacts_dir(),
+        cfg,
+        Domain::C4,
+        ranks,
+        rounds,
+        sync_every,
+    )?;
+    println!(
+        "workers: {} ranks x {} rounds x {} steps",
+        report.n_ranks, report.rounds, sync_every
+    );
+    println!("per-rank final loss: {:?}", report.per_rank_final_loss);
+    println!(
+        "averaged model eval loss {:.4} | {:.0} aggregate tokens/s | wall {:.1}s",
+        report.averaged_eval_loss,
+        report.aggregate_tokens_per_sec,
+        report.wall_secs
+    );
+    Ok(())
+}
+
+fn cmd_hparams(args: &Args) -> Result<()> {
+    args.finish()?;
+    for (title, phase, opts) in [
+        (
+            "Paper Table 3 — instruction-tuning LRs",
+            Phase::Instruct,
+            vec!["lora", "adamw", "lomo", "adalomo"],
+        ),
+        (
+            "Paper Table 6 — further pre-training LRs",
+            Phase::FurtherPretrain,
+            vec!["adamw", "adalomo"],
+        ),
+        (
+            "Paper Table 7 — from-scratch pre-training LRs",
+            Phase::Scratch,
+            vec!["sgd", "adafactor", "adamw", "adalomo"],
+        ),
+    ] {
+        let mut t = Table::new(title).header(&[
+            "optimizer",
+            "paper LR",
+            "scaled LR (this repo)",
+        ]);
+        for opt in opts {
+            t.row(vec![
+                opt.into(),
+                format!("{:.0e}", paper_lr(opt, phase)),
+                format!("{:.0e}", exp::effective_lr(opt, phase)),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    if !exp::artifacts_available() {
+        println!("artifacts/ not built — run `make artifacts`");
+        return Ok(());
+    }
+    let session = exp::open_session()?;
+    println!(
+        "platform: {} ({} devices)",
+        session.client().platform_name(),
+        session.client().device_count()
+    );
+    println!("kernel impl: {}", session.manifest.kernel_impl);
+    let mut t = Table::new("Presets").header(&[
+        "preset", "params", "layers", "d_model", "batch", "seq", "entries",
+    ]);
+    for (name, p) in &session.manifest.presets {
+        let n_entries = session.entries_for_preset(name).len();
+        t.row(vec![
+            name.clone(),
+            p.n_params.to_string(),
+            p.n_layers.to_string(),
+            p.d_model.to_string(),
+            p.batch_size.to_string(),
+            p.seq_len.to_string(),
+            n_entries.to_string(),
+        ]);
+    }
+    t.print();
+    println!("total entries: {}", session.manifest.entries.len());
+    Ok(())
+}

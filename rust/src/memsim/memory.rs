@@ -1,0 +1,341 @@
+//! Model-state memory accounting (paper Table 1, Fig. 5a, Table 8 memory).
+//!
+//! Exact closed forms for parameters / gradients / optimizer state under
+//! the paper's mixed-precision + ZeRO-3 setup, plus a two-coefficient
+//! activation/overhead term calibrated against the paper's own Table 8
+//! (see [`calibrate`]). All byte counts are cluster totals (the paper
+//! reports pynvml sums across GPUs).
+
+use anyhow::Result;
+
+use super::arch::Arch;
+use super::paper;
+
+pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Training method — the paper's five-way comparison set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    AdamW,
+    /// As profiled in the paper (HF-style config retaining the first
+    /// moment; see DESIGN.md §Faithfulness — the pure momentum-less
+    /// variant is `AdafactorPure`).
+    Adafactor,
+    AdafactorPure,
+    LoRA { rank: usize },
+    Lomo,
+    AdaLomo,
+}
+
+pub const PROFILE_METHODS: [Method; 5] = [
+    Method::AdamW,
+    Method::Adafactor,
+    Method::LoRA { rank: 8 },
+    Method::Lomo,
+    Method::AdaLomo,
+];
+
+impl Method {
+    pub fn parse(name: &str) -> Result<Method> {
+        Ok(match name {
+            "adamw" | "adam" => Method::AdamW,
+            "adafactor" => Method::Adafactor,
+            "adafactor_pure" => Method::AdafactorPure,
+            "lora" => Method::LoRA { rank: 8 },
+            "lomo" => Method::Lomo,
+            "adalomo" => Method::AdaLomo,
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::AdamW => "adamw",
+            Method::Adafactor => "adafactor",
+            Method::AdafactorPure => "adafactor_pure",
+            Method::LoRA { .. } => "lora",
+            Method::Lomo => "lomo",
+            Method::AdaLomo => "adalomo",
+        }
+    }
+
+    pub fn fused_backward(&self) -> bool {
+        matches!(self, Method::Lomo | Method::AdaLomo)
+    }
+}
+
+/// A profiling scenario (one Table-8 row).
+#[derive(Debug, Clone)]
+pub struct TrainSetup {
+    pub arch: Arch,
+    pub method: Method,
+    pub n_gpus: usize,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+}
+
+/// Cluster-total memory, bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBreakdown {
+    pub params: f64,
+    pub gradients: f64,
+    pub optimizer_state: f64,
+    pub activations: f64,
+    pub overhead: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn model_state(&self) -> f64 {
+        self.params + self.gradients + self.optimizer_state
+    }
+
+    pub fn total(&self) -> f64 {
+        self.model_state() + self.activations + self.overhead
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total() / GB
+    }
+}
+
+/// Activation bytes per (micro-batch token x layer x d_model) and per-GPU
+/// runtime overhead — the two calibrated coefficients. Defaults come from
+/// `calibrate()` over Table 8 and are re-derived by the Table-8 bench.
+#[derive(Debug, Clone, Copy)]
+pub struct ActModel {
+    pub act_coeff: f64,
+    pub gpu_overhead: f64,
+}
+
+impl Default for ActModel {
+    fn default() -> Self {
+        calibrate()
+    }
+}
+
+/// Bytes of factored second moment for AdaLomo/Adafactor: fp32 (m + n) per
+/// matrix, full fp32 vector state for 1-D parameters.
+fn factored_state_bytes(arch: &Arch) -> f64 {
+    let mut floats = 0usize;
+    for (_, shape) in arch.param_specs() {
+        floats += if shape.len() == 2 {
+            shape[0] + shape[1]
+        } else {
+            shape.iter().product()
+        };
+    }
+    4.0 * floats as f64
+}
+
+/// Exact model-state terms (no calibration). `two pass gradient norm`
+/// (the LOMO baseline's normalization, paper §2.1) does not change peak
+/// memory — only time — so it has no term here.
+pub fn model_state_bytes(arch: &Arch, method: Method) -> MemoryBreakdown {
+    let n = arch.n_params() as f64;
+    // bf16 weights for everyone (mixed precision).
+    let params = 2.0 * n;
+    let (gradients, optimizer_state) = match method {
+        // bf16 grads + fp32 master/m/v (DeepSpeed mixed-precision Adam).
+        Method::AdamW => (2.0 * n, 12.0 * n),
+        // Paper-profiled Adafactor: master + first moment + factored v.
+        Method::Adafactor => {
+            (2.0 * n, 8.0 * n + factored_state_bytes(arch))
+        }
+        // Shazeer-Stern Adafactor: master + factored v only.
+        Method::AdafactorPure => {
+            (2.0 * n, 4.0 * n + factored_state_bytes(arch))
+        }
+        Method::LoRA { rank } => {
+            let a = arch.lora_params(rank) as f64;
+            // Adapter grads bf16 + fp32 master/m/v for adapters only.
+            (2.0 * a, 12.0 * a)
+        }
+        // Fused backward: at most two consecutive parameter gradients are
+        // live (paper §2.1) -> O(1) in model size.
+        Method::Lomo => (2.0 * 2.0 * arch.max_matrix() as f64, 0.0),
+        Method::AdaLomo => (
+            2.0 * 2.0 * arch.max_matrix() as f64,
+            factored_state_bytes(arch),
+        ),
+    };
+    MemoryBreakdown {
+        params,
+        gradients,
+        optimizer_state,
+        activations: 0.0,
+        overhead: 0.0,
+    }
+}
+
+/// Full memory estimate for a profiling scenario.
+pub fn estimate(setup: &TrainSetup, act: ActModel) -> MemoryBreakdown {
+    let mut b = model_state_bytes(&setup.arch, setup.method);
+    let per_gpu_tokens = (setup.micro_batch * setup.seq_len) as f64;
+    b.activations = act.act_coeff
+        * per_gpu_tokens
+        * (setup.arch.n_layers * setup.arch.d_model) as f64
+        * setup.n_gpus as f64;
+    b.overhead = act.gpu_overhead * setup.n_gpus as f64;
+    b
+}
+
+/// Least-squares fit of (act_coeff, gpu_overhead) to the Table-8 residuals
+/// total_measured - model_state_exact = act_coeff * X + gpu_overhead * G.
+pub fn calibrate() -> ActModel {
+    // Normal equations for 2 unknowns.
+    let (mut xx, mut xg, mut gg, mut xy, mut gy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for &(arch_name, method, n_gpus, micro_batch, mem_gb, _) in paper::TABLE8 {
+        let arch = Arch::analytic(arch_name).unwrap();
+        let method = Method::parse(method).unwrap();
+        let state = model_state_bytes(&arch, method).model_state();
+        let y = mem_gb * GB - state;
+        let x = (micro_batch * paper::PROFILE_SEQ_LEN) as f64
+            * (arch.n_layers * arch.d_model) as f64
+            * n_gpus as f64;
+        let g = n_gpus as f64;
+        xx += x * x;
+        xg += x * g;
+        gg += g * g;
+        xy += x * y;
+        gy += g * y;
+    }
+    let det = xx * gg - xg * xg;
+    let act_coeff = (xy * gg - gy * xg) / det;
+    let gpu_overhead = (gy * xx - xy * xg) / det;
+    ActModel { act_coeff, gpu_overhead }
+}
+
+/// Paper Table 1 closed form: total model-state memory in units of M
+/// (bytes per parameter), for the three-way LoRA/AdamW/AdaLomo comparison.
+pub fn table1_bytes_per_param(arch: &Arch, method: Method) -> f64 {
+    let b = model_state_bytes(arch, method);
+    b.model_state() / arch.n_params() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch7b() -> Arch {
+        Arch::analytic("llama7b").unwrap()
+    }
+
+    #[test]
+    fn table1_closed_forms() {
+        let a = arch7b();
+        // AdamW: 2M + 2M + 12M = 16M bytes (paper Table 1 row).
+        let adamw = table1_bytes_per_param(&a, Method::AdamW);
+        assert!((adamw - 16.0).abs() < 1e-6, "{adamw}");
+        // AdaLomo: ~2M (factored state + 2-matrix grads are O(sqrt)).
+        let adalomo = table1_bytes_per_param(&a, Method::AdaLomo);
+        assert!(adalomo > 2.0 && adalomo < 2.2, "{adalomo}");
+        // LoRA: ~2M.
+        let lora = table1_bytes_per_param(&a, Method::LoRA { rank: 8 });
+        assert!(lora > 2.0 && lora < 2.2, "{lora}");
+        // LOMO strictly below AdaLomo (no optimizer state at all).
+        assert!(
+            table1_bytes_per_param(&a, Method::Lomo) < adalomo,
+            "lomo should be the floor"
+        );
+    }
+
+    #[test]
+    fn adalomo_state_is_40pct_of_adafactor_claim() {
+        // Paper §1: "AdaLomo's memory usage accounts for ~40% of Adafactor".
+        // Model-state comparison at 7B: AdaLomo ~2.05M vs Adafactor-as-
+        // profiled 12M+rc; the paper's 40% figure refers to total measured
+        // memory (59.6/144.3 = 41%) — check against the fixture.
+        let rows = paper::TABLE8;
+        let get = |m: &str| {
+            rows.iter().find(|r| r.0 == "llama7b" && r.1 == m).unwrap().4
+        };
+        let ratio = get("adalomo") / get("adafactor");
+        assert!((ratio - 0.41).abs() < 0.02, "{ratio}");
+        // And our model reproduces a ratio in the same band.
+        let act = calibrate();
+        let mk = |method| {
+            estimate(
+                &TrainSetup {
+                    arch: arch7b(),
+                    method,
+                    n_gpus: 4,
+                    micro_batch: 8,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                },
+                act,
+            )
+            .total()
+        };
+        let model_ratio = mk(Method::AdaLomo) / mk(Method::Adafactor);
+        assert!(model_ratio > 0.30 && model_ratio < 0.55, "{model_ratio}");
+    }
+
+    #[test]
+    fn calibrated_model_matches_table8_shape() {
+        let act = calibrate();
+        assert!(act.act_coeff > 0.0, "activation coefficient must be +");
+        let mut max_rel_err: f64 = 0.0;
+        for &(arch_name, method, n_gpus, micro_batch, mem_gb, _) in
+            paper::TABLE8
+        {
+            let est = estimate(
+                &TrainSetup {
+                    arch: Arch::analytic(arch_name).unwrap(),
+                    method: Method::parse(method).unwrap(),
+                    n_gpus,
+                    micro_batch,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                },
+                act,
+            );
+            let rel = (est.total_gb() - mem_gb).abs() / mem_gb;
+            max_rel_err = max_rel_err.max(rel);
+        }
+        // Two fitted coefficients over 20 measurements: demand < 30%
+        // worst-case (the paper's own numbers carry allocator noise; the
+        // bench reports the full residual table).
+        assert!(max_rel_err < 0.30, "worst relative error {max_rel_err}");
+    }
+
+    #[test]
+    fn ordering_invariants_any_arch() {
+        // AdaLomo <= Adafactor <= AdamW and AdaLomo close to LOMO, for
+        // every analytic architecture.
+        let act = calibrate();
+        for name in ["llama1b1", "llama7b", "llama13b", "llama30b", "llama65b"]
+        {
+            let mk = |method| {
+                estimate(
+                    &TrainSetup {
+                        arch: Arch::analytic(name).unwrap(),
+                        method,
+                        n_gpus: 8,
+                        micro_batch: 4,
+                        seq_len: 2048,
+                    },
+                    act,
+                )
+                .total()
+            };
+            let (adamw, adaf, lora, lomo, adalomo) = (
+                mk(Method::AdamW),
+                mk(Method::Adafactor),
+                mk(Method::LoRA { rank: 8 }),
+                mk(Method::Lomo),
+                mk(Method::AdaLomo),
+            );
+            assert!(adalomo < adaf && adaf < adamw, "{name}");
+            assert!(adalomo < lora * 1.05, "{name}: comparable to LoRA");
+            assert!((adalomo - lomo) / lomo < 0.10, "{name}: close to LOMO");
+        }
+    }
+
+    #[test]
+    fn gradient_liveness_is_o1_for_fused() {
+        let a = arch7b();
+        let lomo = model_state_bytes(&a, Method::Lomo).gradients;
+        let adamw = model_state_bytes(&a, Method::AdamW).gradients;
+        // Two embed-sized matrices vs the full model.
+        assert!(lomo < adamw / 20.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Analytic memory + throughput simulator.
+//!
+//! The paper's memory results (Table 1, Fig. 5, Table 8) were measured with
+//! pynvml on 4-32 A800 GPUs under DeepSpeed ZeRO-3 — hardware this repo
+//! substitutes per DESIGN.md §4. The substitution is an analytic model with
+//! the same physics:
+//!
+//! * **model state** (exact): parameter/gradient/optimizer-state bytes per
+//!   method under mixed precision — the closed forms of Table 1;
+//! * **gradient liveness** (exact): a discrete-event walk of the backward
+//!   schedule ([`liveness`]) showing LOMO/AdaLomo's O(1) gradient memory vs
+//!   the O(N) of standard optimizers;
+//! * **activations + runtime overhead** (calibrated): two coefficients fit
+//!   against the paper's own Table 8 measurements ([`paper`] fixture);
+//! * **throughput** (calibrated shape): compute/communication/update-pass
+//!   time model reproducing the TGS ordering of Fig. 5b.
+
+pub mod arch;
+pub mod liveness;
+pub mod memory;
+pub mod paper;
+pub mod throughput;
+
+pub use arch::Arch;
+pub use memory::{MemoryBreakdown, Method, TrainSetup};

@@ -1,0 +1,63 @@
+//! Paper measurement fixtures (Table 8 / Fig. 5): the ground truth the
+//! simulator calibrates against and the benches compare with.
+
+/// One Table-8 row: (model, method, n_gpus, micro_batch, memory_gb, tgs).
+pub const TABLE8: &[(&str, &str, usize, usize, f64, f64)] = &[
+    ("llama7b", "adamw", 4, 8, 169.4, 3169.4),
+    ("llama7b", "adafactor", 4, 8, 144.3, 3169.5),
+    ("llama7b", "lora", 4, 8, 70.6, 3344.6),
+    ("llama7b", "lomo", 4, 8, 59.6, 3228.2),
+    ("llama7b", "adalomo", 4, 8, 59.6, 2997.4),
+    ("llama13b", "adamw", 8, 4, 320.7, 1679.6),
+    ("llama13b", "adafactor", 8, 4, 272.3, 1683.4),
+    ("llama13b", "lora", 8, 4, 110.0, 1829.8),
+    ("llama13b", "lomo", 8, 4, 94.4, 1659.9),
+    ("llama13b", "adalomo", 8, 4, 95.8, 1456.3),
+    ("llama30b", "adamw", 16, 4, 786.2, 728.6),
+    ("llama30b", "adafactor", 16, 4, 665.0, 726.5),
+    ("llama30b", "lora", 16, 4, 303.7, 811.6),
+    ("llama30b", "lomo", 16, 4, 264.3, 669.1),
+    ("llama30b", "adalomo", 16, 4, 272.8, 589.0),
+    ("llama65b", "adamw", 32, 2, 1532.6, 349.1),
+    ("llama65b", "adafactor", 32, 2, 1289.4, 341.1),
+    ("llama65b", "lora", 32, 2, 510.5, 405.7),
+    ("llama65b", "lomo", 32, 2, 473.8, 303.3),
+    ("llama65b", "adalomo", 32, 2, 507.7, 238.1),
+];
+
+/// Sequence length used in the profiling runs (paper Appendix F setup).
+pub const PROFILE_SEQ_LEN: usize = 2048;
+
+/// Table 2 (instruction tuning) benchmark averages per method, LLaMA-7B —
+/// used by the Table-2 bench to report paper-vs-measured *orderings*.
+pub const TABLE2_7B_AVG: &[(&str, f64)] = &[
+    ("none", 18.1),
+    ("lora", 26.5),
+    ("adamw", 29.1),
+    ("lomo", 24.0),
+    ("adalomo", 30.8),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_complete() {
+        assert_eq!(TABLE8.len(), 20);
+        // AdaLomo memory is within 8% of LOMO at every size (paper claim).
+        for size in ["llama7b", "llama13b", "llama30b", "llama65b"] {
+            let get = |m: &str| {
+                TABLE8
+                    .iter()
+                    .find(|r| r.0 == size && r.1 == m)
+                    .map(|r| r.4)
+                    .unwrap()
+            };
+            let (lomo, adalomo, adamw) =
+                (get("lomo"), get("adalomo"), get("adamw"));
+            assert!((adalomo - lomo) / lomo < 0.08, "{size}");
+            assert!(adamw / adalomo > 2.5, "{size}");
+        }
+    }
+}

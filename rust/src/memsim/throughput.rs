@@ -1,0 +1,260 @@
+//! Throughput (TGS — tokens per GPU per second) model for Fig. 5b /
+//! Table 8.
+//!
+//! step_time = compute + exposed communication + optimizer update, with the
+//! A800+NVLink constants of the paper's testbed. Two efficiency scalars
+//! (MXU efficiency, exposed-communication fraction) are calibrated against
+//! the Table-8 TGS column by coordinate descent; the *method-dependent*
+//! terms — communication volume, update passes, the second backward of
+//! grad-norm LOMO — are first-principles, which is what fixes the ordering
+//! LoRA > AdamW ≈ Adafactor ≈ LOMO > AdaLomo.
+
+use super::arch::Arch;
+use super::memory::{Method, TrainSetup};
+use super::paper;
+
+/// Hardware constants (A800-80GB SXM + NVLink).
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    /// Peak dense bf16 FLOP/s per GPU.
+    pub peak_flops: f64,
+    /// Effective interconnect bandwidth per GPU, bytes/s.
+    pub link_bw: f64,
+    /// Effective HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Fixed per-matrix launch/sync overhead, seconds (fused updates issue
+    /// one small op per weight matrix; scaled by sqrt(n_gpus) for
+    /// cross-rank statistic syncs).
+    pub launch_overhead: f64,
+    /// Effective bandwidth of eager (hook-fused, per-matrix) update passes,
+    /// bytes/s — far below HBM peak due to small-op overhead. Calibrated.
+    pub eager_bw: f64,
+}
+
+impl Default for Hardware {
+    fn default() -> Self {
+        Hardware {
+            peak_flops: 312e12,
+            link_bw: 170e9,
+            hbm_bw: 1.6e12,
+            launch_overhead: 120e-6,
+            eager_bw: 45e9,
+        }
+    }
+}
+
+/// Calibrated efficiency scalars.
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// Achieved fraction of peak FLOP/s (kernel + pipeline efficiency).
+    pub mxu_eff: f64,
+    /// Fraction of communication NOT overlapped with compute.
+    pub exposed_comm: f64,
+}
+
+impl Default for Efficiency {
+    fn default() -> Self {
+        calibrate()
+    }
+}
+
+/// Communication volume per GPU per step, bytes (ZeRO-3 ring collectives:
+/// all-gather params for forward + for backward, reduce-scatter grads).
+fn comm_bytes(arch: &Arch, method: Method) -> f64 {
+    let n = arch.n_params() as f64;
+    let weights = 2.0 * n; // bf16
+    match method {
+        // params fwd + params bwd + grad reduce-scatter.
+        Method::AdamW | Method::Adafactor | Method::AdafactorPure => {
+            3.0 * weights
+        }
+        // Base weights still gathered twice; adapter grads are tiny.
+        Method::LoRA { rank } => {
+            2.0 * weights + 2.0 * arch.lora_params(rank) as f64
+        }
+        // Fused backward reduces each matrix's gradient as it is produced:
+        // same total volume, but many small messages -> 30% efficiency
+        // penalty on the gradient reduction leg.
+        Method::Lomo | Method::AdaLomo => 2.0 * weights + 2.0 * n / 0.7,
+    }
+}
+
+/// Optimizer-update time per step, seconds.
+///
+/// Two regimes, mirroring the implementations the paper profiles:
+/// * sharded fused-kernel steps (apex AdamW / HF Adafactor): stream the
+///   shard's state through HBM once;
+/// * hook-fused eager updates (LOMO/AdaLomo): under ZeRO-3 the *full*
+///   gradient of each matrix exists on every rank right after its backward
+///   op, and the update (for AdaLomo: factor EMAs + reconstruction + the
+///   grouped-norm statistics, three streaming passes) runs eagerly over it
+///   before the reduce-scatter frees it. AdaLomo additionally pays one
+///   cross-rank sync per weight tensor for the factored-moment / norm
+///   statistics; collective latency grows ~sqrt(G) on the ring. This full-N
+///   eager term is what widens the LOMO-AdaLomo gap from ~7% at 7B/4GPU to
+///   ~20% at 65B/32GPU in Table 8.
+fn update_time(arch: &Arch, method: Method, n_gpus: usize, hw: Hardware) -> f64 {
+    let n_shard = arch.n_params() as f64 / n_gpus as f64;
+    let n_full = arch.n_params() as f64;
+    let tensors = arch.param_specs().len() as f64;
+    let sync = hw.launch_overhead * (n_gpus as f64).sqrt();
+    match method {
+        // read p16,g16,m32,v32,master32; write p16,m32,v32,master32.
+        Method::AdamW => 26.0 * n_shard / hw.hbm_bw,
+        Method::Adafactor => 22.0 * n_shard / hw.hbm_bw,
+        Method::AdafactorPure => 14.0 * n_shard / hw.hbm_bw,
+        Method::LoRA { rank } => {
+            26.0 * arch.lora_params(rank) as f64 / n_gpus as f64 / hw.hbm_bw
+        }
+        // One eager pass: read g (bf16), write the param shard.
+        Method::Lomo => 2.0 * n_full / hw.eager_bw + tensors * sync,
+        // Three eager passes (moments, statistics, apply) + per-tensor
+        // grouped-norm sync.
+        Method::AdaLomo => {
+            3.0 * 2.0 * n_full / hw.eager_bw + 2.0 * tensors * sync
+        }
+    }
+}
+
+/// Predicted step time, seconds.
+pub fn step_time(setup: &TrainSetup, hw: Hardware, eff: Efficiency) -> f64 {
+    let tokens = (setup.micro_batch * setup.seq_len) as f64;
+    let compute = setup.arch.flops_per_token() * tokens
+        / (hw.peak_flops * eff.mxu_eff);
+    let comm = comm_bytes(&setup.arch, setup.method) / hw.link_bw
+        * eff.exposed_comm;
+    let update = update_time(&setup.arch, setup.method, setup.n_gpus, hw);
+    compute + comm + update
+}
+
+/// Tokens per GPU per second.
+pub fn tgs(setup: &TrainSetup, hw: Hardware, eff: Efficiency) -> f64 {
+    let tokens = (setup.micro_batch * setup.seq_len) as f64;
+    tokens / step_time(setup, hw, eff)
+}
+
+/// Coordinate-descent fit of (mxu_eff, exposed_comm) to Table 8's TGS
+/// column (log-space squared error).
+pub fn calibrate() -> Efficiency {
+    let hw = Hardware::default();
+    let loss = |eff: Efficiency| -> f64 {
+        paper::TABLE8
+            .iter()
+            .map(|&(arch, method, n_gpus, mb, _, tgs_paper)| {
+                let setup = TrainSetup {
+                    arch: Arch::analytic(arch).unwrap(),
+                    method: Method::parse(method).unwrap(),
+                    n_gpus,
+                    micro_batch: mb,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                };
+                let pred = tgs(&setup, hw, eff);
+                (pred.ln() - tgs_paper.ln()).powi(2)
+            })
+            .sum()
+    };
+    let mut best = Efficiency { mxu_eff: 0.45, exposed_comm: 0.3 };
+    let mut best_loss = loss(best);
+    for _ in 0..100 {
+        let mut improved = false;
+        for (dm, dc) in
+            [(1.05, 1.0), (0.95, 1.0), (1.0, 1.1), (1.0, 0.9)]
+        {
+            let cand = Efficiency {
+                mxu_eff: (best.mxu_eff * dm).clamp(0.05, 0.95),
+                exposed_comm: (best.exposed_comm * dc).clamp(0.01, 1.0),
+            };
+            let l = loss(cand);
+            if l < best_loss {
+                best = cand;
+                best_loss = l;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(arch: &str, method: Method, g: usize, mb: usize) -> TrainSetup {
+        TrainSetup {
+            arch: Arch::analytic(arch).unwrap(),
+            method,
+            n_gpus: g,
+            micro_batch: mb,
+            seq_len: paper::PROFILE_SEQ_LEN,
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper_at_7b() {
+        let hw = Hardware::default();
+        let eff = calibrate();
+        let t = |m| tgs(&setup("llama7b", m, 4, 8), hw, eff);
+        let (lora, adamw, lomo, adalomo) = (
+            t(Method::LoRA { rank: 8 }),
+            t(Method::AdamW),
+            t(Method::Lomo),
+            t(Method::AdaLomo),
+        );
+        assert!(lora > adamw, "LoRA fastest (less communication)");
+        assert!(adalomo < lomo, "AdaLomo pays extra update passes");
+        // Paper: AdaLomo ~5-10% below LOMO at 7B; "same level" overall.
+        let gap = (lomo - adalomo) / lomo;
+        assert!(gap > 0.01 && gap < 0.25, "gap {gap}");
+    }
+
+    #[test]
+    fn calibrated_within_band_of_table8() {
+        let hw = Hardware::default();
+        let eff = calibrate();
+        for &(arch, method, g, mb, _, tgs_paper) in paper::TABLE8 {
+            let pred = tgs(
+                &setup(arch, Method::parse(method).unwrap(), g, mb),
+                hw,
+                eff,
+            );
+            let rel = (pred - tgs_paper).abs() / tgs_paper;
+            assert!(
+                rel < 0.60,
+                "{arch}/{method}: pred {pred:.0} vs paper {tgs_paper} ({rel:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn tgs_decreases_with_model_size() {
+        let hw = Hardware::default();
+        let eff = Efficiency::default();
+        let t7 = tgs(&setup("llama7b", Method::AdaLomo, 4, 8), hw, eff);
+        let t65 = tgs(&setup("llama65b", Method::AdaLomo, 32, 2), hw, eff);
+        assert!(t7 > 4.0 * t65);
+    }
+
+    #[test]
+    fn grad_norm_two_pass_halves_throughput() {
+        // The LOMO + gradient-norm variant runs backward twice: the paper's
+        // motivation for grouped normalization ("nearly doubles speed").
+        let hw = Hardware::default();
+        let eff = Efficiency::default();
+        let s = setup("llama7b", Method::Lomo, 4, 8);
+        let one = step_time(&s, hw, eff);
+        // Second backward ~= extra compute-dominated pass (2/3 of fwd+bwd
+        // FLOPs) + the same exposed gradient communication.
+        let two = one
+            + setup("llama7b", Method::Lomo, 4, 8)
+                .arch
+                .flops_per_token()
+                * (8.0 * paper::PROFILE_SEQ_LEN as f64)
+                * (2.0 / 3.0)
+                / (hw.peak_flops * eff.mxu_eff);
+        let slowdown = two / one;
+        assert!(slowdown > 1.4 && slowdown < 2.1, "{slowdown}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Run metrics: structured logging (JSONL + CSV) and training/eval
+//! aggregation. Every experiment writes `runs/<name>/metrics.jsonl`, which
+//! the benches and EXPERIMENTS.md tables are regenerated from.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::{self, Json};
+
+/// Metric slot indices in the 8-float blob region — must mirror
+/// `python/compile/layout.py`.
+pub const M_LOSS: usize = 0;
+pub const M_TOKENS: usize = 1;
+pub const M_CORRECT: usize = 2;
+pub const M_GNORM: usize = 3;
+
+/// One training/eval observation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub tokens: f32,
+    pub correct: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub step_time_s: f64,
+}
+
+impl StepMetrics {
+    pub fn from_slots(step: usize, slots: &[f32], lr: f32, dt: f64) -> Self {
+        StepMetrics {
+            step,
+            loss: slots[M_LOSS],
+            tokens: slots[M_TOKENS],
+            correct: slots[M_CORRECT],
+            grad_norm: slots[M_GNORM],
+            lr,
+            step_time_s: dt,
+        }
+    }
+
+    pub fn accuracy(&self) -> f32 {
+        if self.tokens > 0.0 {
+            self.correct / self.tokens
+        } else {
+            0.0
+        }
+    }
+
+    pub fn perplexity(&self) -> f32 {
+        self.loss.exp()
+    }
+}
+
+/// Aggregate a set of eval batches into corpus-level loss/ppl/accuracy
+/// (sum-weighted by token counts, matching the paper's validation curves).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EvalAccum {
+    pub loss_sum: f64,
+    pub tokens: f64,
+    pub correct: f64,
+}
+
+impl EvalAccum {
+    pub fn add_slots(&mut self, slots: &[f32]) {
+        self.loss_sum += slots[M_LOSS] as f64 * slots[M_TOKENS] as f64;
+        self.tokens += slots[M_TOKENS] as f64;
+        self.correct += slots[M_CORRECT] as f64;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.tokens > 0.0 {
+            self.loss_sum / self.tokens
+        } else {
+            0.0
+        }
+    }
+
+    pub fn perplexity(&self) -> f64 {
+        self.mean_loss().exp()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.tokens > 0.0 {
+            self.correct / self.tokens
+        } else {
+            0.0
+        }
+    }
+}
+
+/// JSONL run log.
+pub struct RunLog {
+    dir: PathBuf,
+    file: fs::File,
+}
+
+impl RunLog {
+    pub fn create(out_dir: &str, run_name: &str) -> Result<RunLog> {
+        let dir = Path::new(out_dir).join(run_name);
+        fs::create_dir_all(&dir)?;
+        let file = fs::File::create(dir.join("metrics.jsonl"))?;
+        Ok(RunLog { dir, file })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn log(&mut self, record: Json) -> Result<()> {
+        writeln!(self.file, "{}", record.to_string())?;
+        Ok(())
+    }
+
+    pub fn log_train(&mut self, m: &StepMetrics) -> Result<()> {
+        self.log(json::obj(vec![
+            ("kind", json::s("train")),
+            ("step", json::num(m.step as f64)),
+            ("loss", json::num(m.loss as f64)),
+            ("acc", json::num(m.accuracy() as f64)),
+            ("grad_norm", json::num(m.grad_norm as f64)),
+            ("lr", json::num(m.lr as f64)),
+            ("dt", json::num(m.step_time_s)),
+        ]))
+    }
+
+    pub fn log_eval(&mut self, step: usize, e: &EvalAccum) -> Result<()> {
+        self.log(json::obj(vec![
+            ("kind", json::s("eval")),
+            ("step", json::num(step as f64)),
+            ("loss", json::num(e.mean_loss())),
+            ("ppl", json::num(e.perplexity())),
+            ("acc", json::num(e.accuracy())),
+        ]))
+    }
+}
+
+/// Load the loss curve (train records) back from a metrics.jsonl.
+pub fn load_curve(path: &Path) -> Result<Vec<(usize, f64)>> {
+    let text = fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)?;
+        if j.get("kind")?.as_str()? == "train" {
+            out.push((
+                j.get("step")?.as_usize()?,
+                j.get("loss")?.as_f64()?,
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Render a loss curve as a compact ASCII sparkline block for the console.
+pub fn ascii_curve(points: &[(usize, f64)], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let lo = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let hi = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, &(_, y)) in points.iter().enumerate() {
+        let col = i * (width - 1) / points.len().max(1);
+        let row = ((hi - y) / span * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col.min(width - 1)] = b'*';
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{hi:>10.4} ┐\n"));
+    for row in grid {
+        out.push_str("           │");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("{lo:>10.4} ┘ ({} points)\n", points.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_weights_by_tokens() {
+        let mut e = EvalAccum::default();
+        e.add_slots(&[2.0, 10.0, 5.0, 0.0]); // loss 2 over 10 tokens
+        e.add_slots(&[4.0, 30.0, 15.0, 0.0]); // loss 4 over 30 tokens
+        assert!((e.mean_loss() - 3.5).abs() < 1e-9);
+        assert!((e.accuracy() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_metrics_derived() {
+        let m = StepMetrics::from_slots(3, &[1.0, 8.0, 4.0, 0.5], 1e-3, 0.1);
+        assert_eq!(m.step, 3);
+        assert_eq!(m.accuracy(), 0.5);
+        assert!((m.perplexity() - std::f32::consts::E).abs() < 1e-4);
+    }
+
+    #[test]
+    fn runlog_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!(
+            "adalomo_test_{}",
+            std::process::id()
+        ));
+        let mut log =
+            RunLog::create(tmp.to_str().unwrap(), "unit").unwrap();
+        for step in 0..3 {
+            log.log_train(&StepMetrics {
+                step,
+                loss: 5.0 - step as f32,
+                tokens: 10.0,
+                correct: 1.0,
+                grad_norm: 0.1,
+                lr: 1e-3,
+                step_time_s: 0.01,
+            })
+            .unwrap();
+        }
+        let curve =
+            load_curve(&tmp.join("unit").join("metrics.jsonl")).unwrap();
+        assert_eq!(curve.len(), 3);
+        assert_eq!(curve[2], (2, 3.0));
+        fs::remove_dir_all(tmp).ok();
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let pts: Vec<(usize, f64)> =
+            (0..20).map(|i| (i, 5.0 - 0.2 * i as f64)).collect();
+        let s = ascii_curve(&pts, 40, 8);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 8);
+    }
+}

@@ -1,0 +1,287 @@
+//! Rust-native optimizer mirrors.
+//!
+//! Exactly the math of `python/compile/kernels/ref.py`, re-implemented on
+//! the host [`Tensor`]. Three consumers:
+//! * cross-layer parity tests — one step here must match one step of the
+//!   AOT train-step artifact (integration_optim_parity);
+//! * the memory simulator — [`OptKind::state_floats`] is the per-parameter
+//!   optimizer-state footprint of paper Table 1;
+//! * host-side experiments (toy-2D trajectories, micro-benches) that don't
+//!   need XLA.
+
+use crate::tensor::Tensor;
+
+pub mod update;
+
+pub use update::{grouped_normalize, GroupedNormStats};
+
+/// Optimizer identifiers. Order matches the paper's comparison set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptKind {
+    Sgd,
+    SgdMomentum,
+    SgdVariance,
+    AdamW,
+    Adafactor,
+    Lomo,
+    AdaLomo,
+}
+
+pub const ALL_OPTS: [OptKind; 7] = [
+    OptKind::Sgd,
+    OptKind::SgdMomentum,
+    OptKind::SgdVariance,
+    OptKind::AdamW,
+    OptKind::Adafactor,
+    OptKind::Lomo,
+    OptKind::AdaLomo,
+];
+
+impl OptKind {
+    pub fn parse(name: &str) -> anyhow::Result<OptKind> {
+        Ok(match name {
+            "sgd" => OptKind::Sgd,
+            "sgd_momentum" => OptKind::SgdMomentum,
+            "sgd_variance" => OptKind::SgdVariance,
+            "adam" | "adamw" => OptKind::AdamW,
+            "adafactor" => OptKind::Adafactor,
+            "lomo" => OptKind::Lomo,
+            "adalomo" => OptKind::AdaLomo,
+            other => anyhow::bail!("unknown optimizer {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::SgdMomentum => "sgd_momentum",
+            OptKind::SgdVariance => "sgd_variance",
+            OptKind::AdamW => "adamw",
+            OptKind::Adafactor => "adafactor",
+            OptKind::Lomo => "lomo",
+            OptKind::AdaLomo => "adalomo",
+        }
+    }
+
+    /// f32 optimizer-state elements for a parameter of `shape` — the
+    /// quantity behind paper Table 1's "Optimizer State" column.
+    pub fn state_floats(&self, shape: &[usize]) -> usize {
+        let n: usize = shape.iter().product();
+        match self {
+            OptKind::Sgd | OptKind::Lomo => 0,
+            OptKind::SgdMomentum | OptKind::SgdVariance => n,
+            OptKind::AdamW => 2 * n,
+            OptKind::Adafactor | OptKind::AdaLomo => {
+                if shape.len() == 2 {
+                    shape[0] + shape[1] // factored: r (m,) + c (n,)
+                } else {
+                    n // vectors keep a full second moment
+                }
+            }
+        }
+    }
+
+    /// Whether the update of one parameter needs no other parameter's
+    /// gradient — the property that lets LOMO/AdaLomo fuse the update into
+    /// the backward pass and free gradients immediately (paper §3.2).
+    /// AdamW et al. are per-parameter too, but *with* gradient clipping by
+    /// global norm (their standard recipe) they lose the property; the
+    /// memory simulator models that distinction.
+    pub fn fused_backward(&self) -> bool {
+        matches!(self, OptKind::Lomo | OptKind::AdaLomo)
+    }
+
+    /// Uses an adaptive (second-moment) per-parameter learning rate.
+    pub fn adaptive(&self) -> bool {
+        !matches!(self, OptKind::Sgd | OptKind::SgdMomentum | OptKind::Lomo)
+    }
+}
+
+/// Hyper-parameters shared across parameters (ref.py defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub adalomo_beta: f32,
+    pub eps_rms: f32,
+    pub eps_div: f32,
+    pub adafactor_eps1: f32,
+    pub adafactor_eps2: f32,
+    pub adafactor_clip_d: f32,
+    pub adafactor_decay_pow: f32,
+    /// Literal Algorithm-1 line-10 form u = g / v_hat (no sqrt).
+    pub no_sqrt: bool,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            adalomo_beta: 0.85,
+            eps_rms: 1e-3,
+            eps_div: 1e-30,
+            adafactor_eps1: 1e-30,
+            adafactor_eps2: 1e-3,
+            adafactor_clip_d: 1.0,
+            adafactor_decay_pow: 0.8,
+            no_sqrt: false,
+        }
+    }
+}
+
+/// Per-parameter optimizer state.
+#[derive(Debug, Clone)]
+enum State {
+    None,
+    M(Tensor),
+    V(Tensor),
+    MV(Tensor, Tensor),
+    RC(Tensor, Tensor),
+}
+
+/// One parameter's optimizer instance.
+#[derive(Debug, Clone)]
+pub struct ParamOpt {
+    pub kind: OptKind,
+    hyper: Hyper,
+    state: State,
+}
+
+impl ParamOpt {
+    pub fn new(kind: OptKind, shape: &[usize]) -> ParamOpt {
+        Self::with_hyper(kind, shape, Hyper::default())
+    }
+
+    pub fn with_hyper(kind: OptKind, shape: &[usize], hyper: Hyper) -> ParamOpt {
+        let state = match kind {
+            OptKind::Sgd | OptKind::Lomo => State::None,
+            OptKind::SgdMomentum => State::M(Tensor::zeros(shape)),
+            OptKind::SgdVariance => State::V(Tensor::zeros(shape)),
+            OptKind::AdamW => {
+                State::MV(Tensor::zeros(shape), Tensor::zeros(shape))
+            }
+            OptKind::Adafactor | OptKind::AdaLomo => {
+                if shape.len() == 2 {
+                    State::RC(
+                        Tensor::zeros(&[shape[0]]),
+                        Tensor::zeros(&[shape[1]]),
+                    )
+                } else {
+                    State::V(Tensor::zeros(shape))
+                }
+            }
+        };
+        ParamOpt { kind, hyper, state }
+    }
+
+    pub fn state_floats(&self) -> usize {
+        match &self.state {
+            State::None => 0,
+            State::M(t) | State::V(t) => t.len(),
+            State::MV(a, b) | State::RC(a, b) => a.len() + b.len(),
+        }
+    }
+
+    /// Access the factored state (r, c) if present — for invariants tests.
+    pub fn factored_state(&self) -> Option<(&Tensor, &Tensor)> {
+        match &self.state {
+            State::RC(r, c) => Some((r, c)),
+            _ => None,
+        }
+    }
+
+    /// Apply one update. `t` is the 1-based step, `lr` the scheduled
+    /// learning rate (rho_t for Adafactor/AdaLomo), `wd` decoupled decay
+    /// (AdamW only — others ignore it, matching the paper's setups).
+    pub fn step(&mut self, theta: &mut Tensor, g: &Tensor, t: u64, lr: f32, wd: f32) {
+        let h = self.hyper;
+        match (self.kind, &mut self.state) {
+            (OptKind::Sgd, State::None) | (OptKind::Lomo, State::None) => {
+                update::sgd(theta, g, lr);
+            }
+            (OptKind::SgdMomentum, State::M(m)) => {
+                update::sgd_momentum(theta, g, m, t, lr, h);
+            }
+            (OptKind::SgdVariance, State::V(v)) => {
+                update::sgd_variance(theta, g, v, t, lr, h);
+            }
+            (OptKind::AdamW, State::MV(m, v)) => {
+                update::adamw(theta, g, m, v, t, lr, wd, h);
+            }
+            (OptKind::Adafactor, State::RC(r, c)) => {
+                update::adafactor_2d(theta, g, r, c, t, lr, h);
+            }
+            (OptKind::Adafactor, State::V(v)) => {
+                update::adafactor_vec(theta, g, v, t, lr, h);
+            }
+            (OptKind::AdaLomo, State::RC(r, c)) => {
+                update::adalomo_2d(theta, g, r, c, t, lr, h);
+            }
+            (OptKind::AdaLomo, State::V(v)) => {
+                update::adalomo_vec(theta, g, v, t, lr, h);
+            }
+            (kind, state) => unreachable!(
+                "optimizer {kind:?} with mismatched state {:?}",
+                std::mem::discriminant(state)
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in ALL_OPTS {
+            assert_eq!(OptKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(OptKind::parse("adam").unwrap(), OptKind::AdamW);
+        assert!(OptKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn state_floats_table1() {
+        // Paper Table 1: AdamW keeps 2 state tensors; AdaLomo keeps m+n.
+        let shape = [128, 64];
+        assert_eq!(OptKind::AdamW.state_floats(&shape), 2 * 128 * 64);
+        assert_eq!(OptKind::AdaLomo.state_floats(&shape), 128 + 64);
+        assert_eq!(OptKind::Adafactor.state_floats(&shape), 128 + 64);
+        assert_eq!(OptKind::Lomo.state_floats(&shape), 0);
+        // Vectors degenerate to a full second moment.
+        assert_eq!(OptKind::AdaLomo.state_floats(&[64]), 64);
+    }
+
+    #[test]
+    fn param_opt_state_allocated() {
+        let p = ParamOpt::new(OptKind::AdaLomo, &[16, 8]);
+        assert_eq!(p.state_floats(), 24);
+        let (r, c) = p.factored_state().unwrap();
+        assert_eq!(r.len(), 16);
+        assert_eq!(c.len(), 8);
+    }
+
+    #[test]
+    fn sgd_step_direction() {
+        let mut theta = Tensor::full(&[4], 1.0);
+        let g = Tensor::full(&[4], 0.5);
+        let mut opt = ParamOpt::new(OptKind::Sgd, &[4]);
+        opt.step(&mut theta, &g, 1, 0.1, 0.0);
+        for &x in theta.data() {
+            assert!((x - 0.95).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn fused_and_adaptive_flags() {
+        assert!(OptKind::AdaLomo.fused_backward());
+        assert!(OptKind::Lomo.fused_backward());
+        assert!(!OptKind::AdamW.fused_backward());
+        assert!(OptKind::AdaLomo.adaptive());
+        assert!(!OptKind::Lomo.adaptive());
+    }
+}

@@ -1,0 +1,345 @@
+//! The update rules themselves — line-for-line mirrors of
+//! `python/compile/kernels/ref.py` (see that file for paper equation
+//! references). Kept free-standing so property tests can exercise them
+//! without constructing [`super::ParamOpt`].
+
+use crate::tensor::Tensor;
+
+use super::Hyper;
+
+/// Statistics produced by grouped update normalization — exposed so tests
+/// can assert the paper's invariants (RMS bound, scale positivity).
+#[derive(Debug, Clone, Copy)]
+pub struct GroupedNormStats {
+    pub rms_u: f32,
+    pub rms_theta: f32,
+    pub scale: f32,
+}
+
+/// Grouped update normalization (Algorithm 1 line 11), in place:
+/// u <- u / max(1, RMS(u)) * max(eps_rms, RMS(theta)).
+pub fn grouped_normalize(u: &mut Tensor, theta: &Tensor, eps_rms: f32) -> GroupedNormStats {
+    let rms_u = u.rms();
+    let rms_theta = theta.rms();
+    let scale = eps_rms.max(rms_theta) / 1.0f32.max(rms_u);
+    for x in u.data_mut() {
+        *x *= scale;
+    }
+    GroupedNormStats { rms_u, rms_theta, scale }
+}
+
+/// theta <- theta - lr * g  (SGD; also the LOMO rule, paper Eq. 1).
+pub fn sgd(theta: &mut Tensor, g: &Tensor, lr: f32) {
+    theta.axpy(-lr, g);
+}
+
+/// SGD + first moment only (paper Eq. 3).
+pub fn sgd_momentum(theta: &mut Tensor, g: &Tensor, m: &mut Tensor, t: u64, lr: f32, h: Hyper) {
+    let bias = 1.0 - h.beta1.powi(t as i32);
+    for ((th, &gi), mi) in theta
+        .data_mut()
+        .iter_mut()
+        .zip(g.data())
+        .zip(m.data_mut())
+    {
+        *mi = h.beta1 * *mi + (1.0 - h.beta1) * gi;
+        *th -= lr * (*mi / bias);
+    }
+}
+
+/// SGD + second moment only (paper Eq. 4).
+pub fn sgd_variance(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
+    let bias = 1.0 - h.beta2.powi(t as i32);
+    for ((th, &gi), vi) in theta
+        .data_mut()
+        .iter_mut()
+        .zip(g.data())
+        .zip(v.data_mut())
+    {
+        *vi = h.beta2 * *vi + (1.0 - h.beta2) * gi * gi;
+        *th -= lr * gi / ((*vi / bias).sqrt() + h.adam_eps);
+    }
+}
+
+/// AdamW (paper Eq. 2 + decoupled weight decay).
+pub fn adamw(
+    theta: &mut Tensor,
+    g: &Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    h: Hyper,
+) {
+    let bias1 = 1.0 - h.beta1.powi(t as i32);
+    let bias2 = 1.0 - h.beta2.powi(t as i32);
+    let n = theta.len();
+    let th = theta.data_mut();
+    let gd = g.data();
+    let md = m.data_mut();
+    let vd = v.data_mut();
+    for i in 0..n {
+        md[i] = h.beta1 * md[i] + (1.0 - h.beta1) * gd[i];
+        vd[i] = h.beta2 * vd[i] + (1.0 - h.beta2) * gd[i] * gd[i];
+        let update = (md[i] / bias1) / ((vd[i] / bias2).sqrt() + h.adam_eps);
+        th[i] -= lr * (update + wd * th[i]);
+    }
+}
+
+/// Factored second-moment EMA shared by AdaLomo (fixed beta) and Adafactor
+/// (time-dependent beta2_t): r/c <- beta * r/c + (1-beta) row/col sums of
+/// g^2 (+ floor). Single pass over g, no temporaries (perf pass:
+/// EXPERIMENTS.md §Perf L3 iteration 1 — the map+row_sums+col_sums version
+/// allocated three m*n/m/n buffers and read g twice).
+fn update_factors(g: &Tensor, r: &mut Tensor, c: &mut Tensor, beta: f32, floor: f32) {
+    let (m, n) = (g.shape()[0], g.shape()[1]);
+    let gd = g.data();
+    let rd = r.data_mut();
+    let cd = c.data_mut();
+    let one_minus = 1.0 - beta;
+    for ci in cd.iter_mut() {
+        *ci *= beta;
+    }
+    for i in 0..m {
+        let row = &gd[i * n..(i + 1) * n];
+        let mut rsum = 0.0f32;
+        for (ci, &x) in cd.iter_mut().zip(row) {
+            let g2 = x * x + floor;
+            rsum += g2;
+            *ci += one_minus * g2;
+        }
+        rd[i] = beta * rd[i] + one_minus * rsum;
+    }
+}
+
+/// Raw AdaLomo update u = g / sqrt(v_hat + eps) with v = r c / sum(r)
+/// (paper Eq. 5 + Algorithm 1 lines 9-10). Row-hoisted: the per-row factor
+/// and bias correction fold into one multiplier, so the inner loop is one
+/// mul + sqrt + div per element (sqrt(a*b) = sqrt(a)*sqrt(b) does NOT hold
+/// with the +eps guard, so the sqrt stays inside).
+fn adalomo_raw_u(g: &Tensor, r: &Tensor, c: &Tensor, bias: f32, h: Hyper) -> Tensor {
+    let (m, n) = (g.shape()[0], g.shape()[1]);
+    let sum_r = r.sum().max(h.eps_div);
+    let mut u = Tensor::zeros(&[m, n]);
+    let gd = g.data();
+    let cd = c.data();
+    let ud = u.data_mut();
+    let inv_bias_sum = 1.0 / (sum_r * bias);
+    for i in 0..m {
+        let row_scale = r.data()[i] * inv_bias_sum; // v_hat = row_scale * c[j]
+        let grow = &gd[i * n..(i + 1) * n];
+        let urow = &mut ud[i * n..(i + 1) * n];
+        // Iterator zips elide bounds checks -> LLVM vectorizes the
+        // mul/sqrt/div chain (perf pass iteration 2).
+        if h.no_sqrt {
+            for ((u, &gv), &cv) in
+                urow.iter_mut().zip(grow).zip(cd.iter())
+            {
+                *u = gv / (row_scale * cv + h.eps_div);
+            }
+        } else {
+            for ((u, &gv), &cv) in
+                urow.iter_mut().zip(grow).zip(cd.iter())
+            {
+                *u = gv / (row_scale * cv + h.eps_div).sqrt();
+            }
+        }
+    }
+    u
+}
+
+/// AdaLomo step for a 2-D parameter (Algorithm 1 lines 7-12).
+pub fn adalomo_2d(
+    theta: &mut Tensor,
+    g: &Tensor,
+    r: &mut Tensor,
+    c: &mut Tensor,
+    t: u64,
+    lr: f32,
+    h: Hyper,
+) {
+    update_factors(g, r, c, h.adalomo_beta, 0.0);
+    let bias = 1.0 - h.adalomo_beta.powi(t as i32);
+    let mut u = adalomo_raw_u(g, r, c, bias, h);
+    grouped_normalize(&mut u, theta, h.eps_rms);
+    theta.axpy(-lr, &u);
+}
+
+/// AdaLomo step for vectors (full second moment).
+pub fn adalomo_vec(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
+    let bias = 1.0 - h.adalomo_beta.powi(t as i32);
+    let mut u = Tensor::zeros(theta.shape());
+    for ((ud, &gi), vi) in u
+        .data_mut()
+        .iter_mut()
+        .zip(g.data())
+        .zip(v.data_mut())
+    {
+        *vi = h.adalomo_beta * *vi + (1.0 - h.adalomo_beta) * gi * gi;
+        let v_hat = *vi / bias;
+        let denom = if h.no_sqrt {
+            v_hat + h.eps_div
+        } else {
+            (v_hat + h.eps_div).sqrt()
+        };
+        *ud = gi / denom;
+    }
+    grouped_normalize(&mut u, theta, h.eps_rms);
+    theta.axpy(-lr, &u);
+}
+
+/// Adafactor step for a 2-D parameter (momentum-less, update clipping,
+/// relative step size; lr = rho_t).
+pub fn adafactor_2d(
+    theta: &mut Tensor,
+    g: &Tensor,
+    r: &mut Tensor,
+    c: &mut Tensor,
+    t: u64,
+    lr: f32,
+    h: Hyper,
+) {
+    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    update_factors(g, r, c, beta2t, h.adafactor_eps1);
+    let (m, n) = (g.shape()[0], g.shape()[1]);
+    let sum_r = r.sum().max(h.adafactor_eps1);
+    let mut u = Tensor::zeros(&[m, n]);
+    let gd = g.data();
+    let cd = c.data();
+    let ud = u.data_mut();
+    let inv_sum = 1.0 / sum_r;
+    for i in 0..m {
+        let row_scale = r.data()[i] * inv_sum;
+        let grow = &gd[i * n..(i + 1) * n];
+        let urow = &mut ud[i * n..(i + 1) * n];
+        for ((u, &gv), &cv) in urow.iter_mut().zip(grow).zip(cd.iter()) {
+            *u = gv / (row_scale * cv + h.adafactor_eps1).sqrt();
+        }
+    }
+    let clip = 1.0f32.max(u.rms() / h.adafactor_clip_d);
+    let alpha = h.adafactor_eps2.max(theta.rms()) * lr;
+    theta.axpy(-alpha / clip, &u);
+}
+
+/// Adafactor step for vectors.
+pub fn adafactor_vec(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
+    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    let mut u = Tensor::zeros(theta.shape());
+    for ((ud, &gi), vi) in u
+        .data_mut()
+        .iter_mut()
+        .zip(g.data())
+        .zip(v.data_mut())
+    {
+        *vi = beta2t * *vi + (1.0 - beta2t) * (gi * gi + h.adafactor_eps1);
+        *ud = gi / (*vi + h.adafactor_eps1).sqrt();
+    }
+    let clip = 1.0f32.max(u.rms() / h.adafactor_clip_d);
+    let alpha = h.adafactor_eps2.max(theta.rms()) * lr;
+    theta.axpy(-alpha / clip, &u);
+}
+
+/// Global gradient norm over a set of gradients — the quantity LOMO's
+/// two-backward-pass gradient normalization needs (paper §2.1).
+pub fn global_grad_norm(grads: &[&Tensor]) -> f32 {
+    grads.iter().map(|g| g.sum_sq()).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> Hyper {
+        Hyper::default()
+    }
+
+    #[test]
+    fn grouped_norm_caps_rms() {
+        // After normalization, RMS(u) <= max(eps, RMS(theta)).
+        let mut u = Tensor::full(&[8, 8], 50.0);
+        let theta = Tensor::full(&[8, 8], 0.2);
+        let stats = grouped_normalize(&mut u, &theta, 1e-3);
+        assert!((stats.rms_u - 50.0).abs() < 1e-4);
+        assert!((u.rms() - 0.2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn grouped_norm_small_update_not_amplified_beyond_theta_rms() {
+        // RMS(u) < 1 -> divide by 1, multiply by RMS(theta).
+        let mut u = Tensor::full(&[4], 0.5);
+        let theta = Tensor::full(&[4], 2.0);
+        grouped_normalize(&mut u, &theta, 1e-3);
+        assert!((u.rms() - 1.0).abs() < 1e-5); // 0.5 * 2.0
+    }
+
+    #[test]
+    fn adalomo_first_step_unit_rms_direction() {
+        // At t=1 with zero state, v_hat = g^2 exactly (bias correction
+        // cancels (1-beta)), so u = sign(g)-ish with |u|=1 per element up
+        // to the factored approximation; for a rank-1 |g| it is exact.
+        let mut theta = Tensor::full(&[2, 2], 1.0);
+        let g = Tensor::new(&[2, 2], vec![0.3, 0.3, 0.3, 0.3]).unwrap();
+        let mut r = Tensor::zeros(&[2]);
+        let mut c = Tensor::zeros(&[2]);
+        adalomo_2d(&mut theta, &g, &mut r, &mut c, 1, 0.1, hyper());
+        // u = 1 everywhere -> grouped norm: RMS(u)=1, RMS(theta)=1 -> scale 1
+        // theta' = 1 - 0.1.
+        for &x in theta.data() {
+            assert!((x - 0.9).abs() < 1e-4, "{x}");
+        }
+        // Factors hold (1-beta) * rowsums of g^2.
+        assert!((r.data()[0] - 0.15 * 2.0 * 0.09).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adalomo_factors_nonnegative() {
+        let mut theta = Tensor::full(&[3, 4], 0.5);
+        let g = Tensor::from_fn(&[3, 4], |i| (i as f32 - 5.0) * 0.01);
+        let mut r = Tensor::zeros(&[3]);
+        let mut c = Tensor::zeros(&[4]);
+        for t in 1..20 {
+            adalomo_2d(&mut theta, &g, &mut r, &mut c, t, 0.01, hyper());
+        }
+        assert!(r.data().iter().all(|&x| x >= 0.0));
+        assert!(c.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn adamw_decay_pulls_to_zero() {
+        let mut theta = Tensor::full(&[4], 1.0);
+        let g = Tensor::zeros(&[4]);
+        let mut m = Tensor::zeros(&[4]);
+        let mut v = Tensor::zeros(&[4]);
+        adamw(&mut theta, &g, &mut m, &mut v, 1, 0.1, 0.5, hyper());
+        for &x in theta.data() {
+            assert!((x - 0.95).abs() < 1e-6); // 1 - 0.1*0.5*1
+        }
+    }
+
+    #[test]
+    fn sgd_variance_normalizes_scale() {
+        // With variance normalization, the first-step update size is
+        // ~lr * sign(g) regardless of |g| (paper's argument for adaptivity).
+        let h = hyper();
+        for &mag in &[1e-4f32, 1.0, 1e4] {
+            let mut theta = Tensor::zeros(&[1]);
+            let g = Tensor::full(&[1], mag);
+            let mut v = Tensor::zeros(&[1]);
+            sgd_variance(&mut theta, &g, &mut v, 1, 0.1, h);
+            assert!(
+                (theta.data()[0] + 0.1).abs() < 1e-3,
+                "mag {mag} -> {}",
+                theta.data()[0]
+            );
+        }
+    }
+
+    #[test]
+    fn global_norm() {
+        let a = Tensor::full(&[4], 1.0);
+        let b = Tensor::full(&[9], 1.0);
+        let n = global_grad_norm(&[&a, &b]);
+        assert!((n - (13.0f32).sqrt()).abs() < 1e-6);
+    }
+}

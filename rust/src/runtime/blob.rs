@@ -1,0 +1,205 @@
+//! Host-side view of the training-state blob: checkpointing, optimizer
+//! conversion, and segment access via the manifest layout.
+//!
+//! The blob lives on device during training; this type only appears at
+//! checkpoint boundaries (save/load/repack) — never on the step path.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Layout;
+
+#[derive(Debug, Clone)]
+pub struct HostBlob {
+    pub data: Vec<f32>,
+    pub layout_key: String,
+}
+
+impl HostBlob {
+    pub fn new(data: Vec<f32>, layout_key: &str, layout: &Layout) -> Result<Self> {
+        if data.len() != layout.blob_len {
+            bail!(
+                "blob length {} != layout {} ({})",
+                data.len(),
+                layout.blob_len,
+                layout_key
+            );
+        }
+        Ok(HostBlob { data, layout_key: layout_key.to_string() })
+    }
+
+    /// View one segment's data.
+    pub fn segment<'a>(&'a self, layout: &Layout, name: &str) -> Result<&'a [f32]> {
+        let seg = layout
+            .segment(name)
+            .with_context(|| format!("no segment {name:?}"))?;
+        Ok(&self.data[seg.offset..seg.offset + seg.size])
+    }
+
+    /// The leading parameter region (param + frozen).
+    pub fn params<'a>(&'a self, layout: &Layout) -> &'a [f32] {
+        &self.data[..layout.params_len]
+    }
+
+    pub fn metrics<'a>(&'a self, layout: &Layout) -> &'a [f32] {
+        &self.data[layout.metrics_offset()..]
+    }
+
+    /// Repack this blob's *parameters* into a different optimizer's layout
+    /// (fresh zero state) — the checkpoint-conversion path used when e.g.
+    /// instruction tuning (AdaLomo) starts from a scratch-pre-trained
+    /// (AdamW) checkpoint. Both layouts must share the parameter prefix.
+    pub fn repack(&self, from: &Layout, to: &Layout, to_key: &str) -> Result<HostBlob> {
+        // Verify the shared prefix really is shared (names + shapes).
+        let from_params: Vec<_> = from
+            .segments
+            .iter()
+            .filter(|s| s.kind == "param" || s.kind == "frozen")
+            .collect();
+        let to_params: Vec<_> = to
+            .segments
+            .iter()
+            .filter(|s| s.kind == "param" || s.kind == "frozen")
+            .collect();
+        let shared = from_params.len().min(to_params.len());
+        for i in 0..shared {
+            if from_params[i].name != to_params[i].name
+                || from_params[i].shape != to_params[i].shape
+            {
+                bail!(
+                    "layouts disagree at parameter {} ({} vs {})",
+                    i,
+                    from_params[i].name,
+                    to_params[i].name
+                );
+            }
+        }
+        let mut data = vec![0f32; to.blob_len];
+        let ncopy = from.params_len.min(to.params_len);
+        data[..ncopy].copy_from_slice(&self.data[..ncopy]);
+        HostBlob::new(data, to_key, to)
+    }
+
+    /// Binary checkpoint: little-endian f32s, preceded by a short header.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut bytes =
+            Vec::with_capacity(16 + self.layout_key.len() + self.data.len() * 4);
+        bytes.extend_from_slice(b"ADLM");
+        bytes.extend_from_slice(&(self.layout_key.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(self.layout_key.as_bytes());
+        bytes.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<HostBlob> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        if bytes.len() < 16 || &bytes[..4] != b"ADLM" {
+            bail!("{path:?}: not an adalomo checkpoint");
+        }
+        let klen = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let layout_key = String::from_utf8(bytes[8..8 + klen].to_vec())?;
+        let off = 8 + klen;
+        let n = u64::from_le_bytes(bytes[off..off + 8].try_into()?) as usize;
+        let mut data = Vec::with_capacity(n);
+        let body = &bytes[off + 8..];
+        if body.len() != n * 4 {
+            bail!("{path:?}: truncated checkpoint");
+        }
+        for chunk in body.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into()?));
+        }
+        Ok(HostBlob { data, layout_key })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Segment;
+
+    fn layout(state: usize) -> Layout {
+        let segments = vec![
+            Segment {
+                name: "w".into(),
+                kind: "param".into(),
+                shape: vec![2, 3],
+                offset: 0,
+                size: 6,
+            },
+            Segment {
+                name: "w@s".into(),
+                kind: "state".into(),
+                shape: vec![state],
+                offset: 6,
+                size: state,
+            },
+            Segment {
+                name: "metrics".into(),
+                kind: "metric".into(),
+                shape: vec![8],
+                offset: 6 + state,
+                size: 8,
+            },
+        ];
+        Layout { blob_len: 14 + state, params_len: 6, segments }
+    }
+
+    #[test]
+    fn segment_views() {
+        let l = layout(4);
+        let blob = HostBlob::new(
+            (0..18).map(|i| i as f32).collect(),
+            "t/x",
+            &l,
+        )
+        .unwrap();
+        assert_eq!(blob.params(&l), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(blob.segment(&l, "w@s").unwrap(), &[6., 7., 8., 9.]);
+        assert_eq!(blob.metrics(&l).len(), 8);
+        assert!(blob.segment(&l, "nope").is_err());
+    }
+
+    #[test]
+    fn wrong_len_rejected() {
+        assert!(HostBlob::new(vec![0.0; 3], "t/x", &layout(4)).is_err());
+    }
+
+    #[test]
+    fn repack_copies_params_zeroes_state() {
+        let from = layout(4);
+        let to = layout(9);
+        let blob = HostBlob::new(
+            (0..18).map(|i| i as f32 + 1.0).collect(),
+            "t/a",
+            &from,
+        )
+        .unwrap();
+        let out = blob.repack(&from, &to, "t/b").unwrap();
+        assert_eq!(out.data.len(), 23);
+        assert_eq!(&out.data[..6], blob.params(&from));
+        assert!(out.data[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let l = layout(2);
+        let blob = HostBlob::new(
+            (0..16).map(|i| i as f32 * 0.5).collect(),
+            "nano/adalomo",
+            &l,
+        )
+        .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("adalomo_ckpt_{}.bin", std::process::id()));
+        blob.save(&path).unwrap();
+        let loaded = HostBlob::load(&path).unwrap();
+        assert_eq!(loaded.layout_key, "nano/adalomo");
+        assert_eq!(loaded.data, blob.data);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,337 @@
+//! `artifacts/manifest.json` — the contract between `python -m compile.aot`
+//! (which writes it) and the Rust runtime (which trusts it for every shape,
+//! dtype, blob offset and entry-point name).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub preset: Option<String>,
+    pub opt: Option<String>,
+    pub layout_key: Option<String>,
+    pub inputs: Vec<IoSpec>,
+    pub output_shape: Vec<usize>,
+    /// fused_group entries: (group index, total groups).
+    pub group: Option<(usize, usize)>,
+}
+
+/// One blob segment (mirrors python/compile/layout.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub name: String,
+    pub kind: String, // param | frozen | state | metric
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub blob_len: usize,
+    pub params_len: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl Layout {
+    pub fn metrics_offset(&self) -> usize {
+        self.segments
+            .iter()
+            .find(|s| s.kind == "metric")
+            .map(|s| s.offset)
+            .unwrap_or(self.blob_len)
+    }
+
+    pub fn segment(&self, name: &str) -> Option<&Segment> {
+        self.segments.iter().find(|s| s.name == name)
+    }
+
+    /// Trainable parameter segments (excludes frozen/state/metrics).
+    pub fn trainable(&self) -> impl Iterator<Item = &Segment> {
+        self.segments.iter().filter(|s| s.kind == "param")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub n_params: usize,
+    pub fused_groups: usize,
+    pub opts: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kernel_impl: String,
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub layouts: BTreeMap<String, Layout>,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|v| v.as_usize()).collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {path:?} — run `make artifacts` first"
+            )
+        })?;
+        let j = Json::parse(&text).context("manifest.json parse")?;
+
+        let mut presets = BTreeMap::new();
+        for (name, p) in j.get("presets")?.as_obj()? {
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    name: name.clone(),
+                    vocab: p.get("vocab")?.as_usize()?,
+                    d_model: p.get("d_model")?.as_usize()?,
+                    n_layers: p.get("n_layers")?.as_usize()?,
+                    n_heads: p.get("n_heads")?.as_usize()?,
+                    d_ff: p.get("d_ff")?.as_usize()?,
+                    seq_len: p.get("seq_len")?.as_usize()?,
+                    batch_size: p.get("batch_size")?.as_usize()?,
+                    n_params: p.get("n_params")?.as_usize()?,
+                    fused_groups: p.get("fused_groups")?.as_usize()?,
+                    opts: p
+                        .get("opts")?
+                        .as_arr()?
+                        .iter()
+                        .map(|o| Ok(o.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut layouts = BTreeMap::new();
+        for (key, l) in j.get("layouts")?.as_obj()? {
+            let segments = l
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(Segment {
+                        name: s.get("name")?.as_str()?.to_string(),
+                        kind: s.get("kind")?.as_str()?.to_string(),
+                        shape: shape_of(s.get("shape")?)?,
+                        offset: s.get("offset")?.as_usize()?,
+                        size: s.get("size")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            layouts.insert(
+                key.clone(),
+                Layout {
+                    blob_len: l.get("blob_len")?.as_usize()?,
+                    params_len: l.get("params_len")?.as_usize()?,
+                    segments,
+                },
+            );
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(IoSpec {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: shape_of(i.get("shape")?)?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let group = match (e.opt("group"), e.opt("n_groups")) {
+                (Some(g), Some(n)) => Some((g.as_usize()?, n.as_usize()?)),
+                _ => None,
+            };
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name: name.clone(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    kind: e.get("kind")?.as_str()?.to_string(),
+                    preset: e
+                        .opt("preset")
+                        .and_then(|p| p.as_str().ok())
+                        .map(String::from),
+                    opt: e
+                        .opt("opt")
+                        .and_then(|p| p.as_str().ok())
+                        .map(String::from),
+                    layout_key: e
+                        .opt("layout")
+                        .and_then(|p| p.as_str().ok())
+                        .map(String::from),
+                    inputs,
+                    output_shape: shape_of(e.get("output")?.get("shape")?)?,
+                    group,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            kernel_impl: j
+                .opt("kernel_impl")
+                .and_then(|k| k.as_str().ok())
+                .unwrap_or("pallas")
+                .to_string(),
+            presets,
+            layouts,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no AOT entry {name:?} in manifest"))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("no preset {name:?} in manifest"))
+    }
+
+    pub fn layout(&self, key: &str) -> Result<&Layout> {
+        self.layouts
+            .get(key)
+            .ok_or_else(|| anyhow!("no layout {key:?} in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    // --- canonical entry names (shared with aot.py) ------------------------
+
+    pub fn train_step_name(preset: &str, opt: &str) -> String {
+        format!("train_step_{preset}_{opt}")
+    }
+
+    pub fn init_name(preset: &str, opt: &str) -> String {
+        // gnorm variants share the base optimizer's layout & init.
+        let base = opt.strip_suffix("_gnorm").unwrap_or(opt);
+        format!("init_{preset}_{base}")
+    }
+
+    pub fn layout_key(preset: &str, opt: &str) -> String {
+        let base = opt.strip_suffix("_gnorm").unwrap_or(opt);
+        format!("{preset}/{base}")
+    }
+
+    pub fn read_metrics_name(preset: &str, opt: &str) -> String {
+        let base = opt.strip_suffix("_gnorm").unwrap_or(opt);
+        format!("read_metrics_{preset}_{base}")
+    }
+
+    pub fn extract_params_name(preset: &str, opt: &str) -> String {
+        let base = opt.strip_suffix("_gnorm").unwrap_or(opt);
+        format!("extract_params_{preset}_{base}")
+    }
+
+    pub fn eval_name(preset: &str) -> String {
+        format!("eval_{preset}")
+    }
+
+    pub fn fused_name(preset: &str, opt: &str, group: usize) -> String {
+        format!("fused_{preset}_{opt}_g{group}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are the
+    /// manifest-side half of the cross-layer contract.
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_and_has_nano() {
+        let Some(m) = manifest() else { return };
+        let p = m.preset("nano").unwrap();
+        assert_eq!(p.d_model, 64);
+        assert_eq!(p.vocab, 256);
+        assert!(m.entry("train_step_nano_adalomo").is_ok());
+        assert!(m.entry("bogus").is_err());
+    }
+
+    #[test]
+    fn layouts_are_consistent() {
+        let Some(m) = manifest() else { return };
+        for (key, layout) in &m.layouts {
+            // Segments tile the blob exactly.
+            let mut off = 0;
+            for s in &layout.segments {
+                assert_eq!(s.offset, off, "{key}/{}", s.name);
+                assert_eq!(
+                    s.size,
+                    s.shape.iter().product::<usize>().max(1),
+                    "{key}/{}",
+                    s.name
+                );
+                off += s.size;
+            }
+            assert_eq!(off, layout.blob_len, "{key}");
+            // Params region is a prefix.
+            assert!(layout.params_len <= layout.blob_len);
+            assert_eq!(layout.metrics_offset() + 8, layout.blob_len);
+        }
+    }
+
+    #[test]
+    fn train_entries_match_layout_sizes() {
+        let Some(m) = manifest() else { return };
+        for e in m.entries.values() {
+            if e.kind == "train_step" {
+                let layout =
+                    m.layout(e.layout_key.as_ref().unwrap()).unwrap();
+                assert_eq!(e.inputs[0].shape, vec![layout.blob_len]);
+                assert_eq!(e.output_shape, vec![layout.blob_len]);
+            }
+        }
+    }
+
+    #[test]
+    fn n_params_matches_memsim_arch() {
+        let Some(m) = manifest() else { return };
+        for (name, p) in &m.presets {
+            let arch = crate::memsim::Arch::preset(name).unwrap();
+            assert_eq!(arch.n_params(), p.n_params, "{name}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) and executes
+//! them on the CPU PJRT client. This is the only module that touches the
+//! `xla` crate; everything above it works with plain `f32`/`i32` host
+//! buffers and opaque device handles.
+//!
+//! Hot-path contract (see DESIGN.md §6): every entry returns a single
+//! non-tuple array, so a training step is
+//! `blob_buffer = session.execute_buf(train_step, [blob_buffer, x, y, sched])`
+//! — the multi-hundred-KB state blob never leaves the device; only the
+//! 32-byte metrics slice is fetched (via the `read_metrics_*` entry) when
+//! the coordinator wants to log.
+
+pub mod blob;
+pub mod manifest;
+pub mod session;
+
+pub use blob::HostBlob;
+pub use manifest::{Entry, Layout, Manifest, PresetInfo, Segment};
+pub use session::Session;

@@ -1,0 +1,263 @@
+//! PJRT session: HLO loading, compilation cache, typed execution.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Entry, Manifest};
+
+/// Host-side input for one entry argument.
+pub enum HostArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    /// Scalar i32 (e.g. the init seed).
+    ScalarI32(i32),
+}
+
+/// A compiled-artifact session bound to one PJRT (CPU) client.
+///
+/// Compilation is cached per entry name; `stats()` exposes compile/execute
+/// counters for the perf pass.
+pub struct Session {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<SessionStats>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SessionStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub host_uploads: usize,
+    pub upload_bytes: usize,
+}
+
+impl Session {
+    pub fn open(artifacts_dir: &Path) -> Result<Session> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Session {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(SessionStats::default()),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn open_default() -> Result<Session> {
+        let dir = std::env::var("ADALOMO_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Compile (or fetch from cache) an entry. Compilation happens lazily
+    /// on first execution; call this eagerly to move the cost off the
+    /// timed path.
+    pub fn compile(&self, entry_name: &str) -> Result<()> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.contains_key(entry_name) {
+                return Ok(());
+            }
+        }
+        let entry = self.manifest.entry(entry_name)?;
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {entry_name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            stats.compiles += 1;
+            stats.compile_secs += dt;
+        }
+        self.cache.lock().unwrap().insert(entry_name.to_string(), exe);
+        Ok(())
+    }
+
+    fn with_exe<R>(
+        &self,
+        entry_name: &str,
+        f: impl FnOnce(&PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        self.compile(entry_name)?;
+        let cache = self.cache.lock().unwrap();
+        f(cache.get(entry_name).expect("compiled above"))
+    }
+
+    fn check_args(&self, entry: &Entry, n: usize) -> Result<()> {
+        if entry.inputs.len() != n {
+            bail!(
+                "{} expects {} inputs, got {n}",
+                entry.name,
+                entry.inputs.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Upload a host array to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        let mut stats = self.stats.lock().unwrap();
+        stats.host_uploads += 1;
+        stats.upload_bytes += data.len() * 4;
+        drop(stats);
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        let mut stats = self.stats.lock().unwrap();
+        stats.host_uploads += 1;
+        stats.upload_bytes += data.len() * 4;
+        drop(stats);
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    pub fn upload(&self, arg: &HostArg, dims: &[usize]) -> Result<PjRtBuffer> {
+        match arg {
+            HostArg::F32(d) => self.upload_f32(d, dims),
+            HostArg::I32(d) => self.upload_i32(d, dims),
+            HostArg::ScalarI32(v) => self.upload_i32(&[*v], &[]),
+        }
+    }
+
+    /// Execute with device-resident buffers (THE hot path). Returns the
+    /// single output buffer, still on device.
+    pub fn execute_buf(
+        &self,
+        entry_name: &str,
+        args: &[&PjRtBuffer],
+    ) -> Result<PjRtBuffer> {
+        let entry = self.manifest.entry(entry_name)?;
+        self.check_args(entry, args.len())?;
+        let t0 = Instant::now();
+        let mut out = self.with_exe(entry_name, |exe| {
+            exe.execute_b(args).map_err(|e| anyhow!("{entry_name}: {e:?}"))
+        })?;
+        let result = take_single(&mut out, entry_name)?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(result)
+    }
+
+    /// Execute from host data (convenience path for init/eval/one-shots).
+    pub fn execute_host(
+        &self,
+        entry_name: &str,
+        args: &[HostArg],
+    ) -> Result<PjRtBuffer> {
+        let entry = self.manifest.entry(entry_name)?;
+        self.check_args(entry, args.len())?;
+        let shapes: Vec<Vec<usize>> =
+            entry.inputs.iter().map(|i| i.shape.clone()).collect();
+        let bufs: Vec<PjRtBuffer> = args
+            .iter()
+            .zip(&shapes)
+            .map(|(a, dims)| self.upload(a, dims))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        self.execute_buf(entry_name, &refs)
+    }
+
+    /// Fetch a device buffer to a host f32 vector.
+    pub fn fetch_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Fetch exactly `n` leading f32 elements. (TFRT CPU PJRT does not
+    /// implement CopyRawToHost, so this goes through a Literal; for the
+    /// 8-float metrics reads the cost is dominated by the sync anyway.)
+    pub fn fetch_f32_raw(&self, buf: &PjRtBuffer, n: usize) -> Result<Vec<f32>> {
+        let mut out = self.fetch_f32(buf)?;
+        if out.len() < n {
+            bail!("buffer holds {} f32s, wanted {n}", out.len());
+        }
+        out.truncate(n);
+        Ok(out)
+    }
+
+    /// Literal-level escape hatch (used by tests comparing against
+    /// hand-built literals).
+    pub fn execute_literals(
+        &self,
+        entry_name: &str,
+        args: &[Literal],
+    ) -> Result<Literal> {
+        let entry = self.manifest.entry(entry_name)?;
+        self.check_args(entry, args.len())?;
+        let mut out = self.with_exe(entry_name, |exe| {
+            exe.execute::<Literal>(args)
+                .map_err(|e| anyhow!("{entry_name}: {e:?}"))
+        })?;
+        let buf = take_single(&mut out, entry_name)?;
+        buf.to_literal_sync().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Names of all manifest entries for a preset (used by the smoke test
+    /// that compiles everything).
+    pub fn entries_for_preset(&self, preset: &str) -> Vec<String> {
+        self.manifest
+            .entries
+            .values()
+            .filter(|e| e.preset.as_deref() == Some(preset))
+            .map(|e| e.name.clone())
+            .collect()
+    }
+}
+
+fn take_single(
+    out: &mut Vec<Vec<PjRtBuffer>>,
+    entry_name: &str,
+) -> Result<PjRtBuffer> {
+    let replica = out
+        .get_mut(0)
+        .ok_or_else(|| anyhow!("{entry_name}: no replica output"))?;
+    if replica.len() != 1 {
+        bail!(
+            "{entry_name}: expected 1 output buffer, got {} — every AOT \
+             entry must return a single array (see aot.py)",
+            replica.len()
+        );
+    }
+    Ok(replica.remove(0))
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("platform", &self.client.platform_name())
+            .field("entries", &self.manifest.entries.len())
+            .finish()
+    }
+}

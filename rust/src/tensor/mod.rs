@@ -1,0 +1,272 @@
+//! Minimal row-major f32 tensor.
+//!
+//! Used by the Rust-native optimizer mirrors ([`crate::optim`]), the toy-2D
+//! experiment, the synthetic benchmark scoring and the property tests.
+//! All heavy model compute runs inside the AOT XLA programs; this type only
+//! needs the handful of operations the coordinator does on the host.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| f(i)).collect(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    // --- elementwise -------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// In-place a += b * s (the optimizer hot path — no allocation).
+    pub fn axpy(&mut self, s: f32, b: &Tensor) {
+        assert_eq!(self.shape, b.shape);
+        for (x, &y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    // --- reductions --------------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn sum_sq(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// Root-mean-square over all elements (paper footnote 1).
+    pub fn rms(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.sum_sq() / self.data.len() as f32).sqrt()
+    }
+
+    /// Row sums of a 2-D tensor -> (m,).
+    pub fn row_sums(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m];
+        for i in 0..m {
+            out[i] = self.data[i * n..(i + 1) * n].iter().sum();
+        }
+        Tensor { shape: vec![m], data: out }
+    }
+
+    /// Column sums of a 2-D tensor -> (n,).
+    pub fn col_sums(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += x;
+            }
+        }
+        Tensor { shape: vec![n], data: out }
+    }
+
+    // --- linear algebra (small matrices only) ------------------------------
+
+    /// Naive (i, k, j)-ordered matmul; adequate for the host-side sizes.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(other.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// Outer product of two vectors -> (m, n).
+    pub fn outer(a: &Tensor, b: &Tensor) -> Tensor {
+        assert_eq!(a.ndim(), 1);
+        assert_eq!(b.ndim(), 1);
+        let (m, n) = (a.len(), b.len());
+        let mut out = Vec::with_capacity(m * n);
+        for &x in &a.data {
+            for &y in &b.data {
+                out.push(x * y);
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::full(&[2, 2], 2.0);
+        assert_eq!(a.add(&b).data(), &[3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.mul(&b).data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.scale(0.5).data(), &[0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn axpy_matches_scale_add() {
+        let mut a = Tensor::new(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        let expect = a.add(&b.scale(0.1));
+        a.axpy(0.1, &b);
+        assert_eq!(a, expect);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(a.sum(), 21.0);
+        assert_eq!(a.row_sums().data(), &[6.0, 15.0]);
+        assert_eq!(a.col_sums().data(), &[5.0, 7.0, 9.0]);
+        let r = a.rms();
+        assert!((r - (91.0f32 / 6.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_hand_values() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        assert_eq!(a.matmul(&b).data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn outer_product() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[3], vec![3.0, 4.0, 5.0]).unwrap();
+        let o = Tensor::outer(&a, &b);
+        assert_eq!(o.shape(), &[2, 3]);
+        assert_eq!(o.data(), &[3., 4., 5., 6., 8., 10.]);
+    }
+
+    #[test]
+    fn rms_of_zeros_is_zero() {
+        assert_eq!(Tensor::zeros(&[4]).rms(), 0.0);
+    }
+}

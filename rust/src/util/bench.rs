@@ -1,0 +1,155 @@
+//! Criterion-style micro/macro bench harness (criterion itself is not in
+//! the offline registry). Used by every target in `rust/benches/`.
+//!
+//! Behaviour: warm up, then run timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met; report
+//! mean/std/min/p50/p95 and optional throughput. `ADALOMO_BENCH_FAST=1`
+//! shrinks budgets so `cargo bench` smoke-runs quickly in CI.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if fast_mode() {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 10,
+                min_time: Duration::from_millis(50),
+            }
+        } else {
+            BenchConfig {
+                warmup_iters: 3,
+                min_iters: 10,
+                max_iters: 200,
+                min_time: Duration::from_millis(500),
+            }
+        }
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("ADALOMO_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub timing: Summary,
+    /// Optional work units per iteration (e.g. tokens) for throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let t = &self.timing;
+        let mut line = format!(
+            "{:44} {:>10}/iter  (± {:>9}, p95 {:>9}, n={})",
+            self.name,
+            fmt_dur(t.mean),
+            fmt_dur(t.std),
+            fmt_dur(t.p95),
+            t.n
+        );
+        if let Some(u) = self.units_per_iter {
+            line.push_str(&format!("  {:>12.1} units/s", u / t.mean));
+        }
+        println!("{line}");
+    }
+}
+
+/// Run `f` under the default config; returns per-iteration seconds summary.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_cfg(name, BenchConfig::default(), None, f)
+}
+
+/// Like [`bench`] but reports `units`/second throughput (e.g. tokens).
+pub fn bench_units<F: FnMut()>(name: &str, units: f64, f: F) -> BenchResult {
+    bench_cfg(name, BenchConfig::default(), Some(units), f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    cfg: BenchConfig,
+    units_per_iter: Option<f64>,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (started.elapsed() < cfg.min_time && samples.len() < cfg.max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        timing: summarize(&samples),
+        units_per_iter,
+    };
+    result.report();
+    result
+}
+
+fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Bench-file banner (each bench target calls this first).
+pub fn banner(what: &str, paper_ref: &str) {
+    println!("\n=== {what} ===");
+    println!("reproduces: {paper_ref}");
+    if fast_mode() {
+        println!("(ADALOMO_BENCH_FAST=1: reduced iteration budget)");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_min_iters() {
+        let mut count = 0usize;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 5,
+            min_time: Duration::from_millis(0),
+        };
+        let r = bench_cfg("t", cfg, None, || count += 1);
+        assert_eq!(r.timing.n, 5);
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+    }
+
+    #[test]
+    fn format_durations() {
+        assert!(fmt_dur(2.5e-9).ends_with("ns"));
+        assert!(fmt_dur(2.5e-6).ends_with("µs"));
+        assert!(fmt_dur(2.5e-3).ends_with("ms"));
+        assert!(fmt_dur(2.5).ends_with('s'));
+    }
+}

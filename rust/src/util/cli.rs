@@ -1,0 +1,152 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `binary <subcommand> [positional...] [--key value | --flag]`.
+//! Values are fetched typed with defaults; unknown flags are rejected by
+//! `finish()` so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.flags.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    // boolean flag
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad float {v:?}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad integer {v:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad integer {v:?}: {e}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on any flag that no handler consumed.
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !used.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["train", "--preset", "tiny", "--steps", "100",
+                        "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_or("preset", "nano"), "tiny");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--lr=0.001"]);
+        assert_eq!(a.f32_or("lr", 0.0).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["--oops", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn negative_value_consumed() {
+        let a = parse(&["--lr", "-0.5"]);
+        assert_eq!(a.f32_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

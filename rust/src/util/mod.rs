@@ -1,0 +1,15 @@
+//! Infrastructure substrates.
+//!
+//! The offline crate registry ships only `xla` + `anyhow`, so the pieces a
+//! production service would normally pull from crates.io are implemented
+//! here: a JSON parser/writer ([`json`]), a deterministic PRNG ([`rng`]), a
+//! CLI argument parser ([`cli`]), a criterion-style bench harness
+//! ([`bench`]), paper-style ASCII tables ([`table`]) and summary statistics
+//! ([`stats`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

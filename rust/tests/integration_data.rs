@@ -1,0 +1,103 @@
+//! Data substrate integration: corpora statistics, instruction pipeline,
+//! and the benchmark-suite scorer against real artifacts.
+
+use adalomo::data::corpus::{byte_histogram, tv_distance, CorpusGen};
+use adalomo::data::instruct::{self, Family};
+use adalomo::data::{loader::DataLoader, Domain};
+use adalomo::eval::seq_mean_losses;
+use adalomo::experiments as exp;
+use adalomo::runtime::Manifest;
+
+#[test]
+fn domain_distances_drive_fig2_fig3() {
+    // The substitution contract (DESIGN.md §4): chinese is far from the
+    // pre-training mix, python is near, general ~ c4.
+    let hist = |d: Domain| {
+        byte_histogram(&CorpusGen::new(d, 1).stream(60_000))
+    };
+    let c4 = hist(Domain::C4);
+    let d_zh = tv_distance(&c4, &hist(Domain::Chinese));
+    let d_py = tv_distance(&c4, &hist(Domain::PythonCode));
+    let d_gen = tv_distance(&c4, &hist(Domain::General));
+    assert!(d_gen < d_py && d_py < d_zh);
+}
+
+#[test]
+fn train_and_val_streams_are_disjoint_but_same_language() {
+    let train = CorpusGen::new(Domain::Chinese, 1).stream(20_000);
+    let val = CorpusGen::new(Domain::Chinese, 2).stream(20_000);
+    assert_ne!(train[..200], val[..200]);
+    let d = tv_distance(&byte_histogram(&train), &byte_histogram(&val));
+    assert!(d < 0.05, "same language, same distribution: {d}");
+}
+
+#[test]
+fn instruction_batches_fit_model_shapes() {
+    let examples: Vec<_> = instruct::training_set(7, 64)
+        .iter()
+        .map(|e| e.tokenize())
+        .collect();
+    let mut dl = DataLoader::from_examples(examples, 7, 8, 64);
+    for _ in 0..4 {
+        let b = dl.next_batch();
+        assert_eq!(b.x.len(), 8 * 64);
+        assert!(b.x.iter().all(|&v| (0..256).contains(&v)));
+        assert!(b.counted_tokens() > 0, "every batch needs loss targets");
+    }
+}
+
+#[test]
+fn mc_items_regenerate_deterministically() {
+    for fam in [Family::Knowledge, Family::Arithmetic] {
+        let a = instruct::eval_items(fam, 3, 10);
+        let b = instruct::eval_items(fam, 3, 10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.options, y.options);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}
+
+#[test]
+fn seq_loss_scorer_prefers_trained_continuations() {
+    // Sanity of the scoring path itself: for a random model, per-sequence
+    // losses are ~uniform(ln 256); shorter/longer options both score, and
+    // the scorer is deterministic.
+    if !exp::artifacts_available() {
+        return;
+    }
+    let s = exp::open_session().unwrap();
+    let seed = s.upload_i32(&[5], &[]).unwrap();
+    let blob = s
+        .execute_buf(&Manifest::init_name("nano", "adalomo"), &[&seed])
+        .unwrap();
+    let params = s
+        .execute_buf(
+            &Manifest::extract_params_name("nano", "adalomo"),
+            &[&blob],
+        )
+        .unwrap();
+    let rows: Vec<(Vec<i32>, Vec<i32>)> = vec![
+        {
+            let x = adalomo::data::tokenizer::encode("What is the capital? A");
+            let mut y = vec![0; x.len()];
+            y[x.len() - 2] = x[x.len() - 1];
+            (x, y)
+        },
+        {
+            let x = adalomo::data::tokenizer::encode("Some other prompt. BB");
+            let mut y = vec![0; x.len()];
+            y[x.len() - 3] = x[x.len() - 2];
+            y[x.len() - 2] = x[x.len() - 1];
+            (x, y)
+        },
+    ];
+    let a = seq_mean_losses(&s, "nano", &params, &rows).unwrap();
+    let b = seq_mean_losses(&s, "nano", &params, &rows).unwrap();
+    assert_eq!(a, b, "scoring must be deterministic");
+    for loss in &a {
+        assert!(*loss > 2.0 && *loss < 9.0, "{loss}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Memory-simulator integration: the analytic model against (a) the
+//! paper's published measurements and (b) the real artifact layouts.
+
+use adalomo::experiments as exp;
+use adalomo::memsim::{liveness, memory, paper, throughput, Arch};
+
+#[test]
+fn table1_reproduced_exactly() {
+    // Paper Table 1 (mixed precision, per-parameter bytes): AdamW
+    // 2+2+12 = 16M; AdaLomo ~ 2M; LoRA ~ 2M.
+    let arch = Arch::analytic("llama7b").unwrap();
+    let adamw = memory::table1_bytes_per_param(&arch, memory::Method::AdamW);
+    let adalomo =
+        memory::table1_bytes_per_param(&arch, memory::Method::AdaLomo);
+    let lora =
+        memory::table1_bytes_per_param(&arch, memory::Method::LoRA { rank: 8 });
+    assert_eq!(adamw, 16.0);
+    assert!(adalomo < 2.1 && adalomo > 2.0);
+    assert!(lora < 2.1 && lora > 2.0);
+    // The headline ratio: AdamW needs ~8x AdaLomo's model-state memory.
+    assert!(adamw / adalomo > 7.5);
+}
+
+#[test]
+fn fig5_memory_ordering_and_magnitudes() {
+    let act = memory::calibrate();
+    for &(arch_name, _, n_gpus, mb, _, _) in paper::TABLE8.iter().step_by(5) {
+        let arch = Arch::analytic(arch_name).unwrap();
+        let total = |method| {
+            memory::estimate(
+                &memory::TrainSetup {
+                    arch: arch.clone(),
+                    method,
+                    n_gpus,
+                    micro_batch: mb,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                },
+                act,
+            )
+            .total_gb()
+        };
+        let adamw = total(memory::Method::AdamW);
+        let adafactor = total(memory::Method::Adafactor);
+        let lora = total(memory::Method::LoRA { rank: 8 });
+        let lomo = total(memory::Method::Lomo);
+        let adalomo = total(memory::Method::AdaLomo);
+        assert!(adamw > adafactor, "{arch_name}");
+        assert!(adafactor > lora, "{arch_name}");
+        assert!(lomo <= adalomo * 1.01, "{arch_name}");
+        assert!(adalomo < lora * 1.1, "{arch_name}");
+    }
+}
+
+#[test]
+fn table8_tgs_shape() {
+    // The paper's ordering at each size: LoRA fastest, AdaLomo slowest,
+    // AdamW/Adafactor/LOMO in between.
+    let hw = throughput::Hardware::default();
+    let eff = throughput::calibrate();
+    for &(arch_name, _, n_gpus, mb, _, _) in paper::TABLE8.iter().step_by(5) {
+        let arch = Arch::analytic(arch_name).unwrap();
+        let tgs = |method| {
+            throughput::tgs(
+                &memory::TrainSetup {
+                    arch: arch.clone(),
+                    method,
+                    n_gpus,
+                    micro_batch: mb,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                },
+                hw,
+                eff,
+            )
+        };
+        let lora = tgs(memory::Method::LoRA { rank: 8 });
+        let adamw = tgs(memory::Method::AdamW);
+        let lomo = tgs(memory::Method::Lomo);
+        let adalomo = tgs(memory::Method::AdaLomo);
+        assert!(lora > adamw, "{arch_name}: lora fastest");
+        assert!(adalomo < lomo, "{arch_name}: adalomo pays update cost");
+        // "the throughput of these methods is at the same level" (§4.4).
+        assert!(adalomo > lora * 0.5, "{arch_name}: same level");
+    }
+}
+
+#[test]
+fn adalomo_lomo_gap_widens_with_scale() {
+    // Table 8: 7% at 7B/4GPU -> ~21% at 65B/32GPU.
+    let hw = throughput::Hardware::default();
+    let eff = throughput::calibrate();
+    let gap = |arch_name: &str, g: usize, mb: usize| {
+        let arch = Arch::analytic(arch_name).unwrap();
+        let t = |method| {
+            throughput::tgs(
+                &memory::TrainSetup {
+                    arch: arch.clone(),
+                    method,
+                    n_gpus: g,
+                    micro_batch: mb,
+                    seq_len: paper::PROFILE_SEQ_LEN,
+                },
+                hw,
+                eff,
+            )
+        };
+        (t(memory::Method::Lomo) - t(memory::Method::AdaLomo))
+            / t(memory::Method::Lomo)
+    };
+    let g7 = gap("llama7b", 4, 8);
+    let g65 = gap("llama65b", 32, 2);
+    assert!(g65 > g7, "gap widens: {g7} -> {g65}");
+}
+
+#[test]
+fn liveness_matches_artifact_layouts() {
+    // The analytic liveness walk and the real fused-group layout agree on
+    // total gradient volume for the experiment presets.
+    if !exp::artifacts_available() {
+        return;
+    }
+    let s = exp::open_session().unwrap();
+    for preset in ["nano", "micro"] {
+        let arch = Arch::preset(preset).unwrap();
+        let r = liveness::simulate(&arch, liveness::BackwardMode::Standard);
+        assert_eq!(r.peak_bytes, 2 * arch.n_params());
+        let manifest_params = s.manifest.preset(preset).unwrap().n_params;
+        assert_eq!(arch.n_params(), manifest_params, "{preset}");
+    }
+}
+
+#[test]
+fn fused_liveness_scales_sublinearly() {
+    // O(1)-style claim: peak fused gradient bytes grow ~sqrt(params)
+    // (largest matrix), not linearly.
+    let small = Arch::analytic("llama7b").unwrap();
+    let big = Arch::analytic("llama65b").unwrap();
+    let peak = |a: &Arch| {
+        liveness::simulate(a, liveness::BackwardMode::Fused).peak_bytes as f64
+    };
+    let params_ratio = big.n_params() as f64 / small.n_params() as f64; // ~9.7
+    let peak_ratio = peak(&big) / peak(&small);
+    assert!(peak_ratio < params_ratio / 2.0, "{peak_ratio} vs {params_ratio}");
+}

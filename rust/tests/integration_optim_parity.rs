@@ -1,0 +1,125 @@
+//! Cross-layer parity: the Rust-native optimizers must agree with the AOT
+//! toy2d artifacts step-for-step — the same update math flowing through
+//! (a) rust/src/optim and (b) Pallas/jnp -> HLO -> PJRT.
+
+use adalomo::experiments as exp;
+use adalomo::optim::OptKind;
+use adalomo::runtime::Session;
+use adalomo::tensor::Tensor;
+
+fn session() -> Option<Session> {
+    if !exp::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(exp::open_session().expect("session"))
+}
+
+/// Drive the toy2d_<opt> artifact for `steps` steps from (x0, y0).
+fn artifact_trajectory(
+    s: &Session,
+    opt: &str,
+    lr: f32,
+    steps: usize,
+    start: (f32, f32),
+) -> Vec<(f32, f32)> {
+    let layout_key = format!("toy2d/{opt}");
+    let layout = s.manifest.layout(&layout_key).unwrap();
+    let mut blob = vec![0f32; layout.blob_len];
+    blob[0] = start.0;
+    blob[1] = start.1;
+    let mut buf = s.upload_f32(&blob, &[layout.blob_len]).unwrap();
+    let entry = format!("toy2d_{opt}");
+    let mut out = vec![start];
+    for t in 1..=steps {
+        let sched = s
+            .upload_f32(&[lr, t as f32, 0.0, 1.0], &[4])
+            .unwrap();
+        buf = s.execute_buf(&entry, &[&buf, &sched]).unwrap();
+        let data = s.fetch_f32_raw(&buf, 2).unwrap();
+        out.push((data[0], data[1]));
+    }
+    out
+}
+
+/// Native trajectory with the same update rule.
+fn native_trajectory(
+    kind: OptKind,
+    lr: f32,
+    steps: usize,
+    start: (f32, f32),
+) -> Vec<(f32, f32)> {
+    let mut theta = Tensor::new(&[2], vec![start.0, start.1]).unwrap();
+    let mut opt = adalomo::optim::ParamOpt::new(kind, &[2]);
+    let mut out = vec![start];
+    for t in 1..=steps {
+        let (_, (dx, dy)) =
+            exp::toy2d_value_grad(theta.data()[0], theta.data()[1]);
+        let g = Tensor::new(&[2], vec![dx, dy]).unwrap();
+        opt.step(&mut theta, &g, t as u64, lr, 0.0);
+        out.push((theta.data()[0], theta.data()[1]));
+    }
+    out
+}
+
+fn assert_trajectories_close(a: &[(f32, f32)], b: &[(f32, f32)], tol: f32, label: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (pa.0 - pb.0).abs() < tol && (pa.1 - pb.1).abs() < tol,
+            "{label} diverges at step {i}: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+#[test]
+fn sgd_parity() {
+    let Some(s) = session() else { return };
+    let a = artifact_trajectory(&s, "sgd", 0.02, 60, (0.3, 0.9));
+    let b = native_trajectory(OptKind::Sgd, 0.02, 60, (0.3, 0.9));
+    assert_trajectories_close(&a, &b, 5e-4, "sgd");
+}
+
+#[test]
+fn sgd_momentum_parity() {
+    let Some(s) = session() else { return };
+    let a = artifact_trajectory(&s, "sgd_momentum", 0.02, 60, (0.3, 0.9));
+    let b = native_trajectory(OptKind::SgdMomentum, 0.02, 60, (0.3, 0.9));
+    assert_trajectories_close(&a, &b, 5e-4, "sgd_momentum");
+}
+
+#[test]
+fn sgd_variance_parity() {
+    let Some(s) = session() else { return };
+    let a = artifact_trajectory(&s, "sgd_variance", 0.02, 60, (0.3, 0.9));
+    let b = native_trajectory(OptKind::SgdVariance, 0.02, 60, (0.3, 0.9));
+    assert_trajectories_close(&a, &b, 2e-3, "sgd_variance");
+}
+
+#[test]
+fn adamw_parity() {
+    let Some(s) = session() else { return };
+    let a = artifact_trajectory(&s, "adamw", 0.02, 60, (0.3, 0.9));
+    let b = native_trajectory(OptKind::AdamW, 0.02, 60, (0.3, 0.9));
+    assert_trajectories_close(&a, &b, 2e-3, "adamw");
+}
+
+#[test]
+fn fig6_basins_through_artifacts() {
+    // The Appendix-A result must hold through the AOT path too.
+    let Some(s) = session() else { return };
+    let basin = |opt: &str| {
+        let traj = artifact_trajectory(
+            &s,
+            opt,
+            exp::TOY2D_LR,
+            exp::TOY2D_STEPS.min(600),
+            exp::TOY2D_START,
+        );
+        traj.last().unwrap().0 < 0.0
+    };
+    assert!(!basin("sgd"), "sgd -> local well");
+    assert!(!basin("sgd_momentum"), "momentum -> local well");
+    assert!(basin("sgd_variance"), "variance -> global well");
+    assert!(basin("adamw"), "adam -> global well");
+}

@@ -1,0 +1,128 @@
+//! Runtime integration: the manifest + PJRT session against the real
+//! artifacts. Skips gracefully when `make artifacts` has not run.
+
+use adalomo::experiments as exp;
+use adalomo::runtime::{Manifest, Session};
+
+fn session() -> Option<Session> {
+    if !exp::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(exp::open_session().expect("session"))
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(s) = session() else { return };
+    let layout = s.manifest.layout("nano/adalomo").unwrap();
+    let run = |seed: i32| {
+        let seed = s.upload_i32(&[seed], &[]).unwrap();
+        let blob = s
+            .execute_buf(&Manifest::init_name("nano", "adalomo"), &[&seed])
+            .unwrap();
+        s.fetch_f32_raw(&blob, layout.blob_len).unwrap()
+    };
+    let a = run(42);
+    let b = run(42);
+    let c = run(43);
+    assert_eq!(a, b, "same seed, same blob");
+    assert_ne!(a, c, "different seed, different params");
+    // Optimizer state + metrics start at zero.
+    assert!(a[layout.params_len..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn init_norm_gains_are_one() {
+    let Some(s) = session() else { return };
+    let layout = s.manifest.layout("nano/adalomo").unwrap();
+    let seed = s.upload_i32(&[1], &[]).unwrap();
+    let blob = s
+        .execute_buf(&Manifest::init_name("nano", "adalomo"), &[&seed])
+        .unwrap();
+    let data = s.fetch_f32_raw(&blob, layout.blob_len).unwrap();
+    let seg = layout.segment("final_norm").unwrap();
+    assert!(data[seg.offset..seg.offset + seg.size]
+        .iter()
+        .all(|&v| v == 1.0));
+}
+
+#[test]
+fn train_step_roundtrip_shapes() {
+    let Some(s) = session() else { return };
+    let p = s.manifest.preset("nano").unwrap().clone();
+    let layout = s.manifest.layout("nano/adalomo").unwrap().clone();
+    let seed = s.upload_i32(&[7], &[]).unwrap();
+    let blob = s
+        .execute_buf(&Manifest::init_name("nano", "adalomo"), &[&seed])
+        .unwrap();
+    let n = p.batch_size * p.seq_len;
+    let x = s
+        .upload_i32(&vec![65i32; n], &[p.batch_size, p.seq_len])
+        .unwrap();
+    let y = s
+        .upload_i32(&vec![66i32; n], &[p.batch_size, p.seq_len])
+        .unwrap();
+    let sched = s.upload_f32(&[1e-3, 1.0, 0.0, 1.0], &[4]).unwrap();
+    let out = s
+        .execute_buf("train_step_nano_adalomo", &[&blob, &x, &y, &sched])
+        .unwrap();
+    let data = s.fetch_f32_raw(&out, layout.blob_len).unwrap();
+    assert_eq!(data.len(), layout.blob_len);
+    assert!(data.iter().all(|v| v.is_finite()));
+    // Metrics populated.
+    let m = &data[layout.metrics_offset()..];
+    assert!(m[0] > 0.0 && m[0] < 10.0, "loss {}", m[0]);
+    assert_eq!(m[1], n as f32);
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(s) = session() else { return };
+    let seed = s.upload_i32(&[7], &[]).unwrap();
+    let err = s.execute_buf("train_step_nano_adalomo", &[&seed]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn unknown_entry_is_rejected() {
+    let Some(s) = session() else { return };
+    assert!(s.compile("no_such_entry").is_err());
+}
+
+#[test]
+fn extract_params_is_prefix() {
+    let Some(s) = session() else { return };
+    let layout = s.manifest.layout("nano/adamw").unwrap();
+    let seed = s.upload_i32(&[3], &[]).unwrap();
+    let blob = s
+        .execute_buf(&Manifest::init_name("nano", "adamw"), &[&seed])
+        .unwrap();
+    let params = s
+        .execute_buf(
+            &Manifest::extract_params_name("nano", "adamw"),
+            &[&blob],
+        )
+        .unwrap();
+    let full = s.fetch_f32_raw(&blob, layout.blob_len).unwrap();
+    let got = s.fetch_f32_raw(&params, layout.params_len).unwrap();
+    assert_eq!(got, full[..layout.params_len]);
+}
+
+#[test]
+fn compile_cache_hits() {
+    let Some(s) = session() else { return };
+    s.compile("eval_nano").unwrap();
+    let before = s.stats().compiles;
+    s.compile("eval_nano").unwrap();
+    assert_eq!(s.stats().compiles, before, "second compile must be cached");
+}
+
+#[test]
+fn every_nano_entry_compiles() {
+    let Some(s) = session() else { return };
+    // Compiling everything is the strongest artifact smoke test we have.
+    for name in s.entries_for_preset("nano") {
+        s.compile(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over hand-rolled generators (the proptest crate is
+//! not in the offline registry). Each property runs across a deterministic
+//! sweep of random cases; failures print the case seed.
+
+use adalomo::coordinator::sharding;
+use adalomo::data::loader::DataLoader;
+use adalomo::memsim::{liveness, memory, Arch};
+use adalomo::optim::{grouped_normalize, Hyper, OptKind, ParamOpt};
+use adalomo::runtime::{Layout, Segment};
+use adalomo::tensor::Tensor;
+use adalomo::util::rng::Pcg32;
+
+const CASES: u64 = 60;
+
+fn rand_tensor(rng: &mut Pcg32, shape: &[usize], scale: f32) -> Tensor {
+    Tensor::from_fn(shape, |_| rng.normal() * scale)
+}
+
+#[test]
+fn prop_grouped_norm_rms_bound() {
+    // After grouped normalization, RMS(u) <= max(eps, RMS(theta)) and the
+    // scale is finite-positive — for any magnitudes.
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(seed);
+        let m = 1 + rng.below(20);
+        let n = 1 + rng.below(20);
+        let mag = 10f32.powf(rng.f32() * 8.0 - 4.0);
+        let mut u = rand_tensor(&mut rng, &[m, n], mag);
+        let theta = rand_tensor(&mut rng, &[m, n], 0.3);
+        let stats = grouped_normalize(&mut u, &theta, 1e-3);
+        let bound = 1e-3f32.max(stats.rms_theta);
+        assert!(
+            u.rms() <= bound * 1.001,
+            "seed {seed}: rms {} bound {bound}",
+            u.rms()
+        );
+        assert!(stats.scale.is_finite() && stats.scale > 0.0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adalomo_factors_stay_nonnegative() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(seed);
+        let m = 2 + rng.below(12);
+        let n = 2 + rng.below(12);
+        let mut theta = rand_tensor(&mut rng, &[m, n], 0.2);
+        let mut opt = ParamOpt::new(OptKind::AdaLomo, &[m, n]);
+        for t in 1..12 {
+            let g = rand_tensor(&mut rng, &[m, n], 0.1);
+            opt.step(&mut theta, &g, t, 1e-3, 0.0);
+            let (r, c) = opt.factored_state().unwrap();
+            assert!(
+                r.data().iter().all(|&x| x >= 0.0)
+                    && c.data().iter().all(|&x| x >= 0.0),
+                "seed {seed} t {t}"
+            );
+        }
+        assert!(theta.data().iter().all(|v| v.is_finite()), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adalomo_step_bounded_by_relative_lr() {
+    // |Δθ|_rms <= lr * max(eps, RMS(θ)) — the stability property grouped
+    // normalization buys (paper §3.2), for any gradient scale.
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let m = 2 + rng.below(10);
+        let n = 2 + rng.below(10);
+        let mag = 10f32.powf(rng.f32() * 10.0 - 5.0);
+        let mut theta = rand_tensor(&mut rng, &[m, n], 0.2);
+        let before = theta.clone();
+        let g = rand_tensor(&mut rng, &[m, n], mag);
+        let lr = 0.01;
+        let mut opt = ParamOpt::new(OptKind::AdaLomo, &[m, n]);
+        opt.step(&mut theta, &g, 1, lr, 0.0);
+        let delta = theta.sub(&before);
+        let bound = lr * 1e-3f32.max(before.rms());
+        assert!(
+            delta.rms() <= bound * 1.01,
+            "seed {seed}: step {} bound {bound} (grad mag {mag})",
+            delta.rms()
+        );
+    }
+}
+
+#[test]
+fn prop_state_floats_match_allocation() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(2000 + seed);
+        let shape: Vec<usize> = if rng.below(2) == 0 {
+            vec![1 + rng.below(40), 1 + rng.below(40)]
+        } else {
+            vec![1 + rng.below(200)]
+        };
+        for kind in adalomo::optim::ALL_OPTS {
+            let opt = ParamOpt::new(kind, &shape);
+            assert_eq!(
+                opt.state_floats(),
+                kind.state_floats(&shape),
+                "seed {seed} {kind:?} {shape:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sharding_partitions_exactly() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(3000 + seed);
+        let n_segs = 1 + rng.below(12);
+        let mut segments = Vec::new();
+        let mut off = 0usize;
+        for i in 0..n_segs {
+            let size = 1 + rng.below(500);
+            segments.push(Segment {
+                name: format!("s{i}"),
+                kind: if rng.below(2) == 0 { "param" } else { "state" }
+                    .to_string(),
+                shape: vec![size],
+                offset: off,
+                size,
+            });
+            off += size;
+        }
+        segments.push(Segment {
+            name: "metrics".into(),
+            kind: "metric".into(),
+            shape: vec![8],
+            offset: off,
+            size: 8,
+        });
+        let layout = Layout {
+            blob_len: off + 8,
+            params_len: off,
+            segments,
+        };
+        let n_ranks = 1 + rng.below(9);
+        let plan = sharding::plan_contiguous(&layout, n_ranks);
+        sharding::validate_contiguous(&layout, &plan)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // Segment plan covers each non-metric segment exactly once.
+        let splan = sharding::plan_segments(&layout, n_ranks);
+        let total: usize = splan.iter().map(|s| s.floats).sum();
+        assert_eq!(total, off, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_dataloader_windows_valid() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(4000 + seed);
+        let t = 4 + rng.below(30);
+        let b = 1 + rng.below(4);
+        let len = b * (t + 1) + rng.below(5000);
+        let stream: Vec<u8> =
+            (0..len).map(|_| (1 + rng.below(255)) as u8).collect();
+        let mut dl = DataLoader::from_stream(stream.clone(), seed, b, t);
+        for _ in 0..3 {
+            let batch = dl.next_batch();
+            // Every row must be a contiguous window with y = shift(x).
+            for row in 0..b {
+                for j in 0..t - 1 {
+                    assert_eq!(
+                        batch.x[row * t + j + 1],
+                        batch.y[row * t + j],
+                        "seed {seed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_memsim_monotonicity() {
+    // More parameters -> more memory, for every method; AdaLomo total is
+    // never above AdamW.
+    let act = memory::calibrate();
+    let archs = ["llama1b1", "llama7b", "llama13b", "llama30b", "llama65b"];
+    for method in memory::PROFILE_METHODS {
+        let mut prev = 0.0;
+        for arch in archs {
+            let setup = memory::TrainSetup {
+                arch: Arch::analytic(arch).unwrap(),
+                method,
+                n_gpus: 8,
+                micro_batch: 4,
+                seq_len: 2048,
+            };
+            let total = memory::estimate(&setup, act).total();
+            assert!(total > prev, "{method:?} {arch}");
+            prev = total;
+            let adamw = memory::estimate(
+                &memory::TrainSetup {
+                    method: memory::Method::AdamW,
+                    ..setup.clone()
+                },
+                act,
+            )
+            .total();
+            if method == memory::Method::AdaLomo {
+                assert!(total < adamw, "{arch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_liveness_peak_bounds() {
+    // Fused peak <= 2 * largest matrix; standard peak == total; for any
+    // architecture shape.
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(5000 + seed);
+        let arch = Arch::new(
+            "fuzz",
+            64 + rng.below(512),
+            8 * (1 + rng.below(64)),
+            1 + rng.below(12),
+            4,
+            8 * (1 + rng.below(128)),
+        );
+        let fused = liveness::simulate(&arch, liveness::BackwardMode::Fused);
+        let std = liveness::simulate(&arch, liveness::BackwardMode::Standard);
+        assert!(fused.peak_bytes <= 2 * 2 * arch.max_matrix(), "seed {seed}");
+        assert_eq!(std.peak_bytes, 2 * arch.n_params(), "seed {seed}");
+        assert!(fused.peak_bytes <= std.peak_bytes);
+    }
+}
+
+#[test]
+fn prop_no_sqrt_variant_also_bounded() {
+    // The literal Algorithm-1 form stays within the grouped-norm bound too.
+    let hyper = Hyper { no_sqrt: true, ..Hyper::default() };
+    for seed in 0..CASES {
+        let mut rng = Pcg32::seeded(6000 + seed);
+        let mut theta = rand_tensor(&mut rng, &[6, 6], 0.2);
+        let before = theta.clone();
+        let g = rand_tensor(&mut rng, &[6, 6], 0.05);
+        let mut opt = ParamOpt::with_hyper(OptKind::AdaLomo, &[6, 6], hyper);
+        opt.step(&mut theta, &g, 1, 0.01, 0.0);
+        let delta = theta.sub(&before);
+        let bound = 0.01 * 1e-3f32.max(before.rms());
+        assert!(delta.rms() <= bound * 1.01, "seed {seed}");
+    }
+}
