@@ -1,0 +1,37 @@
+# AdaLomo reproduction — build/test/lint entry points.
+#
+# Tier-1 verify is `make ci-tier1`; `make lint` adds the fmt + clippy gates
+# wired alongside it (also run by .github/workflows/ci.yml).
+
+CARGO ?= cargo
+
+.PHONY: build test bench fmt fmt-fix clippy lint ci-tier1 ci artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	ADALOMO_BENCH_FAST=1 $(CARGO) bench
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+fmt-fix:
+	$(CARGO) fmt --all
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+lint: fmt clippy
+
+ci-tier1: build test
+
+ci: lint ci-tier1
+
+# Python AOT pass: lowers the JAX/Pallas layers to HLO artifacts the Rust
+# runtime executes. Requires jax in the environment.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts

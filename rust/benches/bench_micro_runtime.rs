@@ -4,16 +4,72 @@
 
 use adalomo::data::{loader::DataLoader, Domain};
 use adalomo::experiments as exp;
+use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
+use adalomo::optim::{pool, OptKind};
 use adalomo::runtime::Manifest;
 use adalomo::util::bench::{banner, bench, bench_units};
+
+/// Host-side blob operations on the flat engine: the coordinator-path
+/// costs that exist even without PJRT (local-SGD round averaging, host
+/// mirror steps). Runs before the artifact gate so the bench is useful on
+/// a fresh checkout.
+fn host_blob_section() {
+    let cores = pool::default_shards();
+    let params: Vec<(&str, &[usize])> = vec![
+        ("embed", &[256, 128]),
+        ("l0.wq", &[128, 128]),
+        ("l0.w_down", &[256, 128]),
+        ("l1.wq", &[128, 128]),
+        ("l1.w_down", &[256, 128]),
+        ("head", &[128, 256]),
+    ];
+    let layout = synthetic_layout(OptKind::AdaLomo, &params);
+    let (blob0, grads) = seeded_blob_and_grads(&layout, 11);
+    println!("host blob: {} floats ({} cores)", layout.blob_len, cores);
+
+    // Local-SGD round averaging over 4 rank blobs (coordinator/workers.rs
+    // path, element-parallel on the engine pool).
+    let ranks: Vec<Vec<f32>> = (0..4)
+        .map(|r| {
+            blob0.iter().map(|x| x + r as f32 * 1e-3).collect()
+        })
+        .collect();
+    let sources: Vec<&[f32]> =
+        ranks.iter().map(|b| &b[..layout.params_len]).collect();
+    let mut avg = vec![0f32; layout.params_len];
+    bench_units(
+        "round averaging: 4 ranks (par_average)",
+        layout.params_len as f64,
+        || {
+            pool::par_average(&mut avg, &sources, 0.25, cores);
+        },
+    );
+
+    // Host-mirror optimizer step on the flat blob.
+    let mut engine =
+        FlatOptimizer::new(OptKind::AdaLomo, &layout, cores, ShardMode::Contiguous)
+            .unwrap();
+    let mut blob = blob0.clone();
+    let mut t = 0u64;
+    bench_units(
+        "flat adalomo step (contiguous shards)",
+        layout.params_len as f64,
+        || {
+            t += 1;
+            engine.step(&mut blob, &grads, t, 1e-3, 0.0).unwrap();
+        },
+    );
+    println!();
+}
 
 fn main() {
     banner(
         "micro — runtime dispatch & transfer overhead",
         "hot-path budget: dispatch+upload must be <5% of step time at tiny+",
     );
+    host_blob_section();
     if !exp::artifacts_available() {
-        println!("skipped: run `make artifacts` first");
+        println!("skipped (PJRT sections): run `make artifacts` first");
         return;
     }
     let session = exp::open_session().unwrap();

@@ -41,6 +41,11 @@ pub struct Trainer<'s> {
     pub loader: DataLoader,
     val_loader: Option<DataLoader>,
     log: Option<RunLog>,
+    /// Offset added to the step counter uploaded to the train kernel.
+    /// Resumed runs (local-SGD rounds) set this so bias corrections see
+    /// the true global step instead of restarting at t=1 against warm
+    /// optimizer state (which would inflate v_hat by ~1/(1-beta)).
+    step_offset: usize,
 }
 
 impl<'s> Trainer<'s> {
@@ -69,7 +74,14 @@ impl<'s> Trainer<'s> {
             loader,
             val_loader,
             log: None,
+            step_offset: 0,
         })
+    }
+
+    /// Continue the kernel-side step counter from `offset` (the number of
+    /// steps already taken on this blob's optimizer state).
+    pub fn set_step_offset(&mut self, offset: usize) {
+        self.step_offset = offset;
     }
 
     pub fn with_logging(mut self) -> Result<Self> {
@@ -153,10 +165,11 @@ impl<'s> Trainer<'s> {
         for step in 1..=self.cfg.steps {
             let batch = self.loader.next_batch();
             let lr = schedule.lr_at(step);
+            let global_step = self.step_offset + step;
             let x = self.session.upload_i32(&batch.x, &[b, t])?;
             let y = self.session.upload_i32(&batch.y, &[b, t])?;
             let sched = self.session.upload_f32(
-                &[lr, step as f32, self.cfg.wd, self.cfg.clip],
+                &[lr, global_step as f32, self.cfg.wd, self.cfg.clip],
                 &[4],
             )?;
             let blob = self.blob.take().expect("initialized above");
@@ -181,11 +194,19 @@ impl<'s> Trainer<'s> {
                 && self.val_loader.is_some()
                 && (step % self.cfg.eval_every == 0 || step == self.cfg.steps)
             {
+                let eval_t0 = Instant::now();
                 let e = self.evaluate()?;
                 eval_curve.push((step, e.perplexity(), e.accuracy()));
                 if let Some(log) = &mut self.log {
                     log.log_eval(step, &e)?;
                 }
+                // Evaluation wall-time must not leak into the logging
+                // window's per-step dt / tokens-per-sec. Shifting the window
+                // start forward by the eval duration (rather than restarting
+                // the window) keeps the training time already accumulated in
+                // a partially-elapsed window, so dt stays correct even when
+                // eval steps are not aligned to log boundaries.
+                step_t0 += eval_t0.elapsed();
             }
         }
         let wall = started.elapsed().as_secs_f64();
@@ -200,14 +221,18 @@ impl<'s> Trainer<'s> {
         })
     }
 
-    /// Evaluate on the validation loader (one epoch's worth of batches,
-    /// capped for tractability).
+    /// Evaluate on a FIXED validation set (one epoch's worth of batches,
+    /// capped for tractability): the loader is rewound to its pristine
+    /// state first, so every call scores the same batches and successive
+    /// `eval_curve` points are comparable instead of drifting through the
+    /// validation stream.
     pub fn evaluate(&mut self) -> Result<EvalAccum> {
         let params = self.params_buffer()?;
         let val = self
             .val_loader
             .as_mut()
             .ok_or_else(|| anyhow!("no validation loader"))?;
+        val.reset();
         let n_batches = val.batches_per_epoch().clamp(1, 8);
         let (b, t) = (val.b, val.t);
         let mut accum = EvalAccum::default();

@@ -5,7 +5,15 @@
 //! the ranks' parameter regions, averages them (local-SGD synchronization
 //! — the collective our artifacts support without exposing raw gradients),
 //! and broadcasts the average back. Optimizer state stays rank-local, as
-//! in DeepSpeed's ZeRO-3 where state is sharded anyway.
+//! in DeepSpeed's ZeRO-3 where state is sharded anyway: each rank keeps
+//! its full blob across rounds and splices ONLY the averaged `params_len`
+//! region in ([`splice_params`]); second-moment estimates therefore keep
+//! accumulating across the whole run instead of being wiped at every sync
+//! point, and the kernel-side step counter continues across rounds
+//! (`Trainer::set_step_offset`) so bias corrections match the warm state.
+//! Round averaging itself runs on the flat-engine worker pool
+//! ([`crate::optim::pool::par_average`]) — element-parallel and
+//! bit-identical to the sequential loop for any worker count.
 //!
 //! This is the "runs for real" half of the distributed story; the
 //! analytic half (exact ZeRO-3 memory and NCCL timing) lives in `memsim`
@@ -19,6 +27,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
 use crate::data::{loader::DataLoader, Domain};
+use crate::optim::pool;
 use crate::runtime::{HostBlob, Manifest, Session};
 use crate::util::rng::Pcg32;
 
@@ -30,10 +39,32 @@ pub struct WorkerReport {
     pub n_ranks: usize,
     pub rounds: usize,
     pub per_rank_final_loss: Vec<f32>,
+    /// Sum of squares of each rank's optimizer-state region after the last
+    /// round — the observable for "state survives rounds" (zero would mean
+    /// the round boundary wiped it).
+    pub per_rank_state_sumsq: Vec<f32>,
     /// Validation loss of the averaged model after the final round.
     pub averaged_eval_loss: f64,
     pub wall_secs: f64,
     pub aggregate_tokens_per_sec: f64,
+}
+
+/// Resume blob for the next round: keep the rank's own optimizer state and
+/// metrics, splice in only the averaged parameter region. The first round
+/// (no retained blob yet) adopts the broadcast wholesale.
+pub fn splice_params(
+    prev: Option<HostBlob>,
+    broadcast: HostBlob,
+    params_len: usize,
+) -> HostBlob {
+    match prev {
+        Some(mut blob) => {
+            blob.data[..params_len]
+                .copy_from_slice(&broadcast.data[..params_len]);
+            blob
+        }
+        None => broadcast,
+    }
 }
 
 /// Run `rounds` x `sync_every` steps on `n_ranks` threads with parameter
@@ -68,16 +99,25 @@ pub fn run_local_sgd(
             c
         };
         let dir = artifacts_dir.clone();
+        let rank_layout_key = layout_key.clone();
         handles.push(thread::spawn(move || -> Result<()> {
             let session = Session::open(&dir)?;
+            let params_len =
+                session.manifest.layout(&rank_layout_key)?.params_len;
             let mut stream_rng = Pcg32::new(cfg.seed, 7);
             let preset = session.manifest.preset(&cfg.preset)?.clone();
             let (b, t) = (preset.batch_size, preset.seq_len);
             let schedule =
                 Schedule::constant(cfg.lr * 0.5); // stable for local-SGD
+            // Rank-local blob retained across rounds (optimizer state must
+            // survive; only params are refreshed from the average).
+            let mut resume: Option<HostBlob> = None;
+            let mut rounds_done = 0usize;
             while let Ok(cmd) = rx_cmd.recv() {
                 // None is the shutdown signal from the leader.
-                let Some(start_blob) = cmd else { break };
+                let Some(broadcast) = cmd else { break };
+                let start_blob =
+                    splice_params(resume.take(), broadcast, params_len);
                 let loader = DataLoader::lm(
                     domain,
                     stream_rng.next_u64(),
@@ -87,9 +127,16 @@ pub fn run_local_sgd(
                 );
                 let mut trainer =
                     Trainer::new(&session, cfg.clone(), loader, None)?;
+                // The optimizer state is warm from previous rounds, so the
+                // kernel's step counter must keep counting — restarting at
+                // t=1 would re-apply the t=1 bias correction to a
+                // converged second-moment EMA.
+                trainer.set_step_offset(rounds_done * sync_every);
                 trainer.set_host_blob(&start_blob)?;
                 let report = trainer.train_with_schedule(schedule)?;
                 let blob = trainer.host_blob()?;
+                resume = Some(blob.clone());
+                rounds_done += 1;
                 tx_res.send(Ok((blob, report.final_loss)))?;
             }
             Ok(())
@@ -110,6 +157,7 @@ pub fn run_local_sgd(
     let mut global = init_trainer.host_blob()?;
 
     let mut per_rank_final_loss = vec![0f32; n_ranks];
+    let mut last_blobs: Vec<HostBlob> = Vec::new();
     for _round in 0..rounds {
         for tx in &to_ranks {
             tx.send(Some(global.clone()))
@@ -121,19 +169,21 @@ pub fn run_local_sgd(
             per_rank_final_loss[rank] = loss;
             blobs.push(blob);
         }
-        // Average the parameter region; keep leader's metrics/state zeroed
-        // (state is rank-local by design).
+        // Average the parameter region on the flat-engine pool; keep the
+        // leader's state/metrics zeroed — ranks never read them back (each
+        // splices only the params region into its retained blob).
         let plen = layout.params_len;
         let mut avg = vec![0f32; layout.blob_len];
-        for blob in &blobs {
-            for i in 0..plen {
-                avg[i] += blob.data[i];
-            }
-        }
-        let scale = 1.0 / n_ranks as f32;
-        for v in avg[..plen].iter_mut() {
-            *v *= scale;
-        }
+        let sources: Vec<&[f32]> =
+            blobs.iter().map(|blob| &blob.data[..plen]).collect();
+        pool::par_average(
+            &mut avg[..plen],
+            &sources,
+            1.0 / n_ranks as f32,
+            pool::default_shards(),
+        );
+        drop(sources);
+        last_blobs = blobs;
         global = HostBlob::new(avg, &layout_key, &layout)?;
     }
     for tx in &to_ranks {
@@ -142,6 +192,11 @@ pub fn run_local_sgd(
     for h in handles {
         h.join().map_err(|_| anyhow!("worker panicked"))??;
     }
+
+    let per_rank_state_sumsq: Vec<f32> = last_blobs
+        .iter()
+        .map(|blob| crate::optim::update::sum_sq(blob.state_region(&layout)))
+        .collect();
 
     // Evaluate the averaged model.
     let val_loader =
@@ -163,8 +218,65 @@ pub fn run_local_sgd(
         n_ranks,
         rounds,
         per_rank_final_loss,
+        per_rank_state_sumsq,
         averaged_eval_loss: accum.mean_loss(),
         wall_secs: wall,
         aggregate_tokens_per_sec: tokens / wall,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Layout, Segment};
+
+    fn layout() -> Layout {
+        let mk = |name: &str, kind: &str, size: usize, offset: usize| Segment {
+            name: name.into(),
+            kind: kind.into(),
+            shape: vec![size],
+            offset,
+            size,
+        };
+        Layout {
+            blob_len: 20,
+            params_len: 6,
+            segments: vec![
+                mk("w", "param", 6, 0),
+                mk("w@v", "state", 6, 6),
+                mk("metrics", "metric", 8, 12),
+            ],
+        }
+    }
+
+    #[test]
+    fn splice_keeps_rank_local_state() {
+        let l = layout();
+        // A rank blob with non-zero optimizer state from earlier rounds.
+        let prev = HostBlob::new(
+            (0..20).map(|i| i as f32 + 1.0).collect(),
+            "t/x",
+            &l,
+        )
+        .unwrap();
+        // The broadcast average: fresh params, zeroed state (the leader
+        // never trains, so its state region is all zeros).
+        let mut bdata = vec![0f32; 20];
+        for (i, v) in bdata.iter_mut().enumerate().take(6) {
+            *v = 100.0 + i as f32;
+        }
+        let broadcast = HostBlob::new(bdata, "t/x", &l).unwrap();
+        let spliced =
+            splice_params(Some(prev.clone()), broadcast.clone(), l.params_len);
+        // Params come from the broadcast...
+        assert_eq!(spliced.params(&l), broadcast.params(&l));
+        // ...but the optimizer state survives from the rank's own blob —
+        // the module-doc promise ("optimizer state stays rank-local") that
+        // the old implementation violated by adopting the zeroed blob.
+        assert_eq!(spliced.state_region(&l), prev.state_region(&l));
+        assert!(spliced.state_region(&l).iter().all(|&x| x != 0.0));
+        // First round: no retained blob yet -> broadcast adopted wholesale.
+        let first = splice_params(None, broadcast.clone(), l.params_len);
+        assert_eq!(first.data, broadcast.data);
+    }
 }

@@ -39,6 +39,12 @@ pub struct DataLoader {
     pub b: usize,
     pub t: usize,
     rng: Pcg32,
+    /// Pristine copy of `rng` from construction time — what [`reset`]
+    /// rewinds to so a validation loader replays the identical batch
+    /// sequence at every evaluation point.
+    ///
+    /// [`reset`]: DataLoader::reset
+    rng0: Pcg32,
 }
 
 impl DataLoader {
@@ -63,6 +69,7 @@ impl DataLoader {
             b,
             t,
             rng: Pcg32::new(seed, 77),
+            rng0: Pcg32::new(seed, 77),
         };
         dl.shuffle();
         dl
@@ -89,9 +96,24 @@ impl DataLoader {
             b,
             t,
             rng: Pcg32::new(seed, 78),
+            rng0: Pcg32::new(seed, 78),
         };
         dl.shuffle();
         dl
+    }
+
+    /// Rewind to the exact post-construction state: epoch 0, cursor 0, the
+    /// epoch-0 shuffle order. Two loaders with the same seed — or one
+    /// loader reset between uses — yield identical batch sequences, which
+    /// is what makes eval-curve points comparable (the trainer resets its
+    /// validation loader before every evaluation).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+        self.epoch = 0;
+        self.rng = self.rng0.clone();
+        let n = self.order.len();
+        self.order = (0..n).collect();
+        self.shuffle();
     }
 
     pub fn len(&self) -> usize {
@@ -226,5 +248,21 @@ mod tests {
     #[should_panic]
     fn too_short_stream_panics() {
         DataLoader::from_stream(vec![1, 2, 3], 0, 4, 16);
+    }
+
+    #[test]
+    fn reset_replays_identical_batches() {
+        let stream: Vec<u8> = (0..3001).map(|i| (i % 255 + 1) as u8).collect();
+        let mut dl = DataLoader::from_stream(stream, 13, 2, 16);
+        let first: Vec<_> = (0..5).map(|_| dl.next_batch().x).collect();
+        // Drift deep into the stream (across an epoch boundary).
+        for _ in 0..(2 * dl.batches_per_epoch()) {
+            dl.next_batch();
+        }
+        assert!(dl.epoch > 0);
+        dl.reset();
+        assert_eq!(dl.epoch, 0);
+        let replay: Vec<_> = (0..5).map(|_| dl.next_batch().x).collect();
+        assert_eq!(first, replay, "reset must replay the same fixed set");
     }
 }

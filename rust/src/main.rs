@@ -405,6 +405,10 @@ fn cmd_workers(args: &Args) -> Result<()> {
     );
     println!("per-rank final loss: {:?}", report.per_rank_final_loss);
     println!(
+        "per-rank optimizer-state sumsq (rank-local, survives rounds): {:?}",
+        report.per_rank_state_sumsq
+    );
+    println!(
         "averaged model eval loss {:.4} | {:.0} aggregate tokens/s | wall {:.1}s",
         report.averaged_eval_loss,
         report.aggregate_tokens_per_sec,

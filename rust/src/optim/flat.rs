@@ -1,0 +1,1186 @@
+//! Flat-blob parallel optimizer engine.
+//!
+//! [`FlatOptimizer`] steps a runtime [`Layout`]/blob **in place**: it walks
+//! the trainable segments in fused-backward order (head, layers L-1..0,
+//! embedding — mirroring `coordinator/fused.rs::group_grad_sizes`) and
+//! dispatches each to the slice kernels in [`super::update`] through
+//! zero-copy segment views. No per-tensor [`crate::tensor::Tensor`]
+//! allocation, no per-step `u` temporary — each worker keeps persistent
+//! scratch buffers and the blob spans are precomputed at construction, so
+//! a step's only transient allocations are the small per-worker view
+//! tables. That is the host-side embodiment of the paper's memory story
+//! (AdaLomo Alg. 1; factored second moments à la Anil et al. 2019):
+//! operate on contiguous state with minimal temporaries.
+//!
+//! Parallelism comes in two shard plans (see [`ShardMode`]):
+//!
+//! * **`Segments`** — whole-tensor ownership balanced by greedy LPT (the
+//!   `SegmentShard` granularity of `coordinator/sharding.rs`). Workers
+//!   never synchronize; every update is byte-identical to the sequential
+//!   [`super::ParamOpt`] path because both run the same slice kernels.
+//! * **`Contiguous`** — every worker owns a contiguous range of the
+//!   trainable region (the `ContiguousShard` granularity, row-aligned for
+//!   2-D parameters) and all workers cooperate on every segment. Grouped
+//!   update normalization becomes a two-pass parallel reduction: each
+//!   worker posts its range's sum-of-squares, a barrier, one combine in
+//!   worker order, a barrier, then a single scale pass — the same math,
+//!   merely re-associated, so results for a fixed shard count are
+//!   deterministic and agree with the sequential path to f32 rounding
+//!   (the parity proptests pin this to 1e-6).
+//!
+//! The engine is the substrate for sharded/async execution: the
+//! coordinator's local-SGD round averaging and the micro benches already
+//! run on it, and a rank pipeline can hand each worker an actual rank's
+//! shard without changing the update code.
+
+use std::sync::{Barrier, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::{HostBlob, Layout, Segment};
+
+use super::update::sum_sq;
+use super::{pool, update, Hyper, OptKind};
+
+/// How the trainable region is split across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Whole-segment ownership (greedy LPT). Zero synchronization;
+    /// bit-identical to the per-tensor path.
+    Segments,
+    /// Contiguous row-aligned ranges; workers cooperate on every segment
+    /// through two-pass reductions.
+    Contiguous,
+}
+
+/// Layer-member order inside one fused-backward group
+/// (mirror of `coordinator/fused.rs::group_grad_sizes`).
+const LAYER_MEMBERS: [&str; 9] = [
+    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up",
+    "w_down",
+];
+
+#[derive(Debug, Clone, Copy)]
+struct SegRef {
+    offset: usize,
+    size: usize,
+}
+
+#[derive(Debug, Clone)]
+enum StateSpec {
+    None,
+    /// First moment (sgd_momentum).
+    M(SegRef),
+    /// Full second moment (sgd_variance; adalomo/adafactor vectors).
+    V(SegRef),
+    /// AdamW first + second moment.
+    Mv(SegRef, SegRef),
+    /// Factored second moment (adalomo/adafactor matrices).
+    Rc(SegRef, SegRef),
+}
+
+#[derive(Debug, Clone)]
+struct TaskSpec {
+    name: String,
+    offset: usize,
+    size: usize,
+    /// Row width for 2-D parameters; 0 for vectors/scalars.
+    cols: usize,
+    state: StateSpec,
+    /// Contiguous-mode per-worker element ranges within the task
+    /// (row-aligned for 2-D parameters).
+    ranges: Vec<(usize, usize)>,
+}
+
+/// Per-worker persistent scratch: the only buffers the engine ever
+/// allocates, reused across steps.
+#[derive(Debug, Clone, Default)]
+struct Scratch {
+    /// Raw update u for the worker's range of the current segment.
+    u: Vec<f32>,
+    /// Per-worker column-factor accumulator (2-D factored phase A).
+    cvec: Vec<f32>,
+    /// Local copy of the combined column factor (2-D factored phase B).
+    cbuf: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure_u(&mut self, n: usize) {
+        if self.u.len() < n {
+            self.u.resize(n, 0.0);
+        }
+    }
+
+    fn zero_cvec(&mut self, n: usize) {
+        self.cvec.clear();
+        self.cvec.resize(n, 0.0);
+    }
+}
+
+/// Cross-worker reduction state for the contiguous plan. Partials are
+/// stored per worker and always combined in ascending worker order, so a
+/// fixed shard count gives bit-deterministic results.
+///
+/// Caveat: barrier-coordinated workers assume their peers reach every
+/// barrier. Construction-time validation rules out the panic sources the
+/// engine controls (missing/misshaped state segments), but a panic
+/// injected into a kernel between barriers would leave peers waiting
+/// rather than propagating — the no-hang guarantee of
+/// [`pool::run_jobs`] only applies to independent (Segments-mode) jobs.
+struct SyncState {
+    barrier: Barrier,
+    slots: Mutex<Slots>,
+}
+
+struct Slots {
+    /// Per-worker scalar partial A (sum-of-squares of u, or sum of r).
+    pa: Vec<f32>,
+    /// Per-worker scalar partial B (sum-of-squares of theta).
+    pb: Vec<f32>,
+    /// Per-worker column-factor partials.
+    cvecs: Vec<Vec<f32>>,
+    /// Combined column factor, published by worker 0.
+    c_combined: Vec<f32>,
+    /// Broadcast slot: final apply factor.
+    scale: f32,
+    /// Broadcast slot: inv_sum for the raw-u pass.
+    aux: f32,
+}
+
+impl SyncState {
+    fn new(n_workers: usize) -> SyncState {
+        SyncState {
+            barrier: Barrier::new(n_workers),
+            slots: Mutex::new(Slots {
+                pa: vec![0.0; n_workers],
+                pb: vec![0.0; n_workers],
+                cvecs: vec![Vec::new(); n_workers],
+                c_combined: Vec::new(),
+                scale: 0.0,
+                aux: 0.0,
+            }),
+        }
+    }
+
+    fn wait(&self) {
+        self.barrier.wait();
+    }
+
+    fn post_scalars(&self, w: usize, a: f32, b: f32) {
+        let mut sl = self.slots.lock().unwrap();
+        sl.pa[w] = a;
+        sl.pb[w] = b;
+    }
+
+    fn swap_cvec(&self, w: usize, v: &mut Vec<f32>) {
+        let mut sl = self.slots.lock().unwrap();
+        std::mem::swap(&mut sl.cvecs[w], v);
+    }
+
+    fn with_slots<R>(&self, f: impl FnOnce(&mut Slots) -> R) -> R {
+        f(&mut self.slots.lock().unwrap())
+    }
+
+    fn read_scale(&self) -> f32 {
+        self.slots.lock().unwrap().scale
+    }
+
+    fn read_aux(&self) -> f32 {
+        self.slots.lock().unwrap().aux
+    }
+
+    fn copy_combined_c(&self, dst: &mut Vec<f32>) {
+        let sl = self.slots.lock().unwrap();
+        dst.clear();
+        dst.extend_from_slice(&sl.c_combined);
+    }
+}
+
+/// Zero-copy per-(worker, task) views into the blob, produced by
+/// [`distribute`]. `a`/`b` are the state views (m/v/r rows, v/c).
+#[derive(Default)]
+struct TaskPart<'b> {
+    theta: Option<&'b mut [f32]>,
+    a: Option<&'b mut [f32]>,
+    b: Option<&'b mut [f32]>,
+}
+
+const ROLE_THETA: u8 = 0;
+const ROLE_A: u8 = 1;
+const ROLE_B: u8 = 2;
+
+struct Span {
+    offset: usize,
+    len: usize,
+    task: usize,
+    worker: usize,
+    role: u8,
+}
+
+/// The engine. Construct once per (layout, shard plan); `step` any number
+/// of blobs that share the layout.
+pub struct FlatOptimizer {
+    kind: OptKind,
+    hyper: Hyper,
+    mode: ShardMode,
+    n_shards: usize,
+    blob_len: usize,
+    params_len: usize,
+    tasks: Vec<TaskSpec>,
+    /// Segments mode: fused-order task indices per shard (greedy LPT).
+    shard_tasks: Vec<Vec<usize>>,
+    /// Blob spans for the configured mode, precomputed and offset-sorted —
+    /// `step` only re-splits the borrowed blob along them.
+    spans: Vec<Span>,
+    /// Reusable cross-worker reduction state (contiguous mode).
+    sync: SyncState,
+    scratch: Vec<Scratch>,
+}
+
+impl FlatOptimizer {
+    pub fn new(
+        kind: OptKind,
+        layout: &Layout,
+        n_shards: usize,
+        mode: ShardMode,
+    ) -> Result<FlatOptimizer> {
+        Self::with_hyper(kind, layout, n_shards, mode, Hyper::default())
+    }
+
+    pub fn with_hyper(
+        kind: OptKind,
+        layout: &Layout,
+        n_shards: usize,
+        mode: ShardMode,
+        hyper: Hyper,
+    ) -> Result<FlatOptimizer> {
+        let n_shards = n_shards.max(1);
+        let params: Vec<&Segment> = layout.trainable().collect();
+        ensure!(!params.is_empty(), "layout has no trainable segments");
+
+        // Fused-backward ordering over the trainable segments.
+        let n_layers = params
+            .iter()
+            .filter_map(|s| parse_layer(&s.name).map(|(l, _)| l + 1))
+            .max()
+            .unwrap_or(0);
+        let mut order: Vec<usize> = (0..params.len()).collect();
+        order.sort_by_key(|&i| order_key(&params[i].name, n_layers, i));
+
+        // Resolve each parameter's state segments and build the specs.
+        let mut tasks = Vec::with_capacity(params.len());
+        for &i in &order {
+            let seg = params[i];
+            ensure!(
+                seg.shape.len() <= 2,
+                "segment {} has rank {} > 2",
+                seg.name,
+                seg.shape.len()
+            );
+            ensure!(
+                seg.offset + seg.size <= layout.params_len,
+                "trainable segment {} outside the parameter region",
+                seg.name
+            );
+            let cols = if seg.shape.len() == 2 { seg.shape[1] } else { 0 };
+            let need = |suffix: &str| -> Result<SegRef> {
+                let s = layout
+                    .state_segment(&seg.name, suffix)
+                    .with_context(|| {
+                        format!(
+                            "segment {} is missing optimizer state @{suffix}",
+                            seg.name
+                        )
+                    })?;
+                Ok(SegRef { offset: s.offset, size: s.size })
+            };
+            let state = match kind {
+                OptKind::Sgd | OptKind::Lomo => StateSpec::None,
+                OptKind::SgdMomentum => {
+                    let m = need("m")?;
+                    ensure!(m.size == seg.size, "{}@m size mismatch", seg.name);
+                    StateSpec::M(m)
+                }
+                OptKind::SgdVariance => {
+                    let v = need("v")?;
+                    ensure!(v.size == seg.size, "{}@v size mismatch", seg.name);
+                    StateSpec::V(v)
+                }
+                OptKind::AdamW => {
+                    let m = need("m")?;
+                    let v = need("v")?;
+                    ensure!(
+                        m.size == seg.size && v.size == seg.size,
+                        "{}@m/@v size mismatch",
+                        seg.name
+                    );
+                    StateSpec::Mv(m, v)
+                }
+                OptKind::Adafactor | OptKind::AdaLomo => {
+                    if cols > 0 {
+                        let r = need("r")?;
+                        let c = need("c")?;
+                        ensure!(
+                            r.size == seg.shape[0] && c.size == cols,
+                            "{}@r/@c size mismatch",
+                            seg.name
+                        );
+                        StateSpec::Rc(r, c)
+                    } else {
+                        let v = need("v")?;
+                        ensure!(
+                            v.size == seg.size,
+                            "{}@v size mismatch",
+                            seg.name
+                        );
+                        StateSpec::V(v)
+                    }
+                }
+            };
+            tasks.push(TaskSpec {
+                name: seg.name.clone(),
+                offset: seg.offset,
+                size: seg.size,
+                cols,
+                state,
+                ranges: Vec::new(),
+            });
+        }
+
+        // Contiguous plan: balanced global element boundaries over the
+        // trainable region in fused order, snapped to row starts for 2-D
+        // parameters so row-factor updates stay worker-disjoint.
+        let total: usize = tasks.iter().map(|t| t.size).sum();
+        let mut start = 0usize;
+        for task in tasks.iter_mut() {
+            let mut ranges = Vec::with_capacity(n_shards);
+            for w in 0..n_shards {
+                let b_lo = pool::range_bound(total, n_shards, w);
+                let b_hi = pool::range_bound(total, n_shards, w + 1);
+                let range = if task.cols > 0 {
+                    let m = task.size / task.cols;
+                    let r_lo = row_bound(start, task.cols, b_lo, m);
+                    let r_hi = row_bound(start, task.cols, b_hi, m);
+                    (r_lo * task.cols, r_hi * task.cols)
+                } else {
+                    let lo = b_lo.clamp(start, start + task.size) - start;
+                    let hi = b_hi.clamp(start, start + task.size) - start;
+                    (lo, hi)
+                };
+                ranges.push(range);
+            }
+            task.ranges = ranges;
+            start += task.size;
+        }
+
+        // Segments plan: greedy LPT by task load (param + state floats),
+        // each shard's list kept in fused order.
+        let mut by_load: Vec<usize> = (0..tasks.len()).collect();
+        let load = |t: &TaskSpec| {
+            t.size
+                + match &t.state {
+                    StateSpec::None => 0,
+                    StateSpec::M(s) | StateSpec::V(s) => s.size,
+                    StateSpec::Mv(a, b) | StateSpec::Rc(a, b) => {
+                        a.size + b.size
+                    }
+                }
+        };
+        by_load.sort_by_key(|&i| std::cmp::Reverse((load(&tasks[i]), i)));
+        let mut shard_tasks: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        let mut shard_load = vec![0usize; n_shards];
+        let mut owner = vec![0usize; tasks.len()];
+        for i in by_load {
+            let (w, _) = shard_load
+                .iter()
+                .enumerate()
+                .min_by_key(|&(w, &l)| (l, w))
+                .expect("n_shards >= 1");
+            shard_load[w] += load(&tasks[i]);
+            shard_tasks[w].push(i);
+            owner[i] = w;
+        }
+        for list in shard_tasks.iter_mut() {
+            list.sort_unstable();
+        }
+
+        let mut spans = build_spans(mode, &tasks, &owner);
+        spans.retain(|s| s.len > 0);
+        spans.sort_by_key(|s| s.offset);
+
+        Ok(FlatOptimizer {
+            kind,
+            hyper,
+            mode,
+            n_shards,
+            blob_len: layout.blob_len,
+            params_len: layout.params_len,
+            tasks,
+            shard_tasks,
+            spans,
+            sync: SyncState::new(n_shards),
+            scratch: vec![Scratch::default(); n_shards],
+        })
+    }
+
+    pub fn kind(&self) -> OptKind {
+        self.kind
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn mode(&self) -> ShardMode {
+        self.mode
+    }
+
+    /// Trainable segment names in the order the engine visits them
+    /// (fused-backward order).
+    pub fn task_order(&self) -> Vec<&str> {
+        self.tasks.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// One optimizer step over the flat blob, in place. `grads` is the
+    /// gradient image of the parameter region (>= `params_len` floats,
+    /// indexed by segment offset); `t` is the 1-based step, `lr` the
+    /// scheduled rate, `wd` decoupled decay (AdamW only).
+    pub fn step(
+        &mut self,
+        blob: &mut [f32],
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        ensure!(
+            blob.len() == self.blob_len,
+            "blob len {} != layout {}",
+            blob.len(),
+            self.blob_len
+        );
+        ensure!(
+            grads.len() >= self.params_len,
+            "grads len {} < params_len {}",
+            grads.len(),
+            self.params_len
+        );
+        match self.mode {
+            ShardMode::Segments => self.step_segments(blob, grads, t, lr, wd),
+            ShardMode::Contiguous => {
+                self.step_contiguous(blob, grads, t, lr, wd)
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience wrapper for [`HostBlob`]s.
+    pub fn step_blob(
+        &mut self,
+        blob: &mut HostBlob,
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        self.step(&mut blob.data, grads, t, lr, wd)
+    }
+
+    fn step_segments(
+        &mut self,
+        blob: &mut [f32],
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) {
+        let parts =
+            distribute(blob, &self.spans, self.n_shards, self.tasks.len());
+        let kind = self.kind;
+        let h = self.hyper;
+        let tasks = &self.tasks;
+        let shard_tasks = &self.shard_tasks;
+        let mut jobs = Vec::with_capacity(self.n_shards);
+        for ((w, mut my_parts), scratch) in
+            parts.into_iter().enumerate().zip(self.scratch.iter_mut())
+        {
+            let my = &shard_tasks[w];
+            jobs.push(move || {
+                for &ti in my {
+                    let part = std::mem::take(&mut my_parts[ti]);
+                    run_task_sequential(
+                        &tasks[ti], part, grads, kind, h, t, lr, wd, scratch,
+                    );
+                }
+            });
+        }
+        pool::run_jobs(jobs);
+    }
+
+    fn step_contiguous(
+        &mut self,
+        blob: &mut [f32],
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) {
+        let parts =
+            distribute(blob, &self.spans, self.n_shards, self.tasks.len());
+        let sync_ref = &self.sync;
+        let kind = self.kind;
+        let h = self.hyper;
+        let tasks = &self.tasks;
+        let mut jobs = Vec::with_capacity(self.n_shards);
+        for ((w, my_parts), scratch) in
+            parts.into_iter().enumerate().zip(self.scratch.iter_mut())
+        {
+            jobs.push(move || {
+                run_worker_contiguous(
+                    tasks, my_parts, grads, kind, h, t, lr, wd, w, sync_ref,
+                    scratch,
+                );
+            });
+        }
+        pool::run_jobs(jobs);
+    }
+}
+
+fn state_refs(state: &StateSpec) -> (Option<SegRef>, Option<SegRef>) {
+    match state {
+        StateSpec::None => (None, None),
+        StateSpec::M(s) | StateSpec::V(s) => (Some(*s), None),
+        StateSpec::Mv(a, b) | StateSpec::Rc(a, b) => (Some(*a), Some(*b)),
+    }
+}
+
+/// Layout-static blob spans for a shard mode — computed once at
+/// construction; `step` re-splits each borrowed blob along them.
+fn build_spans(mode: ShardMode, tasks: &[TaskSpec], owner: &[usize]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    match mode {
+        ShardMode::Segments => {
+            for (ti, task) in tasks.iter().enumerate() {
+                let w = owner[ti];
+                spans.push(Span {
+                    offset: task.offset,
+                    len: task.size,
+                    task: ti,
+                    worker: w,
+                    role: ROLE_THETA,
+                });
+                let (a, b) = state_refs(&task.state);
+                if let Some(s) = a {
+                    spans.push(Span {
+                        offset: s.offset,
+                        len: s.size,
+                        task: ti,
+                        worker: w,
+                        role: ROLE_A,
+                    });
+                }
+                if let Some(s) = b {
+                    spans.push(Span {
+                        offset: s.offset,
+                        len: s.size,
+                        task: ti,
+                        worker: w,
+                        role: ROLE_B,
+                    });
+                }
+            }
+        }
+        ShardMode::Contiguous => {
+            for (ti, task) in tasks.iter().enumerate() {
+                for (w, &(lo, hi)) in task.ranges.iter().enumerate() {
+                    if hi > lo {
+                        spans.push(Span {
+                            offset: task.offset + lo,
+                            len: hi - lo,
+                            task: ti,
+                            worker: w,
+                            role: ROLE_THETA,
+                        });
+                    }
+                    match &task.state {
+                        StateSpec::None => {}
+                        StateSpec::M(s) | StateSpec::V(s) => {
+                            if hi > lo {
+                                spans.push(Span {
+                                    offset: s.offset + lo,
+                                    len: hi - lo,
+                                    task: ti,
+                                    worker: w,
+                                    role: ROLE_A,
+                                });
+                            }
+                        }
+                        StateSpec::Mv(m, v) => {
+                            if hi > lo {
+                                spans.push(Span {
+                                    offset: m.offset + lo,
+                                    len: hi - lo,
+                                    task: ti,
+                                    worker: w,
+                                    role: ROLE_A,
+                                });
+                                spans.push(Span {
+                                    offset: v.offset + lo,
+                                    len: hi - lo,
+                                    task: ti,
+                                    worker: w,
+                                    role: ROLE_B,
+                                });
+                            }
+                        }
+                        StateSpec::Rc(r, c) => {
+                            let n = task.cols;
+                            if hi > lo {
+                                spans.push(Span {
+                                    offset: r.offset + lo / n,
+                                    len: (hi - lo) / n,
+                                    task: ti,
+                                    worker: w,
+                                    role: ROLE_A,
+                                });
+                            }
+                            if w == 0 {
+                                spans.push(Span {
+                                    offset: c.offset,
+                                    len: c.size,
+                                    task: ti,
+                                    worker: 0,
+                                    role: ROLE_B,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    spans
+}
+
+/// First row of the task whose start element (global index `s + r*n`) is
+/// at or past the boundary `b`, clamped to `m` rows.
+fn row_bound(s: usize, n: usize, b: usize, m: usize) -> usize {
+    if b <= s {
+        0
+    } else {
+        ((b - s + n - 1) / n).min(m)
+    }
+}
+
+fn parse_layer(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix('l')?;
+    let dot = rest.find('.')?;
+    let layer: usize = rest[..dot].parse().ok()?;
+    Some((layer, &rest[dot + 1..]))
+}
+
+/// Sort key realizing the fused-backward walk: head (+final_norm), layers
+/// L-1..0 (members in `LAYER_MEMBERS` order), embedding; segments outside
+/// the model naming convention follow in their layout order.
+fn order_key(name: &str, n_layers: usize, fallback: usize) -> (usize, usize, usize) {
+    match name {
+        "head" => (0, 0, 0),
+        "final_norm" => (0, 1, 0),
+        "embed" => (2, 0, 0),
+        _ => match parse_layer(name) {
+            Some((layer, member)) => {
+                let mi = LAYER_MEMBERS
+                    .iter()
+                    .position(|&m| m == member)
+                    .unwrap_or(LAYER_MEMBERS.len());
+                (1, n_layers - 1 - layer, mi)
+            }
+            None => (3, fallback, 0),
+        },
+    }
+}
+
+/// Split `blob` into disjoint mutable views at the given spans (already
+/// offset-sorted, zero-length-free) and hand each to its (worker, task,
+/// role) slot.
+fn distribute<'b>(
+    blob: &'b mut [f32],
+    spans: &[Span],
+    n_workers: usize,
+    n_tasks: usize,
+) -> Vec<Vec<TaskPart<'b>>> {
+    let mut parts: Vec<Vec<TaskPart<'b>>> = (0..n_workers)
+        .map(|_| (0..n_tasks).map(|_| TaskPart::default()).collect())
+        .collect();
+    let mut rest: &'b mut [f32] = blob;
+    let mut cursor = 0usize;
+    for s in spans {
+        assert!(s.offset >= cursor, "overlapping blob spans");
+        let tmp = rest;
+        let (_, after) = tmp.split_at_mut(s.offset - cursor);
+        let (piece, tail) = after.split_at_mut(s.len);
+        rest = tail;
+        cursor = s.offset + s.len;
+        let slot = &mut parts[s.worker][s.task];
+        match s.role {
+            ROLE_THETA => slot.theta = Some(piece),
+            ROLE_A => slot.a = Some(piece),
+            _ => slot.b = Some(piece),
+        }
+    }
+    parts
+}
+
+
+/// Segments-mode task runner: the whole tensor on one worker, via the
+/// full slice kernels (identical arithmetic to `ParamOpt::step`).
+#[allow(clippy::too_many_arguments)]
+fn run_task_sequential(
+    spec: &TaskSpec,
+    part: TaskPart<'_>,
+    grads: &[f32],
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    scratch: &mut Scratch,
+) {
+    let g = &grads[spec.offset..spec.offset + spec.size];
+    let theta = part.theta.expect("theta view assigned to owner");
+    let a = part.a;
+    let b = part.b;
+    match kind {
+        OptKind::Sgd | OptKind::Lomo => update::sgd_slice(theta, g, lr),
+        OptKind::SgdMomentum => {
+            update::sgd_momentum_slice(theta, g, a.unwrap(), t, lr, h);
+        }
+        OptKind::SgdVariance => {
+            update::sgd_variance_slice(theta, g, a.unwrap(), t, lr, h);
+        }
+        OptKind::AdamW => {
+            update::adamw_slice(theta, g, a.unwrap(), b.unwrap(), t, lr, wd, h);
+        }
+        OptKind::AdaLomo => {
+            scratch.ensure_u(spec.size);
+            let u = &mut scratch.u[..spec.size];
+            if spec.cols > 0 {
+                update::adalomo_2d_slice(
+                    theta,
+                    g,
+                    spec.cols,
+                    a.unwrap(),
+                    b.unwrap(),
+                    t,
+                    lr,
+                    h,
+                    u,
+                );
+            } else {
+                update::adalomo_vec_slice(theta, g, a.unwrap(), t, lr, h, u);
+            }
+        }
+        OptKind::Adafactor => {
+            scratch.ensure_u(spec.size);
+            let u = &mut scratch.u[..spec.size];
+            if spec.cols > 0 {
+                update::adafactor_2d_slice(
+                    theta,
+                    g,
+                    spec.cols,
+                    a.unwrap(),
+                    b.unwrap(),
+                    t,
+                    lr,
+                    h,
+                    u,
+                );
+            } else {
+                update::adafactor_vec_slice(theta, g, a.unwrap(), t, lr, h, u);
+            }
+        }
+    }
+}
+
+/// Contiguous-mode worker: walks every task in fused order; elementwise
+/// rules need no synchronization, factored rules run the two-pass
+/// reductions described in the module docs. Every worker executes the same
+/// barrier sequence per task (empty ranges included), so the barrier
+/// counts always line up.
+#[allow(clippy::too_many_arguments)]
+fn run_worker_contiguous(
+    specs: &[TaskSpec],
+    parts: Vec<TaskPart<'_>>,
+    grads: &[f32],
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    w: usize,
+    sync: &SyncState,
+    scratch: &mut Scratch,
+) {
+    for (spec, part) in specs.iter().zip(parts) {
+        let (lo, hi) = spec.ranges[w];
+        let len = hi - lo;
+        let g = &grads[spec.offset + lo..spec.offset + hi];
+        let theta = part.theta.unwrap_or_default();
+        let a = part.a.unwrap_or_default();
+        let b = part.b.unwrap_or_default();
+        match kind {
+            OptKind::Sgd | OptKind::Lomo => {
+                if len > 0 {
+                    update::sgd_slice(theta, g, lr);
+                }
+            }
+            OptKind::SgdMomentum => {
+                if len > 0 {
+                    update::sgd_momentum_slice(theta, g, a, t, lr, h);
+                }
+            }
+            OptKind::SgdVariance => {
+                if len > 0 {
+                    update::sgd_variance_slice(theta, g, a, t, lr, h);
+                }
+            }
+            OptKind::AdamW => {
+                if len > 0 {
+                    update::adamw_slice(theta, g, a, b, t, lr, wd, h);
+                }
+            }
+            OptKind::AdaLomo | OptKind::Adafactor if spec.cols == 0 => {
+                // Factored-vector path: full second moment `v` in `a`.
+                scratch.ensure_u(len);
+                let u = &mut scratch.u[..len];
+                if len > 0 {
+                    if kind == OptKind::AdaLomo {
+                        let bias = update::bias_correction(h.adalomo_beta, t);
+                        update::adalomo_vec_raw(g, a, bias, h, u);
+                    } else {
+                        let beta2t =
+                            1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+                        update::adafactor_vec_raw(g, a, beta2t, h, u);
+                    }
+                }
+                sync.post_scalars(w, sum_sq(u), sum_sq(theta));
+                sync.wait();
+                if w == 0 {
+                    sync.with_slots(|sl| {
+                        let f = apply_factor(kind, h, lr, spec.size, sl);
+                        sl.scale = f;
+                    });
+                }
+                sync.wait();
+                let f = sync.read_scale();
+                for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
+                    *thi -= f * ui;
+                }
+            }
+            OptKind::AdaLomo | OptKind::Adafactor => {
+                // Factored 2-D path: r rows in `a`, whole c on worker 0
+                // in `b`.
+                let n = spec.cols;
+                let (beta, floor) = if kind == OptKind::AdaLomo {
+                    (h.adalomo_beta, 0.0)
+                } else {
+                    (
+                        1.0 - (t as f32).powf(-h.adafactor_decay_pow),
+                        h.adafactor_eps1,
+                    )
+                };
+                // Phase A: disjoint row-factor updates + per-worker column
+                // accumulators.
+                scratch.zero_cvec(n);
+                if len > 0 {
+                    update::factor_rows(g, n, a, &mut scratch.cvec, beta, floor);
+                }
+                let sum_r_part: f32 = a.iter().sum();
+                sync.swap_cvec(w, &mut scratch.cvec);
+                sync.post_scalars(w, sum_r_part, 0.0);
+                sync.wait();
+                // Combine (worker 0): c <- beta*c + Σ_w acc_w, publish it,
+                // and fold sum_r + bias into the raw-u multiplier.
+                if w == 0 {
+                    sync.with_slots(|sl| {
+                        for (j, cj) in b.iter_mut().enumerate() {
+                            let mut acc = beta * *cj;
+                            for cv in &sl.cvecs {
+                                acc += cv[j];
+                            }
+                            *cj = acc;
+                        }
+                        sl.c_combined.clear();
+                        sl.c_combined.extend_from_slice(b);
+                        let sum_r: f32 = sl.pa.iter().sum();
+                        sl.aux = if kind == OptKind::AdaLomo {
+                            let bias =
+                                update::bias_correction(h.adalomo_beta, t);
+                            1.0 / (sum_r.max(h.eps_div) * bias)
+                        } else {
+                            1.0 / sum_r.max(h.adafactor_eps1)
+                        };
+                    });
+                }
+                sync.wait();
+                // Phase B: raw u over the worker's rows + RMS partials.
+                let inv_sum = sync.read_aux();
+                sync.copy_combined_c(&mut scratch.cbuf);
+                scratch.ensure_u(len);
+                let u = &mut scratch.u[..len];
+                if len > 0 {
+                    let (eps, no_sqrt) = if kind == OptKind::AdaLomo {
+                        (h.eps_div, h.no_sqrt)
+                    } else {
+                        (h.adafactor_eps1, false)
+                    };
+                    update::raw_u_rows(
+                        g,
+                        n,
+                        a,
+                        &scratch.cbuf,
+                        inv_sum,
+                        eps,
+                        no_sqrt,
+                        u,
+                    );
+                }
+                sync.post_scalars(w, sum_sq(u), sum_sq(theta));
+                sync.wait();
+                if w == 0 {
+                    sync.with_slots(|sl| {
+                        let f = apply_factor(kind, h, lr, spec.size, sl);
+                        sl.scale = f;
+                    });
+                }
+                sync.wait();
+                // Phase C: single scale-and-apply pass.
+                let f = sync.read_scale();
+                for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
+                    *thi -= f * ui;
+                }
+            }
+        }
+    }
+}
+
+/// Final apply factor from the combined RMS partials: grouped update
+/// normalization (AdaLomo, Algorithm 1 line 11) or update clipping +
+/// relative step (Adafactor).
+fn apply_factor(kind: OptKind, h: Hyper, lr: f32, size: usize, sl: &Slots) -> f32 {
+    let size = size as f32;
+    let rms_u = (sl.pa.iter().sum::<f32>() / size).sqrt();
+    let rms_theta = (sl.pb.iter().sum::<f32>() / size).sqrt();
+    if kind == OptKind::AdaLomo {
+        lr * (h.eps_rms.max(rms_theta) / 1.0f32.max(rms_u))
+    } else {
+        let clip = 1.0f32.max(rms_u / h.adafactor_clip_d);
+        h.adafactor_eps2.max(rms_theta) * lr / clip
+    }
+}
+
+/// Build a synthetic [`Layout`] for `kind` over `params` — segment naming
+/// and packing exactly as `python/compile/layout.py`: parameters first,
+/// then per-parameter state with `@m/@v/@r/@c` suffixes, then the 8-slot
+/// metrics region. Benches, examples and the parity proptests use this to
+/// exercise the engine without AOT artifacts.
+pub fn synthetic_layout(kind: OptKind, params: &[(&str, &[usize])]) -> Layout {
+    let mut segments = Vec::new();
+    let mut off = 0usize;
+    for &(name, shape) in params {
+        let size: usize = shape.iter().product();
+        segments.push(Segment {
+            name: name.to_string(),
+            kind: "param".to_string(),
+            shape: shape.to_vec(),
+            offset: off,
+            size,
+        });
+        off += size;
+    }
+    let params_len = off;
+    for &(name, shape) in params {
+        let states: Vec<(&str, Vec<usize>)> = match kind {
+            OptKind::Sgd | OptKind::Lomo => vec![],
+            OptKind::SgdMomentum => vec![("m", shape.to_vec())],
+            OptKind::SgdVariance => vec![("v", shape.to_vec())],
+            OptKind::AdamW => {
+                vec![("m", shape.to_vec()), ("v", shape.to_vec())]
+            }
+            OptKind::Adafactor | OptKind::AdaLomo => {
+                if shape.len() == 2 {
+                    vec![("r", vec![shape[0]]), ("c", vec![shape[1]])]
+                } else {
+                    vec![("v", shape.to_vec())]
+                }
+            }
+        };
+        for (suffix, sshape) in states {
+            let ssize: usize = sshape.iter().product();
+            segments.push(Segment {
+                name: format!("{name}@{suffix}"),
+                kind: "state".to_string(),
+                shape: sshape,
+                offset: off,
+                size: ssize,
+            });
+            off += ssize;
+        }
+    }
+    segments.push(Segment {
+        name: "metrics".to_string(),
+        kind: "metric".to_string(),
+        shape: vec![8],
+        offset: off,
+        size: 8,
+    });
+    Layout { blob_len: off + 8, params_len, segments }
+}
+
+/// Random-ish but deterministic blob/grads pair for a layout — shared by
+/// benches and the example so they exercise identical inputs.
+pub fn seeded_blob_and_grads(layout: &Layout, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = crate::util::rng::Pcg32::seeded(seed);
+    let mut blob = vec![0f32; layout.blob_len];
+    for x in blob[..layout.params_len].iter_mut() {
+        *x = rng.normal() * 0.1;
+    }
+    let mut grads = vec![0f32; layout.params_len];
+    for x in grads.iter_mut() {
+        *x = rng.normal() * 0.02;
+    }
+    (blob, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_params() -> Vec<(&'static str, Vec<usize>)> {
+        vec![
+            ("embed", vec![16, 8]),
+            ("l0.attn_norm", vec![8]),
+            ("l0.wq", vec![8, 8]),
+            ("l0.w_down", vec![6, 8]),
+            ("l1.attn_norm", vec![8]),
+            ("l1.wq", vec![8, 8]),
+            ("l1.w_down", vec![6, 8]),
+            ("final_norm", vec![8]),
+            ("head", vec![8, 16]),
+        ]
+    }
+
+    fn layout_for(kind: OptKind) -> Layout {
+        let params = model_params();
+        let specs: Vec<(&str, &[usize])> =
+            params.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+        synthetic_layout(kind, &specs)
+    }
+
+    #[test]
+    fn synthetic_layout_is_consistent() {
+        for kind in super::super::ALL_OPTS {
+            let l = layout_for(kind);
+            let mut off = 0;
+            for s in &l.segments {
+                assert_eq!(s.offset, off, "{}", s.name);
+                assert_eq!(s.size, s.shape.iter().product::<usize>());
+                off += s.size;
+            }
+            assert_eq!(off, l.blob_len);
+            assert_eq!(l.metrics_offset() + 8, l.blob_len);
+        }
+    }
+
+    #[test]
+    fn fused_backward_order_matches_coordinator() {
+        let l = layout_for(OptKind::AdaLomo);
+        let opt =
+            FlatOptimizer::new(OptKind::AdaLomo, &l, 2, ShardMode::Segments)
+                .unwrap();
+        assert_eq!(
+            opt.task_order(),
+            vec![
+                "head",
+                "final_norm",
+                "l1.attn_norm",
+                "l1.wq",
+                "l1.w_down",
+                "l0.attn_norm",
+                "l0.wq",
+                "l0.w_down",
+                "embed",
+            ]
+        );
+    }
+
+    #[test]
+    fn contiguous_ranges_tile_each_task() {
+        for shards in [1usize, 2, 3, 5] {
+            let l = layout_for(OptKind::AdaLomo);
+            let opt = FlatOptimizer::new(
+                OptKind::AdaLomo,
+                &l,
+                shards,
+                ShardMode::Contiguous,
+            )
+            .unwrap();
+            for task in &opt.tasks {
+                let mut prev = 0usize;
+                for &(lo, hi) in &task.ranges {
+                    assert_eq!(lo, prev, "{}", task.name);
+                    assert!(hi >= lo);
+                    if task.cols > 0 {
+                        assert_eq!(lo % task.cols, 0);
+                        assert_eq!(hi % task.cols, 0);
+                    }
+                    prev = hi;
+                }
+                assert_eq!(prev, task.size, "{}", task.name);
+            }
+        }
+    }
+
+    #[test]
+    fn segments_plan_covers_every_task_once() {
+        let l = layout_for(OptKind::AdamW);
+        let opt =
+            FlatOptimizer::new(OptKind::AdamW, &l, 3, ShardMode::Segments)
+                .unwrap();
+        let mut seen: Vec<usize> =
+            opt.shard_tasks.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..opt.tasks.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn missing_state_is_reported() {
+        // An AdamW engine over an SGD layout (no @m/@v segments) must fail
+        // loudly, not step garbage.
+        let l = layout_for(OptKind::Sgd);
+        let err = FlatOptimizer::new(OptKind::AdamW, &l, 1, ShardMode::Segments)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("@m"));
+    }
+
+    #[test]
+    fn step_moves_parameters_and_state() {
+        let l = layout_for(OptKind::AdaLomo);
+        let (mut blob, grads) = seeded_blob_and_grads(&l, 3);
+        let before = blob.clone();
+        let mut opt =
+            FlatOptimizer::new(OptKind::AdaLomo, &l, 2, ShardMode::Contiguous)
+                .unwrap();
+        opt.step(&mut blob, &grads, 1, 1e-2, 0.0).unwrap();
+        let moved = blob[..l.params_len]
+            .iter()
+            .zip(&before[..l.params_len])
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(moved > l.params_len / 2, "params should move");
+        let state = &blob[l.params_len..l.metrics_offset()];
+        assert!(state.iter().any(|&x| x != 0.0), "state should update");
+        // Metrics region untouched.
+        assert!(blob[l.metrics_offset()..].iter().all(|&x| x == 0.0));
+    }
+}

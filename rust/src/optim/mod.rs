@@ -1,18 +1,24 @@
 //! Rust-native optimizer mirrors.
 //!
 //! Exactly the math of `python/compile/kernels/ref.py`, re-implemented on
-//! the host [`Tensor`]. Three consumers:
+//! the host [`Tensor`]. Four consumers:
 //! * cross-layer parity tests — one step here must match one step of the
 //!   AOT train-step artifact (integration_optim_parity);
 //! * the memory simulator — [`OptKind::state_floats`] is the per-parameter
 //!   optimizer-state footprint of paper Table 1;
 //! * host-side experiments (toy-2D trajectories, micro-benches) that don't
-//!   need XLA.
+//!   need XLA;
+//! * the flat-blob parallel engine ([`flat::FlatOptimizer`]) that steps a
+//!   runtime blob in place over the same slice kernels ([`update`]),
+//!   sharded across scoped worker threads ([`pool`]).
 
 use crate::tensor::Tensor;
 
+pub mod flat;
+pub mod pool;
 pub mod update;
 
+pub use flat::{FlatOptimizer, ShardMode};
 pub use update::{grouped_normalize, GroupedNormStats};
 
 /// Optimizer identifiers. Order matches the paper's comparison set.

@@ -1,0 +1,147 @@
+//! Scoped worker-thread helpers for the flat optimizer engine and the
+//! coordinator — the zero-dependency slice-parallel substrate (`rayon` is
+//! not in the offline registry, and the engine only needs fork/join over
+//! borrowed slices, which `std::thread::scope` provides since Rust 1.63).
+//!
+//! Everything here is deterministic by construction: work is partitioned by
+//! *data position*, never by thread arrival order, so a result never
+//! depends on scheduling.
+
+/// Default shard/worker count: one per available hardware thread.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run one job per worker on scoped threads and join them all. Jobs may
+/// borrow from the caller's stack (scoped). A single job runs inline on the
+/// calling thread — no spawn cost for the 1-shard configuration.
+///
+/// Panics propagate to the caller after all jobs finish — provided the
+/// jobs are independent. Jobs that rendezvous on a shared barrier (the
+/// flat engine's contiguous mode) can instead hang peers at the barrier
+/// if one of them panics between waits; see `flat::SyncState`.
+pub fn run_jobs<J: FnOnce() + Send>(jobs: Vec<J>) {
+    let mut jobs = jobs;
+    if jobs.len() <= 1 {
+        if let Some(job) = jobs.pop() {
+            job();
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs.drain(..).map(|j| s.spawn(j)).collect();
+        for h in handles {
+            h.join().expect("pool worker panicked");
+        }
+    });
+}
+
+/// Contiguous range boundaries splitting `n` items into `parts` balanced
+/// pieces: piece k is `[bounds(k), bounds(k+1))` with sizes differing by at
+/// most one (same balancing rule as `sharding::plan_contiguous`).
+pub fn range_bound(n: usize, parts: usize, k: usize) -> usize {
+    debug_assert!(parts > 0);
+    (n * k) / parts
+}
+
+/// Parallel element-wise average: `dst[i] = (Σ_s sources[s][i]) * scale`,
+/// with `dst` split into `n_workers` contiguous ranges. Per element the
+/// sources are summed in source order, so the result is bit-identical to
+/// the sequential loop for ANY worker count — this is what lets the
+/// local-SGD coordinator shard round averaging without perturbing the
+/// convergence comparisons it reports.
+pub fn par_average(dst: &mut [f32], sources: &[&[f32]], scale: f32, n_workers: usize) {
+    let n = dst.len();
+    for s in sources {
+        assert!(s.len() >= n, "source shorter than destination");
+    }
+    let w = n_workers.clamp(1, n.max(1));
+    let mut jobs = Vec::with_capacity(w);
+    let mut rest = dst;
+    let mut start = 0usize;
+    for k in 0..w {
+        let end = range_bound(n, w, k + 1);
+        let (piece, tail) = rest.split_at_mut(end - start);
+        rest = tail;
+        let base = start;
+        jobs.push(move || {
+            for (i, d) in piece.iter_mut().enumerate() {
+                let gi = base + i;
+                let mut acc = 0.0f32;
+                for src in sources {
+                    acc += src[gi];
+                }
+                *d = acc * scale;
+            }
+        });
+        start = end;
+    }
+    run_jobs(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_jobs_executes_all() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..8)
+            .map(|_| {
+                let hits = &hits;
+                move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        run_jobs(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn run_jobs_empty_and_single() {
+        let jobs: Vec<fn()> = Vec::new();
+        run_jobs(jobs); // no-op, no panic
+        let mut x = 0;
+        run_jobs(vec![|| x += 1]);
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn bounds_tile_exactly() {
+        for n in [0usize, 1, 7, 100] {
+            for parts in [1usize, 2, 3, 8] {
+                let mut prev = 0;
+                let mut total = 0;
+                for k in 0..parts {
+                    let lo = range_bound(n, parts, k);
+                    let hi = range_bound(n, parts, k + 1);
+                    assert_eq!(lo, prev);
+                    assert!(hi >= lo);
+                    total += hi - lo;
+                    prev = hi;
+                }
+                assert_eq!(prev, n);
+                assert_eq!(total, n);
+            }
+        }
+    }
+
+    #[test]
+    fn par_average_matches_sequential_any_worker_count() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..103).map(|i| 103.0 - i as f32).collect();
+        let c: Vec<f32> = (0..103).map(|i| (i as f32).sin()).collect();
+        let sources = [a.as_slice(), b.as_slice(), c.as_slice()];
+        let mut expect = vec![0f32; 103];
+        for (i, e) in expect.iter_mut().enumerate() {
+            *e = (a[i] + b[i] + c[i]) * (1.0 / 3.0);
+        }
+        for w in [1usize, 2, 4, 7] {
+            let mut dst = vec![0f32; 103];
+            par_average(&mut dst, &sources, 1.0 / 3.0, w);
+            assert_eq!(dst, expect, "workers={w} must be bit-identical");
+        }
+    }
+}

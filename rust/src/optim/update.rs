@@ -1,7 +1,21 @@
 //! The update rules themselves — line-for-line mirrors of
 //! `python/compile/kernels/ref.py` (see that file for paper equation
-//! references). Kept free-standing so property tests can exercise them
-//! without constructing [`super::ParamOpt`].
+//! references). Two API levels:
+//!
+//! * **slice kernels** (`*_slice`, plus the row/phase primitives
+//!   [`factor_rows`], [`raw_u_rows`], [`adalomo_vec_raw`],
+//!   [`adafactor_vec_raw`]) — operate on borrowed `&[f32]`/`&mut [f32]`
+//!   segment views with zero allocation; this is what the flat-blob engine
+//!   ([`super::flat`]) dispatches to;
+//! * **[`Tensor`] wrappers** with the original signatures, used by
+//!   [`super::ParamOpt`], the toy-2D experiments and the property tests.
+//!   The factored wrappers still allocate one `u` temporary per call; the
+//!   flat engine instead passes a persistent per-worker scratch buffer.
+//!
+//! Bias corrections use `powf(t as f32)` rather than `powi(t as i32)`:
+//! the latter wraps for steps beyond `i32::MAX` and produces a garbage
+//! (possibly negative) correction; `powf` saturates cleanly to 0 for
+//! beta < 1 (see `bias_correction_survives_huge_t`).
 
 use crate::tensor::Tensor;
 
@@ -16,16 +30,294 @@ pub struct GroupedNormStats {
     pub scale: f32,
 }
 
+/// Overflow-safe `1 - beta^t`. `t` is the 1-based u64 step counter; the
+/// old `beta.powi(t as i32)` form wrapped negative past `i32::MAX` steps.
+pub fn bias_correction(beta: f32, t: u64) -> f32 {
+    1.0 - beta.powf(t as f32)
+}
+
+// The parity-critical reductions have a single definition in
+// `crate::tensor` (Tensor, TensorView and these kernels all share it);
+// re-exported here because the kernels are their hottest consumer.
+pub use crate::tensor::{rms, sum_sq};
+
+// --- slice kernels ---------------------------------------------------------
+
 /// Grouped update normalization (Algorithm 1 line 11), in place:
 /// u <- u / max(1, RMS(u)) * max(eps_rms, RMS(theta)).
-pub fn grouped_normalize(u: &mut Tensor, theta: &Tensor, eps_rms: f32) -> GroupedNormStats {
-    let rms_u = u.rms();
-    let rms_theta = theta.rms();
+pub fn grouped_normalize_slice(
+    u: &mut [f32],
+    theta: &[f32],
+    eps_rms: f32,
+) -> GroupedNormStats {
+    let rms_u = rms(u);
+    let rms_theta = rms(theta);
     let scale = eps_rms.max(rms_theta) / 1.0f32.max(rms_u);
-    for x in u.data_mut() {
+    for x in u.iter_mut() {
         *x *= scale;
     }
     GroupedNormStats { rms_u, rms_theta, scale }
+}
+
+/// theta <- theta - lr * g  (SGD; also the LOMO rule, paper Eq. 1).
+pub fn sgd_slice(theta: &mut [f32], g: &[f32], lr: f32) {
+    for (th, &gi) in theta.iter_mut().zip(g) {
+        *th += -lr * gi;
+    }
+}
+
+/// SGD + first moment only (paper Eq. 3). Elementwise: valid on any
+/// aligned (theta, g, m) sub-range, which is what lets the flat engine
+/// chunk it across workers with no synchronization.
+pub fn sgd_momentum_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+) {
+    let bias = bias_correction(h.beta1, t);
+    for ((th, &gi), mi) in theta.iter_mut().zip(g).zip(m.iter_mut()) {
+        *mi = h.beta1 * *mi + (1.0 - h.beta1) * gi;
+        *th -= lr * (*mi / bias);
+    }
+}
+
+/// SGD + second moment only (paper Eq. 4). Elementwise.
+pub fn sgd_variance_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+) {
+    let bias = bias_correction(h.beta2, t);
+    for ((th, &gi), vi) in theta.iter_mut().zip(g).zip(v.iter_mut()) {
+        *vi = h.beta2 * *vi + (1.0 - h.beta2) * gi * gi;
+        *th -= lr * gi / ((*vi / bias).sqrt() + h.adam_eps);
+    }
+}
+
+/// AdamW (paper Eq. 2 + decoupled weight decay). Elementwise.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    wd: f32,
+    h: Hyper,
+) {
+    let bias1 = bias_correction(h.beta1, t);
+    let bias2 = bias_correction(h.beta2, t);
+    let n = theta.len();
+    for i in 0..n {
+        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+        let update = (m[i] / bias1) / ((v[i] / bias2).sqrt() + h.adam_eps);
+        theta[i] -= lr * (update + wd * theta[i]);
+    }
+}
+
+/// Factored second-moment accumulation over a block of rows:
+/// `r[i] <- beta * r[i] + (1-beta) * Σ_j (g_ij² + floor)` and
+/// `c_acc[j] += (1-beta) * (g_ij² + floor)`.
+///
+/// `g` holds `r.len()` rows of width `n`. Callers either pre-scale the full
+/// `c` by beta and pass it as `c_acc` (sequential path — identical
+/// arithmetic to the original fused loop), or pass a zeroed per-worker
+/// accumulator and combine `beta * c + Σ_w acc_w` afterwards (the flat
+/// engine's parallel path). Single pass over g, no temporaries (perf pass:
+/// EXPERIMENTS.md §Perf L3 iteration 1).
+pub fn factor_rows(
+    g: &[f32],
+    n: usize,
+    r: &mut [f32],
+    c_acc: &mut [f32],
+    beta: f32,
+    floor: f32,
+) {
+    debug_assert_eq!(g.len(), r.len() * n);
+    debug_assert_eq!(c_acc.len(), n);
+    let one_minus = 1.0 - beta;
+    for (i, ri) in r.iter_mut().enumerate() {
+        let row = &g[i * n..(i + 1) * n];
+        let mut rsum = 0.0f32;
+        for (cj, &x) in c_acc.iter_mut().zip(row) {
+            let g2 = x * x + floor;
+            rsum += g2;
+            *cj += one_minus * g2;
+        }
+        *ri = beta * *ri + one_minus * rsum;
+    }
+}
+
+/// Raw factored update u for a block of rows:
+/// `u_ij = g_ij / f(r_i * inv_sum * c_j + eps)` with f = sqrt (default) or
+/// identity (`no_sqrt`, the literal Algorithm-1 line-10 form). Row-hoisted:
+/// the per-row factor and bias correction fold into `inv_sum`, so the inner
+/// loop is one mul + sqrt + div per element (sqrt(a*b) = sqrt(a)*sqrt(b)
+/// does NOT hold with the +eps guard, so the sqrt stays inside). Iterator
+/// zips elide bounds checks -> LLVM vectorizes (perf pass iteration 2).
+#[allow(clippy::too_many_arguments)]
+pub fn raw_u_rows(
+    g: &[f32],
+    n: usize,
+    r: &[f32],
+    c: &[f32],
+    inv_sum: f32,
+    eps: f32,
+    no_sqrt: bool,
+    u: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), r.len() * n);
+    debug_assert_eq!(u.len(), g.len());
+    debug_assert_eq!(c.len(), n);
+    for (i, &ri) in r.iter().enumerate() {
+        let row_scale = ri * inv_sum; // v_hat = row_scale * c[j]
+        let grow = &g[i * n..(i + 1) * n];
+        let urow = &mut u[i * n..(i + 1) * n];
+        if no_sqrt {
+            for ((ui, &gv), &cv) in urow.iter_mut().zip(grow).zip(c.iter()) {
+                *ui = gv / (row_scale * cv + eps);
+            }
+        } else {
+            for ((ui, &gv), &cv) in urow.iter_mut().zip(grow).zip(c.iter()) {
+                *ui = gv / (row_scale * cv + eps).sqrt();
+            }
+        }
+    }
+}
+
+/// AdaLomo vector phase kernel: update the full second moment `v` and
+/// write the raw (pre-normalization) update into `u`. Elementwise.
+pub fn adalomo_vec_raw(g: &[f32], v: &mut [f32], bias: f32, h: Hyper, u: &mut [f32]) {
+    for ((ui, &gi), vi) in u.iter_mut().zip(g).zip(v.iter_mut()) {
+        *vi = h.adalomo_beta * *vi + (1.0 - h.adalomo_beta) * gi * gi;
+        let v_hat = *vi / bias;
+        let denom = if h.no_sqrt {
+            v_hat + h.eps_div
+        } else {
+            (v_hat + h.eps_div).sqrt()
+        };
+        *ui = gi / denom;
+    }
+}
+
+/// Adafactor vector phase kernel (no bias correction; +eps1 floor).
+/// Elementwise.
+pub fn adafactor_vec_raw(g: &[f32], v: &mut [f32], beta2t: f32, h: Hyper, u: &mut [f32]) {
+    for ((ui, &gi), vi) in u.iter_mut().zip(g).zip(v.iter_mut()) {
+        *vi = beta2t * *vi + (1.0 - beta2t) * (gi * gi + h.adafactor_eps1);
+        *ui = gi / (*vi + h.adafactor_eps1).sqrt();
+    }
+}
+
+/// AdaLomo step for a 2-D parameter (Algorithm 1 lines 7-12), on borrowed
+/// views. `n` is the row width; `u` is caller-provided scratch of
+/// `theta.len()` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn adalomo_2d_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    n: usize,
+    r: &mut [f32],
+    c: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+    u: &mut [f32],
+) -> GroupedNormStats {
+    for cj in c.iter_mut() {
+        *cj *= h.adalomo_beta;
+    }
+    factor_rows(g, n, r, c, h.adalomo_beta, 0.0);
+    let bias = bias_correction(h.adalomo_beta, t);
+    let sum_r = r.iter().sum::<f32>().max(h.eps_div);
+    raw_u_rows(g, n, r, c, 1.0 / (sum_r * bias), h.eps_div, h.no_sqrt, u);
+    let stats = grouped_normalize_slice(u, theta, h.eps_rms);
+    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+        *th += -lr * ui;
+    }
+    stats
+}
+
+/// AdaLomo step for vectors (full second moment), on borrowed views.
+#[allow(clippy::too_many_arguments)]
+pub fn adalomo_vec_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+    u: &mut [f32],
+) -> GroupedNormStats {
+    let bias = bias_correction(h.adalomo_beta, t);
+    adalomo_vec_raw(g, v, bias, h, u);
+    let stats = grouped_normalize_slice(u, theta, h.eps_rms);
+    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+        *th += -lr * ui;
+    }
+    stats
+}
+
+/// Adafactor step for a 2-D parameter (momentum-less, update clipping,
+/// relative step size; lr = rho_t), on borrowed views.
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_2d_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    n: usize,
+    r: &mut [f32],
+    c: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+    u: &mut [f32],
+) {
+    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    for cj in c.iter_mut() {
+        *cj *= beta2t;
+    }
+    factor_rows(g, n, r, c, beta2t, h.adafactor_eps1);
+    let sum_r = r.iter().sum::<f32>().max(h.adafactor_eps1);
+    raw_u_rows(g, n, r, c, 1.0 / sum_r, h.adafactor_eps1, false, u);
+    let clip = 1.0f32.max(rms(u) / h.adafactor_clip_d);
+    let alpha = h.adafactor_eps2.max(rms(theta)) * lr;
+    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+        *th += (-alpha / clip) * ui;
+    }
+}
+
+/// Adafactor step for vectors, on borrowed views.
+pub fn adafactor_vec_slice(
+    theta: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    h: Hyper,
+    u: &mut [f32],
+) {
+    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    adafactor_vec_raw(g, v, beta2t, h, u);
+    let clip = 1.0f32.max(rms(u) / h.adafactor_clip_d);
+    let alpha = h.adafactor_eps2.max(rms(theta)) * lr;
+    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+        *th += (-alpha / clip) * ui;
+    }
+}
+
+// --- Tensor wrappers -------------------------------------------------------
+
+/// Grouped update normalization (Algorithm 1 line 11), in place.
+pub fn grouped_normalize(u: &mut Tensor, theta: &Tensor, eps_rms: f32) -> GroupedNormStats {
+    grouped_normalize_slice(u.data_mut(), theta.data(), eps_rms)
 }
 
 /// theta <- theta - lr * g  (SGD; also the LOMO rule, paper Eq. 1).
@@ -35,33 +327,16 @@ pub fn sgd(theta: &mut Tensor, g: &Tensor, lr: f32) {
 
 /// SGD + first moment only (paper Eq. 3).
 pub fn sgd_momentum(theta: &mut Tensor, g: &Tensor, m: &mut Tensor, t: u64, lr: f32, h: Hyper) {
-    let bias = 1.0 - h.beta1.powi(t as i32);
-    for ((th, &gi), mi) in theta
-        .data_mut()
-        .iter_mut()
-        .zip(g.data())
-        .zip(m.data_mut())
-    {
-        *mi = h.beta1 * *mi + (1.0 - h.beta1) * gi;
-        *th -= lr * (*mi / bias);
-    }
+    sgd_momentum_slice(theta.data_mut(), g.data(), m.data_mut(), t, lr, h);
 }
 
 /// SGD + second moment only (paper Eq. 4).
 pub fn sgd_variance(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
-    let bias = 1.0 - h.beta2.powi(t as i32);
-    for ((th, &gi), vi) in theta
-        .data_mut()
-        .iter_mut()
-        .zip(g.data())
-        .zip(v.data_mut())
-    {
-        *vi = h.beta2 * *vi + (1.0 - h.beta2) * gi * gi;
-        *th -= lr * gi / ((*vi / bias).sqrt() + h.adam_eps);
-    }
+    sgd_variance_slice(theta.data_mut(), g.data(), v.data_mut(), t, lr, h);
 }
 
 /// AdamW (paper Eq. 2 + decoupled weight decay).
+#[allow(clippy::too_many_arguments)]
 pub fn adamw(
     theta: &mut Tensor,
     g: &Tensor,
@@ -72,81 +347,16 @@ pub fn adamw(
     wd: f32,
     h: Hyper,
 ) {
-    let bias1 = 1.0 - h.beta1.powi(t as i32);
-    let bias2 = 1.0 - h.beta2.powi(t as i32);
-    let n = theta.len();
-    let th = theta.data_mut();
-    let gd = g.data();
-    let md = m.data_mut();
-    let vd = v.data_mut();
-    for i in 0..n {
-        md[i] = h.beta1 * md[i] + (1.0 - h.beta1) * gd[i];
-        vd[i] = h.beta2 * vd[i] + (1.0 - h.beta2) * gd[i] * gd[i];
-        let update = (md[i] / bias1) / ((vd[i] / bias2).sqrt() + h.adam_eps);
-        th[i] -= lr * (update + wd * th[i]);
-    }
-}
-
-/// Factored second-moment EMA shared by AdaLomo (fixed beta) and Adafactor
-/// (time-dependent beta2_t): r/c <- beta * r/c + (1-beta) row/col sums of
-/// g^2 (+ floor). Single pass over g, no temporaries (perf pass:
-/// EXPERIMENTS.md §Perf L3 iteration 1 — the map+row_sums+col_sums version
-/// allocated three m*n/m/n buffers and read g twice).
-fn update_factors(g: &Tensor, r: &mut Tensor, c: &mut Tensor, beta: f32, floor: f32) {
-    let (m, n) = (g.shape()[0], g.shape()[1]);
-    let gd = g.data();
-    let rd = r.data_mut();
-    let cd = c.data_mut();
-    let one_minus = 1.0 - beta;
-    for ci in cd.iter_mut() {
-        *ci *= beta;
-    }
-    for i in 0..m {
-        let row = &gd[i * n..(i + 1) * n];
-        let mut rsum = 0.0f32;
-        for (ci, &x) in cd.iter_mut().zip(row) {
-            let g2 = x * x + floor;
-            rsum += g2;
-            *ci += one_minus * g2;
-        }
-        rd[i] = beta * rd[i] + one_minus * rsum;
-    }
-}
-
-/// Raw AdaLomo update u = g / sqrt(v_hat + eps) with v = r c / sum(r)
-/// (paper Eq. 5 + Algorithm 1 lines 9-10). Row-hoisted: the per-row factor
-/// and bias correction fold into one multiplier, so the inner loop is one
-/// mul + sqrt + div per element (sqrt(a*b) = sqrt(a)*sqrt(b) does NOT hold
-/// with the +eps guard, so the sqrt stays inside).
-fn adalomo_raw_u(g: &Tensor, r: &Tensor, c: &Tensor, bias: f32, h: Hyper) -> Tensor {
-    let (m, n) = (g.shape()[0], g.shape()[1]);
-    let sum_r = r.sum().max(h.eps_div);
-    let mut u = Tensor::zeros(&[m, n]);
-    let gd = g.data();
-    let cd = c.data();
-    let ud = u.data_mut();
-    let inv_bias_sum = 1.0 / (sum_r * bias);
-    for i in 0..m {
-        let row_scale = r.data()[i] * inv_bias_sum; // v_hat = row_scale * c[j]
-        let grow = &gd[i * n..(i + 1) * n];
-        let urow = &mut ud[i * n..(i + 1) * n];
-        // Iterator zips elide bounds checks -> LLVM vectorizes the
-        // mul/sqrt/div chain (perf pass iteration 2).
-        if h.no_sqrt {
-            for ((u, &gv), &cv) in
-                urow.iter_mut().zip(grow).zip(cd.iter())
-            {
-                *u = gv / (row_scale * cv + h.eps_div);
-            }
-        } else {
-            for ((u, &gv), &cv) in
-                urow.iter_mut().zip(grow).zip(cd.iter())
-            {
-                *u = gv / (row_scale * cv + h.eps_div).sqrt();
-            }
-        }
-    }
-    u
+    adamw_slice(
+        theta.data_mut(),
+        g.data(),
+        m.data_mut(),
+        v.data_mut(),
+        t,
+        lr,
+        wd,
+        h,
+    );
 }
 
 /// AdaLomo step for a 2-D parameter (Algorithm 1 lines 7-12).
@@ -159,38 +369,36 @@ pub fn adalomo_2d(
     lr: f32,
     h: Hyper,
 ) {
-    update_factors(g, r, c, h.adalomo_beta, 0.0);
-    let bias = 1.0 - h.adalomo_beta.powi(t as i32);
-    let mut u = adalomo_raw_u(g, r, c, bias, h);
-    grouped_normalize(&mut u, theta, h.eps_rms);
-    theta.axpy(-lr, &u);
+    let n = g.shape()[1];
+    let mut u = vec![0f32; g.len()];
+    adalomo_2d_slice(
+        theta.data_mut(),
+        g.data(),
+        n,
+        r.data_mut(),
+        c.data_mut(),
+        t,
+        lr,
+        h,
+        &mut u,
+    );
 }
 
 /// AdaLomo step for vectors (full second moment).
 pub fn adalomo_vec(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
-    let bias = 1.0 - h.adalomo_beta.powi(t as i32);
-    let mut u = Tensor::zeros(theta.shape());
-    for ((ud, &gi), vi) in u
-        .data_mut()
-        .iter_mut()
-        .zip(g.data())
-        .zip(v.data_mut())
-    {
-        *vi = h.adalomo_beta * *vi + (1.0 - h.adalomo_beta) * gi * gi;
-        let v_hat = *vi / bias;
-        let denom = if h.no_sqrt {
-            v_hat + h.eps_div
-        } else {
-            (v_hat + h.eps_div).sqrt()
-        };
-        *ud = gi / denom;
-    }
-    grouped_normalize(&mut u, theta, h.eps_rms);
-    theta.axpy(-lr, &u);
+    let mut u = vec![0f32; g.len()];
+    adalomo_vec_slice(
+        theta.data_mut(),
+        g.data(),
+        v.data_mut(),
+        t,
+        lr,
+        h,
+        &mut u,
+    );
 }
 
-/// Adafactor step for a 2-D parameter (momentum-less, update clipping,
-/// relative step size; lr = rho_t).
+/// Adafactor step for a 2-D parameter.
 pub fn adafactor_2d(
     theta: &mut Tensor,
     g: &Tensor,
@@ -200,44 +408,33 @@ pub fn adafactor_2d(
     lr: f32,
     h: Hyper,
 ) {
-    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
-    update_factors(g, r, c, beta2t, h.adafactor_eps1);
-    let (m, n) = (g.shape()[0], g.shape()[1]);
-    let sum_r = r.sum().max(h.adafactor_eps1);
-    let mut u = Tensor::zeros(&[m, n]);
-    let gd = g.data();
-    let cd = c.data();
-    let ud = u.data_mut();
-    let inv_sum = 1.0 / sum_r;
-    for i in 0..m {
-        let row_scale = r.data()[i] * inv_sum;
-        let grow = &gd[i * n..(i + 1) * n];
-        let urow = &mut ud[i * n..(i + 1) * n];
-        for ((u, &gv), &cv) in urow.iter_mut().zip(grow).zip(cd.iter()) {
-            *u = gv / (row_scale * cv + h.adafactor_eps1).sqrt();
-        }
-    }
-    let clip = 1.0f32.max(u.rms() / h.adafactor_clip_d);
-    let alpha = h.adafactor_eps2.max(theta.rms()) * lr;
-    theta.axpy(-alpha / clip, &u);
+    let n = g.shape()[1];
+    let mut u = vec![0f32; g.len()];
+    adafactor_2d_slice(
+        theta.data_mut(),
+        g.data(),
+        n,
+        r.data_mut(),
+        c.data_mut(),
+        t,
+        lr,
+        h,
+        &mut u,
+    );
 }
 
 /// Adafactor step for vectors.
 pub fn adafactor_vec(theta: &mut Tensor, g: &Tensor, v: &mut Tensor, t: u64, lr: f32, h: Hyper) {
-    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
-    let mut u = Tensor::zeros(theta.shape());
-    for ((ud, &gi), vi) in u
-        .data_mut()
-        .iter_mut()
-        .zip(g.data())
-        .zip(v.data_mut())
-    {
-        *vi = beta2t * *vi + (1.0 - beta2t) * (gi * gi + h.adafactor_eps1);
-        *ud = gi / (*vi + h.adafactor_eps1).sqrt();
-    }
-    let clip = 1.0f32.max(u.rms() / h.adafactor_clip_d);
-    let alpha = h.adafactor_eps2.max(theta.rms()) * lr;
-    theta.axpy(-alpha / clip, &u);
+    let mut u = vec![0f32; g.len()];
+    adafactor_vec_slice(
+        theta.data_mut(),
+        g.data(),
+        v.data_mut(),
+        t,
+        lr,
+        h,
+        &mut u,
+    );
 }
 
 /// Global gradient norm over a set of gradients — the quantity LOMO's
@@ -341,5 +538,63 @@ mod tests {
         let b = Tensor::full(&[9], 1.0);
         let n = global_grad_norm(&[&a, &b]);
         assert!((n - (13.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bias_correction_survives_huge_t() {
+        // Regression: `beta.powi(t as i32)` wraps for t > i32::MAX and
+        // yields a negative exponent, blowing the correction up instead of
+        // saturating it toward 1.
+        let t = (i32::MAX as u64) + 7;
+        for beta in [0.85f32, 0.9, 0.999] {
+            let b = bias_correction(beta, t);
+            assert!(b.is_finite() && b > 0.0 && b <= 1.0, "beta {beta} -> {b}");
+            assert!((b - 1.0).abs() < 1e-6, "beta {beta}: correction ~1 at huge t");
+        }
+        // A full step at huge t stays finite for every stateful rule.
+        let h = hyper();
+        let g = Tensor::full(&[3, 2], 0.1);
+        let mut theta = Tensor::full(&[3, 2], 1.0);
+        let mut m = Tensor::zeros(&[3, 2]);
+        let mut v = Tensor::zeros(&[3, 2]);
+        adamw(&mut theta, &g, &mut m, &mut v, t, 1e-3, 0.01, h);
+        let mut r = Tensor::zeros(&[3]);
+        let mut c = Tensor::zeros(&[2]);
+        adalomo_2d(&mut theta, &g, &mut r, &mut c, t, 1e-3, h);
+        let mut vv = Tensor::zeros(&[3, 2]);
+        sgd_variance(&mut theta, &g, &mut vv, t, 1e-3, h);
+        sgd_momentum(&mut theta, &g, &mut m, t, 1e-3, h);
+        assert!(theta.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn slice_kernels_match_tensor_wrappers() {
+        // The wrappers ARE the slice kernels; this guards against the two
+        // levels drifting apart if one is edited without the other.
+        let h = hyper();
+        let g = Tensor::from_fn(&[4, 3], |i| (i as f32 - 6.0) * 0.02);
+        let mut theta_a = Tensor::from_fn(&[4, 3], |i| 0.1 + i as f32 * 0.01);
+        let mut theta_b = theta_a.clone();
+        let mut r = Tensor::zeros(&[4]);
+        let mut c = Tensor::zeros(&[3]);
+        let (mut r2, mut c2) = (r.clone(), c.clone());
+        for t in 1..4 {
+            adalomo_2d(&mut theta_a, &g, &mut r, &mut c, t, 0.01, h);
+            let mut u = vec![0f32; 12];
+            adalomo_2d_slice(
+                theta_b.data_mut(),
+                g.data(),
+                3,
+                r2.data_mut(),
+                c2.data_mut(),
+                t,
+                0.01,
+                h,
+                &mut u,
+            );
+        }
+        for (a, b) in theta_a.data().iter().zip(theta_b.data()) {
+            assert_eq!(a, b, "wrapper and slice kernel must be bit-identical");
+        }
     }
 }

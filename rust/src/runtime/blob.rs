@@ -8,6 +8,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::{TensorView, TensorViewMut};
+
 use super::manifest::Layout;
 
 #[derive(Debug, Clone)]
@@ -37,9 +39,49 @@ impl HostBlob {
         Ok(&self.data[seg.offset..seg.offset + seg.size])
     }
 
+    /// Shape-aware zero-copy view of one segment.
+    pub fn segment_view<'a>(
+        &'a self,
+        layout: &'a Layout,
+        name: &str,
+    ) -> Result<TensorView<'a>> {
+        let seg = layout
+            .segment(name)
+            .with_context(|| format!("no segment {name:?}"))?;
+        TensorView::from_slice(
+            &seg.shape,
+            &self.data[seg.offset..seg.offset + seg.size],
+        )
+    }
+
+    /// Shape-aware zero-copy mutable view of one segment.
+    pub fn segment_view_mut<'a>(
+        &'a mut self,
+        layout: &'a Layout,
+        name: &str,
+    ) -> Result<TensorViewMut<'a>> {
+        let seg = layout
+            .segment(name)
+            .with_context(|| format!("no segment {name:?}"))?;
+        TensorViewMut::from_slice_mut(
+            &seg.shape,
+            &mut self.data[seg.offset..seg.offset + seg.size],
+        )
+    }
+
     /// The leading parameter region (param + frozen).
     pub fn params<'a>(&'a self, layout: &Layout) -> &'a [f32] {
         &self.data[..layout.params_len]
+    }
+
+    /// Mutable parameter region — what local-SGD averaging splices.
+    pub fn params_mut<'a>(&'a mut self, layout: &Layout) -> &'a mut [f32] {
+        &mut self.data[..layout.params_len]
+    }
+
+    /// The optimizer-state region (between parameters and metrics).
+    pub fn state_region<'a>(&'a self, layout: &Layout) -> &'a [f32] {
+        &self.data[layout.params_len..layout.metrics_offset()]
     }
 
     pub fn metrics<'a>(&'a self, layout: &Layout) -> &'a [f32] {
@@ -162,6 +204,29 @@ mod tests {
         assert_eq!(blob.segment(&l, "w@s").unwrap(), &[6., 7., 8., 9.]);
         assert_eq!(blob.metrics(&l).len(), 8);
         assert!(blob.segment(&l, "nope").is_err());
+        // Shape-aware zero-copy views.
+        let v = blob.segment_view(&l, "w").unwrap();
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.sum(), 15.0);
+        assert_eq!(blob.state_region(&l), &[6., 7., 8., 9.]);
+        let mut blob2 = blob.clone();
+        blob2.segment_view_mut(&l, "w").unwrap().axpy(1.0, &[1.0; 6]);
+        assert_eq!(blob2.params(&l), &[1., 2., 3., 4., 5., 6.]);
+        blob2.params_mut(&l)[0] = 9.0;
+        assert_eq!(blob2.data[0], 9.0);
+    }
+
+    #[test]
+    fn state_segment_lookup_by_suffix() {
+        let l = layout(4);
+        assert_eq!(l.state_segment("w", "s").unwrap().size, 4);
+        assert!(l.state_segment("w", "m").is_none());
+        let names: Vec<_> =
+            l.state_segments("w").map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["w@s"]);
+        // Prefix collisions must not match ("w2@s" is not state of "w").
+        assert_eq!(l.state_segments("w@").count(), 0);
+        assert_eq!(l.shardable_len(), l.metrics_offset());
     }
 
     #[test]

@@ -64,6 +64,32 @@ impl Layout {
     pub fn trainable(&self) -> impl Iterator<Item = &Segment> {
         self.segments.iter().filter(|s| s.kind == "param")
     }
+
+    /// All optimizer-state segments attached to `param` (layout.py naming
+    /// convention: `{param}@{suffix}`), in layout order.
+    pub fn state_segments<'a>(
+        &'a self,
+        param: &'a str,
+    ) -> impl Iterator<Item = &'a Segment> {
+        self.segments.iter().filter(move |s| {
+            s.kind == "state"
+                && s.name.len() > param.len() + 1
+                && s.name.starts_with(param)
+                && s.name.as_bytes()[param.len()] == b'@'
+        })
+    }
+
+    /// One optimizer-state segment by suffix (`m`, `v`, `r`, `c`).
+    pub fn state_segment(&self, param: &str, suffix: &str) -> Option<&Segment> {
+        self.segment(&format!("{param}@{suffix}"))
+    }
+
+    /// Length of the shardable region: parameters + optimizer state. The
+    /// trailing metrics region is replicated coordinator state and never
+    /// sharded (same rule as `coordinator::sharding`).
+    pub fn shardable_len(&self) -> usize {
+        self.metrics_offset()
+    }
 }
 
 #[derive(Debug, Clone)]

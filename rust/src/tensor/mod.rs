@@ -7,6 +7,21 @@
 
 use anyhow::{bail, Result};
 
+/// Sum of squares over a raw slice — THE parity-critical reduction. Single
+/// definition: [`Tensor`], [`TensorView`] and the optimizer slice kernels
+/// (`optim::update`) all delegate here so the implementations cannot drift.
+pub fn sum_sq(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum()
+}
+
+/// Root-mean-square over a raw slice (paper footnote 1); 0 for empty input.
+pub fn rms(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (sum_sq(xs) / xs.len() as f32).sqrt()
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -134,15 +149,12 @@ impl Tensor {
     }
 
     pub fn sum_sq(&self) -> f32 {
-        self.data.iter().map(|x| x * x).sum()
+        sum_sq(&self.data)
     }
 
     /// Root-mean-square over all elements (paper footnote 1).
     pub fn rms(&self) -> f32 {
-        if self.data.is_empty() {
-            return 0.0;
-        }
-        (self.sum_sq() / self.data.len() as f32).sqrt()
+        rms(&self.data)
     }
 
     /// Row sums of a 2-D tensor -> (m,).
@@ -209,6 +221,123 @@ impl Tensor {
         }
         Tensor { shape: vec![m, n], data: out }
     }
+
+    // --- borrowed views -----------------------------------------------------
+
+    /// Zero-copy read-only view of this tensor.
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { shape: &self.shape, data: &self.data }
+    }
+}
+
+/// Borrowed, shape-carrying, read-only view over an `f32` slice — the
+/// zero-copy counterpart of [`Tensor`] used by the flat optimizer engine
+/// and blob segment accessors. Neither constructor copies or allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: &'a [usize],
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn from_slice(shape: &'a [usize], data: &'a [f32]) -> Result<TensorView<'a>> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorView { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn sum_sq(&self) -> f32 {
+        sum_sq(self.data)
+    }
+
+    /// Root-mean-square over all elements (paper footnote 1) — same
+    /// arithmetic as [`Tensor::rms`] (both delegate to [`rms`]).
+    pub fn rms(&self) -> f32 {
+        rms(self.data)
+    }
+
+    /// Materialize an owned [`Tensor`] (the one copying escape hatch).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor { shape: self.shape.to_vec(), data: self.data.to_vec() }
+    }
+}
+
+/// Borrowed mutable view — shape-aware in-place access to a blob segment
+/// without constructing a [`Tensor`]. The flat engine's inner loops work
+/// on raw `&mut [f32]` slices directly; this type is the shaped accessor
+/// for coordinator-level callers ([`crate::runtime::HostBlob`]'s
+/// `segment_view_mut`) and the substrate the async-rank work builds on.
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    shape: &'a [usize],
+    data: &'a mut [f32],
+}
+
+impl<'a> TensorViewMut<'a> {
+    pub fn from_slice_mut(
+        shape: &'a [usize],
+        data: &'a mut [f32],
+    ) -> Result<TensorViewMut<'a>> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorViewMut { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        self.data
+    }
+
+    pub fn as_view(&self) -> TensorView<'_> {
+        TensorView { shape: self.shape, data: self.data }
+    }
+
+    /// In-place self += b * s over the raw data (the optimizer hot path).
+    pub fn axpy(&mut self, s: f32, b: &[f32]) {
+        assert_eq!(self.data.len(), b.len());
+        for (x, &y) in self.data.iter_mut().zip(b) {
+            *x += s * y;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -268,5 +397,29 @@ mod tests {
     #[test]
     fn rms_of_zeros_is_zero() {
         assert_eq!(Tensor::zeros(&[4]).rms(), 0.0);
+    }
+
+    #[test]
+    fn views_are_zero_copy_and_shape_checked() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let v = t.view();
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.sum(), t.sum());
+        assert!((v.rms() - t.rms()).abs() < 1e-7);
+        let shape = [4usize];
+        assert!(TensorView::from_slice(&shape, &[0.0; 3]).is_err());
+        let back = TensorView::from_slice(&shape, &[1.0; 4]).unwrap();
+        assert_eq!(back.to_tensor().shape(), &[4]);
+    }
+
+    #[test]
+    fn mut_view_updates_in_place() {
+        let mut buf = vec![1.0f32; 6];
+        let shape = [2usize, 3];
+        let mut v = TensorViewMut::from_slice_mut(&shape, &mut buf).unwrap();
+        v.axpy(0.5, &[2.0; 6]);
+        assert_eq!(v.as_view().sum(), 12.0);
+        drop(v);
+        assert!(buf.iter().all(|&x| (x - 2.0).abs() < 1e-7));
     }
 }

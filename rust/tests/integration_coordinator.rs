@@ -131,3 +131,33 @@ fn worker_pool_local_sgd_improves_over_init() {
         report.averaged_eval_loss
     );
 }
+
+#[test]
+fn worker_pool_state_survives_rounds() {
+    // Regression for the state-retention bug: every rank's optimizer state
+    // (AdaLomo second-moment factors) must be non-zero after round 2 — the
+    // old implementation adopted the leader's state-zeroed blob at every
+    // round boundary, wiping the factors each `sync_every` steps.
+    if !exp::artifacts_available() {
+        return;
+    }
+    let mut cfg = RunConfig::new("nano", "adalomo", Phase::Scratch, 4);
+    cfg.lr = 1e-2;
+    cfg.seed = 37;
+    let report = workers::run_local_sgd(
+        exp::artifacts_dir(),
+        cfg,
+        Domain::C4,
+        2, // ranks
+        2, // rounds
+        4, // steps per round
+    )
+    .unwrap();
+    assert_eq!(report.per_rank_state_sumsq.len(), 2);
+    for (rank, sumsq) in report.per_rank_state_sumsq.iter().enumerate() {
+        assert!(
+            sumsq.is_finite() && *sumsq > 0.0,
+            "rank {rank}: optimizer state wiped across rounds (sumsq {sumsq})"
+        );
+    }
+}

@@ -5,7 +5,8 @@
 use adalomo::coordinator::sharding;
 use adalomo::data::loader::DataLoader;
 use adalomo::memsim::{liveness, memory, Arch};
-use adalomo::optim::{grouped_normalize, Hyper, OptKind, ParamOpt};
+use adalomo::optim::flat::{synthetic_layout, FlatOptimizer, ShardMode};
+use adalomo::optim::{grouped_normalize, Hyper, OptKind, ParamOpt, ALL_OPTS};
 use adalomo::runtime::{Layout, Segment};
 use adalomo::tensor::Tensor;
 use adalomo::util::rng::Pcg32;
@@ -226,6 +227,150 @@ fn prop_liveness_peak_bounds() {
         assert!(fused.peak_bytes <= 2 * 2 * arch.max_matrix(), "seed {seed}");
         assert_eq!(std.peak_bytes, 2 * arch.n_params(), "seed {seed}");
         assert!(fused.peak_bytes <= std.peak_bytes);
+    }
+}
+
+/// Reference path for the engine parity tests: one [`ParamOpt`] + one
+/// [`Tensor`] per trainable segment, stepped over the same gradient images.
+fn param_opt_reference(
+    layout: &Layout,
+    kind: OptKind,
+    blob0: &[f32],
+    grads: &[Vec<f32>],
+    lr: f32,
+    wd: f32,
+) -> Vec<(usize, usize, Tensor)> {
+    let mut params: Vec<(usize, usize, Tensor, ParamOpt)> = layout
+        .trainable()
+        .map(|s| {
+            let theta = Tensor::new(
+                &s.shape,
+                blob0[s.offset..s.offset + s.size].to_vec(),
+            )
+            .unwrap();
+            (s.offset, s.size, theta, ParamOpt::new(kind, &s.shape))
+        })
+        .collect();
+    for (step, g) in grads.iter().enumerate() {
+        for (off, size, theta, opt) in params.iter_mut() {
+            let gt =
+                Tensor::new(theta.shape(), g[*off..*off + *size].to_vec())
+                    .unwrap();
+            opt.step(theta, &gt, (step + 1) as u64, lr, wd);
+        }
+    }
+    params.into_iter().map(|(off, size, theta, _)| (off, size, theta)).collect()
+}
+
+#[test]
+fn prop_flat_engine_matches_param_opt() {
+    // The flat-blob engine must agree with the per-tensor path within 1e-6
+    // for every optimizer, both shard plans, and 1/2/4 shards.
+    let (lr, wd) = (0.01f32, 0.01f32);
+    for kind in ALL_OPTS {
+        for seed in 0..6u64 {
+            let mut rng = Pcg32::seeded(7000 + seed);
+            let d = 3 + rng.below(6);
+            let v = 4 + rng.below(8);
+            let f = 3 + rng.below(5);
+            let shapes: Vec<(&str, Vec<usize>)> = vec![
+                ("embed", vec![v, d]),
+                ("l0.attn_norm", vec![d]),
+                ("l0.wq", vec![d, d]),
+                ("l0.w_down", vec![f, d]),
+                ("l1.wq", vec![d, d]),
+                ("final_norm", vec![d]),
+                ("head", vec![d, v]),
+            ];
+            let specs: Vec<(&str, &[usize])> =
+                shapes.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+            let layout = synthetic_layout(kind, &specs);
+            let mut blob0 = vec![0f32; layout.blob_len];
+            for x in blob0[..layout.params_len].iter_mut() {
+                *x = rng.normal() * 0.2;
+            }
+            let grads: Vec<Vec<f32>> = (0..3)
+                .map(|_| {
+                    (0..layout.params_len)
+                        .map(|_| rng.normal() * 0.05)
+                        .collect()
+                })
+                .collect();
+            let reference =
+                param_opt_reference(&layout, kind, &blob0, &grads, lr, wd);
+            for shards in [1usize, 2, 4] {
+                for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+                    let mut blob = blob0.clone();
+                    let mut engine =
+                        FlatOptimizer::new(kind, &layout, shards, mode)
+                            .unwrap();
+                    for (step, g) in grads.iter().enumerate() {
+                        engine
+                            .step(&mut blob, g, (step + 1) as u64, lr, wd)
+                            .unwrap();
+                    }
+                    for (off, size, theta) in &reference {
+                        for (i, (&a, &b)) in theta
+                            .data()
+                            .iter()
+                            .zip(&blob[*off..*off + *size])
+                            .enumerate()
+                        {
+                            assert!(
+                                (a - b).abs() <= 1e-6,
+                                "{kind:?} {mode:?} shards={shards} \
+                                 seed={seed} elem {off}+{i}: {a} vs {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flat_contiguous_shard_count_stays_close() {
+    // Different shard counts only re-associate the reductions; parameters
+    // must stay within fp noise of each other after several steps.
+    for kind in [OptKind::AdaLomo, OptKind::Adafactor] {
+        let mut rng = Pcg32::seeded(42);
+        let shapes: Vec<(&str, Vec<usize>)> =
+            vec![("embed", vec![12, 7]), ("l0.wq", vec![7, 7]), ("final_norm", vec![7])];
+        let specs: Vec<(&str, &[usize])> =
+            shapes.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+        let layout = synthetic_layout(kind, &specs);
+        let mut blob0 = vec![0f32; layout.blob_len];
+        for x in blob0[..layout.params_len].iter_mut() {
+            *x = rng.normal() * 0.2;
+        }
+        let grads: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                (0..layout.params_len).map(|_| rng.normal() * 0.05).collect()
+            })
+            .collect();
+        let run = |shards: usize| {
+            let mut blob = blob0.clone();
+            let mut engine =
+                FlatOptimizer::new(kind, &layout, shards, ShardMode::Contiguous)
+                    .unwrap();
+            for (step, g) in grads.iter().enumerate() {
+                engine
+                    .step(&mut blob, g, (step + 1) as u64, 0.02, 0.0)
+                    .unwrap();
+            }
+            blob
+        };
+        let one = run(1);
+        for shards in [2usize, 3, 4] {
+            let multi = run(shards);
+            for (i, (a, b)) in one.iter().zip(&multi).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "{kind:?} shards={shards} elem {i}: {a} vs {b}"
+                );
+            }
+        }
     }
 }
 
