@@ -1,11 +1,14 @@
 # AdaLomo reproduction — build/test/lint entry points.
 #
 # Tier-1 verify is `make ci-tier1`; `make lint` adds the fmt + clippy gates
-# wired alongside it (also run by .github/workflows/ci.yml).
+# wired alongside it. The GitHub workflow (.github/workflows/ci.yml) runs
+# THESE targets — never re-spell the commands in YAML, so the two cannot
+# drift.
 
 CARGO ?= cargo
 
-.PHONY: build test bench fmt fmt-fix clippy lint ci-tier1 ci artifacts
+.PHONY: build test bench bench-smoke fmt fmt-fix clippy lint ci-tier1 ci \
+	test-pjrt artifacts
 
 build:
 	$(CARGO) build --release
@@ -15,6 +18,13 @@ test:
 
 bench:
 	ADALOMO_BENCH_FAST=1 $(CARGO) bench
+
+# The two host-only micro benches CI smoke-runs on every PR (and uploads
+# as a workflow artifact): optimizer-step cost + the async-pipeline
+# overlap-efficiency numbers, and runtime dispatch/transfer overhead.
+bench-smoke:
+	ADALOMO_BENCH_FAST=1 $(CARGO) bench --bench bench_micro_optim
+	ADALOMO_BENCH_FAST=1 $(CARGO) bench --bench bench_micro_runtime
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -30,6 +40,11 @@ lint: fmt clippy
 ci-tier1: build test
 
 ci: lint ci-tier1
+
+# Artifact-gated integration tests (need `make artifacts` + real PJRT —
+# run by the workflow's manually-dispatched `pjrt` job).
+test-pjrt:
+	$(CARGO) test -q -- --ignored
 
 # Python AOT pass: lowers the JAX/Pallas layers to HLO artifacts the Rust
 # runtime executes. Requires jax in the environment.

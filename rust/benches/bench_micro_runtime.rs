@@ -2,6 +2,7 @@
 //! uploads, metrics reads — the L3 hot-path components the perf pass
 //! optimizes (EXPERIMENTS.md §Perf).
 
+use adalomo::coordinator::pipeline;
 use adalomo::data::{loader::DataLoader, Domain};
 use adalomo::experiments as exp;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
@@ -58,6 +59,29 @@ fn host_blob_section() {
             t += 1;
             engine.step(&mut blob, &grads, t, 1e-3, 0.0).unwrap();
         },
+    );
+
+    // Bucketed-exchange overlap on the same blob (coordinator/pipeline):
+    // exposed step time vs the fully-exposed compute + comm sum.
+    let mut cfg =
+        pipeline::PipelineConfig::new(2, layout.params_len.div_ceil(8));
+    cfg.n_shards = pool::shards_with_reserved(2).min(4);
+    let (_, r) = pipeline::run_pipelined(
+        &layout,
+        OptKind::AdaLomo,
+        ShardMode::Contiguous,
+        &blob0,
+        pipeline::synthetic_sources(2, 3, 0.02),
+        &cfg,
+    )
+    .unwrap();
+    println!(
+        "pipelined exchange x2 ranks ({} buckets): exposed {:.3}ms vs \
+         compute+comm {:.3}ms ({:.2}x overlap)",
+        r.n_buckets,
+        r.exposed_secs * 1e3,
+        (r.compute_secs + r.comm_secs) * 1e3,
+        r.overlap_efficiency
     );
     println!();
 }

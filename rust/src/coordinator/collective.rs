@@ -51,6 +51,38 @@ pub fn zero3_step_time(param_bytes: f64, grad_bytes: f64, n_ranks: usize, fabric
         + time(Op::ReduceScatter, grad_bytes, n_ranks, fabric)
 }
 
+/// Cost of reducing ONE `bucket_bytes` bucket of a larger all-reduce that
+/// is executed bucket-by-bucket (the async pipeline's exchange grain).
+/// Each bucket is a complete ring all-reduce of its own payload: the
+/// bandwidth term covers only the bucket's bytes, but every bucket re-pays
+/// the full `2(n-1)` hop latencies. That latency tax is why callers must
+/// NOT approximate per-bucket cost by dividing `time(AllReduce, total)` by
+/// the bucket count — the division drops the extra `alpha` terms entirely.
+pub fn allreduce_bucket_time(bucket_bytes: f64, n_ranks: usize, fabric: Fabric) -> f64 {
+    time(Op::AllReduce, bucket_bytes, n_ranks, fabric)
+}
+
+/// Per-bucket times for an all-reduce of `total_bytes` executed in
+/// `bucket_bytes` grains (last bucket partial). The sum is what a bucketed
+/// exchange pays end-to-end; each element is the grain the pipeline can
+/// hide behind optimizer compute.
+pub fn bucketed_allreduce_times(
+    total_bytes: f64,
+    bucket_bytes: f64,
+    n_ranks: usize,
+    fabric: Fabric,
+) -> Vec<f64> {
+    assert!(bucket_bytes > 0.0, "bucket_bytes must be positive");
+    let n = (total_bytes / bucket_bytes).ceil().max(0.0) as usize;
+    (0..n)
+        .map(|i| {
+            let lo = i as f64 * bucket_bytes;
+            let b = (total_bytes - lo).min(bucket_bytes);
+            allreduce_bucket_time(b, n_ranks, fabric)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +118,34 @@ mod tests {
             time(Op::AllGather, 8.0, 32, f)
                 > time(Op::AllGather, 8.0, 4, f)
         );
+    }
+
+    #[test]
+    fn bucketed_allreduce_pays_latency_per_bucket() {
+        let f = Fabric::default();
+        let total = 64e6;
+        let times = bucketed_allreduce_times(total, 8e6, 8, f);
+        assert_eq!(times.len(), 8);
+        let sum: f64 = times.iter().sum();
+        let mono = time(Op::AllReduce, total, 8, f);
+        // Bucketing never beats the monolithic exchange on raw fabric
+        // time: the bandwidth terms are identical, the latency terms
+        // multiply by the bucket count.
+        assert!(sum > mono, "{sum} vs {mono}");
+        let extra_alpha = 7.0 * 2.0 * (8.0 - 1.0) * f.alpha;
+        assert!((sum - mono - extra_alpha).abs() < 1e-12);
+        // One bucket >= total degenerates to the monolithic cost.
+        let one = bucketed_allreduce_times(total, total, 8, f);
+        assert_eq!(one.len(), 1);
+        assert!((one[0] - mono).abs() < 1e-15);
+        // A partial last bucket is costed by its own bytes.
+        let ragged = bucketed_allreduce_times(10e6, 4e6, 4, f);
+        assert_eq!(ragged.len(), 3);
+        assert!((ragged[2] - allreduce_bucket_time(2e6, 4, f)).abs() < 1e-15);
+        // Single rank: every bucket is free, like the monolithic op.
+        assert!(bucketed_allreduce_times(1e6, 1e5, 1, f)
+            .iter()
+            .all(|&t| t == 0.0));
     }
 
     #[test]

@@ -10,9 +10,12 @@
 //!   simulation and the worker pool.
 //! * [`workers`] — thread-per-rank data-parallel execution (local-SGD
 //!   periodic parameter averaging; each rank owns a PJRT session).
+//! * [`pipeline`] — async rank pipeline: bucketed gradient exchange
+//!   overlapped with flat-engine task stepping (host mirror).
 
 pub mod collective;
 pub mod fused;
+pub mod pipeline;
 pub mod schedule;
 pub mod sharding;
 pub mod trainer;

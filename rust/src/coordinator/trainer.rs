@@ -227,6 +227,18 @@ impl<'s> Trainer<'s> {
     /// `eval_curve` points are comparable instead of drifting through the
     /// validation stream.
     pub fn evaluate(&mut self) -> Result<EvalAccum> {
+        self.evaluate_current()
+    }
+
+    /// Evaluate a host checkpoint directly: upload it and score the fixed
+    /// validation set — the one-call form the local-SGD leader (and any
+    /// pipeline driver holding a host blob) uses on round boundaries.
+    pub fn evaluate_blob(&mut self, blob: &HostBlob) -> Result<EvalAccum> {
+        self.set_host_blob(blob)?;
+        self.evaluate_current()
+    }
+
+    fn evaluate_current(&mut self) -> Result<EvalAccum> {
         let params = self.params_buffer()?;
         let val = self
             .val_loader

@@ -11,23 +11,31 @@
 //! accumulating across the whole run instead of being wiped at every sync
 //! point, and the kernel-side step counter continues across rounds
 //! (`Trainer::set_step_offset`) so bias corrections match the warm state.
+//!
+//! Sync-round traffic is slim in both directions ([`Broadcast`]): only
+//! round 1 ships a full blob (ranks have no state yet); afterwards the
+//! leader broadcasts just the averaged parameter region and ranks return
+//! just their parameter region plus two scalars — the old protocol's
+//! O(ranks × blob_len) clones per round shrink to O(ranks × params_len).
 //! Round averaging itself runs on the flat-engine worker pool
 //! ([`crate::optim::pool::par_average`]) — element-parallel and
 //! bit-identical to the sequential loop for any worker count.
 //!
 //! This is the "runs for real" half of the distributed story; the
 //! analytic half (exact ZeRO-3 memory and NCCL timing) lives in `memsim`
-//! and [`super::collective`].
+//! and [`super::collective`], and the gradient-granular overlap of
+//! exchange with optimizer stepping lives in [`super::pipeline`].
 
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::RunConfig;
 use crate::data::{loader::DataLoader, Domain};
 use crate::optim::pool;
+use crate::optim::update::sum_sq;
 use crate::runtime::{HostBlob, Manifest, Session};
 use crate::util::rng::Pcg32;
 
@@ -49,6 +57,28 @@ pub struct WorkerReport {
     pub aggregate_tokens_per_sec: f64,
 }
 
+/// Leader -> rank sync payload. Round 1 must ship the whole blob (the
+/// rank has no retained state yet); every later round ships only the
+/// averaged parameter region — ranks splice exactly that region anyway,
+/// so the full-blob clone per rank per round was pure waste.
+#[derive(Debug, Clone)]
+pub enum Broadcast {
+    /// Full initial blob (first round only).
+    Init(HostBlob),
+    /// Averaged parameter region (`params_len` floats), later rounds.
+    Params(Vec<f32>),
+}
+
+/// One rank's round result: its parameter region, the round's final train
+/// loss, and the sum of squares of its optimizer-state region (the
+/// state-survival observable). The full blob stays rank-local.
+#[derive(Debug, Clone)]
+struct RankRound {
+    params: Vec<f32>,
+    final_loss: f32,
+    state_sumsq: f32,
+}
+
 /// Resume blob for the next round: keep the rank's own optimizer state and
 /// metrics, splice in only the averaged parameter region. The first round
 /// (no retained blob yet) adopts the broadcast wholesale.
@@ -67,6 +97,31 @@ pub fn splice_params(
     }
 }
 
+/// Apply one leader [`Broadcast`] to the rank's retained blob. The
+/// params-only form requires a retained blob — receiving it cold is a
+/// protocol violation, not something to paper over.
+pub fn apply_broadcast(
+    prev: Option<HostBlob>,
+    msg: Broadcast,
+    params_len: usize,
+) -> Result<HostBlob> {
+    match msg {
+        Broadcast::Init(blob) => Ok(splice_params(prev, blob, params_len)),
+        Broadcast::Params(avg) => {
+            ensure!(
+                avg.len() == params_len,
+                "params broadcast of {} != params_len {params_len}",
+                avg.len()
+            );
+            let Some(mut blob) = prev else {
+                bail!("params-only broadcast before any full init");
+            };
+            blob.data[..params_len].copy_from_slice(&avg);
+            Ok(blob)
+        }
+    }
+}
+
 /// Run `rounds` x `sync_every` steps on `n_ranks` threads with parameter
 /// averaging between rounds.
 pub fn run_local_sgd(
@@ -80,14 +135,14 @@ pub fn run_local_sgd(
     let started = std::time::Instant::now();
     let layout_key = Manifest::layout_key(&base_cfg.preset, &base_cfg.opt);
 
-    // Rank threads live for the whole run; channel pairs carry blobs
-    // leader <-> rank between rounds.
+    // Rank threads live for the whole run; channel pairs carry sync
+    // payloads leader <-> rank between rounds.
     let mut to_ranks = Vec::new();
     let mut from_ranks = Vec::new();
     let mut handles = Vec::new();
     for rank in 0..n_ranks {
-        let (tx_cmd, rx_cmd) = mpsc::channel::<Option<HostBlob>>();
-        let (tx_res, rx_res) = mpsc::channel::<Result<(HostBlob, f32)>>();
+        let (tx_cmd, rx_cmd) = mpsc::channel::<Option<Broadcast>>();
+        let (tx_res, rx_res) = mpsc::channel::<Result<RankRound>>();
         to_ranks.push(tx_cmd);
         from_ranks.push(rx_res);
         let cfg = {
@@ -102,8 +157,9 @@ pub fn run_local_sgd(
         let rank_layout_key = layout_key.clone();
         handles.push(thread::spawn(move || -> Result<()> {
             let session = Session::open(&dir)?;
-            let params_len =
-                session.manifest.layout(&rank_layout_key)?.params_len;
+            let layout =
+                session.manifest.layout(&rank_layout_key)?.clone();
+            let params_len = layout.params_len;
             let mut stream_rng = Pcg32::new(cfg.seed, 7);
             let preset = session.manifest.preset(&cfg.preset)?.clone();
             let (b, t) = (preset.batch_size, preset.seq_len);
@@ -115,9 +171,9 @@ pub fn run_local_sgd(
             let mut rounds_done = 0usize;
             while let Ok(cmd) = rx_cmd.recv() {
                 // None is the shutdown signal from the leader.
-                let Some(broadcast) = cmd else { break };
+                let Some(msg) = cmd else { break };
                 let start_blob =
-                    splice_params(resume.take(), broadcast, params_len);
+                    apply_broadcast(resume.take(), msg, params_len)?;
                 let loader = DataLoader::lm(
                     domain,
                     stream_rng.next_u64(),
@@ -135,9 +191,14 @@ pub fn run_local_sgd(
                 trainer.set_host_blob(&start_blob)?;
                 let report = trainer.train_with_schedule(schedule)?;
                 let blob = trainer.host_blob()?;
-                resume = Some(blob.clone());
+                let round = RankRound {
+                    params: blob.data[..params_len].to_vec(),
+                    final_loss: report.final_loss,
+                    state_sumsq: sum_sq(blob.state_region(&layout)),
+                };
+                resume = Some(blob);
                 rounds_done += 1;
-                tx_res.send(Ok((blob, report.final_loss)))?;
+                tx_res.send(Ok(round))?;
             }
             Ok(())
         }));
@@ -156,35 +217,41 @@ pub fn run_local_sgd(
     init_trainer.init_from_seed()?;
     let mut global = init_trainer.host_blob()?;
 
+    let plen = layout.params_len;
     let mut per_rank_final_loss = vec![0f32; n_ranks];
-    let mut last_blobs: Vec<HostBlob> = Vec::new();
-    for _round in 0..rounds {
+    let mut per_rank_state_sumsq = vec![0f32; n_ranks];
+    let mut avg_params = vec![0f32; plen];
+    for round in 0..rounds {
         for tx in &to_ranks {
-            tx.send(Some(global.clone()))
-                .map_err(|e| anyhow!("send: {e}"))?;
+            // Round 1: full blob (ranks are cold). Later rounds: only the
+            // averaged parameter region — the slim-broadcast protocol.
+            let msg = if round == 0 {
+                Broadcast::Init(global.clone())
+            } else {
+                Broadcast::Params(avg_params.clone())
+            };
+            tx.send(Some(msg)).map_err(|e| anyhow!("send: {e}"))?;
         }
-        let mut blobs = Vec::with_capacity(n_ranks);
+        let mut rank_params = Vec::with_capacity(n_ranks);
         for (rank, rx) in from_ranks.iter().enumerate() {
-            let (blob, loss) = rx.recv().map_err(|e| anyhow!("recv: {e}"))??;
-            per_rank_final_loss[rank] = loss;
-            blobs.push(blob);
+            let round_res =
+                rx.recv().map_err(|e| anyhow!("recv: {e}"))??;
+            per_rank_final_loss[rank] = round_res.final_loss;
+            per_rank_state_sumsq[rank] = round_res.state_sumsq;
+            rank_params.push(round_res.params);
         }
-        // Average the parameter region on the flat-engine pool; keep the
-        // leader's state/metrics zeroed — ranks never read them back (each
-        // splices only the params region into its retained blob).
-        let plen = layout.params_len;
-        let mut avg = vec![0f32; layout.blob_len];
+        // Average the parameter regions on the flat-engine pool; the
+        // leader's own state/metrics stay untouched — ranks never read
+        // them back.
         let sources: Vec<&[f32]> =
-            blobs.iter().map(|blob| &blob.data[..plen]).collect();
+            rank_params.iter().map(|p| p.as_slice()).collect();
         pool::par_average(
-            &mut avg[..plen],
+            &mut avg_params,
             &sources,
             1.0 / n_ranks as f32,
             pool::default_shards(),
         );
-        drop(sources);
-        last_blobs = blobs;
-        global = HostBlob::new(avg, &layout_key, &layout)?;
+        global.data[..plen].copy_from_slice(&avg_params);
     }
     for tx in &to_ranks {
         let _ = tx.send(None);
@@ -192,11 +259,6 @@ pub fn run_local_sgd(
     for h in handles {
         h.join().map_err(|_| anyhow!("worker panicked"))??;
     }
-
-    let per_rank_state_sumsq: Vec<f32> = last_blobs
-        .iter()
-        .map(|blob| crate::optim::update::sum_sq(blob.state_region(&layout)))
-        .collect();
 
     // Evaluate the averaged model.
     let val_loader =
@@ -209,8 +271,7 @@ pub fn run_local_sgd(
         DataLoader::lm(domain, base_cfg.seed, b, t, 2 * b * (t + 1)),
         Some(val_loader),
     )?;
-    eval_trainer.set_host_blob(&global)?;
-    let accum = eval_trainer.evaluate()?;
+    let accum = eval_trainer.evaluate_blob(&global)?;
 
     let wall = started.elapsed().as_secs_f64();
     let tokens = (n_ranks * rounds * sync_every * b * t) as f64;
@@ -278,5 +339,55 @@ mod tests {
         // First round: no retained blob yet -> broadcast adopted wholesale.
         let first = splice_params(None, broadcast.clone(), l.params_len);
         assert_eq!(first.data, broadcast.data);
+    }
+
+    #[test]
+    fn slim_broadcast_splices_params_only() {
+        let l = layout();
+        let prev = HostBlob::new(
+            (0..20).map(|i| i as f32 + 1.0).collect(),
+            "t/x",
+            &l,
+        )
+        .unwrap();
+        let avg: Vec<f32> = (0..6).map(|i| 200.0 + i as f32).collect();
+        let next = apply_broadcast(
+            Some(prev.clone()),
+            Broadcast::Params(avg.clone()),
+            l.params_len,
+        )
+        .unwrap();
+        assert_eq!(next.params(&l), avg.as_slice());
+        assert_eq!(next.state_region(&l), prev.state_region(&l));
+        assert_eq!(next.metrics(&l), prev.metrics(&l));
+        // Protocol violations fail loudly: params-only before init, and a
+        // wrong-length params region.
+        assert!(apply_broadcast(
+            None,
+            Broadcast::Params(avg.clone()),
+            l.params_len
+        )
+        .is_err());
+        assert!(apply_broadcast(
+            Some(prev.clone()),
+            Broadcast::Params(vec![0.0; 3]),
+            l.params_len
+        )
+        .is_err());
+        // Init behaves exactly like splice_params.
+        let init = apply_broadcast(
+            Some(prev.clone()),
+            Broadcast::Init(prev.clone()),
+            l.params_len,
+        )
+        .unwrap();
+        assert_eq!(init.data, prev.data);
+        let cold = apply_broadcast(
+            None,
+            Broadcast::Init(prev.clone()),
+            l.params_len,
+        )
+        .unwrap();
+        assert_eq!(cold.data, prev.data);
     }
 }

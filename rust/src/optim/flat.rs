@@ -441,6 +441,18 @@ impl FlatOptimizer {
         self.tasks.iter().map(|t| t.name.as_str()).collect()
     }
 
+    /// Number of trainable tasks (valid indices for [`Self::step_tasks`]).
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// `(blob offset, size)` of every task, indexed in fused-backward walk
+    /// order — what a bucket scheduler needs to map reduced gradient
+    /// ranges onto steppable tasks ([`crate::coordinator::pipeline`]).
+    pub fn task_extents(&self) -> Vec<(usize, usize)> {
+        self.tasks.iter().map(|t| (t.offset, t.size)).collect()
+    }
+
     /// One optimizer step over the flat blob, in place. `grads` is the
     /// gradient image of the parameter region (>= `params_len` floats,
     /// indexed by segment offset); `t` is the 1-based step, `lr` the
@@ -453,6 +465,61 @@ impl FlatOptimizer {
         lr: f32,
         wd: f32,
     ) -> Result<()> {
+        self.validate(blob, grads)?;
+        match self.mode {
+            ShardMode::Segments => {
+                self.step_segments(blob, grads, t, lr, wd, None)
+            }
+            ShardMode::Contiguous => {
+                self.step_contiguous(blob, grads, t, lr, wd, None)
+            }
+        }
+        Ok(())
+    }
+
+    /// Step only the tasks in `subset` (strictly-increasing indices into
+    /// the fused-order task list, as reported by [`Self::task_extents`]).
+    /// Each task's update is self-contained — grouped normalization and
+    /// the factored reductions never cross task boundaries — so stepping a
+    /// partition of the tasks across several calls is bit-identical to one
+    /// whole-image [`Self::step`] with the same gradient values. That is
+    /// the property the async rank pipeline rests on: a task becomes
+    /// steppable the moment the last gradient bucket covering it has been
+    /// reduced, while later buckets are still in flight.
+    pub fn step_tasks(
+        &mut self,
+        blob: &mut [f32],
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+        subset: &[usize],
+    ) -> Result<()> {
+        self.validate(blob, grads)?;
+        ensure!(
+            subset.windows(2).all(|w| w[0] < w[1]),
+            "task subset must be strictly increasing"
+        );
+        let Some(&last) = subset.last() else {
+            return Ok(()); // empty subset: nothing to do, spawn no workers
+        };
+        ensure!(
+            last < self.tasks.len(),
+            "task index {last} out of range ({} tasks)",
+            self.tasks.len()
+        );
+        match self.mode {
+            ShardMode::Segments => {
+                self.step_segments(blob, grads, t, lr, wd, Some(subset))
+            }
+            ShardMode::Contiguous => {
+                self.step_contiguous(blob, grads, t, lr, wd, Some(subset))
+            }
+        }
+        Ok(())
+    }
+
+    fn validate(&self, blob: &[f32], grads: &[f32]) -> Result<()> {
         ensure!(
             blob.len() == self.blob_len,
             "blob len {} != layout {}",
@@ -465,12 +532,6 @@ impl FlatOptimizer {
             grads.len(),
             self.params_len
         );
-        match self.mode {
-            ShardMode::Segments => self.step_segments(blob, grads, t, lr, wd),
-            ShardMode::Contiguous => {
-                self.step_contiguous(blob, grads, t, lr, wd)
-            }
-        }
         Ok(())
     }
 
@@ -486,6 +547,7 @@ impl FlatOptimizer {
         self.step(&mut blob.data, grads, t, lr, wd)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn step_segments(
         &mut self,
         blob: &mut [f32],
@@ -493,6 +555,7 @@ impl FlatOptimizer {
         t: u64,
         lr: f32,
         wd: f32,
+        subset: Option<&[usize]>,
     ) {
         let parts =
             distribute(blob, &self.spans, self.n_shards, self.tasks.len());
@@ -500,6 +563,8 @@ impl FlatOptimizer {
         let h = self.hyper;
         let tasks = &self.tasks;
         let shard_tasks = &self.shard_tasks;
+        let mask = task_mask(self.tasks.len(), subset);
+        let mask = &mask;
         let mut jobs = Vec::with_capacity(self.n_shards);
         for ((w, mut my_parts), scratch) in
             parts.into_iter().enumerate().zip(self.scratch.iter_mut())
@@ -507,6 +572,9 @@ impl FlatOptimizer {
             let my = &shard_tasks[w];
             jobs.push(move || {
                 for &ti in my {
+                    if !mask[ti] {
+                        continue;
+                    }
                     let part = std::mem::take(&mut my_parts[ti]);
                     run_task_sequential(
                         &tasks[ti], part, grads, kind, h, t, lr, wd, scratch,
@@ -517,6 +585,7 @@ impl FlatOptimizer {
         pool::run_jobs(jobs);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn step_contiguous(
         &mut self,
         blob: &mut [f32],
@@ -524,6 +593,7 @@ impl FlatOptimizer {
         t: u64,
         lr: f32,
         wd: f32,
+        subset: Option<&[usize]>,
     ) {
         let parts =
             distribute(blob, &self.spans, self.n_shards, self.tasks.len());
@@ -537,12 +607,26 @@ impl FlatOptimizer {
         {
             jobs.push(move || {
                 run_worker_contiguous(
-                    tasks, my_parts, grads, kind, h, t, lr, wd, w, sync_ref,
-                    scratch,
+                    tasks, my_parts, subset, grads, kind, h, t, lr, wd, w,
+                    sync_ref, scratch,
                 );
             });
         }
         pool::run_jobs(jobs);
+    }
+}
+
+/// Dense membership mask for a task subset (`None` = every task).
+fn task_mask(n_tasks: usize, subset: Option<&[usize]>) -> Vec<bool> {
+    match subset {
+        None => vec![true; n_tasks],
+        Some(list) => {
+            let mut mask = vec![false; n_tasks];
+            for &ti in list {
+                mask[ti] = true;
+            }
+            mask
+        }
     }
 }
 
@@ -802,15 +886,17 @@ fn run_task_sequential(
     }
 }
 
-/// Contiguous-mode worker: walks every task in fused order; elementwise
-/// rules need no synchronization, factored rules run the two-pass
-/// reductions described in the module docs. Every worker executes the same
-/// barrier sequence per task (empty ranges included), so the barrier
-/// counts always line up.
+/// Contiguous-mode worker: walks the selected tasks in fused order
+/// (`subset: None` = all of them); elementwise rules need no
+/// synchronization, factored rules run the two-pass reductions described
+/// in the module docs. Every worker walks the identical task sequence and
+/// executes the same barrier sequence per task (empty ranges included), so
+/// the barrier counts always line up.
 #[allow(clippy::too_many_arguments)]
 fn run_worker_contiguous(
     specs: &[TaskSpec],
-    parts: Vec<TaskPart<'_>>,
+    mut parts: Vec<TaskPart<'_>>,
+    subset: Option<&[usize]>,
     grads: &[f32],
     kind: OptKind,
     h: Hyper,
@@ -821,144 +907,187 @@ fn run_worker_contiguous(
     sync: &SyncState,
     scratch: &mut Scratch,
 ) {
-    for (spec, part) in specs.iter().zip(parts) {
-        let (lo, hi) = spec.ranges[w];
-        let len = hi - lo;
-        let g = &grads[spec.offset + lo..spec.offset + hi];
-        let theta = part.theta.unwrap_or_default();
-        let a = part.a.unwrap_or_default();
-        let b = part.b.unwrap_or_default();
-        match kind {
-            OptKind::Sgd | OptKind::Lomo => {
-                if len > 0 {
-                    update::sgd_slice(theta, g, lr);
-                }
+    match subset {
+        None => {
+            for (spec, part) in specs.iter().zip(parts) {
+                contiguous_task(
+                    spec, part, grads, kind, h, t, lr, wd, w, sync, scratch,
+                );
             }
-            OptKind::SgdMomentum => {
-                if len > 0 {
-                    update::sgd_momentum_slice(theta, g, a, t, lr, h);
-                }
+        }
+        Some(list) => {
+            for &ti in list {
+                let part = std::mem::take(&mut parts[ti]);
+                contiguous_task(
+                    &specs[ti],
+                    part,
+                    grads,
+                    kind,
+                    h,
+                    t,
+                    lr,
+                    wd,
+                    w,
+                    sync,
+                    scratch,
+                );
             }
-            OptKind::SgdVariance => {
-                if len > 0 {
-                    update::sgd_variance_slice(theta, g, a, t, lr, h);
-                }
+        }
+    }
+}
+
+/// One contiguous-mode task on one worker (the body shared by the full
+/// walk and the subset walk).
+#[allow(clippy::too_many_arguments)]
+fn contiguous_task(
+    spec: &TaskSpec,
+    part: TaskPart<'_>,
+    grads: &[f32],
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    w: usize,
+    sync: &SyncState,
+    scratch: &mut Scratch,
+) {
+    let (lo, hi) = spec.ranges[w];
+    let len = hi - lo;
+    let g = &grads[spec.offset + lo..spec.offset + hi];
+    let theta = part.theta.unwrap_or_default();
+    let a = part.a.unwrap_or_default();
+    let b = part.b.unwrap_or_default();
+    match kind {
+        OptKind::Sgd | OptKind::Lomo => {
+            if len > 0 {
+                update::sgd_slice(theta, g, lr);
             }
-            OptKind::AdamW => {
-                if len > 0 {
-                    update::adamw_slice(theta, g, a, b, t, lr, wd, h);
-                }
+        }
+        OptKind::SgdMomentum => {
+            if len > 0 {
+                update::sgd_momentum_slice(theta, g, a, t, lr, h);
             }
-            OptKind::AdaLomo | OptKind::Adafactor if spec.cols == 0 => {
-                // Factored-vector path: full second moment `v` in `a`.
-                scratch.ensure_u(len);
-                let u = &mut scratch.u[..len];
-                if len > 0 {
-                    if kind == OptKind::AdaLomo {
-                        let bias = update::bias_correction(h.adalomo_beta, t);
-                        update::adalomo_vec_raw(g, a, bias, h, u);
-                    } else {
-                        let beta2t =
-                            1.0 - (t as f32).powf(-h.adafactor_decay_pow);
-                        update::adafactor_vec_raw(g, a, beta2t, h, u);
-                    }
-                }
-                sync.post_scalars(w, sum_sq(u), sum_sq(theta));
-                sync.wait();
-                if w == 0 {
-                    sync.with_slots(|sl| {
-                        let f = apply_factor(kind, h, lr, spec.size, sl);
-                        sl.scale = f;
-                    });
-                }
-                sync.wait();
-                let f = sync.read_scale();
-                for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
-                    *thi -= f * ui;
-                }
+        }
+        OptKind::SgdVariance => {
+            if len > 0 {
+                update::sgd_variance_slice(theta, g, a, t, lr, h);
             }
-            OptKind::AdaLomo | OptKind::Adafactor => {
-                // Factored 2-D path: r rows in `a`, whole c on worker 0
-                // in `b`.
-                let n = spec.cols;
-                let (beta, floor) = if kind == OptKind::AdaLomo {
-                    (h.adalomo_beta, 0.0)
+        }
+        OptKind::AdamW => {
+            if len > 0 {
+                update::adamw_slice(theta, g, a, b, t, lr, wd, h);
+            }
+        }
+        OptKind::AdaLomo | OptKind::Adafactor if spec.cols == 0 => {
+            // Factored-vector path: full second moment `v` in `a`.
+            scratch.ensure_u(len);
+            let u = &mut scratch.u[..len];
+            if len > 0 {
+                if kind == OptKind::AdaLomo {
+                    let bias = update::bias_correction(h.adalomo_beta, t);
+                    update::adalomo_vec_raw(g, a, bias, h, u);
                 } else {
-                    (
-                        1.0 - (t as f32).powf(-h.adafactor_decay_pow),
-                        h.adafactor_eps1,
-                    )
-                };
-                // Phase A: disjoint row-factor updates + per-worker column
-                // accumulators.
-                scratch.zero_cvec(n);
-                if len > 0 {
-                    update::factor_rows(g, n, a, &mut scratch.cvec, beta, floor);
+                    let beta2t =
+                        1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+                    update::adafactor_vec_raw(g, a, beta2t, h, u);
                 }
-                let sum_r_part: f32 = a.iter().sum();
-                sync.swap_cvec(w, &mut scratch.cvec);
-                sync.post_scalars(w, sum_r_part, 0.0);
-                sync.wait();
-                // Combine (worker 0): c <- beta*c + Σ_w acc_w, publish it,
-                // and fold sum_r + bias into the raw-u multiplier.
-                if w == 0 {
-                    sync.with_slots(|sl| {
-                        for (j, cj) in b.iter_mut().enumerate() {
-                            let mut acc = beta * *cj;
-                            for cv in &sl.cvecs {
-                                acc += cv[j];
-                            }
-                            *cj = acc;
+            }
+            sync.post_scalars(w, sum_sq(u), sum_sq(theta));
+            sync.wait();
+            if w == 0 {
+                sync.with_slots(|sl| {
+                    let f = apply_factor(kind, h, lr, spec.size, sl);
+                    sl.scale = f;
+                });
+            }
+            sync.wait();
+            let f = sync.read_scale();
+            for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
+                *thi -= f * ui;
+            }
+        }
+        OptKind::AdaLomo | OptKind::Adafactor => {
+            // Factored 2-D path: r rows in `a`, whole c on worker 0
+            // in `b`.
+            let n = spec.cols;
+            let (beta, floor) = if kind == OptKind::AdaLomo {
+                (h.adalomo_beta, 0.0)
+            } else {
+                (
+                    1.0 - (t as f32).powf(-h.adafactor_decay_pow),
+                    h.adafactor_eps1,
+                )
+            };
+            // Phase A: disjoint row-factor updates + per-worker column
+            // accumulators.
+            scratch.zero_cvec(n);
+            if len > 0 {
+                update::factor_rows(g, n, a, &mut scratch.cvec, beta, floor);
+            }
+            let sum_r_part: f32 = a.iter().sum();
+            sync.swap_cvec(w, &mut scratch.cvec);
+            sync.post_scalars(w, sum_r_part, 0.0);
+            sync.wait();
+            // Combine (worker 0): c <- beta*c + Σ_w acc_w, publish it,
+            // and fold sum_r + bias into the raw-u multiplier.
+            if w == 0 {
+                sync.with_slots(|sl| {
+                    for (j, cj) in b.iter_mut().enumerate() {
+                        let mut acc = beta * *cj;
+                        for cv in &sl.cvecs {
+                            acc += cv[j];
                         }
-                        sl.c_combined.clear();
-                        sl.c_combined.extend_from_slice(b);
-                        let sum_r: f32 = sl.pa.iter().sum();
-                        sl.aux = if kind == OptKind::AdaLomo {
-                            let bias =
-                                update::bias_correction(h.adalomo_beta, t);
-                            1.0 / (sum_r.max(h.eps_div) * bias)
-                        } else {
-                            1.0 / sum_r.max(h.adafactor_eps1)
-                        };
-                    });
-                }
-                sync.wait();
-                // Phase B: raw u over the worker's rows + RMS partials.
-                let inv_sum = sync.read_aux();
-                sync.copy_combined_c(&mut scratch.cbuf);
-                scratch.ensure_u(len);
-                let u = &mut scratch.u[..len];
-                if len > 0 {
-                    let (eps, no_sqrt) = if kind == OptKind::AdaLomo {
-                        (h.eps_div, h.no_sqrt)
+                        *cj = acc;
+                    }
+                    sl.c_combined.clear();
+                    sl.c_combined.extend_from_slice(b);
+                    let sum_r: f32 = sl.pa.iter().sum();
+                    sl.aux = if kind == OptKind::AdaLomo {
+                        let bias =
+                            update::bias_correction(h.adalomo_beta, t);
+                        1.0 / (sum_r.max(h.eps_div) * bias)
                     } else {
-                        (h.adafactor_eps1, false)
+                        1.0 / sum_r.max(h.adafactor_eps1)
                     };
-                    update::raw_u_rows(
-                        g,
-                        n,
-                        a,
-                        &scratch.cbuf,
-                        inv_sum,
-                        eps,
-                        no_sqrt,
-                        u,
-                    );
-                }
-                sync.post_scalars(w, sum_sq(u), sum_sq(theta));
-                sync.wait();
-                if w == 0 {
-                    sync.with_slots(|sl| {
-                        let f = apply_factor(kind, h, lr, spec.size, sl);
-                        sl.scale = f;
-                    });
-                }
-                sync.wait();
-                // Phase C: single scale-and-apply pass.
-                let f = sync.read_scale();
-                for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
-                    *thi -= f * ui;
-                }
+                });
+            }
+            sync.wait();
+            // Phase B: raw u over the worker's rows + RMS partials.
+            let inv_sum = sync.read_aux();
+            sync.copy_combined_c(&mut scratch.cbuf);
+            scratch.ensure_u(len);
+            let u = &mut scratch.u[..len];
+            if len > 0 {
+                let (eps, no_sqrt) = if kind == OptKind::AdaLomo {
+                    (h.eps_div, h.no_sqrt)
+                } else {
+                    (h.adafactor_eps1, false)
+                };
+                update::raw_u_rows(
+                    g,
+                    n,
+                    a,
+                    &scratch.cbuf,
+                    inv_sum,
+                    eps,
+                    no_sqrt,
+                    u,
+                );
+            }
+            sync.post_scalars(w, sum_sq(u), sum_sq(theta));
+            sync.wait();
+            if w == 0 {
+                sync.with_slots(|sl| {
+                    let f = apply_factor(kind, h, lr, spec.size, sl);
+                    sl.scale = f;
+                });
+            }
+            sync.wait();
+            // Phase C: single scale-and-apply pass.
+            let f = sync.read_scale();
+            for (thi, &ui) in theta.iter_mut().zip(u.iter()) {
+                *thi -= f * ui;
             }
         }
     }
@@ -1151,6 +1280,62 @@ mod tests {
             opt.shard_tasks.iter().flatten().copied().collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..opt.tasks.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn step_tasks_partition_matches_full_step() {
+        for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+            let l = layout_for(OptKind::AdaLomo);
+            let (blob0, grads) = seeded_blob_and_grads(&l, 17);
+            let mut full = blob0.clone();
+            let mut opt =
+                FlatOptimizer::new(OptKind::AdaLomo, &l, 3, mode).unwrap();
+            opt.step(&mut full, &grads, 1, 1e-2, 0.0).unwrap();
+            // The same step delivered as three interleaved task subsets
+            // must land bit-identically: per-task arithmetic is
+            // self-contained, which is what the bucket pipeline relies on.
+            let mut by_parts = blob0.clone();
+            let mut opt2 =
+                FlatOptimizer::new(OptKind::AdaLomo, &l, 3, mode).unwrap();
+            let n = opt2.n_tasks();
+            for k in 0..3usize {
+                let subset: Vec<usize> = (k..n).step_by(3).collect();
+                opt2.step_tasks(&mut by_parts, &grads, 1, 1e-2, 0.0, &subset)
+                    .unwrap();
+            }
+            for (i, (a, b)) in full.iter().zip(&by_parts).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{mode:?} elem {i}: {a} vs {b}"
+                );
+            }
+            // Empty subset is a no-op; malformed subsets are rejected.
+            opt2.step_tasks(&mut by_parts, &grads, 2, 1e-2, 0.0, &[])
+                .unwrap();
+            assert_eq!(full, by_parts);
+            assert!(opt2
+                .step_tasks(&mut by_parts, &grads, 2, 1e-2, 0.0, &[1, 0])
+                .is_err());
+            assert!(opt2
+                .step_tasks(&mut by_parts, &grads, 2, 1e-2, 0.0, &[n])
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn task_extents_cover_trainable_region() {
+        let l = layout_for(OptKind::AdaLomo);
+        let opt =
+            FlatOptimizer::new(OptKind::AdaLomo, &l, 2, ShardMode::Segments)
+                .unwrap();
+        let extents = opt.task_extents();
+        assert_eq!(extents.len(), opt.n_tasks());
+        let total: usize = extents.iter().map(|&(_, size)| size).sum();
+        let trainable: usize = l.trainable().map(|s| s.size).sum();
+        assert_eq!(total, trainable);
+        for &(off, size) in &extents {
+            assert!(off + size <= l.params_len);
+        }
     }
 
     #[test]

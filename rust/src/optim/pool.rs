@@ -12,6 +12,13 @@ pub fn default_shards() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Shard count for an engine sharing the machine with `reserved` other
+/// busy threads (e.g. the async pipeline's rank threads): the default
+/// count minus the reservation, never below 1.
+pub fn shards_with_reserved(reserved: usize) -> usize {
+    default_shards().saturating_sub(reserved).max(1)
+}
+
 /// Run one job per worker on scoped threads and join them all. Jobs may
 /// borrow from the caller's stack (scoped). A single job runs inline on the
 /// calling thread — no spawn cost for the 1-shard configuration.
@@ -106,6 +113,13 @@ mod tests {
         let mut x = 0;
         run_jobs(vec![|| x += 1]);
         assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn reserved_shards_never_drop_below_one() {
+        assert_eq!(shards_with_reserved(0), default_shards());
+        assert_eq!(shards_with_reserved(usize::MAX), 1);
+        assert!(shards_with_reserved(default_shards()) >= 1);
     }
 
     #[test]

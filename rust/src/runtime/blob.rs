@@ -84,6 +84,29 @@ impl HostBlob {
         &self.data[layout.params_len..layout.metrics_offset()]
     }
 
+    /// Zero-copy view of an arbitrary half-open blob range — bucket
+    /// granularity for the async pipeline, which exchanges fixed-size
+    /// ranges that ignore segment boundaries.
+    pub fn range<'a>(&'a self, lo: usize, hi: usize) -> Result<&'a [f32]> {
+        if lo > hi || hi > self.data.len() {
+            bail!("range [{lo}, {hi}) outside blob of {}", self.data.len());
+        }
+        Ok(&self.data[lo..hi])
+    }
+
+    /// Mutable counterpart of [`range`](Self::range) — what a reduced
+    /// gradient bucket is spliced through.
+    pub fn range_mut<'a>(
+        &'a mut self,
+        lo: usize,
+        hi: usize,
+    ) -> Result<&'a mut [f32]> {
+        if lo > hi || hi > self.data.len() {
+            bail!("range [{lo}, {hi}) outside blob of {}", self.data.len());
+        }
+        Ok(&mut self.data[lo..hi])
+    }
+
     pub fn metrics<'a>(&'a self, layout: &Layout) -> &'a [f32] {
         &self.data[layout.metrics_offset()..]
     }
@@ -232,6 +255,37 @@ mod tests {
     #[test]
     fn wrong_len_rejected() {
         assert!(HostBlob::new(vec![0.0; 3], "t/x", &layout(4)).is_err());
+    }
+
+    #[test]
+    fn bucket_range_views() {
+        let l = layout(4);
+        let mut blob = HostBlob::new(
+            (0..18).map(|i| i as f32).collect(),
+            "t/x",
+            &l,
+        )
+        .unwrap();
+        // A bucket that straddles the param/state boundary.
+        assert_eq!(blob.range(4, 8).unwrap(), &[4., 5., 6., 7.]);
+        blob.range_mut(4, 8).unwrap().fill(0.5);
+        assert_eq!(blob.data[4..8], [0.5, 0.5, 0.5, 0.5]);
+        assert!(blob.range(4, 99).is_err());
+        assert!(blob.range(8, 4).is_err());
+        // The layout side: which segments does the bucket touch?
+        let names: Vec<_> = l
+            .segments_in_range(4, 8)
+            .map(|s| s.name.clone())
+            .collect();
+        assert_eq!(names, vec!["w", "w@s"]);
+        // Empty ranges overlap nothing, even inside a segment's interior.
+        assert_eq!(l.segments_in_range(6, 6).count(), 0);
+        assert_eq!(l.segments_in_range(3, 3).count(), 0);
+        let all: Vec<_> = l
+            .segments_in_range(0, l.blob_len)
+            .map(|s| s.name.clone())
+            .collect();
+        assert_eq!(all, vec!["w", "w@s", "metrics"]);
     }
 
     #[test]

@@ -90,6 +90,20 @@ impl Layout {
     pub fn shardable_len(&self) -> usize {
         self.metrics_offset()
     }
+
+    /// Segments overlapping the half-open blob range `[lo, hi)` — the
+    /// bucket-granular view the async pipeline uses to map an exchange
+    /// bucket onto the tensors it touches (and, via the LAST overlapping
+    /// bucket, completes). An empty range (`lo >= hi`) overlaps nothing.
+    pub fn segments_in_range(
+        &self,
+        lo: usize,
+        hi: usize,
+    ) -> impl Iterator<Item = &Segment> {
+        self.segments
+            .iter()
+            .filter(move |s| lo < hi && s.offset < hi && s.offset + s.size > lo)
+    }
 }
 
 #[derive(Debug, Clone)]

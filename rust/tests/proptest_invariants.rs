@@ -2,7 +2,7 @@
 //! not in the offline registry). Each property runs across a deterministic
 //! sweep of random cases; failures print the case seed.
 
-use adalomo::coordinator::sharding;
+use adalomo::coordinator::{pipeline, sharding};
 use adalomo::data::loader::DataLoader;
 use adalomo::memsim::{liveness, memory, Arch};
 use adalomo::optim::flat::{synthetic_layout, FlatOptimizer, ShardMode};
@@ -369,6 +369,84 @@ fn prop_flat_contiguous_shard_count_stays_close() {
                     (a - b).abs() <= 1e-6,
                     "{kind:?} shards={shards} elem {i}: {a} vs {b}"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_matches_sequential_bitwise() {
+    // The async rank pipeline (bucketed gradient exchange overlapped with
+    // per-task engine steps) must be BITWISE identical to the lockstep
+    // flat-engine path under the fixed reduction order — swept over
+    // ranks × bucket sizes × shard plans × optimizers.
+    for kind in [
+        OptKind::AdaLomo,
+        OptKind::AdamW,
+        OptKind::Adafactor,
+        OptKind::SgdMomentum,
+    ] {
+        for seed in 0..3u64 {
+            let mut rng = Pcg32::seeded(9000 + seed);
+            let d = 3 + rng.below(6);
+            let v = 4 + rng.below(8);
+            let f = 3 + rng.below(5);
+            let shapes: Vec<(&str, Vec<usize>)> = vec![
+                ("embed", vec![v, d]),
+                ("l0.attn_norm", vec![d]),
+                ("l0.wq", vec![d, d]),
+                ("l0.w_down", vec![f, d]),
+                ("l1.wq", vec![d, d]),
+                ("final_norm", vec![d]),
+                ("head", vec![d, v]),
+            ];
+            let specs: Vec<(&str, &[usize])> =
+                shapes.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+            let layout = synthetic_layout(kind, &specs);
+            let mut blob0 = vec![0f32; layout.blob_len];
+            for x in blob0[..layout.params_len].iter_mut() {
+                *x = rng.normal() * 0.2;
+            }
+            for n_ranks in [1usize, 2, 3] {
+                let buckets = [
+                    1 + rng.below(layout.params_len),
+                    7,
+                    layout.params_len + 5, // single bucket covers all
+                ];
+                for bucket_elems in buckets {
+                    for (mode, n_shards) in [
+                        (ShardMode::Segments, 2usize),
+                        (ShardMode::Contiguous, 1),
+                        (ShardMode::Contiguous, 3),
+                    ] {
+                        let mut cfg =
+                            pipeline::PipelineConfig::new(3, bucket_elems);
+                        cfg.n_shards = n_shards;
+                        let srcs = || {
+                            pipeline::synthetic_sources(
+                                n_ranks,
+                                77 + seed,
+                                0.05,
+                            )
+                        };
+                        let (a, _) = pipeline::run_pipelined(
+                            &layout, kind, mode, &blob0, srcs(), &cfg,
+                        )
+                        .unwrap();
+                        let (b, _) = pipeline::run_sequential(
+                            &layout, kind, mode, &blob0, srcs(), &cfg,
+                        )
+                        .unwrap();
+                        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                            assert!(
+                                x.to_bits() == y.to_bits(),
+                                "{kind:?} {mode:?} ranks={n_ranks} \
+                                 bucket={bucket_elems} shards={n_shards} \
+                                 seed={seed} elem {i}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
             }
         }
     }
