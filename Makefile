@@ -1,14 +1,15 @@
 # AdaLomo reproduction — build/test/lint entry points.
 #
-# Tier-1 verify is `make ci-tier1`; `make lint` adds the fmt + clippy gates
-# wired alongside it. The GitHub workflow (.github/workflows/ci.yml) runs
-# THESE targets — never re-spell the commands in YAML, so the two cannot
-# drift.
+# Tier-1 verify is `make ci-tier1`; `make lint` adds the fmt + clippy +
+# rustdoc gates wired alongside it. The GitHub workflow
+# (.github/workflows/ci.yml) runs THESE targets — never re-spell the
+# commands in YAML, so the two cannot drift.
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-smoke fmt fmt-fix clippy lint ci-tier1 ci \
-	test-pjrt artifacts
+.PHONY: build test bench bench-smoke bench-json bench-gate bench-check \
+	bench-bless fmt fmt-fix clippy doc lint ci-tier1 ci test-pjrt \
+	artifacts
 
 build:
 	$(CARGO) build --release
@@ -26,6 +27,44 @@ bench-smoke:
 	ADALOMO_BENCH_FAST=1 $(CARGO) bench --bench bench_micro_optim
 	ADALOMO_BENCH_FAST=1 $(CARGO) bench --bench bench_micro_runtime
 
+# Machine-readable benches: same two micro benches in fast mode, with the
+# tracked metrics (optimizer step ns/elem, overlap efficiency, peak-live-
+# gradient bytes from the fused-host mirror) merged into
+# BENCH_pipeline.json — uploaded as a CI artifact next to bench-smoke.txt
+# so the perf trajectory is diffable, not free text.
+bench-json:
+	rm -f BENCH_pipeline.json
+	ADALOMO_BENCH_FAST=1 ADALOMO_BENCH_JSON=$(CURDIR)/BENCH_pipeline.json \
+		$(CARGO) bench --bench bench_micro_optim
+	ADALOMO_BENCH_FAST=1 ADALOMO_BENCH_JSON=$(CURDIR)/BENCH_pipeline.json \
+		$(CARGO) bench --bench bench_micro_runtime
+
+# Regression gate over an EXISTING BENCH_pipeline.json: fail when a
+# tracked metric drifts beyond the tolerance STATED PER METRIC in
+# bench/baseline.json. Deterministic byte-count metrics are pinned
+# two-sided ("exact" — improvements must re-bless too); timing metrics
+# get wide slack for CI-runner variance; overlap_efficiency_x4 is
+# timing-derived with a hard floor of 1.0, so its bound sits below the
+# floor — it rides along for trajectory visibility, not as a hard gate.
+# CI runs the benches once (bench-json) then this compare-only target.
+bench-gate:
+	$(CARGO) run --release --quiet -- bench-check \
+		--current BENCH_pipeline.json --baseline bench/baseline.json
+
+# One-shot local convenience: measure + gate (sequenced explicitly so
+# `make -j` cannot race the gate ahead of the measurement).
+bench-check: bench-json
+	$(MAKE) bench-gate
+
+# INTENTIONAL perf shift? Re-baseline with one line:
+#   make bench-bless
+# (re-measures, then rewrites every baseline value while KEEPING each
+# metric's stated tolerance/direction — never copy the flat measurement
+# file over the structured baseline).
+bench-bless: bench-json
+	$(CARGO) run --release --quiet -- bench-check --bless \
+		--current BENCH_pipeline.json --baseline bench/baseline.json
+
 fmt:
 	$(CARGO) fmt --all -- --check
 
@@ -35,7 +74,13 @@ fmt-fix:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-lint: fmt clippy
+# Rustdoc rot is a lint failure too (broken intra-doc links etc.).
+# Scoped to the main crate: the vendored path deps are API mirrors, not
+# documentation surfaces.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --package adalomo
+
+lint: fmt clippy doc
 
 ci-tier1: build test
 

@@ -2,11 +2,14 @@
 //! mirror of the L1 kernels) — the L3 perf-pass baseline for update math,
 //! plus the flat-blob parallel engine versus the per-tensor path.
 
+use adalomo::coordinator::fused_host::{
+    fused_host_step, FusedHostGrads, GroupGradSource,
+};
 use adalomo::coordinator::pipeline;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
 use adalomo::optim::{pool, OptKind, ParamOpt, ALL_OPTS};
 use adalomo::tensor::Tensor;
-use adalomo::util::bench::{banner, bench_units};
+use adalomo::util::bench::{banner, bench_units, JsonSink};
 use adalomo::util::rng::Pcg32;
 
 /// Model-shaped parameter list (embed + L layers + head) so the engine has
@@ -34,6 +37,8 @@ fn main() {
         "micro — native optimizer step cost",
         "supports EXPERIMENTS.md §Perf; shapes of Table-1 memory trade-offs in time",
     );
+    // Tracked-metric sink (ADALOMO_BENCH_JSON; `make bench-json`).
+    let mut sink = JsonSink::from_env();
     let mut rng = Pcg32::seeded(1);
     let shape = [512, 512];
     let elems = (shape[0] * shape[1]) as f64;
@@ -163,6 +168,12 @@ fn main() {
                 best * 1e3,
                 per_tensor.timing.mean * 1e3
             );
+            if kind == OptKind::AdaLomo {
+                sink.metric(
+                    "optim_step_ns_per_elem",
+                    best / model_elems * 1e9,
+                );
+            }
         }
     }
 
@@ -200,5 +211,91 @@ fn main() {
             r.comm_secs * 1e3,
             r.overlap_efficiency
         );
+        if n_ranks == 4 {
+            sink.metric("overlap_efficiency_x4", r.overlap_efficiency);
+        }
     }
+
+    // --- fused-backward host mirror: group-granular gradient liveness ------
+    // Produce gradients group-by-group (head block, layers L-1..0, embed),
+    // stepping each group and freeing its buffer before the next exists:
+    // peak live gradient bytes are MEASURED, and the full image is never
+    // materialized. The analytic twin is memsim::liveness::simulate_grouped.
+    println!("\n--- fused-backward host mirror (group-granular liveness) ---");
+    let mut engine = FlatOptimizer::new(
+        OptKind::AdaLomo,
+        &layout,
+        cores.min(4),
+        ShardMode::Contiguous,
+    )
+    .unwrap();
+    let mut src = FusedHostGrads::per_rank(&engine, 1, 51, 0.02)
+        .pop()
+        .unwrap();
+    let mut blob = blob0.clone();
+    let mut t = 0u64;
+    bench_units(
+        "adalomo fused-host step (group-by-group)",
+        layout.params_len as f64,
+        || {
+            t += 1;
+            fused_host_step(&mut engine, &mut blob, &mut src, t, 1e-3, 0.0)
+                .unwrap();
+        },
+    );
+    t += 1;
+    let report =
+        fused_host_step(&mut engine, &mut blob, &mut src, t, 1e-3, 0.0)
+            .unwrap();
+    println!(
+        "peak live gradient {} bytes over {} groups vs full image {} bytes \
+         => {:.1}% live",
+        report.peak_live_grad_bytes,
+        report.n_groups,
+        report.full_grad_bytes,
+        100.0 * report.live_fraction()
+    );
+    sink.metric(
+        "fused_host_peak_live_grad_bytes",
+        report.peak_live_grad_bytes as f64,
+    );
+    sink.metric("fused_host_live_fraction", report.live_fraction());
+
+    // Grouped async pipeline: the exchange overlaps group PRODUCTION, and
+    // the producing side's window stays far below the full image.
+    let n_ranks = 4usize;
+    let mut cfg = pipeline::PipelineConfig::new(4, bucket_elems);
+    cfg.n_shards = pool::shards_with_reserved(n_ranks).min(4);
+    let sources: Vec<Box<dyn GroupGradSource>> =
+        FusedHostGrads::per_rank(&engine, n_ranks, 31, 0.02)
+            .into_iter()
+            .map(|s| Box::new(s) as Box<dyn GroupGradSource>)
+            .collect();
+    let (_, r) = pipeline::run_pipelined_fused(
+        &layout,
+        OptKind::AdaLomo,
+        ShardMode::Contiguous,
+        &blob0,
+        sources,
+        &cfg,
+    )
+    .unwrap();
+    println!(
+        "fused pipelined x{} ranks, {} buckets: exposed {:.3}ms vs \
+         compute+comm {:.3}ms ({:.2}x overlap); rank peak live {} of {} \
+         grad bytes",
+        r.n_ranks,
+        r.n_buckets,
+        r.exposed_secs * 1e3,
+        (r.compute_secs + r.comm_secs) * 1e3,
+        r.overlap_efficiency,
+        r.peak_live_grad_bytes,
+        r.full_grad_bytes
+    );
+    sink.metric(
+        "fused_pipeline_peak_live_grad_bytes",
+        r.peak_live_grad_bytes as f64,
+    );
+
+    sink.flush().expect("flushing bench metrics");
 }

@@ -8,13 +8,13 @@ use adalomo::experiments as exp;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
 use adalomo::optim::{pool, OptKind};
 use adalomo::runtime::Manifest;
-use adalomo::util::bench::{banner, bench, bench_units};
+use adalomo::util::bench::{banner, bench, bench_units, JsonSink};
 
 /// Host-side blob operations on the flat engine: the coordinator-path
 /// costs that exist even without PJRT (local-SGD round averaging, host
 /// mirror steps). Runs before the artifact gate so the bench is useful on
 /// a fresh checkout.
-fn host_blob_section() {
+fn host_blob_section(sink: &mut JsonSink) {
     let cores = pool::default_shards();
     let params: Vec<(&str, &[usize])> = vec![
         ("embed", &[256, 128]),
@@ -38,12 +38,16 @@ fn host_blob_section() {
     let sources: Vec<&[f32]> =
         ranks.iter().map(|b| &b[..layout.params_len]).collect();
     let mut avg = vec![0f32; layout.params_len];
-    bench_units(
+    let avg_result = bench_units(
         "round averaging: 4 ranks (par_average)",
         layout.params_len as f64,
         || {
             pool::par_average(&mut avg, &sources, 0.25, cores);
         },
+    );
+    sink.metric(
+        "par_average_ns_per_elem",
+        avg_result.timing.mean / layout.params_len as f64 * 1e9,
     );
 
     // Host-mirror optimizer step on the flat blob.
@@ -52,7 +56,7 @@ fn host_blob_section() {
             .unwrap();
     let mut blob = blob0.clone();
     let mut t = 0u64;
-    bench_units(
+    let step_result = bench_units(
         "flat adalomo step (contiguous shards)",
         layout.params_len as f64,
         || {
@@ -60,12 +64,27 @@ fn host_blob_section() {
             engine.step(&mut blob, &grads, t, 1e-3, 0.0).unwrap();
         },
     );
+    let step_secs_per_elem =
+        step_result.timing.mean / layout.params_len as f64;
+    sink.metric("host_flat_step_ns_per_elem", step_secs_per_elem * 1e9);
 
     // Bucketed-exchange overlap on the same blob (coordinator/pipeline):
-    // exposed step time vs the fully-exposed compute + comm sum.
-    let mut cfg =
-        pipeline::PipelineConfig::new(2, layout.params_len.div_ceil(8));
+    // exposed step time vs the fully-exposed compute + comm sum. The
+    // bucket size comes from the fabric model (adaptive sizing): per-
+    // bucket fabric cost bounded against the per-bucket step compute just
+    // measured above.
+    let mut cfg = pipeline::PipelineConfig::adaptive(
+        2,
+        layout.params_len,
+        2,
+        Default::default(),
+        step_secs_per_elem,
+    );
     cfg.n_shards = pool::shards_with_reserved(2).min(4);
+    println!(
+        "adaptive bucket: {} elems for {} total (fabric-latency bound)",
+        cfg.bucket_elems, layout.params_len
+    );
     let (_, r) = pipeline::run_pipelined(
         &layout,
         OptKind::AdaLomo,
@@ -91,7 +110,9 @@ fn main() {
         "micro — runtime dispatch & transfer overhead",
         "hot-path budget: dispatch+upload must be <5% of step time at tiny+",
     );
-    host_blob_section();
+    let mut sink = JsonSink::from_env();
+    host_blob_section(&mut sink);
+    sink.flush().expect("flushing bench metrics");
     if !exp::artifacts_available() {
         println!("skipped (PJRT sections): run `make artifacts` first");
         return;

@@ -1,0 +1,368 @@
+//! Group-granular fused-backward mirror on the host fast path.
+//!
+//! # Relation to `coordinator::fused`
+//!
+//! [`super::fused`] demonstrates LOMO/AdaLomo's liveness schedule (paper
+//! §2.1) at *XLA-program granularity*: the step is split into G = L+2
+//! chained group programs, each of which re-runs the whole forward so the
+//! compiler dead-code-eliminates every other group's weight gradients.
+//! That demonstrator needs AOT artifacts and pays G× compute — it proves
+//! the schedule, it is not the fast path.
+//!
+//! This module is the *same schedule on the host engine*: a
+//! [`GroupGradSource`] produces each fused-backward group's gradient
+//! (head block, layers L-1..0, embedding — the grouping
+//! [`FlatOptimizer::group_grad_sizes`] shares with
+//! `fused::group_grad_sizes`), [`fused_host_step`] steps exactly that
+//! group through the task-subset machinery the async pipeline already
+//! uses ([`FlatOptimizer::step_group`]), and the gradient buffer is freed
+//! *before* the next group is produced. Peak live-gradient bytes are
+//! therefore **measured** (the largest group extent) rather than assumed,
+//! and the integration tests pin them to the analytic prediction of
+//! [`crate::memsim::liveness::simulate_grouped`] — the paper's memory
+//! argument enforced by a test instead of narrated.
+//!
+//! Because every task's update arithmetic is self-contained, the
+//! group-by-group walk is bit-identical to one whole-image
+//! [`FlatOptimizer::step`] with the same gradient values; the proptests
+//! pin that, for all seven optimizers and both shard plans.
+//!
+//! [`FusedHostGrads`] is the deterministic stand-in backward: its values
+//! depend only on (rank, step, group, position), never on production
+//! order, so the same source can feed the grouped mirror, the grouped
+//! async pipeline ([`super::pipeline::run_pipelined_fused`], which
+//! overlaps the bucket exchange with group *production*), and the
+//! full-image lockstep paths — and all of them must agree bitwise.
+
+use anyhow::{ensure, Result};
+
+use crate::optim::flat::FlatOptimizer;
+use crate::util::rng::Pcg32;
+
+use super::pipeline::GradSource;
+
+/// Per-rank *group-granular* gradient producer: the backward-order
+/// counterpart of [`GradSource`], emitting one fused group at a time so a
+/// consumer never needs the full gradient image.
+///
+/// `fill_group` must be deterministic in (source state, `step`, `g`) and
+/// independent of the interleaving in which groups are requested — that
+/// is what lets the grouped and full-image execution paths agree bitwise.
+pub trait GroupGradSource: Send {
+    /// Number of backward groups produced per step.
+    fn n_groups(&self) -> usize;
+
+    /// Blob extent `[lo, hi)` of group `g` (walk order: head block,
+    /// layers L-1..0, embedding).
+    fn group_extent(&self, g: usize) -> (usize, usize);
+
+    /// Fill group `g`'s gradient for `step`; `out` covers exactly the
+    /// group's extent.
+    fn fill_group(&mut self, step: u64, g: usize, out: &mut [f32]);
+}
+
+/// Deterministic synthetic *grouped* gradients: each (rank, step, group)
+/// triple seeds its own PRNG stream, so values depend only on the
+/// position being filled — never on whether the caller materializes one
+/// group at a time (the mirror, the grouped pipeline) or the whole image
+/// (the lockstep reference, via the [`GradSource`] impl).
+pub struct FusedHostGrads {
+    seed: u64,
+    rank: usize,
+    scale: f32,
+    /// Group extents in walk order; must tile the gradient image for the
+    /// full-image `fill` to cover every slot.
+    groups: Vec<(usize, usize)>,
+}
+
+impl FusedHostGrads {
+    pub fn new(
+        groups: Vec<(usize, usize)>,
+        seed: u64,
+        rank: usize,
+        scale: f32,
+    ) -> FusedHostGrads {
+        FusedHostGrads { seed, rank, scale, groups }
+    }
+
+    /// One source per rank over `engine`'s fused-backward groups (same
+    /// rank-seed spacing as the local-SGD workers' data streams).
+    pub fn per_rank(
+        engine: &FlatOptimizer,
+        n_ranks: usize,
+        seed: u64,
+        scale: f32,
+    ) -> Vec<FusedHostGrads> {
+        (0..n_ranks)
+            .map(|r| {
+                FusedHostGrads::new(engine.group_extents(), seed, r, scale)
+            })
+            .collect()
+    }
+}
+
+impl GroupGradSource for FusedHostGrads {
+    fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn group_extent(&self, g: usize) -> (usize, usize) {
+        self.groups[g]
+    }
+
+    fn fill_group(&mut self, step: u64, g: usize, out: &mut [f32]) {
+        let (lo, hi) = self.groups[g];
+        debug_assert_eq!(out.len(), hi - lo);
+        // Stream keyed by (rank, step); one PCG stream per group.
+        let mut rng = Pcg32::new(
+            self.seed
+                .wrapping_add(1000 * self.rank as u64)
+                .wrapping_add(step.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            g as u64,
+        );
+        for x in out.iter_mut() {
+            *x = rng.normal() * self.scale;
+        }
+    }
+}
+
+/// The full-image view of the same values: fill every group's slice of
+/// `out`. Lets the identical gradients drive [`super::pipeline`]'s
+/// materialized paths for the bitwise comparisons.
+impl GradSource for FusedHostGrads {
+    fn fill(&mut self, step: u64, out: &mut [f32]) {
+        for g in 0..self.groups.len() {
+            let (lo, hi) = self.groups[g];
+            self.fill_group(step, g, &mut out[lo..hi]);
+        }
+    }
+}
+
+/// What one group-granular step measured.
+#[derive(Debug, Clone)]
+pub struct FusedHostReport {
+    pub n_groups: usize,
+    /// Per-group live-gradient bytes, walk order — the measured liveness
+    /// curve (compare `memsim::liveness::simulate_grouped(..).curve`).
+    pub curve_bytes: Vec<usize>,
+    /// Measured peak live-gradient bytes across the walk: the largest
+    /// single allocation the step ever held.
+    pub peak_live_grad_bytes: usize,
+    /// The full-gradient-image baseline (`params_len` f32s) the
+    /// monolithic step materializes.
+    pub full_grad_bytes: usize,
+}
+
+impl FusedHostReport {
+    /// Measured peak as a fraction of the full-image baseline.
+    pub fn live_fraction(&self) -> f64 {
+        self.peak_live_grad_bytes as f64 / self.full_grad_bytes.max(1) as f64
+    }
+}
+
+/// One fused-backward optimizer step, group by group: produce group g's
+/// gradient into a buffer sized for its extent, step exactly that group,
+/// and free the buffer before group g+1 is produced. Bit-identical to one
+/// whole-image [`FlatOptimizer::step`] with the same gradient values.
+pub fn fused_host_step(
+    engine: &mut FlatOptimizer,
+    blob: &mut [f32],
+    src: &mut dyn GroupGradSource,
+    t: u64,
+    lr: f32,
+    wd: f32,
+) -> Result<FusedHostReport> {
+    let extents = engine.group_extents();
+    ensure!(
+        src.n_groups() == extents.len(),
+        "source has {} groups, engine {}",
+        src.n_groups(),
+        extents.len()
+    );
+    let mut curve = Vec::with_capacity(extents.len());
+    let mut peak = 0usize;
+    for (g, &(lo, hi)) in extents.iter().enumerate() {
+        ensure!(
+            src.group_extent(g) == (lo, hi),
+            "group {g}: source extent {:?} != engine extent {:?}",
+            src.group_extent(g),
+            (lo, hi)
+        );
+        // The step's ONLY gradient allocation: this group's extent. It is
+        // dropped at the bottom of the loop, before the next group exists
+        // — the measured embodiment of the §2.1 liveness claim.
+        let mut gbuf = vec![0f32; hi - lo];
+        src.fill_group(t, g, &mut gbuf);
+        let live = 4 * gbuf.len();
+        peak = peak.max(live);
+        curve.push(live);
+        engine.step_group(blob, g, &gbuf, t, lr, wd)?;
+    }
+    Ok(FusedHostReport {
+        n_groups: extents.len(),
+        curve_bytes: curve,
+        peak_live_grad_bytes: peak,
+        full_grad_bytes: 4 * engine.params_len(),
+    })
+}
+
+/// Drive [`fused_host_step`] for `steps` steps from `blob0`; returns the
+/// final blob and the (step-invariant) liveness report.
+pub fn run_fused_host(
+    engine: &mut FlatOptimizer,
+    blob0: &[f32],
+    src: &mut dyn GroupGradSource,
+    steps: usize,
+    lr: f32,
+    wd: f32,
+) -> Result<(Vec<f32>, FusedHostReport)> {
+    let mut blob = blob0.to_vec();
+    let mut report = None;
+    for t in 1..=steps as u64 {
+        report = Some(fused_host_step(engine, &mut blob, src, t, lr, wd)?);
+    }
+    let report = report
+        .ok_or_else(|| anyhow::anyhow!("steps must be >= 1"))?;
+    Ok((blob, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::flat::{
+        seeded_blob_and_grads, synthetic_layout, ShardMode,
+    };
+    use crate::optim::OptKind;
+
+    fn model_layout(kind: OptKind) -> crate::runtime::Layout {
+        let params: Vec<(&str, &[usize])> = vec![
+            ("embed", &[24, 8][..]),
+            ("l0.attn_norm", &[8][..]),
+            ("l0.wq", &[8, 8][..]),
+            ("l0.w_down", &[10, 8][..]),
+            ("l1.wq", &[8, 8][..]),
+            ("final_norm", &[8][..]),
+            ("head", &[8, 24][..]),
+        ];
+        synthetic_layout(kind, &params)
+    }
+
+    #[test]
+    fn grouped_fill_is_order_independent() {
+        let layout = model_layout(OptKind::AdaLomo);
+        let engine = FlatOptimizer::new(
+            OptKind::AdaLomo,
+            &layout,
+            1,
+            ShardMode::Segments,
+        )
+        .unwrap();
+        let mut a = FusedHostGrads::new(engine.group_extents(), 5, 1, 0.1);
+        let mut b = FusedHostGrads::new(engine.group_extents(), 5, 1, 0.1);
+        let mut full = vec![0f32; layout.params_len];
+        GradSource::fill(&mut a, 3, &mut full);
+        // Filling the groups individually, in REVERSE walk order, must
+        // reproduce the same image.
+        let mut pieces = vec![0f32; layout.params_len];
+        for g in (0..b.n_groups()).rev() {
+            let (lo, hi) = b.group_extent(g);
+            b.fill_group(3, g, &mut pieces[lo..hi]);
+        }
+        assert_eq!(full, pieces);
+        // Distinct ranks and steps draw distinct streams.
+        let mut c = FusedHostGrads::new(engine.group_extents(), 5, 2, 0.1);
+        let mut other = vec![0f32; layout.params_len];
+        GradSource::fill(&mut c, 3, &mut other);
+        assert_ne!(full, other);
+        GradSource::fill(&mut a, 4, &mut other);
+        assert_ne!(full, other);
+    }
+
+    #[test]
+    fn mirror_matches_monolithic_step_bitwise() {
+        for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+            let layout = model_layout(OptKind::AdaLomo);
+            let (blob0, _) = seeded_blob_and_grads(&layout, 13);
+            let mut engine = FlatOptimizer::new(
+                OptKind::AdaLomo,
+                &layout,
+                3,
+                mode,
+            )
+            .unwrap();
+            let mut src =
+                FusedHostGrads::new(engine.group_extents(), 7, 0, 0.05);
+            let (mirror, report) =
+                run_fused_host(&mut engine, &blob0, &mut src, 3, 1e-2, 0.0)
+                    .unwrap();
+            // Reference: whole-image steps with the identical gradients.
+            let mut engine2 = FlatOptimizer::new(
+                OptKind::AdaLomo,
+                &layout,
+                3,
+                mode,
+            )
+            .unwrap();
+            let mut src2 =
+                FusedHostGrads::new(engine2.group_extents(), 7, 0, 0.05);
+            let mut full = blob0.clone();
+            let mut grad = vec![0f32; layout.params_len];
+            for t in 1..=3u64 {
+                GradSource::fill(&mut src2, t, &mut grad);
+                engine2.step(&mut full, &grad, t, 1e-2, 0.0).unwrap();
+            }
+            for (i, (a, b)) in mirror.iter().zip(&full).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{mode:?} elem {i}: {a} vs {b}"
+                );
+            }
+            // Liveness: peak is the largest group, strictly below the
+            // full image.
+            assert_eq!(report.n_groups, 4);
+            assert_eq!(
+                report.peak_live_grad_bytes,
+                4 * engine.group_grad_sizes().iter().max().copied().unwrap()
+            );
+            assert!(
+                report.peak_live_grad_bytes < report.full_grad_bytes,
+                "{report:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_source_is_rejected() {
+        let layout = model_layout(OptKind::AdaLomo);
+        let (mut blob, _) = seeded_blob_and_grads(&layout, 3);
+        let mut engine = FlatOptimizer::new(
+            OptKind::AdaLomo,
+            &layout,
+            1,
+            ShardMode::Segments,
+        )
+        .unwrap();
+        // Wrong group count.
+        let mut short = FusedHostGrads::new(
+            engine.group_extents()[..2].to_vec(),
+            1,
+            0,
+            0.1,
+        );
+        assert!(
+            fused_host_step(&mut engine, &mut blob, &mut short, 1, 1e-2, 0.0)
+                .is_err()
+        );
+        // Right count, shifted extents.
+        let shifted: Vec<(usize, usize)> = engine
+            .group_extents()
+            .iter()
+            .map(|&(lo, hi)| (lo.saturating_sub(1), hi.saturating_sub(1)))
+            .collect();
+        let mut bad = FusedHostGrads::new(shifted, 1, 0, 0.1);
+        assert!(
+            fused_host_step(&mut engine, &mut blob, &mut bad, 1, 1e-2, 0.0)
+                .is_err()
+        );
+    }
+}

@@ -5,6 +5,10 @@
 //! * [`trainer`] — the step loop over the device-resident state blob.
 //! * [`fused`] — fused-backward group scheduler (LOMO/AdaLomo liveness at
 //!   program granularity; chains `fused_*_g<k>` artifacts).
+//! * [`fused_host`] — the same schedule on the host fast path: group-by-
+//!   group gradient production driving `FlatOptimizer::step_group`, with
+//!   peak live-gradient bytes measured and checked against
+//!   `memsim::liveness`.
 //! * [`sharding`] — ZeRO-3 shard planner over manifest segments.
 //! * [`collective`] — ring-collective cost model used by the throughput
 //!   simulation and the worker pool.
@@ -15,6 +19,7 @@
 
 pub mod collective;
 pub mod fused;
+pub mod fused_host;
 pub mod pipeline;
 pub mod schedule;
 pub mod sharding;

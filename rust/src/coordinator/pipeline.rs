@@ -40,6 +40,7 @@
 //! bucket's work has finished), which sits below `compute + comm` exactly
 //! when the pipeline hides exchange behind stepping.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::thread;
 use std::time::Instant;
@@ -56,6 +57,7 @@ use crate::util::rng::Pcg32;
 use super::collective::{
     allreduce_bucket_time, bucketed_allreduce_times, Fabric,
 };
+use super::fused_host::GroupGradSource;
 
 /// Fixed-size exchange buckets tiling the gradient image `[0,
 /// params_len)` in offset order.
@@ -89,14 +91,43 @@ impl BucketPlan {
     /// indices. Each list is sorted (extents are scanned in index order)
     /// and the lists partition `0..extents.len()`.
     pub fn ready_schedule(&self, extents: &[(usize, usize)]) -> Vec<Vec<usize>> {
+        // Ascending walk: a task completes with its LAST element.
+        self.schedule_by(extents, |off, size| off + size.max(1) - 1)
+    }
+
+    /// [`Self::ready_schedule`] for the DESCENDING bucket walk of the
+    /// fused-host pipeline ([`run_pipelined_fused`]): when buckets land in
+    /// reverse offset order — the order group-by-group backward production
+    /// covers them — a task is completed by the bucket holding its FIRST
+    /// element (every later-offset bucket has already landed). Same
+    /// guarantees: sorted per-bucket lists partitioning the task indices.
+    pub fn ready_schedule_backward(
+        &self,
+        extents: &[(usize, usize)],
+    ) -> Vec<Vec<usize>> {
+        self.schedule_by(extents, |off, _| off)
+    }
+
+    /// Shared body of the two schedules: bucket the anchor element of
+    /// every extent. The fixed-size tiling makes the lookup a division
+    /// (bucket i covers `[i*bucket_elems, ..)`, last bucket ragged).
+    fn schedule_by(
+        &self,
+        extents: &[(usize, usize)],
+        anchor: impl Fn(usize, usize) -> usize,
+    ) -> Vec<Vec<usize>> {
         let mut ready = vec![Vec::new(); self.buckets.len()];
         for (ti, &(off, size)) in extents.iter().enumerate() {
-            let last = off + size.max(1) - 1;
-            let b = self
-                .buckets
-                .iter()
-                .position(|&(lo, hi)| lo <= last && last < hi)
-                .expect("task extent outside the bucketed region");
+            let a = anchor(off, size);
+            let b = a / self.bucket_elems;
+            assert!(
+                b < self.buckets.len(),
+                "task extent outside the bucketed region"
+            );
+            debug_assert!(
+                self.buckets[b].0 <= a && a < self.buckets[b].1,
+                "bucket tiling broke the division lookup"
+            );
             ready[b].push(ti);
         }
         ready
@@ -266,6 +297,29 @@ impl PipelineConfig {
             fabric: Fabric::default(),
         }
     }
+
+    /// [`Self::new`] with `bucket_elems` chosen by
+    /// [`adaptive_bucket_elems`] under the default
+    /// [`ADAPTIVE_COMM_FRACTION`] budget, for a measured per-element
+    /// optimizer step cost on this machine.
+    pub fn adaptive(
+        steps: usize,
+        params_len: usize,
+        n_ranks: usize,
+        fabric: Fabric,
+        step_secs_per_elem: f64,
+    ) -> PipelineConfig {
+        let bucket = adaptive_bucket_elems(
+            params_len,
+            n_ranks,
+            fabric,
+            step_secs_per_elem,
+            ADAPTIVE_COMM_FRACTION,
+        );
+        let mut cfg = PipelineConfig::new(steps, bucket);
+        cfg.fabric = fabric;
+        cfg
+    }
 }
 
 /// What the pipeline measured/modeled. `compute_secs` is measured wall
@@ -285,6 +339,15 @@ pub struct PipelineReport {
     /// side).
     pub overlap_efficiency: f64,
     pub wall_secs: f64,
+    /// Measured peak gradient bytes live on a producing rank: the full
+    /// image for the materialized paths ([`run_pipelined`],
+    /// [`run_sequential`]); for [`run_pipelined_fused`] the
+    /// produced-but-unshipped group buffers, which can never exceed the
+    /// image. In-flight exchange payloads (bounded by the channel depth ×
+    /// bucket size) are the fabric's, not the producer's, on every path.
+    pub peak_live_grad_bytes: usize,
+    /// The full-gradient-image baseline in bytes (`params_len` × 4).
+    pub full_grad_bytes: usize,
 }
 
 /// Run the bucketed rank pipeline: per-rank worker threads exchange
@@ -348,8 +411,11 @@ pub fn run_pipelined(
         }));
     }
 
-    let outcome =
-        leader_loop(&mut engine, &plan, &ready, &bucket_comm, &rx_ranks, blob0, cfg);
+    let order: Vec<usize> = (0..plan.n_buckets()).collect();
+    let outcome = leader_loop(
+        &mut engine, &plan, &order, &ready, &bucket_comm, &rx_ranks, blob0,
+        cfg,
+    );
     // Unblock any rank still parked on a bounded send before joining (the
     // error path stops receiving mid-stream).
     drop(rx_ranks);
@@ -374,16 +440,23 @@ pub fn run_pipelined(
             exposed_secs,
             overlap_efficiency,
             wall_secs: started.elapsed().as_secs_f64(),
+            // Every rank thread materializes the full gradient image.
+            peak_live_grad_bytes: 4 * layout.params_len,
+            full_grad_bytes: 4 * layout.params_len,
         },
     ))
 }
 
-/// The leader half of [`run_pipelined`]: reduce buckets in rank order,
-/// step ready tasks, advance the modeled timeline. Returns `(blob,
-/// compute, comm, exposed)`.
+/// The leader half of the pipelined drivers: receive and reduce buckets
+/// in rank order (visiting buckets in `order` — ascending for
+/// [`run_pipelined`], descending for [`run_pipelined_fused`]), step ready
+/// tasks, advance the modeled timeline. Returns `(blob, compute, comm,
+/// exposed)`.
+#[allow(clippy::too_many_arguments)]
 fn leader_loop(
     engine: &mut FlatOptimizer,
     plan: &BucketPlan,
+    order: &[usize],
     ready: &[Vec<usize>],
     bucket_comm: &[f64],
     rx_ranks: &[mpsc::Receiver<Vec<f32>>],
@@ -401,7 +474,8 @@ fn leader_loop(
         // max(its reduction landing, previous work finishing).
         let mut comm_front = 0.0f64;
         let mut work_front = 0.0f64;
-        for (b, &(lo, hi)) in plan.buckets.iter().enumerate() {
+        for &b in order {
+            let (lo, hi) = plan.buckets[b];
             // Accumulate: one contribution per rank, received in rank
             // order — the fixed reduction order determinism rests on.
             let mut chunks = Vec::with_capacity(n_ranks);
@@ -435,6 +509,242 @@ fn leader_loop(
         exposed += comm_front.max(work_front);
     }
     Ok((blob, compute, comm, exposed))
+}
+
+/// The fused-host pipeline: ranks produce their gradients GROUP BY GROUP
+/// in fused-backward order ([`GroupGradSource`]) and ship each exchange
+/// bucket the moment production has covered it, so the bucket exchange
+/// overlaps actual gradient *production* — no rank ever materializes the
+/// full gradient image. Buckets therefore move in DESCENDING offset order
+/// (backward production covers the image top-down), the leader reduces
+/// them in that same fixed order, and tasks step when the bucket holding
+/// their first element lands ([`BucketPlan::ready_schedule_backward`]).
+///
+/// Requires the engine's fused groups to tile the gradient image in
+/// descending offset order (true for model-shaped layouts). Per-task
+/// arithmetic is self-contained and the per-bucket reductions are
+/// order-independent across disjoint ranges, so the result is bitwise
+/// identical to [`run_pipelined`] and [`run_sequential`] fed the same
+/// gradient values — pinned by the proptests.
+///
+/// The returned report's `peak_live_grad_bytes` is MEASURED: the most
+/// produced-but-unshipped group-buffer bytes any rank ever held (a group
+/// buffer is freed once the shipped region covers it), the pipeline
+/// counterpart of `fused_host::FusedHostReport`. With buckets no larger
+/// than a group this tops out at two groups — the §2.1 bound — and by
+/// construction it can never exceed the full image.
+pub fn run_pipelined_fused(
+    layout: &Layout,
+    kind: OptKind,
+    mode: ShardMode,
+    blob0: &[f32],
+    sources: Vec<Box<dyn GroupGradSource>>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<f32>, PipelineReport)> {
+    ensure!(!sources.is_empty(), "need at least one rank");
+    ensure!(
+        blob0.len() == layout.blob_len,
+        "blob len {} != layout {}",
+        blob0.len(),
+        layout.blob_len
+    );
+    let n_ranks = sources.len();
+    let started = Instant::now();
+    let mut engine = FlatOptimizer::new(kind, layout, cfg.n_shards, mode)?;
+    let plan = BucketPlan::new(layout.params_len, cfg.bucket_elems);
+    let ready = plan.ready_schedule_backward(&engine.task_extents());
+    let groups = engine.group_extents();
+    // The grouped walk ships buckets against a production frontier that
+    // moves down from params_len: the groups must tile the image
+    // top-down.
+    let mut hi_expect = layout.params_len;
+    for (g, &(lo, hi)) in groups.iter().enumerate() {
+        ensure!(
+            hi == hi_expect && lo < hi,
+            "group {g} extent [{lo}, {hi}) breaks the descending tiling \
+             (expected hi = {hi_expect}); fused-host pipelining needs a \
+             model-shaped layout"
+        );
+        hi_expect = lo;
+    }
+    ensure!(hi_expect == 0, "fused groups must cover the gradient image");
+    for (r, src) in sources.iter().enumerate() {
+        ensure!(
+            src.n_groups() == groups.len(),
+            "rank {r}: source has {} groups, engine {}",
+            src.n_groups(),
+            groups.len()
+        );
+        for (g, &e) in groups.iter().enumerate() {
+            ensure!(
+                src.group_extent(g) == e,
+                "rank {r} group {g}: source extent {:?} != engine {:?}",
+                src.group_extent(g),
+                e
+            );
+        }
+    }
+    let bucket_comm = bucketed_allreduce_times(
+        (layout.params_len * 4) as f64,
+        (cfg.bucket_elems * 4) as f64,
+        n_ranks,
+        cfg.fabric,
+    );
+    debug_assert_eq!(bucket_comm.len(), plan.n_buckets());
+
+    // Rank threads: interleave group production with bucket shipping.
+    // Each returns its measured peak live gradient elements.
+    let mut handles = Vec::with_capacity(n_ranks);
+    let mut rx_ranks = Vec::with_capacity(n_ranks);
+    for mut src in sources {
+        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
+        rx_ranks.push(rx);
+        let buckets = plan.buckets.clone();
+        let extents = groups.clone();
+        let steps = cfg.steps;
+        handles.push(thread::spawn(move || -> usize {
+            let mut peak_elems = 0usize;
+            for step in 1..=steps as u64 {
+                // Produced-but-unshipped group buffers, oldest (highest
+                // extent) first. Each element is written once at
+                // production and read once into its bucket payload; a
+                // buffer is freed the moment the shipped region covers
+                // it, so only the groups overlapping the unshipped span
+                // stay allocated — with buckets no larger than a group
+                // that is at most two groups, the host-path twin of the
+                // paper's two-consecutive-gradients bound (§2.1), and it
+                // can never exceed the full image.
+                let mut segs: VecDeque<(usize, Vec<f32>)> = VecDeque::new();
+                let mut live = 0usize;
+                let mut next_bucket = buckets.len();
+                for (g, &(lo, hi)) in extents.iter().enumerate() {
+                    let mut gbuf = vec![0f32; hi - lo];
+                    src.fill_group(step, g, &mut gbuf);
+                    live += gbuf.len();
+                    peak_elems = peak_elems.max(live);
+                    segs.push_back((lo, gbuf));
+                    // Ship every bucket production now covers; each send
+                    // assembles the bucket payload from the overlapping
+                    // buffers (the one copy the exchange itself needs).
+                    while next_bucket > 0
+                        && buckets[next_bucket - 1].0 >= lo
+                    {
+                        let (blo, bhi) = buckets[next_bucket - 1];
+                        let mut chunk = vec![0f32; bhi - blo];
+                        for (slo, sbuf) in segs.iter() {
+                            let slo = *slo;
+                            let shi = slo + sbuf.len();
+                            let olo = blo.max(slo);
+                            let ohi = bhi.min(shi);
+                            if olo < ohi {
+                                chunk[olo - blo..ohi - blo]
+                                    .copy_from_slice(
+                                        &sbuf[olo - slo..ohi - slo],
+                                    );
+                            }
+                        }
+                        if tx.send(chunk).is_err() {
+                            return peak_elems; // leader bailed; stop
+                        }
+                        // Free every buffer the shipped region covers.
+                        loop {
+                            match segs.front() {
+                                Some(&(slo, _)) if slo >= blo => {
+                                    let (_, sbuf) = segs
+                                        .pop_front()
+                                        .expect("front checked above");
+                                    live -= sbuf.len();
+                                }
+                                _ => break,
+                            }
+                        }
+                        next_bucket -= 1;
+                    }
+                }
+                debug_assert!(segs.is_empty() && next_bucket == 0);
+            }
+            peak_elems
+        }));
+    }
+
+    let order: Vec<usize> = (0..plan.n_buckets()).rev().collect();
+    let outcome = leader_loop(
+        &mut engine, &plan, &order, &ready, &bucket_comm, &rx_ranks, blob0,
+        cfg,
+    );
+    drop(rx_ranks);
+    let mut peak_elems = 0usize;
+    for h in handles {
+        let rank_peak =
+            h.join().map_err(|_| anyhow!("rank thread panicked"))?;
+        peak_elems = peak_elems.max(rank_peak);
+    }
+    let (blob, compute_secs, comm_secs, exposed_secs) = outcome?;
+
+    let overlap_efficiency = if exposed_secs > 0.0 {
+        (compute_secs + comm_secs) / exposed_secs
+    } else {
+        1.0
+    };
+    Ok((
+        blob,
+        PipelineReport {
+            n_ranks,
+            steps: cfg.steps,
+            n_buckets: plan.n_buckets(),
+            compute_secs,
+            comm_secs,
+            exposed_secs,
+            overlap_efficiency,
+            wall_secs: started.elapsed().as_secs_f64(),
+            peak_live_grad_bytes: 4 * peak_elems,
+            full_grad_bytes: 4 * layout.params_len,
+        },
+    ))
+}
+
+/// Fraction of per-bucket optimizer compute the per-bucket fabric cost is
+/// allowed to reach when [`adaptive_bucket_elems`] picks the bucket size.
+pub const ADAPTIVE_COMM_FRACTION: f64 = 0.5;
+
+/// Pick [`PipelineConfig::bucket_elems`] from the fabric model: the
+/// smallest bucket — smaller buckets mean earlier first steps and finer
+/// overlap — whose per-bucket ring all-reduce cost stays within
+/// `comm_fraction` of its per-bucket optimizer compute
+/// (`step_secs_per_elem`; measure it with `bench_micro_optim`).
+///
+/// Every bucket re-pays the full `2(n-1)` hop latencies
+/// ([`super::collective::bucketed_allreduce_times`]), so below the
+/// returned size the latency tax alone breaks the bound:
+/// `comm(b) = 2(n-1)(alpha + 4b/(n*bw)) <= f * b * c` solves to
+/// `b >= 2(n-1)alpha / (f*c - 8(n-1)/(n*bw))`. If the denominator is not
+/// positive — the bandwidth term alone exceeds the compute budget — no
+/// bucket size can hide the exchange and the choice degenerates to one
+/// monolithic bucket (minimizing the latency tax). A single rank pays no
+/// fabric at all, with the same degenerate answer.
+pub fn adaptive_bucket_elems(
+    params_len: usize,
+    n_ranks: usize,
+    fabric: Fabric,
+    step_secs_per_elem: f64,
+    comm_fraction: f64,
+) -> usize {
+    assert!(params_len > 0, "params_len must be positive");
+    assert!(
+        step_secs_per_elem > 0.0 && comm_fraction > 0.0,
+        "step cost and comm fraction must be positive"
+    );
+    if n_ranks <= 1 {
+        return params_len;
+    }
+    let n = n_ranks as f64;
+    let slack = comm_fraction * step_secs_per_elem
+        - 8.0 * (n - 1.0) / (n * fabric.bw);
+    if slack <= 0.0 {
+        return params_len;
+    }
+    let b = (2.0 * (n - 1.0) * fabric.alpha / slack).ceil() as usize;
+    b.clamp(1, params_len)
 }
 
 /// Lockstep reference: reduce the FULL gradient image (same rank order,
@@ -494,6 +804,9 @@ pub fn run_sequential(
             exposed_secs: exposed,
             overlap_efficiency: 1.0,
             wall_secs: started.elapsed().as_secs_f64(),
+            // The lockstep path holds every rank's full gradient image.
+            peak_live_grad_bytes: 4 * layout.params_len,
+            full_grad_bytes: 4 * layout.params_len,
         },
     ))
 }
@@ -559,6 +872,121 @@ mod tests {
                 assert!(lo <= last && last < hi);
             }
         }
+    }
+
+    #[test]
+    fn backward_ready_schedule_partitions_tasks() {
+        let layout = synthetic_layout(
+            OptKind::AdaLomo,
+            &[
+                ("embed", &[16, 8][..]),
+                ("l0.wq", &[8, 8][..]),
+                ("final_norm", &[8][..]),
+                ("head", &[8, 16][..]),
+            ],
+        );
+        let engine = FlatOptimizer::new(
+            OptKind::AdaLomo,
+            &layout,
+            1,
+            ShardMode::Segments,
+        )
+        .unwrap();
+        let extents = engine.task_extents();
+        for bucket_elems in [1usize, 13, 64, layout.params_len] {
+            let plan = BucketPlan::new(layout.params_len, bucket_elems);
+            let ready = plan.ready_schedule_backward(&extents);
+            let mut seen: Vec<usize> =
+                ready.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(
+                seen,
+                (0..extents.len()).collect::<Vec<_>>(),
+                "bucket_elems={bucket_elems}"
+            );
+            for list in &ready {
+                assert!(list.windows(2).all(|w| w[0] < w[1]));
+            }
+            // A task is scheduled on the bucket holding its FIRST element
+            // (all later-offset buckets have landed in the descending
+            // walk).
+            for (ti, &(off, _)) in extents.iter().enumerate() {
+                let b = ready.iter().position(|l| l.contains(&ti)).unwrap();
+                let (lo, hi) = plan.buckets[b];
+                assert!(lo <= off && off < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_bucket_bounds_fabric_latency() {
+        let c = 2e-9; // 2 ns per element of optimizer step
+        let frac = ADAPTIVE_COMM_FRACTION;
+        let params_len = 50_000_000usize;
+        let fabrics = [
+            Fabric::default(),
+            Fabric { alpha: 50e-6, bw: 25e9 },
+            Fabric { alpha: 1e-6, bw: 400e9 },
+        ];
+        for fabric in fabrics {
+            for n_ranks in [2usize, 4, 8] {
+                let b = adaptive_bucket_elems(
+                    params_len, n_ranks, fabric, c, frac,
+                );
+                assert!((1..=params_len).contains(&b));
+                if b < params_len {
+                    // The promised bound holds at the chosen size...
+                    let comm =
+                        allreduce_bucket_time((4 * b) as f64, n_ranks, fabric);
+                    assert!(
+                        comm <= frac * c * b as f64 * (1.0 + 1e-9),
+                        "{fabric:?} x{n_ranks}: comm {comm} vs budget {}",
+                        frac * c * b as f64
+                    );
+                    // ...and the latency tax breaks it one notch below
+                    // (minimality of the choice).
+                    if b > 1 {
+                        let half = b / 2;
+                        let comm_half = allreduce_bucket_time(
+                            (4 * half) as f64,
+                            n_ranks,
+                            fabric,
+                        );
+                        assert!(
+                            comm_half > frac * c * half as f64,
+                            "{fabric:?} x{n_ranks}: half-size bucket \
+                             should violate the budget"
+                        );
+                    }
+                }
+            }
+        }
+        // Chattier fabrics need coarser buckets.
+        let quiet = adaptive_bucket_elems(
+            params_len,
+            4,
+            Fabric { alpha: 1e-6, bw: 170e9 },
+            c,
+            frac,
+        );
+        let chatty = adaptive_bucket_elems(
+            params_len,
+            4,
+            Fabric { alpha: 100e-6, bw: 170e9 },
+            c,
+            frac,
+        );
+        assert!(chatty > quiet, "{chatty} vs {quiet}");
+        // Degenerate cases: single rank, or bandwidth alone over budget.
+        assert_eq!(
+            adaptive_bucket_elems(params_len, 1, Fabric::default(), c, frac),
+            params_len
+        );
+        let starved = Fabric { alpha: 8e-6, bw: 1e6 };
+        assert_eq!(
+            adaptive_bucket_elems(params_len, 4, starved, c, frac),
+            params_len
+        );
     }
 
     #[test]

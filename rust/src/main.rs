@@ -48,6 +48,7 @@ fn run() -> Result<()> {
         "fused" => cmd_fused(&args),
         "workers" => cmd_workers(&args),
         "hparams" => cmd_hparams(&args),
+        "bench-check" => cmd_bench_check(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -72,6 +73,7 @@ USAGE: adalomo <subcommand> [--flag value ...]
   fused       run real fused-backward group programs (nano/micro)
   workers     thread-per-rank data-parallel training demo
   hparams     the paper's hyper-parameter tables (3/6/7)
+  bench-check gate measured bench metrics against bench/baseline.json
   info        artifacts + manifest summary
 
 Common flags: --preset nano|micro|tiny|small   --opt sgd|sgd_momentum|
@@ -315,12 +317,7 @@ fn cmd_liveness(args: &Args) -> Result<()> {
         "Gradient liveness during backward — {arch_name} (paper §2.1)"
     ))
     .header(&["mode", "peak grad bytes", "vs standard", "backward passes"]);
-    for (name, mode) in [
-        ("standard (AdamW et al.)", liveness::BackwardMode::Standard),
-        ("fused (LOMO/AdaLomo)", liveness::BackwardMode::Fused),
-        ("fused + grad-norm (LOMO)", liveness::BackwardMode::FusedTwoPass),
-    ] {
-        let r = liveness::simulate(&arch, mode);
+    let mut row = |name: &str, r: &liveness::LivenessReport| {
         t.row(vec![
             name.into(),
             format!("{:.3} GB", r.peak_bytes as f64 / memory::GB),
@@ -330,7 +327,20 @@ fn cmd_liveness(args: &Args) -> Result<()> {
             ),
             r.backward_passes.to_string(),
         ]);
+    };
+    for (name, mode) in [
+        ("standard (AdamW et al.)", liveness::BackwardMode::Standard),
+        ("fused (LOMO/AdaLomo)", liveness::BackwardMode::Fused),
+        ("fused + grad-norm (LOMO)", liveness::BackwardMode::FusedTwoPass),
+    ] {
+        row(name, &liveness::simulate(&arch, mode));
     }
+    // The host mirror's granularity: one whole group (layer) live at a
+    // time, f32 gradients (coordinator::fused_host measures this).
+    row(
+        "fused host mirror (group-granular, f32)",
+        &liveness::simulate_grouped(&arch, 4),
+    );
     t.print();
     Ok(())
 }
@@ -450,6 +460,58 @@ fn cmd_hparams(args: &Args) -> Result<()> {
         }
         t.print();
     }
+    Ok(())
+}
+
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let current_path = args.str_or("current", "BENCH_pipeline.json");
+    let baseline_path = args.str_or("baseline", "bench/baseline.json");
+    let bless = args.bool("bless");
+    args.finish()?;
+    let read = |path: &str| -> Result<adalomo::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        adalomo::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let current = read(&current_path)?;
+    let baseline = read(&baseline_path)?;
+    if bless {
+        // Intentional re-baseline: refresh every value, keep each
+        // metric's stated tolerance/direction.
+        let blessed =
+            adalomo::util::bench::bless_baseline(&current, &baseline)?;
+        std::fs::write(&baseline_path, blessed.to_string())
+            .map_err(|e| anyhow::anyhow!("writing {baseline_path}: {e}"))?;
+        println!("blessed {baseline_path} with values from {current_path}");
+        return Ok(());
+    }
+    let rows =
+        adalomo::util::bench::check_against_baseline(&current, &baseline)?;
+    let mut t = Table::new(&format!(
+        "Bench regression gate — {current_path} vs {baseline_path}"
+    ))
+    .header(&["metric", "baseline", "current", "ratio", "tol", "verdict"]);
+    for r in &rows {
+        t.row(vec![
+            format!("{} ({})", r.name, r.direction),
+            fnum(r.baseline),
+            fnum(r.current),
+            format!("{:.3}x", r.current / r.baseline),
+            format!("{:.0}%", r.tolerance * 100.0),
+            if r.failed { "REGRESSED".into() } else { "ok".to_string() },
+        ]);
+    }
+    t.print();
+    let n_failed = rows.iter().filter(|r| r.failed).count();
+    if n_failed > 0 {
+        bail!(
+            "{n_failed} tracked metric(s) regressed beyond tolerance; for \
+             an intentional shift re-baseline with `make bench-bless` \
+             (keeps each metric's stated tolerance/direction)"
+        );
+    }
+    println!("bench gate OK: {} tracked metrics within tolerance", rows.len());
     Ok(())
 }
 

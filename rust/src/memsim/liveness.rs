@@ -71,6 +71,55 @@ pub fn simulate(arch: &Arch, mode: BackwardMode) -> LivenessReport {
     }
 }
 
+/// Per-group gradient sizes in f32 elements for the *group-granular*
+/// fused-backward walk (G = L + 2 groups, backward order: head block,
+/// layers L-1..0, embedding) — the analytic twin of
+/// `optim::flat::FlatOptimizer::group_grad_sizes` (engine-derived) and
+/// `coordinator::fused::group_grad_sizes` (manifest-derived).
+pub fn group_elems(arch: &Arch) -> Vec<usize> {
+    let specs = arch.param_specs();
+    let size = |name: &str| -> usize {
+        specs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.iter().product())
+            .unwrap_or(0)
+    };
+    let mut groups = vec![size("head") + size("final_norm")];
+    for l in (0..arch.n_layers).rev() {
+        let p = format!("l{l}.");
+        groups.push(
+            specs
+                .iter()
+                .filter(|(n, _)| n.starts_with(&p))
+                .map(|(_, s)| s.iter().product::<usize>())
+                .sum(),
+        );
+    }
+    groups.push(size("embed"));
+    groups
+}
+
+/// Liveness of the group-granular fused-backward walk, as executed by the
+/// host mirror (`coordinator::fused_host`): each group's gradient is freed
+/// by its optimizer step *before* the next group is produced, so exactly
+/// one group is ever live and the peak is the largest group. Coarser than
+/// [`BackwardMode::Fused`]'s per-parameter walk (which keeps two adjacent
+/// parameter gradients live), but the same §2.1 argument: peak gradient
+/// memory is O(one layer), not O(model). `bytes_per_elem` is 4 for the
+/// host mirror's f32 gradients (the device walks above use bf16 = 2).
+pub fn simulate_grouped(arch: &Arch, bytes_per_elem: usize) -> LivenessReport {
+    let curve: Vec<usize> = group_elems(arch)
+        .iter()
+        .map(|&e| e * bytes_per_elem)
+        .collect();
+    LivenessReport {
+        peak_bytes: curve.iter().copied().max().unwrap_or(0),
+        curve,
+        backward_passes: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +157,42 @@ mod tests {
         let r = simulate(&arch(), BackwardMode::Standard);
         assert!(r.curve.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(*r.curve.last().unwrap(), r.peak_bytes);
+    }
+
+    #[test]
+    fn grouped_walk_covers_model_once() {
+        let a = arch();
+        let groups = group_elems(&a);
+        // G = L + 2: head block, one per layer, embedding.
+        assert_eq!(groups.len(), a.n_layers + 2);
+        assert_eq!(groups.iter().sum::<usize>(), a.n_params());
+        assert!(groups.iter().all(|&g| g > 0));
+    }
+
+    #[test]
+    fn grouped_peak_is_one_group_and_beats_the_half_layer_bound() {
+        let a = arch();
+        let r = simulate_grouped(&a, 4);
+        assert_eq!(r.backward_passes, 1);
+        assert_eq!(r.curve.len(), a.n_layers + 2);
+        assert_eq!(
+            r.peak_bytes,
+            *r.curve.iter().max().unwrap(),
+            "peak is exactly the largest group"
+        );
+        // The acceptance bound the host mirror is held to: peak live
+        // gradient < full image / (L/2).
+        let full = 4 * a.n_params();
+        assert!(
+            r.peak_bytes < full / (a.n_layers / 2),
+            "peak {} vs full {full} (L = {})",
+            r.peak_bytes,
+            a.n_layers
+        );
+        // Coarser granularity can only cost memory vs the per-parameter
+        // fused walk at the same element width.
+        let fine = simulate(&a, BackwardMode::Fused);
+        assert!(r.peak_bytes >= 2 * fine.peak_bytes);
     }
 
     #[test]

@@ -92,6 +92,23 @@ struct TaskSpec {
     ranges: Vec<(usize, usize)>,
 }
 
+/// One fused-backward *group*: a contiguous run of fused-order task
+/// indices (the head block, one transformer layer, or the embedding) plus
+/// the blob extent its gradients occupy. This is the host-side unit of
+/// gradient liveness — the twin of one `fused_*_g<k>` XLA program
+/// (`coordinator::fused::group_grad_sizes`).
+#[derive(Debug, Clone, Copy)]
+struct GroupSpec {
+    /// Half-open range into the fused-order task list.
+    tasks: (usize, usize),
+    /// Blob extent `[lo, hi)` covering every task in the group.
+    lo: usize,
+    hi: usize,
+    /// Sum of the member task sizes (== `hi - lo` when the extent has no
+    /// non-trainable gaps, as in the standard parameter packing).
+    elems: usize,
+}
+
 /// Per-worker persistent scratch: the only buffers the engine ever
 /// allocates, reused across steps.
 #[derive(Debug, Clone, Default)]
@@ -227,6 +244,9 @@ pub struct FlatOptimizer {
     blob_len: usize,
     params_len: usize,
     tasks: Vec<TaskSpec>,
+    /// Fused-backward groups over `tasks` (head block, layers L-1..0,
+    /// embedding; out-of-convention segments become singleton groups).
+    groups: Vec<GroupSpec>,
     /// Segments mode: fused-order task indices per shard (greedy LPT).
     shard_tasks: Vec<Vec<usize>>,
     /// Blob spans for the configured mode, precomputed and offset-sorted —
@@ -347,6 +367,29 @@ impl FlatOptimizer {
             });
         }
 
+        // Fused-backward groups: consecutive tasks sharing a group key
+        // (head block / same layer / embedding) collapse into one group.
+        let mut groups: Vec<GroupSpec> = Vec::new();
+        let mut prev_key: Option<(usize, usize)> = None;
+        for (ti, task) in tasks.iter().enumerate() {
+            let key = group_key(&task.name, n_layers, ti);
+            if prev_key == Some(key) {
+                let g = groups.last_mut().expect("group exists for prev_key");
+                g.tasks.1 = ti + 1;
+                g.lo = g.lo.min(task.offset);
+                g.hi = g.hi.max(task.offset + task.size);
+                g.elems += task.size;
+            } else {
+                groups.push(GroupSpec {
+                    tasks: (ti, ti + 1),
+                    lo: task.offset,
+                    hi: task.offset + task.size,
+                    elems: task.size,
+                });
+            }
+            prev_key = Some(key);
+        }
+
         // Contiguous plan: balanced global element boundaries over the
         // trainable region in fused order, snapped to row starts for 2-D
         // parameters so row-factor updates stay worker-disjoint.
@@ -416,6 +459,7 @@ impl FlatOptimizer {
             blob_len: layout.blob_len,
             params_len: layout.params_len,
             tasks,
+            groups,
             shard_tasks,
             spans,
             sync: SyncState::new(n_shards),
@@ -453,6 +497,99 @@ impl FlatOptimizer {
         self.tasks.iter().map(|t| (t.offset, t.size)).collect()
     }
 
+    /// Trainable floats (the gradient-image length the step kernels read).
+    pub fn params_len(&self) -> usize {
+        self.params_len
+    }
+
+    /// Number of fused-backward groups: head block, layers L-1..0,
+    /// embedding (G = L + 2 for a full transformer layout).
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Fused-order task indices of group `g` (always a contiguous range —
+    /// valid input for [`Self::step_tasks`]).
+    pub fn group_tasks(&self, g: usize) -> std::ops::Range<usize> {
+        let (a, b) = self.groups[g].tasks;
+        a..b
+    }
+
+    /// Blob extent `[lo, hi)` of every fused-backward group, in walk
+    /// order. For model-shaped layouts (the packing `synthetic_layout`
+    /// and the AOT layouts use) these tile the trainable region in
+    /// descending offset order — the invariant the fused-host pipeline
+    /// checks before streaming buckets against group production.
+    pub fn group_extents(&self) -> Vec<(usize, usize)> {
+        self.groups.iter().map(|g| (g.lo, g.hi)).collect()
+    }
+
+    /// Per-group live-gradient sizes in f32 elements — the host-engine
+    /// twin of `coordinator::fused::group_grad_sizes` (which derives the
+    /// same numbers from a manifest) and of
+    /// `memsim::liveness::group_elems` (which derives them analytically).
+    pub fn group_grad_sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.elems).collect()
+    }
+
+    /// Step ONE fused-backward group from a gradient slice covering only
+    /// that group's blob extent (`group_extents()[g]`). Because per-task
+    /// arithmetic is self-contained, walking `step_group` over `0..
+    /// n_groups()` with the same gradient values is bit-identical to one
+    /// whole-image [`Self::step`] — but the caller never materializes more
+    /// than one group's gradient, which is the paper's §2.1 liveness story
+    /// on the host path (`coordinator::fused_host`).
+    pub fn step_group(
+        &mut self,
+        blob: &mut [f32],
+        g: usize,
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        ensure!(
+            g < self.groups.len(),
+            "group {g} out of range ({} groups)",
+            self.groups.len()
+        );
+        let spec = self.groups[g];
+        ensure!(
+            blob.len() == self.blob_len,
+            "blob len {} != layout {}",
+            blob.len(),
+            self.blob_len
+        );
+        ensure!(
+            grads.len() == spec.hi - spec.lo,
+            "group {g} grads len {} != extent {}",
+            grads.len(),
+            spec.hi - spec.lo
+        );
+        let subset: Vec<usize> = (spec.tasks.0..spec.tasks.1).collect();
+        match self.mode {
+            ShardMode::Segments => self.step_segments(
+                blob,
+                grads,
+                spec.lo,
+                t,
+                lr,
+                wd,
+                Some(subset.as_slice()),
+            ),
+            ShardMode::Contiguous => self.step_contiguous(
+                blob,
+                grads,
+                spec.lo,
+                t,
+                lr,
+                wd,
+                Some(subset.as_slice()),
+            ),
+        }
+        Ok(())
+    }
+
     /// One optimizer step over the flat blob, in place. `grads` is the
     /// gradient image of the parameter region (>= `params_len` floats,
     /// indexed by segment offset); `t` is the 1-based step, `lr` the
@@ -468,10 +605,10 @@ impl FlatOptimizer {
         self.validate(blob, grads)?;
         match self.mode {
             ShardMode::Segments => {
-                self.step_segments(blob, grads, t, lr, wd, None)
+                self.step_segments(blob, grads, 0, t, lr, wd, None)
             }
             ShardMode::Contiguous => {
-                self.step_contiguous(blob, grads, t, lr, wd, None)
+                self.step_contiguous(blob, grads, 0, t, lr, wd, None)
             }
         }
         Ok(())
@@ -510,10 +647,10 @@ impl FlatOptimizer {
         );
         match self.mode {
             ShardMode::Segments => {
-                self.step_segments(blob, grads, t, lr, wd, Some(subset))
+                self.step_segments(blob, grads, 0, t, lr, wd, Some(subset))
             }
             ShardMode::Contiguous => {
-                self.step_contiguous(blob, grads, t, lr, wd, Some(subset))
+                self.step_contiguous(blob, grads, 0, t, lr, wd, Some(subset))
             }
         }
         Ok(())
@@ -547,11 +684,14 @@ impl FlatOptimizer {
         self.step(&mut blob.data, grads, t, lr, wd)
     }
 
+    /// `grad_base` is the blob offset `grads[0]` corresponds to: 0 for the
+    /// whole-image entry points, the group extent start for `step_group`.
     #[allow(clippy::too_many_arguments)]
     fn step_segments(
         &mut self,
         blob: &mut [f32],
         grads: &[f32],
+        grad_base: usize,
         t: u64,
         lr: f32,
         wd: f32,
@@ -577,7 +717,8 @@ impl FlatOptimizer {
                     }
                     let part = std::mem::take(&mut my_parts[ti]);
                     run_task_sequential(
-                        &tasks[ti], part, grads, kind, h, t, lr, wd, scratch,
+                        &tasks[ti], part, grads, grad_base, kind, h, t, lr,
+                        wd, scratch,
                     );
                 }
             });
@@ -590,6 +731,7 @@ impl FlatOptimizer {
         &mut self,
         blob: &mut [f32],
         grads: &[f32],
+        grad_base: usize,
         t: u64,
         lr: f32,
         wd: f32,
@@ -607,8 +749,8 @@ impl FlatOptimizer {
         {
             jobs.push(move || {
                 run_worker_contiguous(
-                    tasks, my_parts, subset, grads, kind, h, t, lr, wd, w,
-                    sync_ref, scratch,
+                    tasks, my_parts, subset, grads, grad_base, kind, h, t,
+                    lr, wd, w, sync_ref, scratch,
                 );
             });
         }
@@ -784,6 +926,19 @@ fn order_key(name: &str, n_layers: usize, fallback: usize) -> (usize, usize, usi
     }
 }
 
+/// Group identity for the fused-backward walk: the head block (head +
+/// final_norm) is one group, each layer is one group, the embedding is one
+/// group; segments outside the naming convention become singleton groups
+/// (keyed by their unique fused-order index).
+fn group_key(name: &str, n_layers: usize, fallback: usize) -> (usize, usize) {
+    let (tier, sub, _) = order_key(name, n_layers, fallback);
+    match tier {
+        0 => (0, 0),
+        3 => (3, fallback),
+        t => (t, sub),
+    }
+}
+
 /// Split `blob` into disjoint mutable views at the given spans (already
 /// offset-sorted, zero-length-free) and hand each to its (worker, task,
 /// role) slot.
@@ -823,6 +978,7 @@ fn run_task_sequential(
     spec: &TaskSpec,
     part: TaskPart<'_>,
     grads: &[f32],
+    grad_base: usize,
     kind: OptKind,
     h: Hyper,
     t: u64,
@@ -830,7 +986,8 @@ fn run_task_sequential(
     wd: f32,
     scratch: &mut Scratch,
 ) {
-    let g = &grads[spec.offset..spec.offset + spec.size];
+    let base = spec.offset - grad_base;
+    let g = &grads[base..base + spec.size];
     let theta = part.theta.expect("theta view assigned to owner");
     let a = part.a;
     let b = part.b;
@@ -898,6 +1055,7 @@ fn run_worker_contiguous(
     mut parts: Vec<TaskPart<'_>>,
     subset: Option<&[usize]>,
     grads: &[f32],
+    grad_base: usize,
     kind: OptKind,
     h: Hyper,
     t: u64,
@@ -911,7 +1069,8 @@ fn run_worker_contiguous(
         None => {
             for (spec, part) in specs.iter().zip(parts) {
                 contiguous_task(
-                    spec, part, grads, kind, h, t, lr, wd, w, sync, scratch,
+                    spec, part, grads, grad_base, kind, h, t, lr, wd, w,
+                    sync, scratch,
                 );
             }
         }
@@ -922,6 +1081,7 @@ fn run_worker_contiguous(
                     &specs[ti],
                     part,
                     grads,
+                    grad_base,
                     kind,
                     h,
                     t,
@@ -943,6 +1103,7 @@ fn contiguous_task(
     spec: &TaskSpec,
     part: TaskPart<'_>,
     grads: &[f32],
+    grad_base: usize,
     kind: OptKind,
     h: Hyper,
     t: u64,
@@ -954,7 +1115,8 @@ fn contiguous_task(
 ) {
     let (lo, hi) = spec.ranges[w];
     let len = hi - lo;
-    let g = &grads[spec.offset + lo..spec.offset + hi];
+    let base = spec.offset - grad_base;
+    let g = &grads[base + lo..base + hi];
     let theta = part.theta.unwrap_or_default();
     let a = part.a.unwrap_or_default();
     let b = part.b.unwrap_or_default();
@@ -1318,6 +1480,91 @@ mod tests {
                 .is_err());
             assert!(opt2
                 .step_tasks(&mut by_parts, &grads, 2, 1e-2, 0.0, &[n])
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn groups_follow_fused_walk() {
+        let l = layout_for(OptKind::AdaLomo);
+        let opt =
+            FlatOptimizer::new(OptKind::AdaLomo, &l, 2, ShardMode::Segments)
+                .unwrap();
+        // head block, l1, l0, embed.
+        assert_eq!(opt.n_groups(), 4);
+        let order = opt.task_order();
+        let names = |r: std::ops::Range<usize>| -> Vec<&str> {
+            r.map(|ti| order[ti]).collect()
+        };
+        assert_eq!(names(opt.group_tasks(0)), vec!["head", "final_norm"]);
+        assert_eq!(
+            names(opt.group_tasks(1)),
+            vec!["l1.attn_norm", "l1.wq", "l1.w_down"]
+        );
+        assert_eq!(
+            names(opt.group_tasks(2)),
+            vec!["l0.attn_norm", "l0.wq", "l0.w_down"]
+        );
+        assert_eq!(names(opt.group_tasks(3)), vec!["embed"]);
+        // Sizes: what each fused group keeps live (the coordinator twin).
+        assert_eq!(
+            opt.group_grad_sizes(),
+            vec![8 * 16 + 8, 8 + 64 + 48, 8 + 64 + 48, 16 * 8]
+        );
+        // Extents tile the trainable region in DESCENDING offset order
+        // (the invariant the fused-host pipeline relies on).
+        let extents = opt.group_extents();
+        let mut hi_expect = l.params_len;
+        for (g, &(lo, hi)) in extents.iter().enumerate() {
+            assert_eq!(hi, hi_expect, "group {g}");
+            assert!(lo < hi);
+            assert_eq!(hi - lo, opt.group_grad_sizes()[g], "group {g}");
+            hi_expect = lo;
+        }
+        assert_eq!(hi_expect, 0);
+    }
+
+    #[test]
+    fn step_group_walk_matches_full_step() {
+        for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+            let l = layout_for(OptKind::AdaLomo);
+            let (blob0, grads) = seeded_blob_and_grads(&l, 29);
+            let mut full = blob0.clone();
+            let mut opt =
+                FlatOptimizer::new(OptKind::AdaLomo, &l, 3, mode).unwrap();
+            opt.step(&mut full, &grads, 1, 1e-2, 0.0).unwrap();
+            // The same step delivered group-by-group from extent-sized
+            // gradient slices must land bit-identically — the fused-host
+            // mirror's contract.
+            let mut by_groups = blob0.clone();
+            let mut opt2 =
+                FlatOptimizer::new(OptKind::AdaLomo, &l, 3, mode).unwrap();
+            for (g, (lo, hi)) in opt2.group_extents().into_iter().enumerate()
+            {
+                opt2.step_group(
+                    &mut by_groups,
+                    g,
+                    &grads[lo..hi],
+                    1,
+                    1e-2,
+                    0.0,
+                )
+                .unwrap();
+            }
+            for (i, (a, b)) in full.iter().zip(&by_groups).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{mode:?} elem {i}: {a} vs {b}"
+                );
+            }
+            // Wrong-length slices and bad indices are rejected loudly.
+            assert!(opt2
+                .step_group(&mut by_groups, 0, &grads[0..1], 2, 1e-2, 0.0)
+                .is_err());
+            let n = opt2.n_groups();
+            let (lo, hi) = opt2.group_extents()[0];
+            assert!(opt2
+                .step_group(&mut by_groups, n, &grads[lo..hi], 2, 1e-2, 0.0)
                 .is_err());
         }
     }

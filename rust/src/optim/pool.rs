@@ -55,8 +55,10 @@ pub fn range_bound(n: usize, parts: usize, k: usize) -> usize {
 /// with `dst` split into `n_workers` contiguous ranges. Per element the
 /// sources are summed in source order, so the result is bit-identical to
 /// the sequential loop for ANY worker count — this is what lets the
-/// local-SGD coordinator shard round averaging without perturbing the
-/// convergence comparisons it reports.
+/// local-SGD coordinator shard round averaging, and the async pipelines
+/// reduce their exchange buckets in ANY bucket order (ascending for the
+/// full-image path, descending for the fused-host path), without
+/// perturbing the bitwise-identity guarantees they are pinned to.
 pub fn par_average(dst: &mut [f32], sources: &[&[f32]], scale: f32, n_workers: usize) {
     let n = dst.len();
     for s in sources {

@@ -5,9 +5,20 @@
 //! iteration count and a minimum wall-clock budget are met; report
 //! mean/std/min/p50/p95 and optional throughput. `ADALOMO_BENCH_FAST=1`
 //! shrinks budgets so `cargo bench` smoke-runs quickly in CI.
+//!
+//! Machine-readable side channel: with `ADALOMO_BENCH_JSON=<path>` set,
+//! benches record a small set of tracked metrics through a [`JsonSink`]
+//! and flush them into one flat JSON object (`make bench-json` writes
+//! `BENCH_pipeline.json` this way, and `make bench-check` gates it
+//! against `bench/baseline.json` via [`check_against_baseline`]).
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Json};
 use super::stats::{summarize, Summary};
 
 #[derive(Debug, Clone)]
@@ -117,6 +128,165 @@ fn fmt_dur(secs: f64) -> String {
     }
 }
 
+/// Collector for the tracked bench metrics. Construct with [`from_env`]
+/// (`ADALOMO_BENCH_JSON=<path>`; disabled when unset), record with
+/// [`metric`], write with [`flush`]. Flushing MERGES into the file's
+/// existing JSON object, so the bench processes `make bench-json` runs
+/// sequentially can share one output file.
+///
+/// [`from_env`]: JsonSink::from_env
+/// [`metric`]: JsonSink::metric
+/// [`flush`]: JsonSink::flush
+pub struct JsonSink {
+    path: Option<PathBuf>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl JsonSink {
+    pub fn from_env() -> JsonSink {
+        Self::at(std::env::var("ADALOMO_BENCH_JSON").ok().map(PathBuf::from))
+    }
+
+    /// Explicit-path constructor (`None` disables; used by tests).
+    pub fn at(path: Option<PathBuf>) -> JsonSink {
+        JsonSink { path, metrics: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one tracked metric. Recording is unconditional (cheap);
+    /// only [`Self::flush`] touches the filesystem.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Merge the recorded metrics into the sink file (no-op when
+    /// disabled). Later writers win on duplicate names.
+    pub fn flush(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut obj: BTreeMap<String, Json> =
+            match std::fs::read_to_string(path) {
+                Ok(text) => match Json::parse(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?
+                {
+                    Json::Obj(o) => o,
+                    other => bail!(
+                        "{} holds {other:?}, not a metrics object",
+                        path.display()
+                    ),
+                },
+                Err(_) => BTreeMap::new(),
+            };
+        for (k, v) in &self.metrics {
+            obj.insert(k.clone(), json::num(*v));
+        }
+        std::fs::write(path, Json::Obj(obj).to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// One gated metric's verdict from [`check_against_baseline`].
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Allowed relative slack, from the baseline file (0.2 = 20%).
+    pub tolerance: f64,
+    /// `"lower"` (is better), `"higher"` (is better), or `"exact"`
+    /// (deterministic: ANY drift beyond tolerance — either way — fails,
+    /// so improvements force a re-bless instead of silently de-syncing
+    /// the baseline).
+    pub direction: String,
+    pub failed: bool,
+}
+
+/// Compare measured metrics (flat `{name: number}` object) against a
+/// baseline (`{name: {value, tolerance, direction}}`). A `lower` metric
+/// fails when `current > value * (1 + tolerance)`; a `higher` metric when
+/// `current < value * (1 - tolerance)`; an `exact` metric when
+/// `|current - value| > |value| * tolerance` (two-sided — the pin for
+/// deterministic byte counts). The metric sets must match in BOTH
+/// directions: a bench silently dropping a tracked metric is itself a
+/// regression, and a newly-recorded metric without a baseline entry
+/// (stated tolerance + direction) would be silently ungated forever.
+pub fn check_against_baseline(
+    current: &Json,
+    baseline: &Json,
+) -> Result<Vec<GateRow>> {
+    let untracked: Vec<&String> = current
+        .as_obj()?
+        .keys()
+        .filter(|k| baseline.opt(k).is_none())
+        .collect();
+    if !untracked.is_empty() {
+        bail!(
+            "measured metrics missing from the baseline: {untracked:?} — \
+             add entries (value + stated tolerance + direction) to track \
+             them"
+        );
+    }
+    let mut rows = Vec::new();
+    for (name, spec) in baseline.as_obj()? {
+        let value = spec.get("value")?.as_f64()?;
+        let tolerance = spec.get("tolerance")?.as_f64()?;
+        ensure_direction(spec.get("direction")?.as_str()?)?;
+        let direction = spec.get("direction")?.as_str()?.to_string();
+        let measured = current
+            .get(name)
+            .with_context(|| {
+                format!("tracked metric {name:?} missing from measurement")
+            })?
+            .as_f64()?;
+        let failed = match direction.as_str() {
+            "lower" => measured > value * (1.0 + tolerance),
+            "higher" => measured < value * (1.0 - tolerance),
+            _ => (measured - value).abs() > value.abs() * tolerance,
+        };
+        rows.push(GateRow {
+            name: name.clone(),
+            baseline: value,
+            current: measured,
+            tolerance,
+            direction,
+            failed,
+        });
+    }
+    Ok(rows)
+}
+
+fn ensure_direction(d: &str) -> Result<()> {
+    if d != "lower" && d != "higher" && d != "exact" {
+        bail!(
+            "direction must be \"lower\", \"higher\" or \"exact\", got {d:?}"
+        );
+    }
+    Ok(())
+}
+
+/// Intentional re-baseline: return `baseline` with every metric's `value`
+/// replaced by the measurement, keeping each entry's STATED tolerance and
+/// direction (which is why blessing, not copying the flat measurement
+/// file over the baseline, is the documented override — the structured
+/// spec must survive the bump). Fails on metric-set mismatch, same as the
+/// gate: a new metric needs a hand-written entry first.
+pub fn bless_baseline(current: &Json, baseline: &Json) -> Result<Json> {
+    // Validate both files and the metric sets first.
+    check_against_baseline(current, baseline)?;
+    let mut out = baseline.as_obj()?.clone();
+    for (name, spec) in out.iter_mut() {
+        let measured = current.get(name)?.as_f64()?;
+        let Json::Obj(fields) = spec else {
+            bail!("baseline entry {name:?} is not an object");
+        };
+        fields.insert("value".to_string(), json::num(measured));
+    }
+    Ok(Json::Obj(out))
+}
+
 /// Bench-file banner (each bench target calls this first).
 pub fn banner(what: &str, paper_ref: &str) {
     println!("\n=== {what} ===");
@@ -151,5 +321,132 @@ mod tests {
         assert!(fmt_dur(2.5e-6).ends_with("µs"));
         assert!(fmt_dur(2.5e-3).ends_with("ms"));
         assert!(fmt_dur(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn json_sink_merges_across_flushes() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "adalomo_sink_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        // First bench process.
+        let mut a = JsonSink::at(Some(path.clone()));
+        assert!(a.enabled());
+        a.metric("alpha", 1.5);
+        a.metric("beta", 2.0);
+        a.flush().unwrap();
+        // Second process: adds a metric, overrides one.
+        let mut b = JsonSink::at(Some(path.clone()));
+        b.metric("beta", 3.0);
+        b.metric("gamma", 4.0);
+        b.flush().unwrap();
+        let merged =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(merged.get("alpha").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(merged.get("beta").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(merged.get("gamma").unwrap().as_f64().unwrap(), 4.0);
+        std::fs::remove_file(&path).unwrap();
+        // Disabled sink: records silently, flush is a no-op.
+        let mut off = JsonSink::at(None);
+        assert!(!off.enabled());
+        off.metric("x", 1.0);
+        off.flush().unwrap();
+    }
+
+    #[test]
+    fn gate_passes_within_and_fails_beyond_tolerance() {
+        let baseline = Json::parse(
+            r#"{
+              "step_ns": {"value": 10.0, "tolerance": 0.2, "direction": "lower"},
+              "overlap": {"value": 1.5, "tolerance": 0.2, "direction": "higher"}
+            }"#,
+        )
+        .unwrap();
+        // Within tolerance on both (improvement on step_ns is fine).
+        let ok = Json::parse(r#"{"step_ns": 11.9, "overlap": 1.21}"#).unwrap();
+        let rows = check_against_baseline(&ok, &baseline).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| !r.failed), "{rows:?}");
+        // lower-direction metric regressing past +20% fails.
+        let slow =
+            Json::parse(r#"{"step_ns": 12.1, "overlap": 1.6}"#).unwrap();
+        let rows = check_against_baseline(&slow, &baseline).unwrap();
+        assert!(
+            rows.iter().any(|r| r.name == "step_ns" && r.failed),
+            "{rows:?}"
+        );
+        // higher-direction metric collapsing past -20% fails.
+        let flat =
+            Json::parse(r#"{"step_ns": 9.0, "overlap": 1.19}"#).unwrap();
+        let rows = check_against_baseline(&flat, &baseline).unwrap();
+        assert!(
+            rows.iter().any(|r| r.name == "overlap" && r.failed),
+            "{rows:?}"
+        );
+        // A tracked metric missing from the measurement is an error, as
+        // is a malformed direction, as is a measured metric nobody
+        // baselined (it would otherwise be ungated forever).
+        let partial = Json::parse(r#"{"step_ns": 9.0}"#).unwrap();
+        assert!(check_against_baseline(&partial, &baseline).is_err());
+        let extra = Json::parse(
+            r#"{"step_ns": 9.0, "overlap": 1.5, "novel": 3.0}"#,
+        )
+        .unwrap();
+        let err = check_against_baseline(&extra, &baseline).unwrap_err();
+        assert!(format!("{err:#}").contains("novel"));
+        let bad_dir = Json::parse(
+            r#"{"m": {"value": 1.0, "tolerance": 0.1, "direction": "up"}}"#,
+        )
+        .unwrap();
+        let m = Json::parse(r#"{"m": 1.0}"#).unwrap();
+        assert!(check_against_baseline(&m, &bad_dir).is_err());
+    }
+
+    #[test]
+    fn exact_direction_pins_both_ways() {
+        let baseline = Json::parse(
+            r#"{"bytes": {"value": 4096, "tolerance": 0.0, "direction": "exact"}}"#,
+        )
+        .unwrap();
+        let same = Json::parse(r#"{"bytes": 4096}"#).unwrap();
+        let rows = check_against_baseline(&same, &baseline).unwrap();
+        assert!(!rows[0].failed);
+        // A regression fails — and so does an IMPROVEMENT: deterministic
+        // pins must be re-blessed, never silently de-synced.
+        for drifted in [r#"{"bytes": 4100}"#, r#"{"bytes": 2048}"#] {
+            let cur = Json::parse(drifted).unwrap();
+            let rows = check_against_baseline(&cur, &baseline).unwrap();
+            assert!(rows[0].failed, "{drifted}");
+        }
+    }
+
+    #[test]
+    fn bless_updates_values_and_keeps_specs() {
+        let baseline = Json::parse(
+            r#"{
+              "step_ns": {"value": 10.0, "tolerance": 0.2, "direction": "lower"},
+              "overlap": {"value": 1.5, "tolerance": 0.2, "direction": "higher"}
+            }"#,
+        )
+        .unwrap();
+        // Blessing works even when the gate would fail (that is its job).
+        let current =
+            Json::parse(r#"{"step_ns": 40.0, "overlap": 1.1}"#).unwrap();
+        let blessed = bless_baseline(&current, &baseline).unwrap();
+        let step = blessed.get("step_ns").unwrap();
+        assert_eq!(step.get("value").unwrap().as_f64().unwrap(), 40.0);
+        assert_eq!(step.get("tolerance").unwrap().as_f64().unwrap(), 0.2);
+        assert_eq!(
+            step.get("direction").unwrap().as_str().unwrap(),
+            "lower"
+        );
+        // The blessed file gates clean against the same measurement.
+        let rows = check_against_baseline(&current, &blessed).unwrap();
+        assert!(rows.iter().all(|r| !r.failed));
+        // Metric-set mismatches still refuse to bless.
+        let partial = Json::parse(r#"{"step_ns": 9.0}"#).unwrap();
+        assert!(bless_baseline(&partial, &baseline).is_err());
     }
 }

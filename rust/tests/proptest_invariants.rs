@@ -2,6 +2,8 @@
 //! not in the offline registry). Each property runs across a deterministic
 //! sweep of random cases; failures print the case seed.
 
+use adalomo::coordinator::fused_host::{FusedHostGrads, GroupGradSource};
+use adalomo::coordinator::pipeline::GradSource;
 use adalomo::coordinator::{pipeline, sharding};
 use adalomo::data::loader::DataLoader;
 use adalomo::memsim::{liveness, memory, Arch};
@@ -445,6 +447,130 @@ fn prop_pipelined_matches_sequential_bitwise() {
                                  seed={seed} elem {i}: {x} vs {y}"
                             );
                         }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fused_host_matches_monolith_and_lockstep_bitwise() {
+    // Fused-host group-by-group stepping must agree BITWISE with (a) the
+    // monolithic whole-image FlatOptimizer step (via the lockstep
+    // `run_sequential` reference) and (b) the full-image async pipeline,
+    // when all three consume identical gradient values — swept over
+    // ranks × bucket sizes × both shard plans. The fused pipeline also
+    // has to come in UNDER the full gradient image on the producing side:
+    // that is the whole point of group-granular production.
+    for kind in [OptKind::AdaLomo, OptKind::AdamW] {
+        for seed in 0..3u64 {
+            let mut rng = Pcg32::seeded(11_000 + seed);
+            let d = 3 + rng.below(6);
+            let v = 4 + rng.below(8);
+            let f = 3 + rng.below(5);
+            let shapes: Vec<(&str, Vec<usize>)> = vec![
+                ("embed", vec![v, d]),
+                ("l0.attn_norm", vec![d]),
+                ("l0.wq", vec![d, d]),
+                ("l0.w_down", vec![f, d]),
+                ("l1.wq", vec![d, d]),
+                ("final_norm", vec![d]),
+                ("head", vec![d, v]),
+            ];
+            let specs: Vec<(&str, &[usize])> =
+                shapes.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+            let layout = synthetic_layout(kind, &specs);
+            let mut blob0 = vec![0f32; layout.blob_len];
+            for x in blob0[..layout.params_len].iter_mut() {
+                *x = rng.normal() * 0.2;
+            }
+            let probe =
+                FlatOptimizer::new(kind, &layout, 1, ShardMode::Segments)
+                    .unwrap();
+            let extents = probe.group_extents();
+            let max_group_bytes = 4 * extents
+                .iter()
+                .map(|&(lo, hi)| hi - lo)
+                .max()
+                .unwrap();
+            for n_ranks in [1usize, 2, 3] {
+                let buckets = [
+                    1 + rng.below(layout.params_len),
+                    7,
+                    layout.params_len + 5, // single bucket covers all
+                ];
+                for bucket_elems in buckets {
+                    for (mode, n_shards) in [
+                        (ShardMode::Segments, 2usize),
+                        (ShardMode::Contiguous, 3),
+                    ] {
+                        let mut cfg =
+                            pipeline::PipelineConfig::new(3, bucket_elems);
+                        cfg.n_shards = n_shards;
+                        let grouped: Vec<Box<dyn GroupGradSource>> = (0
+                            ..n_ranks)
+                            .map(|r| {
+                                Box::new(FusedHostGrads::new(
+                                    extents.clone(),
+                                    500 + seed,
+                                    r,
+                                    0.05,
+                                ))
+                                    as Box<dyn GroupGradSource>
+                            })
+                            .collect();
+                        let full = || -> Vec<Box<dyn GradSource>> {
+                            (0..n_ranks)
+                                .map(|r| {
+                                    Box::new(FusedHostGrads::new(
+                                        extents.clone(),
+                                        500 + seed,
+                                        r,
+                                        0.05,
+                                    ))
+                                        as Box<dyn GradSource>
+                                })
+                                .collect()
+                        };
+                        let (a, ra) = pipeline::run_pipelined_fused(
+                            &layout, kind, mode, &blob0, grouped, &cfg,
+                        )
+                        .unwrap();
+                        let (b, _) = pipeline::run_pipelined(
+                            &layout, kind, mode, &blob0, full(), &cfg,
+                        )
+                        .unwrap();
+                        let (c, _) = pipeline::run_sequential(
+                            &layout, kind, mode, &blob0, full(), &cfg,
+                        )
+                        .unwrap();
+                        let ctx = format!(
+                            "{kind:?} {mode:?} ranks={n_ranks} \
+                             bucket={bucket_elems} shards={n_shards} \
+                             seed={seed}"
+                        );
+                        for (i, ((x, y), z)) in
+                            a.iter().zip(&b).zip(&c).enumerate()
+                        {
+                            assert!(
+                                x.to_bits() == y.to_bits()
+                                    && x.to_bits() == z.to_bits(),
+                                "{ctx} elem {i}: fused {x} vs piped {y} \
+                                 vs lockstep {z}"
+                            );
+                        }
+                        // Producer-side liveness: never the full image
+                        // when more than one bucket ships, never below
+                        // the largest single group.
+                        assert!(
+                            ra.peak_live_grad_bytes >= max_group_bytes,
+                            "{ctx}: {ra:?}"
+                        );
+                        assert!(
+                            ra.peak_live_grad_bytes <= ra.full_grad_bytes,
+                            "{ctx}: {ra:?}"
+                        );
                     }
                 }
             }
