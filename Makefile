@@ -8,8 +8,8 @@
 CARGO ?= cargo
 
 .PHONY: build test bench bench-smoke bench-json bench-gate bench-check \
-	bench-bless fmt fmt-fix clippy doc lint ci-tier1 ci test-pjrt \
-	artifacts
+	bench-bless ckpt-smoke fmt fmt-fix clippy doc lint ci-tier1 ci \
+	test-pjrt artifacts
 
 build:
 	$(CARGO) build --release
@@ -65,6 +65,28 @@ bench-bless: bench-json
 	$(CARGO) run --release --quiet -- bench-check --bless \
 		--current BENCH_pipeline.json --baseline bench/baseline.json
 
+# Checkpoint suspend/resume smoke (tier-1): run the same engine plan once
+# uninterrupted and once suspended at its midpoint + resumed from the
+# checkpoint file, then assert the two final checkpoints are
+# byte-identical. One `cmp` validates the blob bits AND the versioned
+# header (step counter + plan position) in one shot.
+CKPT_SMOKE_DIR := $(CURDIR)/target/ckpt-smoke
+ckpt-smoke:
+	rm -rf $(CKPT_SMOKE_DIR) && mkdir -p $(CKPT_SMOKE_DIR)
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 \
+		--out $(CKPT_SMOKE_DIR)/full.bin
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 --suspend-at 3 \
+		--out $(CKPT_SMOKE_DIR)/mid.bin
+	$(CARGO) run --release --quiet -- train \
+		--resume $(CKPT_SMOKE_DIR)/mid.bin \
+		--out $(CKPT_SMOKE_DIR)/resumed.bin
+	$(CARGO) run --release --quiet -- checkpoint-inspect \
+		--ckpt $(CKPT_SMOKE_DIR)/resumed.bin
+	cmp $(CKPT_SMOKE_DIR)/full.bin $(CKPT_SMOKE_DIR)/resumed.bin
+	@echo "ckpt-smoke OK: suspend/resume reproduced the uninterrupted run byte-for-byte"
+
 fmt:
 	$(CARGO) fmt --all -- --check
 
@@ -84,7 +106,7 @@ lint: fmt clippy doc
 
 ci-tier1: build test
 
-ci: lint ci-tier1
+ci: lint ci-tier1 ckpt-smoke
 
 # Artifact-gated integration tests (need `make artifacts` + real PJRT —
 # run by the workflow's manually-dispatched `pjrt` job).

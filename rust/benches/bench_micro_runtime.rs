@@ -2,12 +2,13 @@
 //! uploads, metrics reads — the L3 hot-path components the perf pass
 //! optimizes (EXPERIMENTS.md §Perf).
 
+use adalomo::coordinator::engine::{Engine, ExecPlan};
 use adalomo::coordinator::pipeline;
 use adalomo::data::{loader::DataLoader, Domain};
 use adalomo::experiments as exp;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
 use adalomo::optim::{pool, OptKind};
-use adalomo::runtime::Manifest;
+use adalomo::runtime::{checkpoint, Manifest};
 use adalomo::util::bench::{banner, bench, bench_units, JsonSink};
 
 /// Host-side blob operations on the flat engine: the coordinator-path
@@ -102,6 +103,45 @@ fn host_blob_section(sink: &mut JsonSink) {
         (r.compute_secs + r.comm_secs) * 1e3,
         r.overlap_efficiency
     );
+
+    // Engine checkpoint (runtime/checkpoint.rs): the restart-survival
+    // path for long pipeline runs — Layout + blob + step counter + plan
+    // position, serialized/parsed in full. The file size is tracked
+    // exactly (deterministic for a fixed layout + plan encoding): any
+    // format change must re-bless the baseline consciously.
+    let eng = Engine::new(
+        &layout,
+        &blob0,
+        ExecPlan::pipelined_fused(OptKind::AdaLomo, ShardMode::Contiguous, 2, &cfg),
+    )
+    .unwrap();
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "adalomo_bench_ckpt_{}.bin",
+        std::process::id()
+    ));
+    bench_units(
+        "engine checkpoint save (layout+blob+plan)",
+        layout.blob_len as f64,
+        || {
+            eng.save(&ckpt_path).unwrap();
+        },
+    );
+    bench_units(
+        "engine checkpoint load + validate",
+        layout.blob_len as f64,
+        || {
+            checkpoint::load(&ckpt_path).unwrap();
+        },
+    );
+    let ckpt_bytes = std::fs::metadata(&ckpt_path)
+        .expect("checkpoint file written")
+        .len();
+    println!(
+        "checkpoint file: {} bytes for {} blob floats",
+        ckpt_bytes, layout.blob_len
+    );
+    sink.metric("checkpoint_file_bytes", ckpt_bytes as f64);
+    std::fs::remove_file(&ckpt_path).ok();
     println!();
 }
 

@@ -1,0 +1,1254 @@
+//! Unified execution engine: one `ExecPlan`-driven leader loop for every
+//! training path.
+//!
+//! Before this module the repo realized the paper's step schedule —
+//! grouped gradient production, bucketed exchange, fused in-place update
+//! (AdaLomo §3) — four separate times: the lockstep reference
+//! ([`super::pipeline::run_sequential`]), the full-image async pipeline
+//! ([`super::pipeline::run_pipelined`]), the group-granular pipeline
+//! ([`super::pipeline::run_pipelined_fused`]) and the fused-backward host
+//! mirror ([`super::fused_host::run_fused_host`]), each with its own
+//! hand-rolled leader loop, report struct and invariants. All four are
+//! now thin constructors over one [`ExecPlan`]:
+//!
+//! * **grad production** — [`GradProduction`]: every rank materializes
+//!   the full gradient image per step, or produces it group by group in
+//!   fused-backward order (never holding the whole image);
+//! * **exchange order** — [`ExchangeOrder`]: buckets land in ascending
+//!   offset order (natural for a materialized image) or descending
+//!   (the order backward production covers the image);
+//! * **step granularity** — [`StepGranularity`]: one whole-image
+//!   [`FlatOptimizer::step`] per training step, per-bucket
+//!   [`FlatOptimizer::step_tasks`] the moment a task's last (or, in the
+//!   descending walk, first) element lands, or per-group
+//!   [`FlatOptimizer::step_group`] walks;
+//! * plus ranks × fabric model ([`Fabric`]) and the shared optimizer
+//!   hyper-surface (`lr`/`wd`/shards).
+//!
+//! One generic leader loop executes any plan over any
+//! [`GradSource`]/[`GroupGradSource`] set, so bitwise parity between the
+//! paths is structural (same gradient values, same rank-order reduction,
+//! same self-contained per-task arithmetic) rather than re-proven per
+//! path — the `prop_engine_matches_legacy_bitwise` proptest pins it.
+//!
+//! # Checkpoint / suspend / resume
+//!
+//! [`Engine`] owns the blob and the completed-step counter, so any plan
+//! can stop mid-run and continue bitwise-identically: [`Engine::suspend_at`]
+//! halts the loop after step *k*, [`Engine::save`] serializes Layout +
+//! blob + step counter + plan position through
+//! [`crate::runtime::checkpoint`], and [`Engine::resume`] rebuilds the
+//! engine from the file alone (no manifest needed). Sources are re-wound
+//! by the producer threads via [`GradSource::skip`] /
+//! [`GroupGradSource::skip_step`], so a resumed run consumes exactly the
+//! gradient stream the uninterrupted run would have.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::optim::flat::{FlatOptimizer, ShardMode};
+use crate::optim::{pool, OptKind};
+use crate::runtime::checkpoint::{self, PlanRecord};
+use crate::runtime::Layout;
+
+use super::collective::{allreduce_bucket_time, Fabric};
+use super::fused_host::GroupGradSource;
+use super::pipeline::{BucketPlan, GradSource, PipelineConfig};
+
+/// How each rank produces its per-step gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradProduction {
+    /// The rank materializes the full gradient image every step
+    /// ([`GradSource`]).
+    FullImage,
+    /// The rank produces one fused-backward group at a time
+    /// ([`GroupGradSource`]) and ships exchange buckets as production
+    /// covers them — the paper's §2.1 liveness story on the host path.
+    GroupedBackward,
+}
+
+/// The offset order in which exchange buckets move over the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeOrder {
+    Ascending,
+    Descending,
+}
+
+/// What the leader steps as reductions land.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepGranularity {
+    /// One whole-image [`FlatOptimizer::step`] after the full reduction —
+    /// the lockstep reference.
+    WholeImage,
+    /// Per-bucket [`FlatOptimizer::step_tasks`]: a task steps the moment
+    /// the bucket completing it lands, while later buckets ride the
+    /// fabric.
+    Tasks,
+    /// Per-group [`FlatOptimizer::step_group`]: the fused-host mirror's
+    /// walk, one group extent reduced and stepped at a time.
+    Groups,
+}
+
+/// A complete execution schedule: which of the (production × order ×
+/// granularity) cell to run, over how many ranks/steps, on which
+/// optimizer/shard plan, against which fabric model.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub production: GradProduction,
+    pub order: ExchangeOrder,
+    pub granularity: StepGranularity,
+    pub kind: OptKind,
+    pub mode: ShardMode,
+    pub n_ranks: usize,
+    pub steps: usize,
+    /// Exchange bucket size in f32 elements ([`StepGranularity::Tasks`];
+    /// the other granularities derive their tiling from the image or the
+    /// fused groups).
+    pub bucket_elems: usize,
+    pub lr: f32,
+    pub wd: f32,
+    pub n_shards: usize,
+    pub fabric: Fabric,
+    /// Seed for deterministic host-mirror gradient sources. The engine
+    /// itself never reads it — it rides along (and through checkpoints)
+    /// so a resumed CLI run can reconstruct identical rank streams.
+    pub seed: u64,
+}
+
+impl ExecPlan {
+    fn from_cfg(
+        production: GradProduction,
+        order: ExchangeOrder,
+        granularity: StepGranularity,
+        kind: OptKind,
+        mode: ShardMode,
+        n_ranks: usize,
+        cfg: &PipelineConfig,
+    ) -> ExecPlan {
+        ExecPlan {
+            production,
+            order,
+            granularity,
+            kind,
+            mode,
+            n_ranks,
+            steps: cfg.steps,
+            bucket_elems: cfg.bucket_elems,
+            lr: cfg.lr,
+            wd: cfg.wd,
+            n_shards: cfg.n_shards,
+            fabric: cfg.fabric,
+            seed: 0,
+        }
+    }
+
+    /// The lockstep reference: full-image production, one monolithic
+    /// exchange, one whole-image step.
+    pub fn sequential(
+        kind: OptKind,
+        mode: ShardMode,
+        n_ranks: usize,
+        cfg: &PipelineConfig,
+    ) -> ExecPlan {
+        Self::from_cfg(
+            GradProduction::FullImage,
+            ExchangeOrder::Ascending,
+            StepGranularity::WholeImage,
+            kind,
+            mode,
+            n_ranks,
+            cfg,
+        )
+    }
+
+    /// The full-image async pipeline: ascending buckets overlapped with
+    /// per-task stepping.
+    pub fn pipelined(
+        kind: OptKind,
+        mode: ShardMode,
+        n_ranks: usize,
+        cfg: &PipelineConfig,
+    ) -> ExecPlan {
+        Self::from_cfg(
+            GradProduction::FullImage,
+            ExchangeOrder::Ascending,
+            StepGranularity::Tasks,
+            kind,
+            mode,
+            n_ranks,
+            cfg,
+        )
+    }
+
+    /// The group-granular pipeline: descending buckets shipped against
+    /// group-by-group production, per-task stepping.
+    pub fn pipelined_fused(
+        kind: OptKind,
+        mode: ShardMode,
+        n_ranks: usize,
+        cfg: &PipelineConfig,
+    ) -> ExecPlan {
+        Self::from_cfg(
+            GradProduction::GroupedBackward,
+            ExchangeOrder::Descending,
+            StepGranularity::Tasks,
+            kind,
+            mode,
+            n_ranks,
+            cfg,
+        )
+    }
+
+    /// The fused-backward host mirror: group-by-group production, one
+    /// group extent reduced and stepped at a time.
+    pub fn fused_host(
+        kind: OptKind,
+        mode: ShardMode,
+        n_ranks: usize,
+        cfg: &PipelineConfig,
+    ) -> ExecPlan {
+        Self::from_cfg(
+            GradProduction::GroupedBackward,
+            ExchangeOrder::Descending,
+            StepGranularity::Groups,
+            kind,
+            mode,
+            n_ranks,
+            cfg,
+        )
+    }
+
+    /// Reject plans the producers cannot execute.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_ranks >= 1, "plan needs at least one rank");
+        ensure!(self.n_shards >= 1, "plan needs at least one shard");
+        if self.granularity == StepGranularity::Tasks {
+            ensure!(
+                self.bucket_elems >= 1,
+                "tasks granularity needs a positive bucket size"
+            );
+        }
+        if self.production == GradProduction::GroupedBackward {
+            ensure!(
+                self.order == ExchangeOrder::Descending,
+                "grouped-backward production covers the image top-down, so \
+                 buckets can only ship in descending offset order"
+            );
+        }
+        Ok(())
+    }
+
+    /// One-line human description (the `checkpoint-inspect` output).
+    pub fn describe(&self) -> String {
+        let prod = match self.production {
+            GradProduction::FullImage => "full-image",
+            GradProduction::GroupedBackward => "grouped-backward",
+        };
+        let ord = match self.order {
+            ExchangeOrder::Ascending => "ascending",
+            ExchangeOrder::Descending => "descending",
+        };
+        let gran = match self.granularity {
+            StepGranularity::WholeImage => "whole-image",
+            StepGranularity::Tasks => "step_tasks",
+            StepGranularity::Groups => "step_group",
+        };
+        format!(
+            "{prod} production, {ord} exchange, {gran} steps; {} x {} \
+             ({:?}, {} shards), {} steps, bucket {} elems",
+            self.n_ranks,
+            self.kind.name(),
+            self.mode,
+            self.n_shards,
+            self.steps,
+            self.bucket_elems
+        )
+    }
+
+    /// Serialize to the runtime-layer [`PlanRecord`] (cursors zero: the
+    /// engine only checkpoints at step boundaries).
+    pub fn to_record(&self) -> PlanRecord {
+        PlanRecord {
+            production: match self.production {
+                GradProduction::FullImage => checkpoint::PROD_FULL_IMAGE,
+                GradProduction::GroupedBackward => checkpoint::PROD_GROUPED,
+            },
+            order: match self.order {
+                ExchangeOrder::Ascending => checkpoint::ORD_ASCENDING,
+                ExchangeOrder::Descending => checkpoint::ORD_DESCENDING,
+            },
+            granularity: match self.granularity {
+                StepGranularity::WholeImage => checkpoint::GRAN_WHOLE_IMAGE,
+                StepGranularity::Tasks => checkpoint::GRAN_TASKS,
+                StepGranularity::Groups => checkpoint::GRAN_GROUPS,
+            },
+            mode: match self.mode {
+                ShardMode::Segments => checkpoint::MODE_SEGMENTS,
+                ShardMode::Contiguous => checkpoint::MODE_CONTIGUOUS,
+            },
+            opt: self.kind.name().to_string(),
+            steps: self.steps as u64,
+            bucket_elems: self.bucket_elems as u64,
+            n_ranks: self.n_ranks as u32,
+            n_shards: self.n_shards as u32,
+            lr: self.lr,
+            wd: self.wd,
+            fabric_alpha: self.fabric.alpha,
+            fabric_bw: self.fabric.bw,
+            seed: self.seed,
+            cursor_group: 0,
+            cursor_task: 0,
+        }
+    }
+
+    /// Deserialize from a [`PlanRecord`], rejecting unknown codes.
+    pub fn from_record(r: &PlanRecord) -> Result<ExecPlan> {
+        let production = match r.production {
+            checkpoint::PROD_FULL_IMAGE => GradProduction::FullImage,
+            checkpoint::PROD_GROUPED => GradProduction::GroupedBackward,
+            other => bail!("unknown production code {other}"),
+        };
+        let order = match r.order {
+            checkpoint::ORD_ASCENDING => ExchangeOrder::Ascending,
+            checkpoint::ORD_DESCENDING => ExchangeOrder::Descending,
+            other => bail!("unknown exchange-order code {other}"),
+        };
+        let granularity = match r.granularity {
+            checkpoint::GRAN_WHOLE_IMAGE => StepGranularity::WholeImage,
+            checkpoint::GRAN_TASKS => StepGranularity::Tasks,
+            checkpoint::GRAN_GROUPS => StepGranularity::Groups,
+            other => bail!("unknown granularity code {other}"),
+        };
+        let mode = match r.mode {
+            checkpoint::MODE_SEGMENTS => ShardMode::Segments,
+            checkpoint::MODE_CONTIGUOUS => ShardMode::Contiguous,
+            other => bail!("unknown shard-mode code {other}"),
+        };
+        let plan = ExecPlan {
+            production,
+            order,
+            granularity,
+            kind: OptKind::parse(&r.opt)?,
+            mode,
+            n_ranks: r.n_ranks as usize,
+            steps: r.steps as usize,
+            bucket_elems: r.bucket_elems as usize,
+            lr: r.lr,
+            wd: r.wd,
+            n_shards: r.n_shards as usize,
+            fabric: Fabric { alpha: r.fabric_alpha, bw: r.fabric_bw },
+            seed: r.seed,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// Per-rank gradient sources for one run: the variant must match the
+/// plan's [`GradProduction`] axis.
+pub enum RankSources {
+    Full(Vec<Box<dyn GradSource>>),
+    Grouped(Vec<Box<dyn GroupGradSource>>),
+}
+
+impl RankSources {
+    pub fn len(&self) -> usize {
+        match self {
+            RankSources::Full(v) => v.len(),
+            RankSources::Grouped(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// What one [`Engine::run`] measured/modeled — the union of the old
+/// `PipelineReport` and `FusedHostReport` surfaces, so every path (and
+/// every bench/example/CI metric) reads the same struct.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub n_ranks: usize,
+    /// Optimizer steps this run executed (after a resume, only the
+    /// remaining steps).
+    pub steps: usize,
+    /// Exchange tiles per step (fixed-size buckets, or one per fused
+    /// group under [`StepGranularity::Groups`]).
+    pub n_buckets: usize,
+    /// Fused-backward groups, when production or stepping is
+    /// group-granular; 0 for purely full-image plans.
+    pub n_groups: usize,
+    /// Measured wall time inside the optimizer step calls.
+    pub compute_secs: f64,
+    /// Simulated fabric cost of the bucketed ring all-reduces.
+    pub comm_secs: f64,
+    /// Modeled critical path: comm serialized on the fabric, each tile's
+    /// optimizer work starting once its reduction lands and the previous
+    /// tile's work has finished.
+    pub exposed_secs: f64,
+    /// `(compute + comm) / exposed` — 1.0 means nothing overlapped;
+    /// higher is better (2.0 would mean perfect hiding of the smaller
+    /// side).
+    pub overlap_efficiency: f64,
+    pub wall_secs: f64,
+    /// Peak gradient bytes live on a producing rank: the full image for
+    /// full-image production; MEASURED produced-but-unshipped group-buffer
+    /// bytes for grouped production (never above the image — in-flight
+    /// exchange payloads are the fabric's, not the producer's).
+    pub peak_live_grad_bytes: usize,
+    /// The full-gradient-image baseline in bytes (`params_len` × 4).
+    pub full_grad_bytes: usize,
+    /// Per-group live-gradient bytes in walk order under
+    /// [`StepGranularity::Groups`] (the measured liveness curve
+    /// `memsim::liveness::simulate_grouped` predicts); empty otherwise.
+    pub curve_bytes: Vec<usize>,
+}
+
+impl EngineReport {
+    /// Peak live gradient as a fraction of the full-image baseline.
+    pub fn live_fraction(&self) -> f64 {
+        self.peak_live_grad_bytes as f64 / self.full_grad_bytes.max(1) as f64
+    }
+}
+
+/// The unified engine: a [`FlatOptimizer`] plus the blob, the
+/// completed-step counter and the [`ExecPlan`] being executed. Construct
+/// with [`Engine::new`] (or [`Engine::resume`]), drive with
+/// [`Engine::run`], snapshot with [`Engine::save`].
+pub struct Engine {
+    layout: Layout,
+    layout_key: String,
+    plan: ExecPlan,
+    opt: FlatOptimizer,
+    blob: Vec<f32>,
+    done_steps: u64,
+    suspend_at: Option<u64>,
+    /// Set when a run aborted mid-step: the blob may hold a partially
+    /// applied step, so checkpointing it would corrupt a resume.
+    /// [`Engine::save`] refuses while this is set.
+    poisoned: bool,
+}
+
+impl Engine {
+    pub fn new(layout: &Layout, blob0: &[f32], plan: ExecPlan) -> Result<Engine> {
+        plan.validate()?;
+        ensure!(
+            blob0.len() == layout.blob_len,
+            "blob len {} != layout {}",
+            blob0.len(),
+            layout.blob_len
+        );
+        let opt = FlatOptimizer::new(plan.kind, layout, plan.n_shards, plan.mode)?;
+        Ok(Engine {
+            layout: layout.clone(),
+            layout_key: format!("engine/{}", plan.kind.name()),
+            plan,
+            opt,
+            blob: blob0.to_vec(),
+            done_steps: 0,
+            suspend_at: None,
+            poisoned: false,
+        })
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Layout key recorded into checkpoints (`preset/opt` spelling for
+    /// manifest-backed runs; defaults to `engine/<opt>`).
+    pub fn set_layout_key(&mut self, key: &str) {
+        self.layout_key = key.to_string();
+    }
+
+    pub fn blob(&self) -> &[f32] {
+        &self.blob
+    }
+
+    pub fn into_blob(self) -> Vec<f32> {
+        self.blob
+    }
+
+    /// Completed optimizer steps.
+    pub fn step(&self) -> u64 {
+        self.done_steps
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.done_steps >= self.plan.steps as u64
+    }
+
+    /// Fused-backward group extents of the underlying flat optimizer —
+    /// what host-mirror sources are constructed over.
+    pub fn group_extents(&self) -> Vec<(usize, usize)> {
+        self.opt.group_extents()
+    }
+
+    /// Halt [`Engine::run`] once `step` optimizer steps have completed
+    /// (a no-op if the plan stops earlier anyway). The engine can then be
+    /// [`Engine::save`]d and later [`Engine::resume`]d bitwise-exactly.
+    pub fn suspend_at(&mut self, step: u64) {
+        self.suspend_at = Some(step);
+    }
+
+    /// Serialize Layout + blob + step counter + plan position. The blob
+    /// is streamed from the engine's own buffer
+    /// ([`checkpoint::write`]) — no clone of the largest object on the
+    /// checkpoint path. Refuses while the engine is poisoned (a run
+    /// aborted mid-step), because the blob may hold a partially applied
+    /// step and a resume from it would silently diverge.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "engine aborted mid-step; its blob may hold a partially \
+             applied step and cannot be checkpointed"
+        );
+        checkpoint::write(
+            path,
+            &self.layout_key,
+            &self.layout,
+            self.done_steps,
+            &self.plan.to_record(),
+            &self.blob,
+        )
+    }
+
+    /// Rebuild an engine from a checkpoint file alone. The resumed engine
+    /// continues from the recorded step counter; feed it sources seeded
+    /// like the original run's (the producer threads fast-forward them
+    /// past the already-completed steps).
+    pub fn resume(path: &Path) -> Result<Engine> {
+        let ck = checkpoint::load(path)?;
+        let plan = ExecPlan::from_record(&ck.plan)?;
+        ensure!(
+            ck.step <= plan.steps as u64,
+            "checkpoint is {} steps in, but the plan only runs {}",
+            ck.step,
+            plan.steps
+        );
+        let opt =
+            FlatOptimizer::new(plan.kind, &ck.layout, plan.n_shards, plan.mode)?;
+        // Version-1 checkpoints are step-boundary only (cursors zero);
+        // validate the recorded (group, task) cursor pair against the
+        // rebuilt optimizer's walk anyway, so a future mid-step writer
+        // cannot hand us an inconsistent position silently.
+        ensure!(
+            opt.group_cursor_task(ck.plan.cursor_group as usize)
+                == ck.plan.cursor_task as usize,
+            "checkpoint cursor (group {}, task {}) does not lie on the \
+             rebuilt optimizer's fused walk",
+            ck.plan.cursor_group,
+            ck.plan.cursor_task
+        );
+        Ok(Engine {
+            layout_key: ck.layout_key,
+            layout: ck.layout,
+            plan,
+            opt,
+            blob: ck.blob,
+            done_steps: ck.step,
+            suspend_at: None,
+            poisoned: false,
+        })
+    }
+
+    /// Execute the plan from the current step counter up to the plan's
+    /// step budget (or the [`Engine::suspend_at`] point, whichever comes
+    /// first), updating the blob in place. Returns the report for the
+    /// steps this call executed.
+    pub fn run(&mut self, sources: RankSources) -> Result<EngineReport> {
+        let started = Instant::now();
+        let plan = self.plan.clone();
+        ensure!(!sources.is_empty(), "need at least one rank");
+        ensure!(
+            sources.len() == plan.n_ranks,
+            "plan expects {} ranks, got {} sources",
+            plan.n_ranks,
+            sources.len()
+        );
+        let params_len = self.layout.params_len;
+        let start = self.done_steps;
+        let stop = (plan.steps as u64)
+            .min(self.suspend_at.unwrap_or(u64::MAX))
+            .max(start);
+
+        // Exchange tiling + what each tile's landing makes steppable.
+        let extents = self.opt.task_extents();
+        let group_extents = self.opt.group_extents();
+        let (tiles, visit, ready) = build_schedule(
+            &plan,
+            params_len,
+            &extents,
+            &group_extents,
+        )?;
+        // Per-tile fabric cost (ragged tiles costed by their own bytes —
+        // identical tiling to `collective::bucketed_allreduce_times`).
+        let tile_comm: Vec<f64> = tiles
+            .iter()
+            .map(|&(lo, hi)| {
+                allreduce_bucket_time(
+                    ((hi - lo) * 4) as f64,
+                    plan.n_ranks,
+                    plan.fabric,
+                )
+            })
+            .collect();
+
+        // Producers: one thread per rank, streaming tiles over bounded
+        // channels (the fixed depth is the backpressure a real exchange
+        // fabric applies). Each returns its measured peak live gradient
+        // elements.
+        let (handles, rx_ranks) = match sources {
+            RankSources::Full(srcs) => {
+                ensure!(
+                    plan.production == GradProduction::FullImage,
+                    "plan produces grouped-backward gradients; wrap the \
+                     sources as RankSources::Grouped"
+                );
+                let ship: Vec<(usize, usize)> =
+                    visit.iter().map(|&b| tiles[b]).collect();
+                spawn_full_producers(srcs, ship, params_len, start, stop)
+            }
+            RankSources::Grouped(srcs) => {
+                ensure!(
+                    plan.production == GradProduction::GroupedBackward,
+                    "plan produces full-image gradients; wrap the sources \
+                     as RankSources::Full"
+                );
+                validate_grouped(&srcs, &group_extents, params_len)?;
+                spawn_grouped_producers(
+                    srcs,
+                    tiles.clone(),
+                    group_extents.clone(),
+                    start,
+                    stop,
+                )
+            }
+        };
+
+        let outcome = leader_loop(
+            &mut self.opt,
+            &mut self.blob,
+            &plan,
+            &tiles,
+            &visit,
+            &ready,
+            &tile_comm,
+            &rx_ranks,
+            start,
+            stop,
+        );
+        // Unblock any rank still parked on a bounded send before joining
+        // (the error path stops receiving mid-stream).
+        drop(rx_ranks);
+        let mut peak_elems = 0usize;
+        let mut join_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(rank_peak) => peak_elems = peak_elems.max(rank_peak),
+                Err(_) => join_err = Some(anyhow!("rank thread panicked")),
+            }
+        }
+        let (compute_secs, comm_secs, exposed_secs) = match (outcome, join_err)
+        {
+            (Ok(v), None) => v,
+            (Err(e), _) | (Ok(_), Some(e)) => {
+                // The blob may hold a partially applied step and the
+                // step counter was not advanced: refuse to checkpoint
+                // this state ever again.
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
+        self.done_steps = stop;
+
+        let overlap_efficiency = if exposed_secs > 0.0 {
+            (compute_secs + comm_secs) / exposed_secs
+        } else {
+            1.0
+        };
+        let grouped = plan.production == GradProduction::GroupedBackward
+            || plan.granularity == StepGranularity::Groups;
+        let curve_bytes = if plan.granularity == StepGranularity::Groups {
+            group_extents.iter().map(|&(lo, hi)| 4 * (hi - lo)).collect()
+        } else {
+            Vec::new()
+        };
+        Ok(EngineReport {
+            n_ranks: plan.n_ranks,
+            steps: (stop - start) as usize,
+            n_buckets: tiles.len(),
+            n_groups: if grouped { group_extents.len() } else { 0 },
+            compute_secs,
+            comm_secs,
+            exposed_secs,
+            overlap_efficiency,
+            wall_secs: started.elapsed().as_secs_f64(),
+            peak_live_grad_bytes: 4 * peak_elems,
+            full_grad_bytes: 4 * params_len,
+            curve_bytes,
+        })
+    }
+}
+
+/// Tile the gradient image for a plan and compute, per tile, what its
+/// landing makes steppable. Returns `(tiles, visit, ready)`: tile ranges
+/// indexed in ascending-offset order, the order the leader (and the
+/// producers) visit them in, and — for tasks granularity — the per-tile
+/// lists of completed task indices.
+#[allow(clippy::type_complexity)]
+fn build_schedule(
+    plan: &ExecPlan,
+    params_len: usize,
+    extents: &[(usize, usize)],
+    group_extents: &[(usize, usize)],
+) -> Result<(Vec<(usize, usize)>, Vec<usize>, Vec<Vec<usize>>)> {
+    match plan.granularity {
+        StepGranularity::WholeImage => {
+            Ok((vec![(0, params_len)], vec![0], vec![Vec::new()]))
+        }
+        StepGranularity::Tasks => {
+            let bp = BucketPlan::new(params_len, plan.bucket_elems);
+            let ready = match plan.order {
+                ExchangeOrder::Ascending => bp.ready_schedule(extents),
+                ExchangeOrder::Descending => {
+                    bp.ready_schedule_backward(extents)
+                }
+            };
+            let visit: Vec<usize> = match plan.order {
+                ExchangeOrder::Ascending => (0..bp.n_buckets()).collect(),
+                ExchangeOrder::Descending => {
+                    (0..bp.n_buckets()).rev().collect()
+                }
+            };
+            Ok((bp.buckets, visit, ready))
+        }
+        StepGranularity::Groups => {
+            // One tile per fused group. Group extents arrive in walk
+            // (descending-offset) order; tiles are stored ascending so
+            // the grouped producers' cover logic can walk them from the
+            // top, and tile b maps back to group `G - 1 - b`.
+            ensure_descending_tiling(group_extents, params_len)?;
+            let tiles: Vec<(usize, usize)> =
+                group_extents.iter().rev().copied().collect();
+            let visit: Vec<usize> = (0..tiles.len()).rev().collect();
+            let ready = vec![Vec::new(); tiles.len()];
+            Ok((tiles, visit, ready))
+        }
+    }
+}
+
+/// The grouped walk ships buckets against a production frontier moving
+/// down from `params_len`: the groups must tile the image top-down.
+fn ensure_descending_tiling(
+    group_extents: &[(usize, usize)],
+    params_len: usize,
+) -> Result<()> {
+    let mut hi_expect = params_len;
+    for (g, &(lo, hi)) in group_extents.iter().enumerate() {
+        ensure!(
+            hi == hi_expect && lo < hi,
+            "group {g} extent [{lo}, {hi}) breaks the descending tiling \
+             (expected hi = {hi_expect}); fused-backward execution needs \
+             a model-shaped layout"
+        );
+        hi_expect = lo;
+    }
+    ensure!(hi_expect == 0, "fused groups must cover the gradient image");
+    Ok(())
+}
+
+/// Every grouped source must agree with the engine's fused groups.
+fn validate_grouped(
+    sources: &[Box<dyn GroupGradSource>],
+    group_extents: &[(usize, usize)],
+    params_len: usize,
+) -> Result<()> {
+    ensure_descending_tiling(group_extents, params_len)?;
+    for (r, src) in sources.iter().enumerate() {
+        ensure!(
+            src.n_groups() == group_extents.len(),
+            "rank {r}: source has {} groups, engine {}",
+            src.n_groups(),
+            group_extents.len()
+        );
+        for (g, &e) in group_extents.iter().enumerate() {
+            ensure!(
+                src.group_extent(g) == e,
+                "rank {r} group {g}: source extent {:?} != engine {:?}",
+                src.group_extent(g),
+                e
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Full-image producers: fast-forward past completed steps, then per step
+/// fill the whole gradient image and ship the tiles in visit order. Every
+/// rank holds the full image, so its peak is `params_len` elements.
+#[allow(clippy::type_complexity)]
+fn spawn_full_producers(
+    sources: Vec<Box<dyn GradSource>>,
+    ship: Vec<(usize, usize)>,
+    params_len: usize,
+    start: u64,
+    stop: u64,
+) -> (Vec<thread::JoinHandle<usize>>, Vec<mpsc::Receiver<Vec<f32>>>) {
+    let mut handles = Vec::with_capacity(sources.len());
+    let mut rx_ranks = Vec::with_capacity(sources.len());
+    for mut src in sources {
+        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
+        rx_ranks.push(rx);
+        let ship = ship.clone();
+        handles.push(thread::spawn(move || -> usize {
+            let mut grad = vec![0f32; params_len];
+            for s in 1..=start {
+                src.skip(s, &mut grad);
+            }
+            // Peak is the full image once any step materializes it —
+            // and 0 for an empty (already-finished) run, matching the
+            // grouped producers' measured semantics.
+            let mut peak_elems = 0usize;
+            for step in start + 1..=stop {
+                peak_elems = params_len;
+                src.fill(step, &mut grad);
+                for &(lo, hi) in &ship {
+                    if tx.send(grad[lo..hi].to_vec()).is_err() {
+                        return peak_elems; // leader bailed; stop producing
+                    }
+                }
+            }
+            peak_elems
+        }));
+    }
+    (handles, rx_ranks)
+}
+
+/// Grouped producers: interleave group production with tile shipping.
+/// Produced-but-unshipped group buffers are retained oldest (highest
+/// extent) first; each is freed the moment the shipped region covers it,
+/// so only the groups overlapping the unshipped span stay allocated —
+/// with tiles no larger than a group that is at most two groups, the
+/// host-path twin of the paper's two-consecutive-gradients bound (§2.1),
+/// and it can never exceed the full image. Each thread returns its
+/// measured peak live gradient elements.
+#[allow(clippy::type_complexity)]
+fn spawn_grouped_producers(
+    sources: Vec<Box<dyn GroupGradSource>>,
+    tiles: Vec<(usize, usize)>,
+    extents: Vec<(usize, usize)>,
+    start: u64,
+    stop: u64,
+) -> (Vec<thread::JoinHandle<usize>>, Vec<mpsc::Receiver<Vec<f32>>>) {
+    let mut handles = Vec::with_capacity(sources.len());
+    let mut rx_ranks = Vec::with_capacity(sources.len());
+    for mut src in sources {
+        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
+        rx_ranks.push(rx);
+        let tiles = tiles.clone();
+        let extents = extents.clone();
+        handles.push(thread::spawn(move || -> usize {
+            let mut scratch = Vec::new();
+            for s in 1..=start {
+                src.skip_step(s, &mut scratch);
+            }
+            drop(scratch);
+            let mut peak_elems = 0usize;
+            for step in start + 1..=stop {
+                let mut segs: VecDeque<(usize, Vec<f32>)> = VecDeque::new();
+                let mut live = 0usize;
+                let mut next_tile = tiles.len();
+                for (g, &(lo, hi)) in extents.iter().enumerate() {
+                    let mut gbuf = vec![0f32; hi - lo];
+                    src.fill_group(step, g, &mut gbuf);
+                    live += gbuf.len();
+                    peak_elems = peak_elems.max(live);
+                    segs.push_back((lo, gbuf));
+                    // Ship every tile production now covers; each send
+                    // assembles the tile payload from the overlapping
+                    // buffers (the one copy the exchange itself needs).
+                    while next_tile > 0 && tiles[next_tile - 1].0 >= lo {
+                        let (blo, bhi) = tiles[next_tile - 1];
+                        let mut chunk = vec![0f32; bhi - blo];
+                        for (slo, sbuf) in segs.iter() {
+                            let slo = *slo;
+                            let shi = slo + sbuf.len();
+                            let olo = blo.max(slo);
+                            let ohi = bhi.min(shi);
+                            if olo < ohi {
+                                chunk[olo - blo..ohi - blo]
+                                    .copy_from_slice(
+                                        &sbuf[olo - slo..ohi - slo],
+                                    );
+                            }
+                        }
+                        if tx.send(chunk).is_err() {
+                            return peak_elems; // leader bailed; stop
+                        }
+                        // Free every buffer the shipped region covers.
+                        loop {
+                            match segs.front() {
+                                Some(&(slo, _)) if slo >= blo => {
+                                    let (_, sbuf) = segs
+                                        .pop_front()
+                                        .expect("front checked above");
+                                    live -= sbuf.len();
+                                }
+                                _ => break,
+                            }
+                        }
+                        next_tile -= 1;
+                    }
+                }
+                debug_assert!(segs.is_empty() && next_tile == 0);
+            }
+            peak_elems
+        }));
+    }
+    (handles, rx_ranks)
+}
+
+/// THE leader loop — the single copy that used to exist per path: receive
+/// and reduce each tile's per-rank contributions in rank order (the fixed
+/// reduction order determinism rests on), step whatever the plan's
+/// granularity makes ready, and advance the modeled timeline. Returns
+/// `(compute, comm, exposed)` seconds.
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    opt: &mut FlatOptimizer,
+    blob: &mut [f32],
+    plan: &ExecPlan,
+    tiles: &[(usize, usize)],
+    visit: &[usize],
+    ready: &[Vec<usize>],
+    tile_comm: &[f64],
+    rx_ranks: &[mpsc::Receiver<Vec<f32>>],
+    start: u64,
+    stop: u64,
+) -> Result<(f64, f64, f64)> {
+    let n_ranks = rx_ranks.len();
+    let inv = 1.0 / n_ranks as f32;
+    let params_len = tiles.iter().map(|&(_, hi)| hi).max().unwrap_or(0);
+    let mut grad = vec![0f32; params_len];
+    let (mut compute, mut comm, mut exposed) = (0.0f64, 0.0f64, 0.0f64);
+    let last_visit = visit.last().copied();
+    for t in start + 1..=stop {
+        // Modeled per-step timeline: comm is serialized on the fabric
+        // (`comm_front`); tile b's optimizer work starts at max(its
+        // reduction landing, previous work finishing).
+        let mut comm_front = 0.0f64;
+        let mut work_front = 0.0f64;
+        for &b in visit {
+            let (lo, hi) = tiles[b];
+            // Accumulate: one contribution per rank, received in rank
+            // order.
+            let mut chunks = Vec::with_capacity(n_ranks);
+            for rx in rx_ranks {
+                let chunk = rx.recv().map_err(|_| {
+                    anyhow!("rank gradient stream ended early")
+                })?;
+                ensure!(chunk.len() == hi - lo, "tile size mismatch");
+                chunks.push(chunk);
+            }
+            // Reduce: mean in rank order, element-parallel on the pool
+            // (bit-identical for any worker count).
+            let refs: Vec<&[f32]> =
+                chunks.iter().map(|c| c.as_slice()).collect();
+            pool::par_average(&mut grad[lo..hi], &refs, inv, plan.n_shards);
+            comm_front += tile_comm[b];
+            comm += tile_comm[b];
+            // Step: whatever this tile's landing makes ready.
+            let dt = match plan.granularity {
+                StepGranularity::Tasks if !ready[b].is_empty() => {
+                    let t0 = Instant::now();
+                    opt.step_tasks(
+                        blob, &grad, t, plan.lr, plan.wd, &ready[b],
+                    )?;
+                    t0.elapsed().as_secs_f64()
+                }
+                StepGranularity::Tasks => 0.0,
+                StepGranularity::Groups => {
+                    let g = tiles.len() - 1 - b;
+                    let t0 = Instant::now();
+                    opt.step_group(
+                        blob,
+                        g,
+                        &grad[lo..hi],
+                        t,
+                        plan.lr,
+                        plan.wd,
+                    )?;
+                    t0.elapsed().as_secs_f64()
+                }
+                StepGranularity::WholeImage if Some(b) == last_visit => {
+                    let t0 = Instant::now();
+                    opt.step(blob, &grad, t, plan.lr, plan.wd)?;
+                    t0.elapsed().as_secs_f64()
+                }
+                StepGranularity::WholeImage => 0.0,
+            };
+            compute += dt;
+            work_front = comm_front.max(work_front) + dt;
+        }
+        exposed += comm_front.max(work_front);
+    }
+    Ok((compute, comm, exposed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fused_host::FusedHostGrads;
+    use crate::coordinator::pipeline::synthetic_sources;
+    use crate::optim::flat::{seeded_blob_and_grads, synthetic_layout};
+
+    fn model_layout(kind: OptKind) -> Layout {
+        let params: Vec<(&str, &[usize])> = vec![
+            ("embed", &[16, 8][..]),
+            ("l0.attn_norm", &[8][..]),
+            ("l0.wq", &[8, 8][..]),
+            ("l1.wq", &[8, 8][..]),
+            ("final_norm", &[8][..]),
+            ("head", &[8, 16][..]),
+        ];
+        synthetic_layout(kind, &params)
+    }
+
+    fn cfg(steps: usize, bucket: usize) -> PipelineConfig {
+        let mut c = PipelineConfig::new(steps, bucket);
+        c.n_shards = 2;
+        c
+    }
+
+    #[test]
+    fn plan_validation_rejects_impossible_combos() {
+        let c = cfg(2, 16);
+        let mut plan =
+            ExecPlan::pipelined_fused(OptKind::AdaLomo, ShardMode::Segments, 2, &c);
+        plan.order = ExchangeOrder::Ascending;
+        assert!(plan.validate().is_err());
+        let mut plan =
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Segments, 2, &c);
+        plan.bucket_elems = 0;
+        assert!(plan.validate().is_err());
+        plan.bucket_elems = 16;
+        plan.n_ranks = 0;
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn plan_record_round_trip() {
+        let c = cfg(5, 32);
+        for plan in [
+            ExecPlan::sequential(OptKind::AdamW, ShardMode::Contiguous, 3, &c),
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Segments, 2, &c),
+            ExecPlan::pipelined_fused(
+                OptKind::Adafactor,
+                ShardMode::Contiguous,
+                4,
+                &c,
+            ),
+            ExecPlan::fused_host(OptKind::AdaLomo, ShardMode::Segments, 1, &c),
+        ] {
+            let mut plan = plan;
+            plan.seed = 99;
+            let back = ExecPlan::from_record(&plan.to_record()).unwrap();
+            assert_eq!(back.production, plan.production);
+            assert_eq!(back.order, plan.order);
+            assert_eq!(back.granularity, plan.granularity);
+            assert_eq!(back.kind, plan.kind);
+            assert_eq!(back.mode, plan.mode);
+            assert_eq!(back.n_ranks, plan.n_ranks);
+            assert_eq!(back.steps, plan.steps);
+            assert_eq!(back.bucket_elems, plan.bucket_elems);
+            assert_eq!(back.lr.to_bits(), plan.lr.to_bits());
+            assert_eq!(back.wd.to_bits(), plan.wd.to_bits());
+            assert_eq!(back.n_shards, plan.n_shards);
+            assert_eq!(back.seed, plan.seed);
+        }
+        // Unknown codes are rejected.
+        let mut rec = ExecPlan::sequential(
+            OptKind::AdaLomo,
+            ShardMode::Segments,
+            1,
+            &c,
+        )
+        .to_record();
+        rec.granularity = 99;
+        assert!(ExecPlan::from_record(&rec).is_err());
+    }
+
+    #[test]
+    fn source_variant_must_match_production() {
+        let layout = model_layout(OptKind::AdaLomo);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 3);
+        let c = cfg(1, layout.params_len);
+        let plan = ExecPlan::pipelined_fused(
+            OptKind::AdaLomo,
+            ShardMode::Segments,
+            2,
+            &c,
+        );
+        let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+        assert!(eng
+            .run(RankSources::Full(synthetic_sources(2, 1, 0.1)))
+            .is_err());
+        // Wrong rank count is rejected too.
+        let grouped: Vec<Box<dyn GroupGradSource>> =
+            FusedHostGrads::per_rank_extents(eng.group_extents(), 3, 1, 0.1);
+        assert!(eng.run(RankSources::Grouped(grouped)).is_err());
+    }
+
+    #[test]
+    fn suspend_resume_matches_uninterrupted_bitwise() {
+        let kind = OptKind::AdaLomo;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 11);
+        let c = cfg(6, layout.params_len.div_ceil(5));
+        let plan =
+            ExecPlan::pipelined_fused(kind, ShardMode::Contiguous, 2, &c);
+        let srcs = |eng: &Engine| -> RankSources {
+            RankSources::Grouped(FusedHostGrads::per_rank_extents(
+                eng.group_extents(),
+                2,
+                7,
+                0.05,
+            ))
+        };
+
+        // Uninterrupted reference.
+        let mut full = Engine::new(&layout, &blob0, plan.clone()).unwrap();
+        let sources = srcs(&full);
+        full.run(sources).unwrap();
+        assert!(full.is_finished());
+
+        // Suspend after 3 steps, checkpoint, resume in a "new process".
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_engine_suspend_{}.bin",
+            std::process::id()
+        ));
+        let mut part = Engine::new(&layout, &blob0, plan).unwrap();
+        part.suspend_at(3);
+        let sources = srcs(&part);
+        let r1 = part.run(sources).unwrap();
+        assert_eq!(r1.steps, 3);
+        assert_eq!(part.step(), 3);
+        assert!(!part.is_finished());
+        part.save(&path).unwrap();
+
+        let mut resumed = Engine::resume(&path).unwrap();
+        assert_eq!(resumed.step(), 3);
+        let sources = srcs(&resumed);
+        let r2 = resumed.run(sources).unwrap();
+        assert_eq!(r2.steps, 3);
+        assert!(resumed.is_finished());
+
+        for (i, (a, b)) in
+            full.blob().iter().zip(resumed.blob().iter()).enumerate()
+        {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "elem {i}: {a} vs {b}"
+            );
+        }
+        // The resumed engine's checkpoint equals the uninterrupted one's
+        // byte for byte — what `make ckpt-smoke` asserts end to end.
+        let p_full = std::env::temp_dir().join(format!(
+            "adalomo_engine_full_{}.bin",
+            std::process::id()
+        ));
+        let p_res = std::env::temp_dir().join(format!(
+            "adalomo_engine_res_{}.bin",
+            std::process::id()
+        ));
+        full.save(&p_full).unwrap();
+        resumed.save(&p_res).unwrap();
+        let a = std::fs::read(&p_full).unwrap();
+        let b = std::fs::read(&p_res).unwrap();
+        assert_eq!(a, b);
+        for p in [path, p_full, p_res] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    /// A rank stream that dies mid-run (panicking backward, dropped
+    /// connection) — the failure mode that must poison the engine.
+    struct DoomedGrads {
+        fail_at: u64,
+    }
+
+    impl GradSource for DoomedGrads {
+        fn fill(&mut self, step: u64, out: &mut [f32]) {
+            assert!(step < self.fail_at, "synthetic rank failure");
+            for x in out.iter_mut() {
+                *x = 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn mid_step_failure_poisons_the_engine() {
+        let layout = model_layout(OptKind::AdaLomo);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 9);
+        let c = cfg(4, 16);
+        let plan =
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Segments, 1, &c);
+        let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+        let sources: Vec<Box<dyn GradSource>> =
+            vec![Box::new(DoomedGrads { fail_at: 3 })];
+        assert!(eng.run(RankSources::Full(sources)).is_err());
+        // The blob may hold a partially applied step: checkpointing must
+        // refuse rather than hand a resume a corrupted state.
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_engine_poison_{}.bin",
+            std::process::id()
+        ));
+        let err = eng.save(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot be checkpointed"));
+        assert!(!path.exists());
+        // Pre-loop validation failures do NOT poison: the blob was never
+        // touched, so a later checkpoint stays legal.
+        let plan = ExecPlan::pipelined(
+            OptKind::AdaLomo,
+            ShardMode::Segments,
+            2,
+            &cfg(2, 16),
+        );
+        let mut clean = Engine::new(&layout, &blob0, plan).unwrap();
+        assert!(clean
+            .run(RankSources::Full(synthetic_sources(1, 3, 0.1)))
+            .is_err()); // rank-count mismatch, caught before any step
+        clean.save(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn whole_image_plan_reports_lockstep_shape() {
+        let kind = OptKind::AdamW;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 5);
+        let c = cfg(2, 7);
+        let plan = ExecPlan::sequential(kind, ShardMode::Segments, 2, &c);
+        let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+        let report = eng
+            .run(RankSources::Full(synthetic_sources(2, 13, 0.05)))
+            .unwrap();
+        assert_eq!(report.n_buckets, 1);
+        assert_eq!(report.n_groups, 0);
+        assert_eq!(report.peak_live_grad_bytes, report.full_grad_bytes);
+        assert!(report.curve_bytes.is_empty());
+        // Lockstep: nothing overlaps.
+        assert!((report.overlap_efficiency - 1.0).abs() < 1e-9);
+    }
+}

@@ -14,13 +14,19 @@
 //! (head block, layers L-1..0, embedding — the grouping
 //! [`FlatOptimizer::group_grad_sizes`] shares with
 //! `fused::group_grad_sizes`), [`fused_host_step`] steps exactly that
-//! group through the task-subset machinery the async pipeline already
-//! uses ([`FlatOptimizer::step_group`]), and the gradient buffer is freed
-//! *before* the next group is produced. Peak live-gradient bytes are
-//! therefore **measured** (the largest group extent) rather than assumed,
-//! and the integration tests pin them to the analytic prediction of
-//! [`crate::memsim::liveness::simulate_grouped`] — the paper's memory
+//! group through [`FlatOptimizer::step_group`], and the gradient buffer
+//! is freed *before* the next group is produced. Peak live-gradient bytes
+//! are therefore **measured** (the largest group extent) rather than
+//! assumed, and the integration tests pin them to the analytic prediction
+//! of [`crate::memsim::liveness::simulate_grouped`] — the paper's memory
 //! argument enforced by a test instead of narrated.
+//!
+//! Multi-step (and multi-rank) execution lives in the unified engine:
+//! [`run_fused_host`] is a thin [`ExecPlan::fused_host`] constructor —
+//! grouped-backward production, descending exchange, `step_group`
+//! granularity — over the same leader loop every other path runs.
+//! [`fused_host_step`] remains as the single-step, single-rank primitive
+//! the benches and liveness tests drive directly.
 //!
 //! Because every task's update arithmetic is self-contained, the
 //! group-by-group walk is bit-identical to one whole-image
@@ -34,12 +40,19 @@
 //! overlaps the bucket exchange with group *production*), and the
 //! full-image lockstep paths — and all of them must agree bitwise.
 
+use std::time::Instant;
+
 use anyhow::{ensure, Result};
 
-use crate::optim::flat::FlatOptimizer;
+use crate::optim::flat::{FlatOptimizer, ShardMode};
+use crate::optim::OptKind;
+use crate::runtime::Layout;
 use crate::util::rng::Pcg32;
 
-use super::pipeline::GradSource;
+use super::engine::{
+    Engine, EngineReport, ExecPlan, GradProduction, RankSources,
+};
+use super::pipeline::{GradSource, PipelineConfig};
 
 /// Per-rank *group-granular* gradient producer: the backward-order
 /// counterpart of [`GradSource`], emitting one fused group at a time so a
@@ -59,6 +72,18 @@ pub trait GroupGradSource: Send {
     /// Fill group `g`'s gradient for `step`; `out` covers exactly the
     /// group's extent.
     fn fill_group(&mut self, step: u64, g: usize, out: &mut [f32]);
+
+    /// Advance past `step` without consuming it — how a resumed run
+    /// fast-forwards a stream-stateful source to the checkpointed
+    /// position. The default produces-and-discards every group into
+    /// `scratch`; step-keyed sources override it with a no-op.
+    fn skip_step(&mut self, step: u64, scratch: &mut Vec<f32>) {
+        for g in 0..self.n_groups() {
+            let (lo, hi) = self.group_extent(g);
+            scratch.resize(hi - lo, 0.0);
+            self.fill_group(step, g, &mut scratch[..hi - lo]);
+        }
+    }
 }
 
 /// Deterministic synthetic *grouped* gradients: each (rank, step, group)
@@ -99,6 +124,22 @@ impl FusedHostGrads {
             })
             .collect()
     }
+
+    /// [`Self::per_rank`] from raw group extents, pre-boxed for
+    /// [`RankSources::Grouped`] — the shape the unified engine consumes.
+    pub fn per_rank_extents(
+        groups: Vec<(usize, usize)>,
+        n_ranks: usize,
+        seed: u64,
+        scale: f32,
+    ) -> Vec<Box<dyn GroupGradSource>> {
+        (0..n_ranks)
+            .map(|r| {
+                Box::new(FusedHostGrads::new(groups.clone(), seed, r, scale))
+                    as Box<dyn GroupGradSource>
+            })
+            .collect()
+    }
 }
 
 impl GroupGradSource for FusedHostGrads {
@@ -124,6 +165,10 @@ impl GroupGradSource for FusedHostGrads {
             *x = rng.normal() * self.scale;
         }
     }
+
+    /// Values are keyed by (rank, step, group): skipping a step consumes
+    /// no state.
+    fn skip_step(&mut self, _step: u64, _scratch: &mut Vec<f32>) {}
 }
 
 /// The full-image view of the same values: fill every group's slice of
@@ -136,27 +181,44 @@ impl GradSource for FusedHostGrads {
             self.fill_group(step, g, &mut out[lo..hi]);
         }
     }
+
+    /// Step-keyed: nothing to fast-forward.
+    fn skip(&mut self, _step: u64, _scratch: &mut [f32]) {}
 }
 
-/// What one group-granular step measured.
-#[derive(Debug, Clone)]
-pub struct FusedHostReport {
-    pub n_groups: usize,
-    /// Per-group live-gradient bytes, walk order — the measured liveness
-    /// curve (compare `memsim::liveness::simulate_grouped(..).curve`).
-    pub curve_bytes: Vec<usize>,
-    /// Measured peak live-gradient bytes across the walk: the largest
-    /// single allocation the step ever held.
-    pub peak_live_grad_bytes: usize,
-    /// The full-gradient-image baseline (`params_len` f32s) the
-    /// monolithic step materializes.
-    pub full_grad_bytes: usize,
-}
-
-impl FusedHostReport {
-    /// Measured peak as a fraction of the full-image baseline.
-    pub fn live_fraction(&self) -> f64 {
-        self.peak_live_grad_bytes as f64 / self.full_grad_bytes.max(1) as f64
+/// The canonical host-mirror [`RankSources`] for `plan`: one
+/// [`FusedHostGrads`] per rank over `groups`, seeded from `plan.seed`
+/// and wrapped to match the plan's production axis. The CLI, the
+/// suspend/resume tests and the examples all reconstruct their gradient
+/// streams through THIS function, so a checkpointed plan is sufficient
+/// to rebuild byte-identical sources everywhere (the step-keyed values
+/// are the same whichever axis consumes them).
+pub fn plan_sources(
+    plan: &ExecPlan,
+    groups: Vec<(usize, usize)>,
+    scale: f32,
+) -> RankSources {
+    match plan.production {
+        GradProduction::GroupedBackward => {
+            RankSources::Grouped(FusedHostGrads::per_rank_extents(
+                groups,
+                plan.n_ranks,
+                plan.seed,
+                scale,
+            ))
+        }
+        GradProduction::FullImage => RankSources::Full(
+            (0..plan.n_ranks)
+                .map(|r| {
+                    Box::new(FusedHostGrads::new(
+                        groups.clone(),
+                        plan.seed,
+                        r,
+                        scale,
+                    )) as Box<dyn GradSource>
+                })
+                .collect(),
+        ),
     }
 }
 
@@ -164,6 +226,9 @@ impl FusedHostReport {
 /// gradient into a buffer sized for its extent, step exactly that group,
 /// and free the buffer before group g+1 is produced. Bit-identical to one
 /// whole-image [`FlatOptimizer::step`] with the same gradient values.
+/// This is the single-step primitive under [`run_fused_host`]'s engine
+/// plan; the returned [`EngineReport`] carries the measured liveness
+/// curve and peak.
 pub fn fused_host_step(
     engine: &mut FlatOptimizer,
     blob: &mut [f32],
@@ -171,7 +236,8 @@ pub fn fused_host_step(
     t: u64,
     lr: f32,
     wd: f32,
-) -> Result<FusedHostReport> {
+) -> Result<EngineReport> {
+    let started = Instant::now();
     let extents = engine.group_extents();
     ensure!(
         src.n_groups() == extents.len(),
@@ -181,6 +247,7 @@ pub fn fused_host_step(
     );
     let mut curve = Vec::with_capacity(extents.len());
     let mut peak = 0usize;
+    let mut compute = 0.0f64;
     for (g, &(lo, hi)) in extents.iter().enumerate() {
         ensure!(
             src.group_extent(g) == (lo, hi),
@@ -196,43 +263,51 @@ pub fn fused_host_step(
         let live = 4 * gbuf.len();
         peak = peak.max(live);
         curve.push(live);
+        let t0 = Instant::now();
         engine.step_group(blob, g, &gbuf, t, lr, wd)?;
+        compute += t0.elapsed().as_secs_f64();
     }
-    Ok(FusedHostReport {
+    Ok(EngineReport {
+        n_ranks: 1,
+        steps: 1,
+        n_buckets: extents.len(),
         n_groups: extents.len(),
-        curve_bytes: curve,
+        compute_secs: compute,
+        comm_secs: 0.0,
+        exposed_secs: compute,
+        overlap_efficiency: 1.0,
+        wall_secs: started.elapsed().as_secs_f64(),
         peak_live_grad_bytes: peak,
         full_grad_bytes: 4 * engine.params_len(),
+        curve_bytes: curve,
     })
 }
 
-/// Drive [`fused_host_step`] for `steps` steps from `blob0`; returns the
-/// final blob and the (step-invariant) liveness report.
+/// Drive the fused-backward host mirror for `cfg.steps` steps from
+/// `blob0`: one rank source per entry in `sources`, each group extent
+/// reduced (rank order) and stepped as its production lands. Thin wrapper
+/// over [`ExecPlan::fused_host`] on the unified engine; returns the final
+/// blob and the liveness/overlap report (`cfg.bucket_elems` is unused —
+/// the tiling is one tile per fused group).
 pub fn run_fused_host(
-    engine: &mut FlatOptimizer,
+    layout: &Layout,
+    kind: OptKind,
+    mode: ShardMode,
     blob0: &[f32],
-    src: &mut dyn GroupGradSource,
-    steps: usize,
-    lr: f32,
-    wd: f32,
-) -> Result<(Vec<f32>, FusedHostReport)> {
-    let mut blob = blob0.to_vec();
-    let mut report = None;
-    for t in 1..=steps as u64 {
-        report = Some(fused_host_step(engine, &mut blob, src, t, lr, wd)?);
-    }
-    let report = report
-        .ok_or_else(|| anyhow::anyhow!("steps must be >= 1"))?;
-    Ok((blob, report))
+    sources: Vec<Box<dyn GroupGradSource>>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<f32>, EngineReport)> {
+    ensure!(cfg.steps >= 1, "steps must be >= 1");
+    let plan = ExecPlan::fused_host(kind, mode, sources.len(), cfg);
+    let mut engine = Engine::new(layout, blob0, plan)?;
+    let report = engine.run(RankSources::Grouped(sources))?;
+    Ok((engine.into_blob(), report))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::flat::{
-        seeded_blob_and_grads, synthetic_layout, ShardMode,
-    };
-    use crate::optim::OptKind;
+    use crate::optim::flat::{seeded_blob_and_grads, synthetic_layout};
 
     fn model_layout(kind: OptKind) -> crate::runtime::Layout {
         let params: Vec<(&str, &[usize])> = vec![
@@ -283,18 +358,26 @@ mod tests {
         for mode in [ShardMode::Segments, ShardMode::Contiguous] {
             let layout = model_layout(OptKind::AdaLomo);
             let (blob0, _) = seeded_blob_and_grads(&layout, 13);
-            let mut engine = FlatOptimizer::new(
-                OptKind::AdaLomo,
+            let probe =
+                FlatOptimizer::new(OptKind::AdaLomo, &layout, 3, mode)
+                    .unwrap();
+            let mut cfg = PipelineConfig::new(3, 1);
+            cfg.n_shards = 3;
+            let sources = FusedHostGrads::per_rank_extents(
+                probe.group_extents(),
+                1,
+                7,
+                0.05,
+            );
+            let (mirror, report) = run_fused_host(
                 &layout,
-                3,
+                OptKind::AdaLomo,
                 mode,
+                &blob0,
+                sources,
+                &cfg,
             )
             .unwrap();
-            let mut src =
-                FusedHostGrads::new(engine.group_extents(), 7, 0, 0.05);
-            let (mirror, report) =
-                run_fused_host(&mut engine, &blob0, &mut src, 3, 1e-2, 0.0)
-                    .unwrap();
             // Reference: whole-image steps with the identical gradients.
             let mut engine2 = FlatOptimizer::new(
                 OptKind::AdaLomo,
@@ -322,11 +405,22 @@ mod tests {
             assert_eq!(report.n_groups, 4);
             assert_eq!(
                 report.peak_live_grad_bytes,
-                4 * engine.group_grad_sizes().iter().max().copied().unwrap()
+                4 * probe.group_grad_sizes().iter().max().copied().unwrap()
             );
             assert!(
                 report.peak_live_grad_bytes < report.full_grad_bytes,
                 "{report:?}"
+            );
+            // The per-group tiling is the report's bucket count, and the
+            // liveness curve matches the walk-order group sizes.
+            assert_eq!(report.n_buckets, 4);
+            assert_eq!(
+                report.curve_bytes,
+                probe
+                    .group_grad_sizes()
+                    .iter()
+                    .map(|&e| 4 * e)
+                    .collect::<Vec<_>>()
             );
         }
     }
@@ -364,5 +458,22 @@ mod tests {
             fused_host_step(&mut engine, &mut blob, &mut bad, 1, 1e-2, 0.0)
                 .is_err()
         );
+        // The engine wrapper rejects them too.
+        let cfg = PipelineConfig::new(1, 1);
+        let bad_sources = FusedHostGrads::per_rank_extents(
+            engine.group_extents()[..2].to_vec(),
+            1,
+            1,
+            0.1,
+        );
+        assert!(run_fused_host(
+            &layout,
+            OptKind::AdaLomo,
+            ShardMode::Segments,
+            &blob,
+            bad_sources,
+            &cfg,
+        )
+        .is_err());
     }
 }

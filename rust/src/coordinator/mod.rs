@@ -1,23 +1,26 @@
 //! Layer-3 coordinator: the training orchestrator.
 //!
+//! * [`engine`] — the unified execution engine: one `ExecPlan`-driven
+//!   leader loop behind every host-mirror training path, with
+//!   checkpoint/suspend/resume.
 //! * [`schedule`] — warmup + cosine LR (the schedules live here, not in the
 //!   HLO: every train-step artifact takes the scheduled LR as an input).
 //! * [`trainer`] — the step loop over the device-resident state blob.
 //! * [`fused`] — fused-backward group scheduler (LOMO/AdaLomo liveness at
 //!   program granularity; chains `fused_*_g<k>` artifacts).
-//! * [`fused_host`] — the same schedule on the host fast path: group-by-
-//!   group gradient production driving `FlatOptimizer::step_group`, with
-//!   peak live-gradient bytes measured and checked against
-//!   `memsim::liveness`.
+//! * [`fused_host`] — group-granular gradient sources + the fused-host
+//!   mirror entry points (now `ExecPlan` constructors), with peak
+//!   live-gradient bytes measured and checked against `memsim::liveness`.
 //! * [`sharding`] — ZeRO-3 shard planner over manifest segments.
 //! * [`collective`] — ring-collective cost model used by the throughput
 //!   simulation and the worker pool.
 //! * [`workers`] — thread-per-rank data-parallel execution (local-SGD
 //!   periodic parameter averaging; each rank owns a PJRT session).
-//! * [`pipeline`] — async rank pipeline: bucketed gradient exchange
-//!   overlapped with flat-engine task stepping (host mirror).
+//! * [`pipeline`] — bucket plans, gradient sources and the pipelined
+//!   entry points (now `ExecPlan` constructors over [`engine`]).
 
 pub mod collective;
+pub mod engine;
 pub mod fused;
 pub mod fused_host;
 pub mod pipeline;
@@ -26,5 +29,6 @@ pub mod sharding;
 pub mod trainer;
 pub mod workers;
 
+pub use engine::{Engine, EngineReport, ExecPlan, RankSources};
 pub use schedule::Schedule;
 pub use trainer::{TrainReport, Trainer};

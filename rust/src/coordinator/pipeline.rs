@@ -1,13 +1,16 @@
-//! Async rank pipeline: overlap gradient exchange with the flat optimizer
-//! step.
+//! Async rank pipeline: bucket plans, gradient sources and the public
+//! entry points for exchange-overlapped training.
 //!
 //! AdaLomo's fusion argument (PAPER.md §3) — hide the optimizer update
 //! inside work that must happen anyway — applies across ranks too: while
 //! the fabric is busy reducing one gradient bucket, the leader can already
-//! be stepping the tensors completed by earlier buckets. This module is
-//! that pipeline on the PR-1 flat engine, replacing the lockstep
-//! clone-average-broadcast rounds of `workers::run_local_sgd` at gradient
-//! granularity.
+//! be stepping the tensors completed by earlier buckets. The execution
+//! itself lives in the unified engine ([`super::engine`]); this module
+//! keeps the pipeline's vocabulary — [`BucketPlan`] tiling, per-rank
+//! [`GradSource`]s, the [`PipelineConfig`] knob set, the adaptive bucket
+//! sizing — plus [`run_sequential`], [`run_pipelined`] and
+//! [`run_pipelined_fused`], which are now thin [`ExecPlan`] constructors
+//! over the one leader loop.
 //!
 //! # Bucket lifecycle
 //!
@@ -24,8 +27,9 @@
 //!    count), while charging the fabric the simulated per-bucket ring
 //!    all-reduce cost ([`super::collective::allreduce_bucket_time`]);
 //! 3. **step** — every task (trainable segment, fused-backward order)
-//!    whose LAST overlapping bucket just landed becomes steppable and is
-//!    handed to [`FlatOptimizer::step_tasks`]; per-task arithmetic is
+//!    whose completing bucket just landed is handed to
+//!    [`crate::optim::flat::FlatOptimizer::step_tasks`]; per-task
+//!    arithmetic is
 //!    self-contained, so stepping tasks as their buckets complete is
 //!    bitwise identical to one whole-image step with the same reduced
 //!    gradient — the determinism contract pinned by the proptests;
@@ -34,29 +38,23 @@
 //!    broadcast half is `workers::Broadcast::Params`, the slim
 //!    params-region sync.
 //!
-//! The [`PipelineReport`] quantifies the overlap: `exposed_secs` is the
-//! modeled critical path (comm serialized on the fabric; each bucket's
-//! optimizer work starts once its reduction lands and the previous
-//! bucket's work has finished), which sits below `compute + comm` exactly
-//! when the pipeline hides exchange behind stepping.
+//! The returned [`EngineReport`] quantifies the overlap: `exposed_secs`
+//! is the modeled critical path (comm serialized on the fabric; each
+//! bucket's optimizer work starts once its reduction lands and the
+//! previous bucket's work has finished), which sits below `compute +
+//! comm` exactly when the pipeline hides exchange behind stepping.
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::thread;
-use std::time::Instant;
-
-use anyhow::{anyhow, ensure, Result};
+use anyhow::Result;
 
 use crate::data::tokenizer::PAD;
 use crate::data::{DataLoader, Domain};
-use crate::optim::flat::{FlatOptimizer, ShardMode};
-use crate::optim::{pool, OptKind};
+use crate::optim::flat::ShardMode;
+use crate::optim::OptKind;
 use crate::runtime::Layout;
 use crate::util::rng::Pcg32;
 
-use super::collective::{
-    allreduce_bucket_time, bucketed_allreduce_times, Fabric,
-};
+use super::collective::Fabric;
+use super::engine::{Engine, EngineReport, ExecPlan, RankSources};
 use super::fused_host::GroupGradSource;
 
 /// Fixed-size exchange buckets tiling the gradient image `[0,
@@ -86,7 +84,8 @@ impl BucketPlan {
         self.buckets.len()
     }
 
-    /// For every task extent (from [`FlatOptimizer::task_extents`]), the
+    /// For every task extent (from
+    /// [`crate::optim::flat::FlatOptimizer::task_extents`]), the
     /// bucket whose reduction completes it: per-bucket lists of task
     /// indices. Each list is sorted (extents are scanned in index order)
     /// and the lists partition `0..extents.len()`.
@@ -95,12 +94,12 @@ impl BucketPlan {
         self.schedule_by(extents, |off, size| off + size.max(1) - 1)
     }
 
-    /// [`Self::ready_schedule`] for the DESCENDING bucket walk of the
-    /// fused-host pipeline ([`run_pipelined_fused`]): when buckets land in
-    /// reverse offset order — the order group-by-group backward production
-    /// covers them — a task is completed by the bucket holding its FIRST
-    /// element (every later-offset bucket has already landed). Same
-    /// guarantees: sorted per-bucket lists partitioning the task indices.
+    /// [`Self::ready_schedule`] for a DESCENDING bucket walk (grouped
+    /// production): when buckets land in reverse offset order — the order
+    /// group-by-group backward production covers them — a task is
+    /// completed by the bucket holding its FIRST element (every
+    /// later-offset bucket has already landed). Same guarantees: sorted
+    /// per-bucket lists partitioning the task indices.
     pub fn ready_schedule_backward(
         &self,
         extents: &[(usize, usize)],
@@ -140,6 +139,15 @@ impl BucketPlan {
 /// pipelined and sequential paths must see identical rank gradients.
 pub trait GradSource: Send {
     fn fill(&mut self, step: u64, out: &mut [f32]);
+
+    /// Advance past `step` without consuming its gradient — how a resumed
+    /// run fast-forwards a stream-stateful source to the checkpointed
+    /// position. The default produces-and-discards into `scratch`
+    /// (`scratch.len()` is the gradient image); step-keyed sources
+    /// override it with a no-op.
+    fn skip(&mut self, step: u64, scratch: &mut [f32]) {
+        self.fill(step, scratch);
+    }
 }
 
 /// Deterministic synthetic gradients from a rank-seeded PRNG stream — the
@@ -271,9 +279,9 @@ pub fn host_eval_loss(
     loss / count.max(1) as f64
 }
 
-/// Knobs shared by the pipelined and sequential drivers. Both paths must
-/// run the same config for the bitwise-identity guarantee to apply (the
-/// engine shard count fixes the reduction associativity).
+/// Knobs shared by every execution path. All paths must run the same
+/// config for the bitwise-identity guarantee to apply (the engine shard
+/// count fixes the reduction associativity).
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub steps: usize,
@@ -322,39 +330,12 @@ impl PipelineConfig {
     }
 }
 
-/// What the pipeline measured/modeled. `compute_secs` is measured wall
-/// time inside `step_tasks`; `comm_secs` is the simulated fabric cost of
-/// the bucketed ring all-reduces; `exposed_secs` is the modeled critical
-/// path of the bucketed schedule.
-#[derive(Debug, Clone)]
-pub struct PipelineReport {
-    pub n_ranks: usize,
-    pub steps: usize,
-    pub n_buckets: usize,
-    pub compute_secs: f64,
-    pub comm_secs: f64,
-    pub exposed_secs: f64,
-    /// `(compute + comm) / exposed` — 1.0 means nothing overlapped;
-    /// higher is better (2.0 would mean perfect hiding of the smaller
-    /// side).
-    pub overlap_efficiency: f64,
-    pub wall_secs: f64,
-    /// Measured peak gradient bytes live on a producing rank: the full
-    /// image for the materialized paths ([`run_pipelined`],
-    /// [`run_sequential`]); for [`run_pipelined_fused`] the
-    /// produced-but-unshipped group buffers, which can never exceed the
-    /// image. In-flight exchange payloads (bounded by the channel depth ×
-    /// bucket size) are the fabric's, not the producer's, on every path.
-    pub peak_live_grad_bytes: usize,
-    /// The full-gradient-image baseline in bytes (`params_len` × 4).
-    pub full_grad_bytes: usize,
-}
-
 /// Run the bucketed rank pipeline: per-rank worker threads exchange
 /// gradient buckets over bounded channels while the leader reduces (rank
 /// order) and steps ready tasks. Returns the final blob and the overlap
 /// report. Bitwise-identical to [`run_sequential`] under the same config
-/// and sources.
+/// and sources. Thin wrapper over [`ExecPlan::pipelined`] — full-image
+/// production, ascending exchange, `step_tasks` granularity.
 pub fn run_pipelined(
     layout: &Layout,
     kind: OptKind,
@@ -362,153 +343,11 @@ pub fn run_pipelined(
     blob0: &[f32],
     sources: Vec<Box<dyn GradSource>>,
     cfg: &PipelineConfig,
-) -> Result<(Vec<f32>, PipelineReport)> {
-    ensure!(!sources.is_empty(), "need at least one rank");
-    ensure!(
-        blob0.len() == layout.blob_len,
-        "blob len {} != layout {}",
-        blob0.len(),
-        layout.blob_len
-    );
-    let n_ranks = sources.len();
-    let started = Instant::now();
-    let mut engine = FlatOptimizer::new(kind, layout, cfg.n_shards, mode)?;
-    let plan = BucketPlan::new(layout.params_len, cfg.bucket_elems);
-    let ready = plan.ready_schedule(&engine.task_extents());
-    // Fabric cost per bucket: the collective module's bucketed tiling is
-    // byte-for-byte the same as BucketPlan's element tiling (4 bytes per
-    // f32, ragged last bucket included) — one costing source, not two.
-    let bucket_comm = bucketed_allreduce_times(
-        (layout.params_len * 4) as f64,
-        (cfg.bucket_elems * 4) as f64,
-        n_ranks,
-        cfg.fabric,
-    );
-    debug_assert_eq!(bucket_comm.len(), plan.n_buckets());
-
-    // Rank threads: compute the step's gradient, then stream it out
-    // bucket-by-bucket. The bounded channel depth is the exchange
-    // fabric's backpressure — a rank can run at most two buckets ahead of
-    // the reduction.
-    let mut handles = Vec::with_capacity(n_ranks);
-    let mut rx_ranks = Vec::with_capacity(n_ranks);
-    for mut src in sources {
-        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
-        rx_ranks.push(rx);
-        let buckets = plan.buckets.clone();
-        let params_len = layout.params_len;
-        let steps = cfg.steps;
-        handles.push(thread::spawn(move || {
-            let mut grad = vec![0f32; params_len];
-            for step in 1..=steps as u64 {
-                src.fill(step, &mut grad);
-                for &(lo, hi) in &buckets {
-                    if tx.send(grad[lo..hi].to_vec()).is_err() {
-                        return; // leader bailed; stop producing
-                    }
-                }
-            }
-        }));
-    }
-
-    let order: Vec<usize> = (0..plan.n_buckets()).collect();
-    let outcome = leader_loop(
-        &mut engine, &plan, &order, &ready, &bucket_comm, &rx_ranks, blob0,
-        cfg,
-    );
-    // Unblock any rank still parked on a bounded send before joining (the
-    // error path stops receiving mid-stream).
-    drop(rx_ranks);
-    for h in handles {
-        h.join().map_err(|_| anyhow!("rank thread panicked"))?;
-    }
-    let (blob, compute_secs, comm_secs, exposed_secs) = outcome?;
-
-    let overlap_efficiency = if exposed_secs > 0.0 {
-        (compute_secs + comm_secs) / exposed_secs
-    } else {
-        1.0
-    };
-    Ok((
-        blob,
-        PipelineReport {
-            n_ranks,
-            steps: cfg.steps,
-            n_buckets: plan.n_buckets(),
-            compute_secs,
-            comm_secs,
-            exposed_secs,
-            overlap_efficiency,
-            wall_secs: started.elapsed().as_secs_f64(),
-            // Every rank thread materializes the full gradient image.
-            peak_live_grad_bytes: 4 * layout.params_len,
-            full_grad_bytes: 4 * layout.params_len,
-        },
-    ))
-}
-
-/// The leader half of the pipelined drivers: receive and reduce buckets
-/// in rank order (visiting buckets in `order` — ascending for
-/// [`run_pipelined`], descending for [`run_pipelined_fused`]), step ready
-/// tasks, advance the modeled timeline. Returns `(blob, compute, comm,
-/// exposed)`.
-#[allow(clippy::too_many_arguments)]
-fn leader_loop(
-    engine: &mut FlatOptimizer,
-    plan: &BucketPlan,
-    order: &[usize],
-    ready: &[Vec<usize>],
-    bucket_comm: &[f64],
-    rx_ranks: &[mpsc::Receiver<Vec<f32>>],
-    blob0: &[f32],
-    cfg: &PipelineConfig,
-) -> Result<(Vec<f32>, f64, f64, f64)> {
-    let n_ranks = rx_ranks.len();
-    let inv = 1.0 / n_ranks as f32;
-    let mut blob = blob0.to_vec();
-    let mut grad = vec![0f32; plan.params_len];
-    let (mut compute, mut comm, mut exposed) = (0.0f64, 0.0f64, 0.0f64);
-    for t in 1..=cfg.steps as u64 {
-        // Modeled per-step timeline: comm is serialized on the fabric
-        // (`comm_front`); bucket b's optimizer work starts at
-        // max(its reduction landing, previous work finishing).
-        let mut comm_front = 0.0f64;
-        let mut work_front = 0.0f64;
-        for &b in order {
-            let (lo, hi) = plan.buckets[b];
-            // Accumulate: one contribution per rank, received in rank
-            // order — the fixed reduction order determinism rests on.
-            let mut chunks = Vec::with_capacity(n_ranks);
-            for rx in rx_ranks {
-                let chunk = rx.recv().map_err(|_| {
-                    anyhow!("rank gradient stream ended early")
-                })?;
-                ensure!(chunk.len() == hi - lo, "bucket size mismatch");
-                chunks.push(chunk);
-            }
-            // Reduce: mean in rank order, element-parallel on the pool
-            // (bit-identical for any worker count).
-            let refs: Vec<&[f32]> =
-                chunks.iter().map(|c| c.as_slice()).collect();
-            pool::par_average(&mut grad[lo..hi], &refs, inv, cfg.n_shards);
-            comm_front += bucket_comm[b];
-            comm += bucket_comm[b];
-            // Step: every task whose last bucket just landed.
-            let dt = if ready[b].is_empty() {
-                0.0
-            } else {
-                let t0 = Instant::now();
-                engine.step_tasks(
-                    &mut blob, &grad, t, cfg.lr, cfg.wd, &ready[b],
-                )?;
-                t0.elapsed().as_secs_f64()
-            };
-            compute += dt;
-            work_front = comm_front.max(work_front) + dt;
-        }
-        exposed += comm_front.max(work_front);
-    }
-    Ok((blob, compute, comm, exposed))
+) -> Result<(Vec<f32>, EngineReport)> {
+    let plan = ExecPlan::pipelined(kind, mode, sources.len(), cfg);
+    let mut engine = Engine::new(layout, blob0, plan)?;
+    let report = engine.run(RankSources::Full(sources))?;
+    Ok((engine.into_blob(), report))
 }
 
 /// The fused-host pipeline: ranks produce their gradients GROUP BY GROUP
@@ -516,9 +355,9 @@ fn leader_loop(
 /// bucket the moment production has covered it, so the bucket exchange
 /// overlaps actual gradient *production* — no rank ever materializes the
 /// full gradient image. Buckets therefore move in DESCENDING offset order
-/// (backward production covers the image top-down), the leader reduces
-/// them in that same fixed order, and tasks step when the bucket holding
-/// their first element lands ([`BucketPlan::ready_schedule_backward`]).
+/// and tasks step when the bucket holding their first element lands
+/// ([`BucketPlan::ready_schedule_backward`]). Thin wrapper over
+/// [`ExecPlan::pipelined_fused`].
 ///
 /// Requires the engine's fused groups to tile the gradient image in
 /// descending offset order (true for model-shaped layouts). Per-task
@@ -529,10 +368,9 @@ fn leader_loop(
 ///
 /// The returned report's `peak_live_grad_bytes` is MEASURED: the most
 /// produced-but-unshipped group-buffer bytes any rank ever held (a group
-/// buffer is freed once the shipped region covers it), the pipeline
-/// counterpart of `fused_host::FusedHostReport`. With buckets no larger
-/// than a group this tops out at two groups — the §2.1 bound — and by
-/// construction it can never exceed the full image.
+/// buffer is freed once the shipped region covers it). With buckets no
+/// larger than a group this tops out at two groups — the §2.1 bound —
+/// and by construction it can never exceed the full image.
 pub fn run_pipelined_fused(
     layout: &Layout,
     kind: OptKind,
@@ -540,167 +378,30 @@ pub fn run_pipelined_fused(
     blob0: &[f32],
     sources: Vec<Box<dyn GroupGradSource>>,
     cfg: &PipelineConfig,
-) -> Result<(Vec<f32>, PipelineReport)> {
-    ensure!(!sources.is_empty(), "need at least one rank");
-    ensure!(
-        blob0.len() == layout.blob_len,
-        "blob len {} != layout {}",
-        blob0.len(),
-        layout.blob_len
-    );
-    let n_ranks = sources.len();
-    let started = Instant::now();
-    let mut engine = FlatOptimizer::new(kind, layout, cfg.n_shards, mode)?;
-    let plan = BucketPlan::new(layout.params_len, cfg.bucket_elems);
-    let ready = plan.ready_schedule_backward(&engine.task_extents());
-    let groups = engine.group_extents();
-    // The grouped walk ships buckets against a production frontier that
-    // moves down from params_len: the groups must tile the image
-    // top-down.
-    let mut hi_expect = layout.params_len;
-    for (g, &(lo, hi)) in groups.iter().enumerate() {
-        ensure!(
-            hi == hi_expect && lo < hi,
-            "group {g} extent [{lo}, {hi}) breaks the descending tiling \
-             (expected hi = {hi_expect}); fused-host pipelining needs a \
-             model-shaped layout"
-        );
-        hi_expect = lo;
-    }
-    ensure!(hi_expect == 0, "fused groups must cover the gradient image");
-    for (r, src) in sources.iter().enumerate() {
-        ensure!(
-            src.n_groups() == groups.len(),
-            "rank {r}: source has {} groups, engine {}",
-            src.n_groups(),
-            groups.len()
-        );
-        for (g, &e) in groups.iter().enumerate() {
-            ensure!(
-                src.group_extent(g) == e,
-                "rank {r} group {g}: source extent {:?} != engine {:?}",
-                src.group_extent(g),
-                e
-            );
-        }
-    }
-    let bucket_comm = bucketed_allreduce_times(
-        (layout.params_len * 4) as f64,
-        (cfg.bucket_elems * 4) as f64,
-        n_ranks,
-        cfg.fabric,
-    );
-    debug_assert_eq!(bucket_comm.len(), plan.n_buckets());
+) -> Result<(Vec<f32>, EngineReport)> {
+    let plan = ExecPlan::pipelined_fused(kind, mode, sources.len(), cfg);
+    let mut engine = Engine::new(layout, blob0, plan)?;
+    let report = engine.run(RankSources::Grouped(sources))?;
+    Ok((engine.into_blob(), report))
+}
 
-    // Rank threads: interleave group production with bucket shipping.
-    // Each returns its measured peak live gradient elements.
-    let mut handles = Vec::with_capacity(n_ranks);
-    let mut rx_ranks = Vec::with_capacity(n_ranks);
-    for mut src in sources {
-        let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
-        rx_ranks.push(rx);
-        let buckets = plan.buckets.clone();
-        let extents = groups.clone();
-        let steps = cfg.steps;
-        handles.push(thread::spawn(move || -> usize {
-            let mut peak_elems = 0usize;
-            for step in 1..=steps as u64 {
-                // Produced-but-unshipped group buffers, oldest (highest
-                // extent) first. Each element is written once at
-                // production and read once into its bucket payload; a
-                // buffer is freed the moment the shipped region covers
-                // it, so only the groups overlapping the unshipped span
-                // stay allocated — with buckets no larger than a group
-                // that is at most two groups, the host-path twin of the
-                // paper's two-consecutive-gradients bound (§2.1), and it
-                // can never exceed the full image.
-                let mut segs: VecDeque<(usize, Vec<f32>)> = VecDeque::new();
-                let mut live = 0usize;
-                let mut next_bucket = buckets.len();
-                for (g, &(lo, hi)) in extents.iter().enumerate() {
-                    let mut gbuf = vec![0f32; hi - lo];
-                    src.fill_group(step, g, &mut gbuf);
-                    live += gbuf.len();
-                    peak_elems = peak_elems.max(live);
-                    segs.push_back((lo, gbuf));
-                    // Ship every bucket production now covers; each send
-                    // assembles the bucket payload from the overlapping
-                    // buffers (the one copy the exchange itself needs).
-                    while next_bucket > 0
-                        && buckets[next_bucket - 1].0 >= lo
-                    {
-                        let (blo, bhi) = buckets[next_bucket - 1];
-                        let mut chunk = vec![0f32; bhi - blo];
-                        for (slo, sbuf) in segs.iter() {
-                            let slo = *slo;
-                            let shi = slo + sbuf.len();
-                            let olo = blo.max(slo);
-                            let ohi = bhi.min(shi);
-                            if olo < ohi {
-                                chunk[olo - blo..ohi - blo]
-                                    .copy_from_slice(
-                                        &sbuf[olo - slo..ohi - slo],
-                                    );
-                            }
-                        }
-                        if tx.send(chunk).is_err() {
-                            return peak_elems; // leader bailed; stop
-                        }
-                        // Free every buffer the shipped region covers.
-                        loop {
-                            match segs.front() {
-                                Some(&(slo, _)) if slo >= blo => {
-                                    let (_, sbuf) = segs
-                                        .pop_front()
-                                        .expect("front checked above");
-                                    live -= sbuf.len();
-                                }
-                                _ => break,
-                            }
-                        }
-                        next_bucket -= 1;
-                    }
-                }
-                debug_assert!(segs.is_empty() && next_bucket == 0);
-            }
-            peak_elems
-        }));
-    }
-
-    let order: Vec<usize> = (0..plan.n_buckets()).rev().collect();
-    let outcome = leader_loop(
-        &mut engine, &plan, &order, &ready, &bucket_comm, &rx_ranks, blob0,
-        cfg,
-    );
-    drop(rx_ranks);
-    let mut peak_elems = 0usize;
-    for h in handles {
-        let rank_peak =
-            h.join().map_err(|_| anyhow!("rank thread panicked"))?;
-        peak_elems = peak_elems.max(rank_peak);
-    }
-    let (blob, compute_secs, comm_secs, exposed_secs) = outcome?;
-
-    let overlap_efficiency = if exposed_secs > 0.0 {
-        (compute_secs + comm_secs) / exposed_secs
-    } else {
-        1.0
-    };
-    Ok((
-        blob,
-        PipelineReport {
-            n_ranks,
-            steps: cfg.steps,
-            n_buckets: plan.n_buckets(),
-            compute_secs,
-            comm_secs,
-            exposed_secs,
-            overlap_efficiency,
-            wall_secs: started.elapsed().as_secs_f64(),
-            peak_live_grad_bytes: 4 * peak_elems,
-            full_grad_bytes: 4 * layout.params_len,
-        },
-    ))
+/// Lockstep reference: reduce the FULL gradient image (same rank order,
+/// same element-wise associativity as the bucketed reduction), then one
+/// whole-image engine step — the path the pipelines must match bitwise.
+/// Comm is modeled as one monolithic ring all-reduce per step, fully
+/// exposed. Thin wrapper over [`ExecPlan::sequential`].
+pub fn run_sequential(
+    layout: &Layout,
+    kind: OptKind,
+    mode: ShardMode,
+    blob0: &[f32],
+    sources: Vec<Box<dyn GradSource>>,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<f32>, EngineReport)> {
+    let plan = ExecPlan::sequential(kind, mode, sources.len(), cfg);
+    let mut engine = Engine::new(layout, blob0, plan)?;
+    let report = engine.run(RankSources::Full(sources))?;
+    Ok((engine.into_blob(), report))
 }
 
 /// Fraction of per-bucket optimizer compute the per-bucket fabric cost is
@@ -747,74 +448,11 @@ pub fn adaptive_bucket_elems(
     b.clamp(1, params_len)
 }
 
-/// Lockstep reference: reduce the FULL gradient image (same rank order,
-/// same element-wise associativity as the bucketed reduction), then one
-/// whole-image engine step — the PR-1 flat-engine path the pipeline must
-/// match bitwise. Comm is modeled as one monolithic ring all-reduce per
-/// step, fully exposed.
-pub fn run_sequential(
-    layout: &Layout,
-    kind: OptKind,
-    mode: ShardMode,
-    blob0: &[f32],
-    mut sources: Vec<Box<dyn GradSource>>,
-    cfg: &PipelineConfig,
-) -> Result<(Vec<f32>, PipelineReport)> {
-    ensure!(!sources.is_empty(), "need at least one rank");
-    ensure!(
-        blob0.len() == layout.blob_len,
-        "blob len {} != layout {}",
-        blob0.len(),
-        layout.blob_len
-    );
-    let n_ranks = sources.len();
-    let started = Instant::now();
-    let mut engine = FlatOptimizer::new(kind, layout, cfg.n_shards, mode)?;
-    let inv = 1.0 / n_ranks as f32;
-    let step_comm = allreduce_bucket_time(
-        (layout.params_len * 4) as f64,
-        n_ranks,
-        cfg.fabric,
-    );
-    let mut blob = blob0.to_vec();
-    let mut rank_grads = vec![vec![0f32; layout.params_len]; n_ranks];
-    let mut grad = vec![0f32; layout.params_len];
-    let (mut compute, mut comm) = (0.0f64, 0.0f64);
-    for t in 1..=cfg.steps as u64 {
-        for (src, g) in sources.iter_mut().zip(rank_grads.iter_mut()) {
-            src.fill(t, g);
-        }
-        let refs: Vec<&[f32]> =
-            rank_grads.iter().map(|g| g.as_slice()).collect();
-        pool::par_average(&mut grad, &refs, inv, cfg.n_shards);
-        let t0 = Instant::now();
-        engine.step(&mut blob, &grad, t, cfg.lr, cfg.wd)?;
-        compute += t0.elapsed().as_secs_f64();
-        comm += step_comm;
-    }
-    let exposed = compute + comm;
-    Ok((
-        blob,
-        PipelineReport {
-            n_ranks,
-            steps: cfg.steps,
-            n_buckets: 1,
-            compute_secs: compute,
-            comm_secs: comm,
-            exposed_secs: exposed,
-            overlap_efficiency: 1.0,
-            wall_secs: started.elapsed().as_secs_f64(),
-            // The lockstep path holds every rank's full gradient image.
-            peak_live_grad_bytes: 4 * layout.params_len,
-            full_grad_bytes: 4 * layout.params_len,
-        },
-    ))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::flat::synthetic_layout;
+    use crate::coordinator::collective::allreduce_bucket_time;
+    use crate::optim::flat::{synthetic_layout, FlatOptimizer};
 
     #[test]
     fn bucket_plan_tiles_exactly() {
@@ -1006,6 +644,23 @@ mod tests {
         a[0].fill(4, &mut ga);
         a[1].fill(4, &mut gb);
         assert_ne!(ga, gb);
+    }
+
+    #[test]
+    fn default_skip_advances_stream_sources() {
+        // skip(step) on a stream-stateful source must advance it exactly
+        // as a consumed fill would — the resume fast-forward contract.
+        let mut consumed = synthetic_sources(1, 5, 0.1);
+        let mut skipped = synthetic_sources(1, 5, 0.1);
+        let mut ga = vec![0f32; 24];
+        let mut gb = vec![0f32; 24];
+        for step in 1..=2u64 {
+            consumed[0].fill(step, &mut ga);
+            skipped[0].skip(step, &mut gb);
+        }
+        consumed[0].fill(3, &mut ga);
+        skipped[0].fill(3, &mut gb);
+        assert_eq!(ga, gb);
     }
 
     #[test]

@@ -23,8 +23,12 @@
 //!
 //! This is the "runs for real" half of the distributed story; the
 //! analytic half (exact ZeRO-3 memory and NCCL timing) lives in `memsim`
-//! and [`super::collective`], and the gradient-granular overlap of
-//! exchange with optimizer stepping lives in [`super::pipeline`].
+//! and [`super::collective`]. Gradient-granular execution — lockstep,
+//! pipelined, fused — is the unified engine's job ([`super::engine`]),
+//! entered through the [`super::pipeline`]/[`super::fused_host`] plan
+//! constructors; this module stays PJRT-session-granular because each
+//! rank here owns a real device session rather than a host gradient
+//! stream.
 
 use std::path::PathBuf;
 use std::sync::mpsc;

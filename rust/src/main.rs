@@ -1,6 +1,7 @@
 //! `adalomo` — the Layer-3 leader binary.
 //!
-//! Subcommands map to the paper's experiments (DESIGN.md §5):
+//! Subcommands map to the paper's experiments (DESIGN.md §5) plus the
+//! unified execution engine:
 //!
 //! ```text
 //! adalomo scratch    --preset tiny --opt adalomo --steps 400      (§4.3, Fig 4)
@@ -12,18 +13,28 @@
 //! adalomo liveness   --arch llama7b                               (§2.1 analysis)
 //! adalomo fused      --preset nano --steps 5                      (fused backward demo)
 //! adalomo workers    --ranks 2 --rounds 2                         (data-parallel demo)
+//! adalomo train      --plan pipelined-fused [--resume ckpt]       (unified engine)
+//! adalomo checkpoint-inspect --ckpt engine_ckpt.bin               (ckpt header dump)
 //! adalomo hparams                                                 (Tables 3/6/7)
 //! adalomo info                                                    (artifacts summary)
 //! ```
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
 
 use adalomo::config::{paper_lr, Phase, RunConfig};
+use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
+use adalomo::coordinator::fused_host;
+use adalomo::coordinator::pipeline::{self, PipelineConfig};
 use adalomo::coordinator::{fused, workers, Trainer};
 use adalomo::data::{loader::DataLoader, Domain};
 use adalomo::experiments as exp;
 use adalomo::memsim::{self, liveness, memory, throughput, Arch};
 use adalomo::metrics::ascii_curve;
+use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, ShardMode};
+use adalomo::optim::OptKind;
+use adalomo::runtime::{checkpoint, HostBlob, Session};
 use adalomo::util::cli::Args;
 use adalomo::util::table::{fnum, Table};
 
@@ -47,6 +58,8 @@ fn run() -> Result<()> {
         "liveness" => cmd_liveness(&args),
         "fused" => cmd_fused(&args),
         "workers" => cmd_workers(&args),
+        "train" => cmd_train(&args),
+        "checkpoint-inspect" => cmd_checkpoint_inspect(&args),
         "hparams" => cmd_hparams(&args),
         "bench-check" => cmd_bench_check(&args),
         "info" => cmd_info(&args),
@@ -72,6 +85,11 @@ USAGE: adalomo <subcommand> [--flag value ...]
   liveness    gradient-liveness simulation (fused vs standard backward)
   fused       run real fused-backward group programs (nano/micro)
   workers     thread-per-rank data-parallel training demo
+  train       unified engine: --plan sequential|pipelined|pipelined-fused|
+              fused-host on a synthetic preset; --suspend-at K stops after
+              step K (0 = run to completion), --out writes the checkpoint,
+              --resume CKPT continues a saved run bitwise-identically
+  checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH)
   hparams     the paper's hyper-parameter tables (3/6/7)
   bench-check gate measured bench metrics against bench/baseline.json
   info        artifacts + manifest summary
@@ -82,8 +100,43 @@ Common flags: --preset nano|micro|tiny|small   --opt sgd|sgd_momentum|
   --out DIR
 ";
 
+/// The (preset, opt, seed) triple every training-flavored subcommand
+/// parses — one reader instead of a copy per `cmd_*`.
+struct RunSpec {
+    preset: String,
+    opt: String,
+    seed: u64,
+}
+
+fn run_spec(args: &Args, default_opt: &str) -> Result<RunSpec> {
+    Ok(RunSpec {
+        preset: args.str_or("preset", "nano"),
+        opt: args.str_or("opt", default_opt),
+        seed: args.u64_or("seed", 42)?,
+    })
+}
+
+/// The base-checkpoint plumbing `pretrain` and `instruct` share: resolve
+/// the cache dir, then build or load the AdamW base checkpoint.
+fn base_checkpoint(
+    session: &Session,
+    args: &Args,
+    spec: &RunSpec,
+) -> Result<(String, HostBlob)> {
+    let base_steps = args.usize_or("base-steps", 300)?;
+    let out = args.str_or("out", "runs");
+    let base = exp::ensure_base_checkpoint(
+        session,
+        &spec.preset,
+        base_steps,
+        spec.seed,
+        &out,
+    )?;
+    Ok((out, base))
+}
+
 fn loaders(
-    session: &adalomo::runtime::Session,
+    session: &Session,
     preset: &str,
     domain: Domain,
     seed: u64,
@@ -114,20 +167,19 @@ fn print_report(report: &adalomo::coordinator::TrainReport) {
 
 fn cmd_scratch(args: &Args) -> Result<()> {
     let session = exp::open_session()?;
-    let preset = args.str_or("preset", "nano");
-    let opt = args.str_or("opt", "adalomo");
+    let spec = run_spec(args, "adalomo")?;
     let steps = args.usize_or("steps", 200)?;
-    let seed = args.u64_or("seed", 42)?;
-    let mut cfg = RunConfig::new(&preset, &opt, Phase::Scratch, steps);
-    cfg.lr = exp::effective_lr(&opt, Phase::Scratch);
+    let mut cfg = RunConfig::new(&spec.preset, &spec.opt, Phase::Scratch, steps);
+    cfg.lr = exp::effective_lr(&spec.opt, Phase::Scratch);
     cfg = cfg.override_from(args)?;
     args.finish()?;
     println!(
-        "scratch pre-training: {preset}/{opt}, {steps} steps, lr {}",
-        cfg.lr
+        "scratch pre-training: {}/{}, {steps} steps, lr {}",
+        spec.preset, spec.opt, cfg.lr
     );
     let domain = Domain::parse(&cfg.domain)?;
-    let (train, val) = loaders(&session, &preset, domain, seed, steps)?;
+    let (train, val) =
+        loaders(&session, &spec.preset, domain, spec.seed, steps)?;
     let out = cfg.out_dir.clone();
     let mut trainer =
         Trainer::new(&session, cfg, train, Some(val))?.with_logging()?;
@@ -139,20 +191,20 @@ fn cmd_scratch(args: &Args) -> Result<()> {
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let session = exp::open_session()?;
-    let preset = args.str_or("preset", "nano");
-    let opt = args.str_or("opt", "adalomo");
+    let spec = run_spec(args, "adalomo")?;
     let steps = args.usize_or("steps", 200)?;
-    let base_steps = args.usize_or("base-steps", 300)?;
-    let seed = args.u64_or("seed", 42)?;
     let domain = Domain::parse(&args.str_or("domain", "chinese"))?;
-    let out = args.str_or("out", "runs");
+    let (out, base) = base_checkpoint(&session, args, &spec)?;
     args.finish()?;
-    println!("building base checkpoint ({base_steps} AdamW steps on c4)...");
-    let base =
-        exp::ensure_base_checkpoint(&session, &preset, base_steps, seed, &out)?;
-    println!("further pre-training {preset}/{opt} on {}...", domain.name());
+    println!(
+        "further pre-training {}/{} on {}...",
+        spec.preset,
+        spec.opt,
+        domain.name()
+    );
     let report = exp::further_pretrain(
-        &session, &preset, &opt, domain, steps, &base, seed, &out,
+        &session, &spec.preset, &spec.opt, domain, steps, &base, spec.seed,
+        &out,
     )?;
     print_report(&report);
     Ok(())
@@ -160,21 +212,18 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 
 fn cmd_instruct(args: &Args) -> Result<()> {
     let session = exp::open_session()?;
-    let preset = args.str_or("preset", "nano");
-    let opt = args.str_or("opt", "adalomo");
+    let spec = run_spec(args, "adalomo")?;
     let steps = args.usize_or("steps", 200)?;
-    let base_steps = args.usize_or("base-steps", 300)?;
-    let seed = args.u64_or("seed", 42)?;
     let n_items = args.usize_or("eval-items", 24)?;
-    let out = args.str_or("out", "runs");
+    let (out, base) = base_checkpoint(&session, args, &spec)?;
     args.finish()?;
-    let base =
-        exp::ensure_base_checkpoint(&session, &preset, base_steps, seed, &out)?;
     let outcome = exp::instruction_tune(
-        &session, &preset, &opt, steps, &base, seed, &out, n_items,
+        &session, &spec.preset, &spec.opt, steps, &base, spec.seed, &out,
+        n_items,
     )?;
     let mut table = Table::new(&format!(
-        "Instruction tuning — {preset}/{opt} (paper Table 2 row)"
+        "Instruction tuning — {}/{} (paper Table 2 row)",
+        spec.preset, spec.opt
     ))
     .header(&["knowledge", "reasoning", "arithmetic", "code", "writing", "avg"]);
     table.row(vec![
@@ -198,10 +247,10 @@ fn cmd_toy2d(args: &Args) -> Result<()> {
     )
     .header(&["optimizer", "final x", "final y", "f(x,y)", "basin"]);
     for kind in [
-        adalomo::optim::OptKind::Sgd,
-        adalomo::optim::OptKind::SgdMomentum,
-        adalomo::optim::OptKind::SgdVariance,
-        adalomo::optim::OptKind::AdamW,
+        OptKind::Sgd,
+        OptKind::SgdMomentum,
+        OptKind::SgdVariance,
+        OptKind::AdamW,
     ] {
         let traj = exp::toy2d_trajectory(kind, lr, steps, exp::TOY2D_START);
         let last = traj.last().unwrap();
@@ -391,16 +440,15 @@ fn cmd_fused(args: &Args) -> Result<()> {
 }
 
 fn cmd_workers(args: &Args) -> Result<()> {
-    let preset = args.str_or("preset", "nano");
-    let opt = args.str_or("opt", "adalomo");
+    let spec = run_spec(args, "adalomo")?;
     let ranks = args.usize_or("ranks", 2)?;
     let rounds = args.usize_or("rounds", 2)?;
     let sync_every = args.usize_or("sync-every", 10)?;
-    let seed = args.u64_or("seed", 42)?;
     args.finish()?;
-    let mut cfg = RunConfig::new(&preset, &opt, Phase::Scratch, sync_every);
-    cfg.lr = exp::effective_lr(&opt, Phase::Scratch);
-    cfg.seed = seed;
+    let mut cfg =
+        RunConfig::new(&spec.preset, &spec.opt, Phase::Scratch, sync_every);
+    cfg.lr = exp::effective_lr(&spec.opt, Phase::Scratch);
+    cfg.seed = spec.seed;
     let report = workers::run_local_sgd(
         exp::artifacts_dir(),
         cfg,
@@ -424,6 +472,159 @@ fn cmd_workers(args: &Args) -> Result<()> {
         report.aggregate_tokens_per_sec,
         report.wall_secs
     );
+    Ok(())
+}
+
+/// Source scale for the `train` subcommand's deterministic host-mirror
+/// gradients (fixed so `--resume` reconstructs identical streams from the
+/// checkpointed seed alone).
+const TRAIN_SOURCE_SCALE: f32 = 0.02;
+
+/// Host-mirror training on the unified engine: build (or resume) an
+/// [`Engine`], run it to completion or to `--suspend-at`, score the
+/// parameters on a fixed validation set, and write the checkpoint.
+fn cmd_train(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "engine_ckpt.bin");
+    // 0 = run to completion (a plan that suspends at step 0 would be an
+    // empty run anyway).
+    let suspend = args.u64_or("suspend-at", 0)?;
+
+    if let Some(ckpt) = args.get("resume") {
+        let ckpt = ckpt.to_string();
+        args.finish()?;
+        let mut eng = Engine::resume(Path::new(&ckpt))?;
+        println!(
+            "resumed {ckpt} at step {} of {}: {}",
+            eng.step(),
+            eng.plan().steps,
+            eng.plan().describe()
+        );
+        return run_engine(&mut eng, suspend, &out);
+    }
+
+    let spec = run_spec(args, "adalomo")?;
+    let plan_name = args.str_or("plan", "pipelined");
+    let steps = args.usize_or("steps", 8)?;
+    let ranks = args.usize_or("ranks", 2)?;
+    let shards = args.usize_or("shards", 2)?;
+    let mode = match args.str_or("mode", "contiguous").as_str() {
+        "segments" => ShardMode::Segments,
+        "contiguous" => ShardMode::Contiguous,
+        other => bail!("unknown shard mode {other:?} (segments|contiguous)"),
+    };
+    let kind = OptKind::parse(&spec.opt)?;
+    let arch = Arch::preset(&spec.preset).ok_or_else(|| {
+        anyhow!(
+            "no synthetic preset {:?} (nano|micro|tiny|small|base100m)",
+            spec.preset
+        )
+    })?;
+    let params = arch.param_specs();
+    let specs: Vec<(&str, &[usize])> = params
+        .iter()
+        .map(|(n, s)| (n.as_str(), s.as_slice()))
+        .collect();
+    let layout = synthetic_layout(kind, &specs);
+    let bucket = args
+        .usize_or("bucket-elems", layout.params_len.div_ceil(8).max(1))?;
+    args.finish()?;
+
+    let (blob0, _) = seeded_blob_and_grads(&layout, spec.seed);
+    let mut cfg = PipelineConfig::new(steps, bucket);
+    cfg.n_shards = shards;
+    let mut plan = match plan_name.as_str() {
+        "sequential" => ExecPlan::sequential(kind, mode, ranks, &cfg),
+        "pipelined" => ExecPlan::pipelined(kind, mode, ranks, &cfg),
+        "pipelined-fused" => ExecPlan::pipelined_fused(kind, mode, ranks, &cfg),
+        "fused-host" => ExecPlan::fused_host(kind, mode, ranks, &cfg),
+        other => bail!(
+            "unknown plan {other:?} \
+             (sequential|pipelined|pipelined-fused|fused-host)"
+        ),
+    };
+    plan.seed = spec.seed;
+    let mut eng = Engine::new(&layout, &blob0, plan)?;
+    eng.set_layout_key(&format!("{}/{}", spec.preset, spec.opt));
+    println!(
+        "train {} ({} trainable floats): {}",
+        spec.preset,
+        layout.params_len,
+        eng.plan().describe()
+    );
+    run_engine(&mut eng, suspend, &out)
+}
+
+/// Reconstruct the deterministic rank sources a plan trains on — the
+/// canonical [`fused_host::plan_sources`] reconstruction, so `--resume`
+/// rebuilds byte-identical streams from the checkpointed plan alone.
+fn engine_sources(eng: &Engine) -> RankSources {
+    fused_host::plan_sources(
+        eng.plan(),
+        eng.group_extents(),
+        TRAIN_SOURCE_SCALE,
+    )
+}
+
+fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
+    if suspend > 0 {
+        eng.suspend_at(suspend);
+    }
+    let sources = engine_sources(eng);
+    let report = eng.run(sources)?;
+    println!(
+        "ran {} steps x {} buckets: exposed {:.3}ms vs compute+comm \
+         {:.3}ms ({:.2}x overlap); peak live grad {} of {} bytes",
+        report.steps,
+        report.n_buckets,
+        report.exposed_secs * 1e3,
+        (report.compute_secs + report.comm_secs) * 1e3,
+        report.overlap_efficiency,
+        report.peak_live_grad_bytes,
+        report.full_grad_bytes
+    );
+    // Fixed-validation-set score of the parameter region (the host
+    // stand-in eval the suspend/resume tests pin bitwise).
+    let params_len = eng.layout().params_len;
+    let mut val = DataLoader::lm(Domain::C4, 9_999, 2, 32, 8_000);
+    let loss = pipeline::host_eval_loss(&eng.blob()[..params_len], &mut val, 4);
+    println!("fixed-val-set eval loss {loss:.6e}");
+    eng.save(Path::new(out))?;
+    println!(
+        "checkpoint: {out} (step {} of {}{})",
+        eng.step(),
+        eng.plan().steps,
+        if eng.is_finished() { "" } else { ", suspended" }
+    );
+    Ok(())
+}
+
+fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
+    let path = args.str_or("ckpt", "engine_ckpt.bin");
+    args.finish()?;
+    let ck = checkpoint::load(Path::new(&path))?;
+    let plan = ExecPlan::from_record(&ck.plan)?;
+    let bytes = std::fs::metadata(&path)?.len();
+    println!("checkpoint {path}");
+    println!("  format v{} | {bytes} bytes on disk", checkpoint::VERSION);
+    println!(
+        "  layout {} | {} floats ({} params, {} segments)",
+        ck.layout_key,
+        ck.layout.blob_len,
+        ck.layout.params_len,
+        ck.layout.segments.len()
+    );
+    println!(
+        "  step {} of {} ({})",
+        ck.step,
+        plan.steps,
+        if ck.step >= plan.steps as u64 {
+            "finished"
+        } else {
+            "suspended mid-run"
+        }
+    );
+    println!("  plan: {}", plan.describe());
+    println!("  source seed {}", plan.seed);
     Ok(())
 }
 
@@ -470,9 +671,9 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     args.finish()?;
     let read = |path: &str| -> Result<adalomo::util::json::Json> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
         adalomo::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+            .map_err(|e| anyhow!("parsing {path}: {e}"))
     };
     let current = read(&current_path)?;
     let baseline = read(&baseline_path)?;
@@ -482,7 +683,7 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         let blessed =
             adalomo::util::bench::bless_baseline(&current, &baseline)?;
         std::fs::write(&baseline_path, blessed.to_string())
-            .map_err(|e| anyhow::anyhow!("writing {baseline_path}: {e}"))?;
+            .map_err(|e| anyhow!("writing {baseline_path}: {e}"))?;
         println!("blessed {baseline_path} with values from {current_path}");
         return Ok(());
     }

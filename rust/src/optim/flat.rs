@@ -532,6 +532,19 @@ impl FlatOptimizer {
         self.groups.iter().map(|g| g.elems).collect()
     }
 
+    /// First fused-order task index of group `g` — the task cursor a
+    /// checkpoint taken at that group boundary records (`g == n_groups()`
+    /// maps to the one-past-the-end cursor, i.e. a completed step). The
+    /// engine's resume path validates a restored (group, task) cursor
+    /// pair against this before trusting it.
+    pub fn group_cursor_task(&self, g: usize) -> usize {
+        if g >= self.groups.len() {
+            self.tasks.len()
+        } else {
+            self.groups[g].tasks.0
+        }
+    }
+
     /// Step ONE fused-backward group from a gradient slice covering only
     /// that group's blob extent (`group_extents()[g]`). Because per-task
     /// arithmetic is self-contained, walking `step_group` over `0..

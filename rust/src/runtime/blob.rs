@@ -147,6 +147,8 @@ impl HostBlob {
     }
 
     /// Binary checkpoint: little-endian f32s, preceded by a short header.
+    /// The float codec is shared with the engine checkpoints in
+    /// [`super::checkpoint`] so the two formats cannot drift.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut bytes =
             Vec::with_capacity(16 + self.layout_key.len() + self.data.len() * 4);
@@ -154,9 +156,7 @@ impl HostBlob {
         bytes.extend_from_slice(&(self.layout_key.len() as u32).to_le_bytes());
         bytes.extend_from_slice(self.layout_key.as_bytes());
         bytes.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
-        for v in &self.data {
-            bytes.extend_from_slice(&v.to_le_bytes());
-        }
+        super::checkpoint::write_f32s(&mut bytes, &self.data);
         std::fs::write(path, bytes).with_context(|| format!("write {path:?}"))
     }
 
@@ -167,17 +167,20 @@ impl HostBlob {
             bail!("{path:?}: not an adalomo checkpoint");
         }
         let klen = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
-        let layout_key = String::from_utf8(bytes[8..8 + klen].to_vec())?;
-        let off = 8 + klen;
-        let n = u64::from_le_bytes(bytes[off..off + 8].try_into()?) as usize;
-        let mut data = Vec::with_capacity(n);
-        let body = &bytes[off + 8..];
-        if body.len() != n * 4 {
+        // Bounds-checked header reads: a header truncated mid-field is a
+        // reportable error, never a slice panic.
+        let header_end = 8usize
+            .checked_add(klen)
+            .and_then(|o| o.checked_add(8))
+            .filter(|&end| end <= bytes.len());
+        let Some(header_end) = header_end else {
             bail!("{path:?}: truncated checkpoint");
-        }
-        for chunk in body.chunks_exact(4) {
-            data.push(f32::from_le_bytes(chunk.try_into()?));
-        }
+        };
+        let off = 8 + klen;
+        let layout_key = String::from_utf8(bytes[8..off].to_vec())?;
+        let n = u64::from_le_bytes(bytes[off..header_end].try_into()?) as usize;
+        let data = super::checkpoint::read_f32s(&bytes[header_end..], n)
+            .with_context(|| format!("{path:?}: truncated checkpoint"))?;
         Ok(HostBlob { data, layout_key })
     }
 }
@@ -302,6 +305,30 @@ mod tests {
         assert_eq!(out.data.len(), 23);
         assert_eq!(&out.data[..6], blob.params(&from));
         assert!(out.data[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn truncated_checkpoint_errors_instead_of_panicking() {
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_trunc_ckpt_{}.bin",
+            std::process::id()
+        ));
+        // Magic + a key length pointing far past the end of the file.
+        let mut bytes = b"ADLM".to_vec();
+        bytes.extend_from_slice(&200u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = HostBlob::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"));
+        // Valid header, float count larger than the body.
+        let mut bytes = b"ADLM".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'k');
+        bytes.extend_from_slice(&100u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(HostBlob::load(&path).is_err());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

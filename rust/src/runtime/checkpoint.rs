@@ -1,0 +1,550 @@
+//! Versioned binary checkpoints for the unified execution engine.
+//!
+//! A checkpoint freezes everything the engine needs to continue a run
+//! bitwise-identically after a process restart: the [`Layout`] (so the
+//! resumed process can rebuild the flat optimizer without a manifest),
+//! the full state blob (parameters + optimizer state + metrics), the
+//! completed-step counter, and a [`PlanRecord`] — the serialized form of
+//! `coordinator::engine::ExecPlan` plus the position inside it. The
+//! format is self-contained and little-endian throughout; the leading
+//! `ADCP` magic + version word make incompatible readers fail loudly
+//! instead of misparsing.
+//!
+//! This module sits BELOW the coordinator layer, so it cannot name
+//! `ExecPlan` directly: [`PlanRecord`] is the plain-data mirror the
+//! coordinator converts to and from. The small f32 codec here
+//! ([`write_f32s`]/[`read_f32s`]) is shared with [`super::HostBlob`]'s
+//! simpler params-only checkpoint so the two file formats cannot drift in
+//! how they spell a float.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::manifest::{Layout, Segment};
+
+/// File magic for engine checkpoints ("ADalomo CheckPoint").
+pub const MAGIC: &[u8; 4] = b"ADCP";
+
+/// Current format version. Readers reject anything newer; the version is
+/// bumped whenever a field is added or re-encoded.
+pub const VERSION: u32 = 1;
+
+/// Plain-data mirror of the coordinator's `ExecPlan`, plus the position
+/// inside it. Enum axes are stored as u8 codes (see the `PROD_*`/`ORD_*`/
+/// `GRAN_*`/`MODE_*` constants); the optimizer is stored by name so new
+/// kinds never renumber old files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRecord {
+    /// Gradient production: [`PROD_FULL_IMAGE`] | [`PROD_GROUPED`].
+    pub production: u8,
+    /// Exchange order: [`ORD_ASCENDING`] | [`ORD_DESCENDING`].
+    pub order: u8,
+    /// Step granularity: [`GRAN_WHOLE_IMAGE`] | [`GRAN_TASKS`] |
+    /// [`GRAN_GROUPS`].
+    pub granularity: u8,
+    /// Shard plan: [`MODE_SEGMENTS`] | [`MODE_CONTIGUOUS`].
+    pub mode: u8,
+    /// Optimizer name (`OptKind::name()` spelling).
+    pub opt: String,
+    /// Total steps the plan runs for.
+    pub steps: u64,
+    /// Exchange bucket size in f32 elements (tasks granularity).
+    pub bucket_elems: u64,
+    pub n_ranks: u32,
+    pub n_shards: u32,
+    pub lr: f32,
+    pub wd: f32,
+    /// Fabric model: per-hop latency (s) and per-link bandwidth (B/s).
+    pub fabric_alpha: f64,
+    pub fabric_bw: f64,
+    /// Source seed for deterministic host-mirror gradient streams — what
+    /// lets a resumed CLI run reconstruct identical rank sources.
+    pub seed: u64,
+    /// Position inside the interrupted step: fused-group and fused-order
+    /// task cursors. Version-1 writers only checkpoint at step
+    /// boundaries, so both are always zero — readers validate that
+    /// rather than silently resuming mid-step.
+    pub cursor_group: u64,
+    pub cursor_task: u64,
+}
+
+pub const PROD_FULL_IMAGE: u8 = 0;
+pub const PROD_GROUPED: u8 = 1;
+pub const ORD_ASCENDING: u8 = 0;
+pub const ORD_DESCENDING: u8 = 1;
+pub const GRAN_WHOLE_IMAGE: u8 = 0;
+pub const GRAN_TASKS: u8 = 1;
+pub const GRAN_GROUPS: u8 = 2;
+pub const MODE_SEGMENTS: u8 = 0;
+pub const MODE_CONTIGUOUS: u8 = 1;
+
+/// Everything a checkpoint file holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Layout key the blob was trained under (`preset/opt` spelling).
+    pub layout_key: String,
+    pub layout: Layout,
+    /// Completed optimizer steps at save time.
+    pub step: u64,
+    pub plan: PlanRecord,
+    /// Full blob: parameter, optimizer-state and metrics regions.
+    pub blob: Vec<f32>,
+}
+
+// --- little-endian writers/readers -------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append `data` as raw little-endian f32s (4 bytes each, no length
+/// prefix — callers write their own counts).
+pub fn write_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    out.reserve(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode exactly `n` little-endian f32s; `bytes` must hold exactly
+/// `4 * n` bytes (a trailing-garbage or truncated body is an error, not a
+/// partial read).
+pub fn read_f32s(bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+    ensure!(
+        bytes.len() == n * 4,
+        "f32 body holds {} bytes, expected {}",
+        bytes.len(),
+        n * 4
+    );
+    let mut data = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes(chunk.try_into()?));
+    }
+    Ok(data)
+}
+
+/// Bounds-checked cursor over a checkpoint body.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "truncated checkpoint (need {} bytes at offset {}, have {})",
+            n,
+            self.pos,
+            self.bytes.len()
+        );
+        let piece = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(piece)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    fn usize64(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+}
+
+/// Serialize `ck` into the version-1 byte layout.
+pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
+    encode(&ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.blob)
+}
+
+/// The version-1 encoder over borrowed parts — what [`write`] uses so
+/// the engine can checkpoint without cloning its blob first.
+fn encode(
+    layout_key: &str,
+    layout: &Layout,
+    step: u64,
+    plan: &PlanRecord,
+    blob: &[f32],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + blob.len() * 4);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_str(&mut out, layout_key);
+    // Layout.
+    put_u64(&mut out, layout.blob_len as u64);
+    put_u64(&mut out, layout.params_len as u64);
+    put_u32(&mut out, layout.segments.len() as u32);
+    for s in &layout.segments {
+        put_str(&mut out, &s.name);
+        put_str(&mut out, &s.kind);
+        put_u32(&mut out, s.shape.len() as u32);
+        for &d in &s.shape {
+            put_u64(&mut out, d as u64);
+        }
+        put_u64(&mut out, s.offset as u64);
+        put_u64(&mut out, s.size as u64);
+    }
+    put_u64(&mut out, step);
+    // Plan record.
+    out.push(plan.production);
+    out.push(plan.order);
+    out.push(plan.granularity);
+    out.push(plan.mode);
+    put_str(&mut out, &plan.opt);
+    put_u64(&mut out, plan.steps);
+    put_u64(&mut out, plan.bucket_elems);
+    put_u32(&mut out, plan.n_ranks);
+    put_u32(&mut out, plan.n_shards);
+    put_f32(&mut out, plan.lr);
+    put_f32(&mut out, plan.wd);
+    put_f64(&mut out, plan.fabric_alpha);
+    put_f64(&mut out, plan.fabric_bw);
+    put_u64(&mut out, plan.seed);
+    put_u64(&mut out, plan.cursor_group);
+    put_u64(&mut out, plan.cursor_task);
+    // Blob.
+    put_u64(&mut out, blob.len() as u64);
+    write_f32s(&mut out, blob);
+    out
+}
+
+/// Parse a version-1 checkpoint, validating magic, version, internal
+/// layout consistency and exact body length.
+pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+    ensure!(
+        bytes.len() >= 8 && &bytes[..4] == MAGIC,
+        "not an adalomo engine checkpoint (bad magic)"
+    );
+    let mut r = Reader { bytes, pos: 4 };
+    let version = r.u32()?;
+    ensure!(
+        version == VERSION,
+        "checkpoint version {version} unsupported (this build reads {VERSION})"
+    );
+    let layout_key = r.str()?;
+    let blob_len = r.usize64()?;
+    let params_len = r.usize64()?;
+    let n_segments = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(n_segments);
+    for _ in 0..n_segments {
+        let name = r.str()?;
+        let kind = r.str()?;
+        let ndim = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.usize64()?);
+        }
+        let offset = r.usize64()?;
+        let size = r.usize64()?;
+        segments.push(Segment { name, kind, shape, offset, size });
+    }
+    let layout = Layout { blob_len, params_len, segments };
+    validate_layout(&layout)?;
+    let step = r.u64()?;
+    let plan = PlanRecord {
+        production: r.u8()?,
+        order: r.u8()?,
+        granularity: r.u8()?,
+        mode: r.u8()?,
+        opt: r.str()?,
+        steps: r.u64()?,
+        bucket_elems: r.u64()?,
+        n_ranks: r.u32()?,
+        n_shards: r.u32()?,
+        lr: r.f32()?,
+        wd: r.f32()?,
+        fabric_alpha: r.f64()?,
+        fabric_bw: r.f64()?,
+        seed: r.u64()?,
+        cursor_group: r.u64()?,
+        cursor_task: r.u64()?,
+    };
+    ensure!(
+        plan.cursor_group == 0 && plan.cursor_task == 0,
+        "mid-step checkpoint (group cursor {}, task cursor {}): version-1 \
+         readers only resume at step boundaries",
+        plan.cursor_group,
+        plan.cursor_task
+    );
+    let n = r.usize64()?;
+    ensure!(
+        n == layout.blob_len,
+        "checkpoint blob holds {n} floats, layout says {}",
+        layout.blob_len
+    );
+    let blob = read_f32s(&bytes[r.pos..], n)?;
+    Ok(Checkpoint { layout_key, layout, step, plan, blob })
+}
+
+/// The serialized layout must be internally consistent before anything
+/// trusts its offsets: segments tile `[0, blob_len)` exactly and the
+/// parameter region is a prefix.
+fn validate_layout(layout: &Layout) -> Result<()> {
+    let mut off = 0usize;
+    for s in &layout.segments {
+        ensure!(
+            s.offset == off,
+            "checkpoint layout: segment {} at offset {} (expected {off})",
+            s.name,
+            s.offset
+        );
+        ensure!(
+            s.size == s.shape.iter().product::<usize>().max(1),
+            "checkpoint layout: segment {} size {} != shape {:?}",
+            s.name,
+            s.size,
+            s.shape
+        );
+        off += s.size;
+    }
+    ensure!(
+        off == layout.blob_len,
+        "checkpoint layout: segments cover {off} of {} floats",
+        layout.blob_len
+    );
+    ensure!(
+        layout.params_len <= layout.blob_len,
+        "checkpoint layout: params_len {} > blob_len {}",
+        layout.params_len,
+        layout.blob_len
+    );
+    Ok(())
+}
+
+/// Write `ck` to `path` crash-safely (see [`write`]).
+pub fn save(path: &Path, ck: &Checkpoint) -> Result<()> {
+    write(path, &ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.blob)
+}
+
+/// [`save`] over borrowed parts: validates and serializes without the
+/// caller assembling an owned [`Checkpoint`] first — the engine's
+/// checkpoint path uses this so the state blob (its largest object) is
+/// never cloned just to be written out.
+///
+/// The write is crash-safe: bytes go to a same-directory temp name and
+/// are renamed over `path` only once fully written, so a kill mid-save
+/// can never leave a torn file at the final path (nor destroy the
+/// previous checkpoint there) — that torn file would otherwise defeat
+/// the restart-survival guarantee checkpoints exist for.
+pub fn write(
+    path: &Path,
+    layout_key: &str,
+    layout: &Layout,
+    step: u64,
+    plan: &PlanRecord,
+    blob: &[f32],
+) -> Result<()> {
+    ensure!(
+        blob.len() == layout.blob_len,
+        "checkpoint blob {} floats != layout {}",
+        blob.len(),
+        layout.blob_len
+    );
+    validate_layout(layout)?;
+    let tmp = temp_sibling(path);
+    std::fs::write(&tmp, encode(layout_key, layout, step, plan, blob))
+        .with_context(|| format!("write checkpoint {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish checkpoint {path:?}"))
+}
+
+/// Same-directory temp name (rename is only atomic within a filesystem);
+/// the pid keeps concurrent writers from clobbering each other's
+/// in-flight bytes.
+fn temp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| "checkpoint".into());
+    name.push(format!(".{}.tmp", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Read and validate a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read checkpoint {path:?}"))?;
+    if bytes.len() >= 4 && &bytes[..4] != MAGIC {
+        bail!(
+            "{path:?} is not an engine checkpoint (HostBlob-style files \
+             start with ADLM, engine checkpoints with ADCP)"
+        );
+    }
+    from_bytes(&bytes)
+        .with_context(|| format!("parse checkpoint {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let segments = vec![
+            Segment {
+                name: "w".into(),
+                kind: "param".into(),
+                shape: vec![2, 3],
+                offset: 0,
+                size: 6,
+            },
+            Segment {
+                name: "w@v".into(),
+                kind: "state".into(),
+                shape: vec![6],
+                offset: 6,
+                size: 6,
+            },
+            Segment {
+                name: "metrics".into(),
+                kind: "metric".into(),
+                shape: vec![8],
+                offset: 12,
+                size: 8,
+            },
+        ];
+        let layout = Layout { blob_len: 20, params_len: 6, segments };
+        Checkpoint {
+            layout_key: "nano/adalomo".into(),
+            layout,
+            step: 7,
+            plan: PlanRecord {
+                production: PROD_GROUPED,
+                order: ORD_DESCENDING,
+                granularity: GRAN_TASKS,
+                mode: MODE_CONTIGUOUS,
+                opt: "adalomo".into(),
+                steps: 12,
+                bucket_elems: 64,
+                n_ranks: 2,
+                n_shards: 3,
+                lr: 1e-2,
+                wd: 0.01,
+                fabric_alpha: 8e-6,
+                fabric_bw: 170e9,
+                seed: 42,
+                cursor_group: 0,
+                cursor_task: 0,
+            },
+            blob: (0..20).map(|i| i as f32 * 0.25 - 1.0).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let ck = sample();
+        let bytes = to_bytes(&ck);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // Exact float bits survive, not just approximate values.
+        for (a, b) in ck.blob.iter().zip(&back.blob) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Serialization is deterministic: same checkpoint, same bytes.
+        assert_eq!(bytes, to_bytes(&back));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let ck = sample();
+        let path = std::env::temp_dir()
+            .join(format!("adalomo_engine_ckpt_{}.bin", std::process::id()));
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, ck);
+        // Overwriting an existing checkpoint publishes atomically (temp
+        // sibling + rename): the new contents land and no temp file
+        // lingers next to the target.
+        let mut ck2 = ck.clone();
+        ck2.step = 9;
+        save(&path, &ck2).unwrap();
+        assert_eq!(load(&path).unwrap().step, 9);
+        assert!(!temp_sibling(&path).exists());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_inputs_fail_loudly() {
+        let ck = sample();
+        let bytes = to_bytes(&ck);
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).is_err());
+        // Future version.
+        let mut newer = bytes.clone();
+        newer[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert!(from_bytes(&newer).is_err());
+        // Truncated body.
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 4]);
+        assert!(from_bytes(&long).is_err());
+        // Mid-step cursor rejected.
+        let mut mid = ck.clone();
+        mid.plan.cursor_group = 1;
+        assert!(from_bytes(&to_bytes(&mid)).is_err());
+        // Blob/layout length mismatch rejected at save time.
+        let mut short = ck.clone();
+        short.blob.pop();
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_engine_ckpt_bad_{}.bin",
+            std::process::id()
+        ));
+        assert!(save(&path, &short).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn f32_codec_is_shared_and_strict() {
+        let data = vec![0.5f32, -1.25, f32::MIN_POSITIVE, 3.0e8];
+        let mut bytes = Vec::new();
+        write_f32s(&mut bytes, &data);
+        assert_eq!(bytes.len(), 16);
+        let back = read_f32s(&bytes, 4).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(read_f32s(&bytes, 3).is_err());
+        assert!(read_f32s(&bytes[..15], 4).is_err());
+    }
+}

@@ -40,7 +40,7 @@ pub struct Segment {
     pub size: usize,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Layout {
     pub blob_len: usize,
     pub params_len: usize,

@@ -11,6 +11,7 @@
 //! the coordinator wants to log.
 
 pub mod blob;
+pub mod checkpoint;
 pub mod manifest;
 pub mod session;
 

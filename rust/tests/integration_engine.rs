@@ -1,0 +1,200 @@
+//! Unified-engine integration: checkpoint/suspend/resume must reproduce
+//! an uninterrupted run bitwise — final blob, checkpoint bytes, and the
+//! fixed-validation-set eval loss — for every `ExecPlan` cell the four
+//! legacy entry points map to.
+
+use std::path::PathBuf;
+
+use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
+use adalomo::coordinator::fused_host;
+use adalomo::coordinator::pipeline::{self, PipelineConfig};
+use adalomo::data::{DataLoader, Domain};
+use adalomo::optim::flat::{
+    seeded_blob_and_grads, synthetic_layout, ShardMode,
+};
+use adalomo::optim::OptKind;
+use adalomo::runtime::{checkpoint, Layout};
+
+fn model_layout(kind: OptKind) -> Layout {
+    let params: Vec<(&str, &[usize])> = vec![
+        ("embed", &[32, 16][..]),
+        ("l0.attn_norm", &[16][..]),
+        ("l0.wq", &[16, 16][..]),
+        ("l0.w_down", &[24, 16][..]),
+        ("l1.wq", &[16, 16][..]),
+        ("final_norm", &[16][..]),
+        ("head", &[16, 32][..]),
+    ];
+    synthetic_layout(kind, &params)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("adalomo_it_{}_{name}.bin", std::process::id()))
+}
+
+/// Sources seeded like the engine plan's — the canonical
+/// `fused_host::plan_sources` reconstruction the CLI uses, so this test
+/// pins the exact stream a `--resume` rebuilds.
+fn sources_for(eng: &Engine) -> RankSources {
+    fused_host::plan_sources(eng.plan(), eng.group_extents(), 0.05)
+}
+
+/// Suspend at step k, checkpoint, resume "in a new process", finish: the
+/// final blob, the final checkpoint bytes and the fixed-val-set eval loss
+/// must all equal the uninterrupted run's — for all four plan cells.
+#[test]
+fn suspend_resume_reproduces_uninterrupted_run() {
+    let kind = OptKind::AdaLomo;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 61);
+    let mut cfg = PipelineConfig::new(6, layout.params_len.div_ceil(7));
+    cfg.n_shards = 2;
+    let mode = ShardMode::Contiguous;
+    let plans: Vec<(&str, ExecPlan)> = vec![
+        ("sequential", ExecPlan::sequential(kind, mode, 2, &cfg)),
+        ("pipelined", ExecPlan::pipelined(kind, mode, 2, &cfg)),
+        (
+            "pipelined-fused",
+            ExecPlan::pipelined_fused(kind, mode, 2, &cfg),
+        ),
+        ("fused-host", ExecPlan::fused_host(kind, mode, 2, &cfg)),
+    ];
+    for (name, plan) in plans {
+        let mut plan = plan;
+        plan.seed = 17;
+
+        // Uninterrupted reference.
+        let mut full = Engine::new(&layout, &blob0, plan.clone()).unwrap();
+        let srcs = sources_for(&full);
+        let r_full = full.run(srcs).unwrap();
+        assert_eq!(r_full.steps, 6, "{name}");
+        assert!(full.is_finished(), "{name}");
+
+        // Interrupted at step 3 + resumed from the file.
+        let mid = tmp(&format!("{name}_mid"));
+        let mut part = Engine::new(&layout, &blob0, plan.clone()).unwrap();
+        part.suspend_at(3);
+        let srcs = sources_for(&part);
+        let r_part = part.run(srcs).unwrap();
+        assert_eq!(r_part.steps, 3, "{name}");
+        assert!(!part.is_finished(), "{name}");
+        part.save(&mid).unwrap();
+        drop(part);
+
+        let mut resumed = Engine::resume(&mid).unwrap();
+        assert_eq!(resumed.step(), 3, "{name}");
+        assert_eq!(resumed.layout(), &layout, "{name}");
+        let srcs = sources_for(&resumed);
+        let r_rest = resumed.run(srcs).unwrap();
+        assert_eq!(r_rest.steps, 3, "{name}");
+        assert!(resumed.is_finished(), "{name}");
+
+        // Bitwise-equal final blobs...
+        for (i, (a, b)) in
+            full.blob().iter().zip(resumed.blob().iter()).enumerate()
+        {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{name} elem {i}: {a} vs {b}"
+            );
+        }
+        // ...bitwise-equal fixed-val-set eval losses...
+        let params_len = layout.params_len;
+        let mut val = DataLoader::lm(Domain::C4, 999, 2, 16, 4_000);
+        let la =
+            pipeline::host_eval_loss(&full.blob()[..params_len], &mut val, 4);
+        let lb = pipeline::host_eval_loss(
+            &resumed.blob()[..params_len],
+            &mut val,
+            4,
+        );
+        assert!(la > 0.0, "{name}");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{name}: {la} vs {lb}");
+        // ...and byte-equal final checkpoint files (what `make
+        // ckpt-smoke` asserts end to end with `cmp`).
+        let p_full = tmp(&format!("{name}_full"));
+        let p_rest = tmp(&format!("{name}_rest"));
+        full.save(&p_full).unwrap();
+        resumed.save(&p_rest).unwrap();
+        assert_eq!(
+            std::fs::read(&p_full).unwrap(),
+            std::fs::read(&p_rest).unwrap(),
+            "{name}"
+        );
+        for p in [mid, p_full, p_rest] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+/// The checkpoint file itself: everything the engine wrote comes back
+/// verbatim — layout (via the new `Layout: PartialEq`), plan axes, step
+/// counter, blob bits — and the recorded plan re-validates.
+#[test]
+fn checkpoint_file_preserves_engine_state_exactly() {
+    let kind = OptKind::AdamW;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 71);
+    let mut cfg = PipelineConfig::new(4, layout.params_len.div_ceil(3));
+    cfg.n_shards = 3;
+    cfg.wd = 0.01;
+    let mut plan = ExecPlan::pipelined(kind, ShardMode::Segments, 3, &cfg);
+    plan.seed = 23;
+    let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+    eng.set_layout_key("it/adamw");
+    eng.suspend_at(2);
+    let srcs = sources_for(&eng);
+    eng.run(srcs).unwrap();
+    let path = tmp("roundtrip");
+    eng.save(&path).unwrap();
+
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.layout_key, "it/adamw");
+    assert_eq!(ck.layout, layout);
+    assert_eq!(ck.step, 2);
+    assert_eq!(ck.plan.opt, "adamw");
+    assert_eq!(ck.plan.n_ranks, 3);
+    assert_eq!(ck.plan.steps, 4);
+    assert_eq!(ck.plan.wd.to_bits(), 0.01f32.to_bits());
+    assert_eq!(ck.plan.seed, 23);
+    assert_eq!(ck.plan.cursor_group, 0);
+    assert_eq!(ck.plan.cursor_task, 0);
+    assert_eq!(ck.blob.len(), layout.blob_len);
+    for (a, b) in eng.blob().iter().zip(&ck.blob) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let back = ExecPlan::from_record(&ck.plan).unwrap();
+    assert_eq!(back.kind, kind);
+    assert_eq!(back.mode, ShardMode::Segments);
+    std::fs::remove_file(path).ok();
+}
+
+/// A resumed engine whose plan says "already finished" runs zero further
+/// steps and leaves the blob untouched — restart-loop safety.
+#[test]
+fn resuming_a_finished_run_is_a_noop() {
+    let kind = OptKind::AdaLomo;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 81);
+    let cfg = PipelineConfig::new(2, layout.params_len);
+    let mut plan =
+        ExecPlan::fused_host(kind, ShardMode::Contiguous, 1, &cfg);
+    plan.seed = 5;
+    let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+    let srcs = sources_for(&eng);
+    eng.run(srcs).unwrap();
+    assert!(eng.is_finished());
+    let path = tmp("finished");
+    eng.save(&path).unwrap();
+
+    let mut again = Engine::resume(&path).unwrap();
+    assert!(again.is_finished());
+    let srcs = sources_for(&again);
+    let r = again.run(srcs).unwrap();
+    assert_eq!(r.steps, 0);
+    for (a, b) in eng.blob().iter().zip(again.blob().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_file(path).ok();
+}

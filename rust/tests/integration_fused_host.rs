@@ -39,12 +39,19 @@ fn fused_host_parity_holds_for_all_seven_optimizers() {
         for mode in [ShardMode::Segments, ShardMode::Contiguous] {
             let layout = model_layout(kind);
             let (blob0, _) = seeded_blob_and_grads(&layout, 31);
-            let mut engine =
-                FlatOptimizer::new(kind, &layout, 2, mode).unwrap();
-            let mut src =
-                FusedHostGrads::new(engine.group_extents(), 19, 0, 0.05);
+            let probe = FlatOptimizer::new(kind, &layout, 2, mode).unwrap();
+            let mut cfg = PipelineConfig::new(2, 1);
+            cfg.n_shards = 2;
+            cfg.lr = 5e-3;
+            cfg.wd = 0.01;
+            let sources = FusedHostGrads::per_rank_extents(
+                probe.group_extents(),
+                1,
+                19,
+                0.05,
+            );
             let (mirror, report) =
-                run_fused_host(&mut engine, &blob0, &mut src, 2, 5e-3, 0.01)
+                run_fused_host(&layout, kind, mode, &blob0, sources, &cfg)
                     .unwrap();
             let mut engine2 =
                 FlatOptimizer::new(kind, &layout, 2, mode).unwrap();

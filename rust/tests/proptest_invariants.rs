@@ -2,7 +2,8 @@
 //! not in the offline registry). Each property runs across a deterministic
 //! sweep of random cases; failures print the case seed.
 
-use adalomo::coordinator::fused_host::{FusedHostGrads, GroupGradSource};
+use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
+use adalomo::coordinator::fused_host::{self, FusedHostGrads, GroupGradSource};
 use adalomo::coordinator::pipeline::GradSource;
 use adalomo::coordinator::{pipeline, sharding};
 use adalomo::data::loader::DataLoader;
@@ -571,6 +572,168 @@ fn prop_fused_host_matches_monolith_and_lockstep_bitwise() {
                             ra.peak_live_grad_bytes <= ra.full_grad_bytes,
                             "{ctx}: {ra:?}"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_matches_legacy_bitwise() {
+    // Every legacy entry point — run_sequential, run_pipelined,
+    // run_pipelined_fused, run_fused_host — must be BITWISE identical to
+    // an explicitly-constructed ExecPlan driven through the unified
+    // Engine, and (fed the same step-keyed gradient values) the four
+    // cells must also agree with each other — swept over ranks × bucket
+    // sizes × both shard plans × AdaLomo/AdamW. This is the refactor's
+    // parity pin: one leader loop, four thin constructors.
+    for kind in [OptKind::AdaLomo, OptKind::AdamW] {
+        for seed in 0..2u64 {
+            let mut rng = Pcg32::seeded(13_000 + seed);
+            let d = 3 + rng.below(6);
+            let v = 4 + rng.below(8);
+            let f = 3 + rng.below(5);
+            let shapes: Vec<(&str, Vec<usize>)> = vec![
+                ("embed", vec![v, d]),
+                ("l0.attn_norm", vec![d]),
+                ("l0.wq", vec![d, d]),
+                ("l0.w_down", vec![f, d]),
+                ("l1.wq", vec![d, d]),
+                ("final_norm", vec![d]),
+                ("head", vec![d, v]),
+            ];
+            let specs: Vec<(&str, &[usize])> =
+                shapes.iter().map(|(n, s)| (*n, s.as_slice())).collect();
+            let layout = synthetic_layout(kind, &specs);
+            let mut blob0 = vec![0f32; layout.blob_len];
+            for x in blob0[..layout.params_len].iter_mut() {
+                *x = rng.normal() * 0.2;
+            }
+            let probe =
+                FlatOptimizer::new(kind, &layout, 1, ShardMode::Segments)
+                    .unwrap();
+            let extents = probe.group_extents();
+            let grouped = |n_ranks: usize| {
+                FusedHostGrads::per_rank_extents(
+                    extents.clone(),
+                    n_ranks,
+                    900 + seed,
+                    0.05,
+                )
+            };
+            let full = |n_ranks: usize| -> Vec<Box<dyn GradSource>> {
+                (0..n_ranks)
+                    .map(|r| {
+                        Box::new(FusedHostGrads::new(
+                            extents.clone(),
+                            900 + seed,
+                            r,
+                            0.05,
+                        )) as Box<dyn GradSource>
+                    })
+                    .collect()
+            };
+            for n_ranks in [1usize, 2, 3] {
+                let buckets =
+                    [1 + rng.below(layout.params_len), layout.params_len + 5];
+                for bucket_elems in buckets {
+                    for (mode, n_shards) in [
+                        (ShardMode::Segments, 2usize),
+                        (ShardMode::Contiguous, 3),
+                    ] {
+                        let mut cfg =
+                            pipeline::PipelineConfig::new(3, bucket_elems);
+                        cfg.n_shards = n_shards;
+                        let ctx = format!(
+                            "{kind:?} {mode:?} ranks={n_ranks} \
+                             bucket={bucket_elems} shards={n_shards} \
+                             seed={seed}"
+                        );
+                        // Wrapper results for the four legacy paths.
+                        let (w_seq, _) = pipeline::run_sequential(
+                            &layout,
+                            kind,
+                            mode,
+                            &blob0,
+                            full(n_ranks),
+                            &cfg,
+                        )
+                        .unwrap();
+                        let (w_pipe, _) = pipeline::run_pipelined(
+                            &layout,
+                            kind,
+                            mode,
+                            &blob0,
+                            full(n_ranks),
+                            &cfg,
+                        )
+                        .unwrap();
+                        let (w_fpipe, _) = pipeline::run_pipelined_fused(
+                            &layout,
+                            kind,
+                            mode,
+                            &blob0,
+                            grouped(n_ranks),
+                            &cfg,
+                        )
+                        .unwrap();
+                        let (w_mirror, _) = fused_host::run_fused_host(
+                            &layout,
+                            kind,
+                            mode,
+                            &blob0,
+                            grouped(n_ranks),
+                            &cfg,
+                        )
+                        .unwrap();
+                        // The same four cells, constructed as explicit
+                        // ExecPlans on the Engine.
+                        let run_plan = |plan: ExecPlan,
+                                        sources: RankSources|
+                         -> Vec<f32> {
+                            let mut eng =
+                                Engine::new(&layout, &blob0, plan).unwrap();
+                            eng.run(sources).unwrap();
+                            eng.into_blob()
+                        };
+                        let e_seq = run_plan(
+                            ExecPlan::sequential(kind, mode, n_ranks, &cfg),
+                            RankSources::Full(full(n_ranks)),
+                        );
+                        let e_pipe = run_plan(
+                            ExecPlan::pipelined(kind, mode, n_ranks, &cfg),
+                            RankSources::Full(full(n_ranks)),
+                        );
+                        let e_fpipe = run_plan(
+                            ExecPlan::pipelined_fused(
+                                kind, mode, n_ranks, &cfg,
+                            ),
+                            RankSources::Grouped(grouped(n_ranks)),
+                        );
+                        let e_mirror = run_plan(
+                            ExecPlan::fused_host(kind, mode, n_ranks, &cfg),
+                            RankSources::Grouped(grouped(n_ranks)),
+                        );
+                        let pairs: [(&str, &[f32], &[f32]); 7] = [
+                            ("seq vs engine", w_seq.as_slice(), e_seq.as_slice()),
+                            ("pipe vs engine", w_pipe.as_slice(), e_pipe.as_slice()),
+                            ("fpipe vs engine", w_fpipe.as_slice(), e_fpipe.as_slice()),
+                            ("mirror vs engine", w_mirror.as_slice(), e_mirror.as_slice()),
+                            ("pipe vs seq", w_pipe.as_slice(), w_seq.as_slice()),
+                            ("fpipe vs seq", w_fpipe.as_slice(), w_seq.as_slice()),
+                            ("mirror vs seq", w_mirror.as_slice(), w_seq.as_slice()),
+                        ];
+                        for (label, a, b) in pairs {
+                            for (i, (x, y)) in
+                                a.iter().zip(b.iter()).enumerate()
+                            {
+                                assert!(
+                                    x.to_bits() == y.to_bits(),
+                                    "{ctx} [{label}] elem {i}: {x} vs {y}"
+                                );
+                            }
+                        }
                     }
                 }
             }
