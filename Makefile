@@ -69,7 +69,10 @@ bench-bless: bench-json
 # uninterrupted and once suspended at its midpoint + resumed from the
 # checkpoint file, then assert the two final checkpoints are
 # byte-identical. One `cmp` validates the blob bits AND the versioned
-# header (step counter + plan position) in one shot.
+# header (step counter + plan position) in one shot. Runs BOTH storage
+# dtypes: the bf16 leg additionally asserts (checkpoint-inspect --dtype)
+# that the resumed file really stores bf16, and that it undercuts the f32
+# twin's size (the tentpole's 2x claim, smoke-tested end to end).
 CKPT_SMOKE_DIR := $(CURDIR)/target/ckpt-smoke
 ckpt-smoke:
 	rm -rf $(CKPT_SMOKE_DIR) && mkdir -p $(CKPT_SMOKE_DIR)
@@ -83,9 +86,24 @@ ckpt-smoke:
 		--resume $(CKPT_SMOKE_DIR)/mid.bin \
 		--out $(CKPT_SMOKE_DIR)/resumed.bin
 	$(CARGO) run --release --quiet -- checkpoint-inspect \
-		--ckpt $(CKPT_SMOKE_DIR)/resumed.bin
+		--ckpt $(CKPT_SMOKE_DIR)/resumed.bin --dtype f32
 	cmp $(CKPT_SMOKE_DIR)/full.bin $(CKPT_SMOKE_DIR)/resumed.bin
-	@echo "ckpt-smoke OK: suspend/resume reproduced the uninterrupted run byte-for-byte"
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 --dtype bf16 \
+		--out $(CKPT_SMOKE_DIR)/full16.bin
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 --dtype bf16 --suspend-at 3 \
+		--out $(CKPT_SMOKE_DIR)/mid16.bin
+	$(CARGO) run --release --quiet -- train \
+		--resume $(CKPT_SMOKE_DIR)/mid16.bin \
+		--out $(CKPT_SMOKE_DIR)/resumed16.bin
+	$(CARGO) run --release --quiet -- checkpoint-inspect \
+		--ckpt $(CKPT_SMOKE_DIR)/resumed16.bin --dtype bf16
+	cmp $(CKPT_SMOKE_DIR)/full16.bin $(CKPT_SMOKE_DIR)/resumed16.bin
+	@test $$(wc -c < $(CKPT_SMOKE_DIR)/full16.bin) -lt \
+		$$(( $$(wc -c < $(CKPT_SMOKE_DIR)/full.bin) * 55 / 100 )) \
+		|| { echo "bf16 checkpoint not under 55% of f32"; exit 1; }
+	@echo "ckpt-smoke OK: suspend/resume reproduced both dtypes byte-for-byte; bf16 file under 55% of f32"
 
 fmt:
 	$(CARGO) fmt --all -- --check

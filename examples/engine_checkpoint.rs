@@ -119,19 +119,21 @@ fn main() -> anyhow::Result<()> {
     let mut full = Engine::new(&layout, &blob0, plan)?;
     let sources = sources_for(&full);
     full.run(sources)?;
-    let identical = resumed
-        .blob()
+    // `Engine::blob()` widens a fresh snapshot per call — take each once.
+    let resumed_blob = resumed.blob();
+    let full_blob = full.blob();
+    let identical = resumed_blob
         .iter()
-        .zip(full.blob())
+        .zip(&full_blob)
         .all(|(a, b)| a.to_bits() == b.to_bits());
     let mut val = DataLoader::lm(Domain::C4, 999, 2, 32, 8_000);
     let lr_ = pipeline::host_eval_loss(
-        &resumed.blob()[..layout.params_len],
+        &resumed_blob[..layout.params_len],
         &mut val,
         4,
     );
     let lf = pipeline::host_eval_loss(
-        &full.blob()[..layout.params_len],
+        &full_blob[..layout.params_len],
         &mut val,
         4,
     );

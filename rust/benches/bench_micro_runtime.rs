@@ -2,13 +2,14 @@
 //! uploads, metrics reads — the L3 hot-path components the perf pass
 //! optimizes (EXPERIMENTS.md §Perf).
 
-use adalomo::coordinator::engine::{Engine, ExecPlan};
+use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::pipeline;
 use adalomo::data::{loader::DataLoader, Domain};
 use adalomo::experiments as exp;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, FlatOptimizer, ShardMode};
 use adalomo::optim::{pool, OptKind};
 use adalomo::runtime::{checkpoint, Manifest};
+use adalomo::tensor::Dtype;
 use adalomo::util::bench::{banner, bench, bench_units, JsonSink};
 
 /// Host-side blob operations on the flat engine: the coordinator-path
@@ -80,6 +81,7 @@ fn host_blob_section(sink: &mut JsonSink) {
         2,
         Default::default(),
         step_secs_per_elem,
+        Dtype::F32,
     );
     cfg.n_shards = pool::shards_with_reserved(2).min(4);
     println!(
@@ -142,6 +144,59 @@ fn host_blob_section(sink: &mut JsonSink) {
     );
     sink.metric("checkpoint_file_bytes", ckpt_bytes as f64);
     std::fs::remove_file(&ckpt_path).ok();
+
+    // --- dtype-aware storage: bf16 blob/comm/checkpoint reductions ----
+    // A FIXED bucket size keeps every byte metric an exact integer the
+    // baseline pins two-sided (the adaptive sizing above is timing-
+    // dependent and would make wire bytes drift run to run).
+    let fixed_bucket = layout.params_len.div_ceil(8);
+    let mut blob_bytes = [0usize; 2];
+    let mut comm_bytes = [0usize; 2];
+    for (i, dtype) in [Dtype::F32, Dtype::Bf16].into_iter().enumerate() {
+        let mut dcfg = pipeline::PipelineConfig::new(2, fixed_bucket);
+        dcfg.n_shards = pool::shards_with_reserved(2).min(4);
+        dcfg.dtype = dtype;
+        let plan =
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Contiguous, 2, &dcfg);
+        let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+        let r = eng
+            .run(RankSources::Full(pipeline::synthetic_sources(2, 3, 0.02)))
+            .unwrap();
+        blob_bytes[i] = r.blob_bytes;
+        comm_bytes[i] = r.comm_bytes_per_step;
+        let suffix = dtype.name();
+        sink.metric(&format!("blob_bytes_{suffix}"), r.blob_bytes as f64);
+        sink.metric(
+            &format!("peak_comm_bytes_{suffix}"),
+            r.peak_comm_bytes as f64,
+        );
+        println!(
+            "{suffix} storage: blob {} bytes, exchange {} bytes/step \
+             (peak tile {})",
+            r.blob_bytes, r.comm_bytes_per_step, r.peak_comm_bytes
+        );
+        if dtype == Dtype::Bf16 {
+            let p16 = std::env::temp_dir().join(format!(
+                "adalomo_bench_ckpt_bf16_{}.bin",
+                std::process::id()
+            ));
+            eng.save(&p16).unwrap();
+            let b16 = std::fs::metadata(&p16)
+                .expect("bf16 checkpoint written")
+                .len();
+            println!(
+                "bf16 checkpoint file: {} bytes (f32 twin above: {})",
+                b16, ckpt_bytes
+            );
+            sink.metric("checkpoint_file_bytes_bf16", b16 as f64);
+            std::fs::remove_file(&p16).ok();
+        }
+    }
+    println!(
+        "bf16 vs f32: blob {:.1}%, exchange {:.1}% of the f32 bytes",
+        100.0 * blob_bytes[1] as f64 / blob_bytes[0] as f64,
+        100.0 * comm_bytes[1] as f64 / comm_bytes[0] as f64
+    );
     println!();
 }
 

@@ -7,12 +7,29 @@
 //! and by the worker pool to model what real NCCL collectives would cost
 //! alongside the measured local step times.
 
+use crate::tensor::Dtype;
+
 #[derive(Debug, Clone, Copy)]
 pub struct Fabric {
     /// Per-hop latency, seconds.
     pub alpha: f64,
     /// Per-link bandwidth, bytes/second.
     pub bw: f64,
+}
+
+/// Wire bytes of one element at `dtype` — THE single definition every
+/// fabric-cost caller derives payload sizes from (the engine's per-tile
+/// costs, [`crate::coordinator::pipeline::adaptive_bucket_elems`]'s
+/// bandwidth term). Hard-coding 4-byte elements anywhere else is a bug:
+/// bf16 exchanges ship half the bytes, and bucket sizing must see that.
+pub fn elem_bytes(dtype: Dtype) -> f64 {
+    dtype.bytes() as f64
+}
+
+/// Wire bytes of an `elems`-element payload at `dtype` (the form the
+/// engine feeds [`allreduce_bucket_time`]).
+pub fn wire_bytes(elems: usize, dtype: Dtype) -> f64 {
+    elems as f64 * elem_bytes(dtype)
 }
 
 impl Default for Fabric {
@@ -146,6 +163,28 @@ mod tests {
         assert!(bucketed_allreduce_times(1e6, 1e5, 1, f)
             .iter()
             .all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn wire_bytes_tracks_the_dtype() {
+        assert_eq!(elem_bytes(Dtype::F32), 4.0);
+        assert_eq!(elem_bytes(Dtype::Bf16), 2.0);
+        assert_eq!(wire_bytes(100, Dtype::F32), 400.0);
+        assert_eq!(wire_bytes(100, Dtype::Bf16), 200.0);
+        // A bf16 bucket of the same element count costs what an f32
+        // bucket of half the elements costs: the bandwidth term is pure
+        // bytes, the latency term is payload-independent.
+        let f = Fabric::default();
+        for n_ranks in [2usize, 4, 8] {
+            let b16 =
+                allreduce_bucket_time(wire_bytes(4096, Dtype::Bf16), n_ranks, f);
+            let f32_half =
+                allreduce_bucket_time(wire_bytes(2048, Dtype::F32), n_ranks, f);
+            assert_eq!(b16, f32_half);
+            let f32_full =
+                allreduce_bucket_time(wire_bytes(4096, Dtype::F32), n_ranks, f);
+            assert!(b16 < f32_full);
+        }
     }
 
     #[test]

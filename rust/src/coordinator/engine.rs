@@ -54,9 +54,10 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::optim::flat::{FlatOptimizer, ShardMode};
 use crate::optim::{pool, OptKind};
 use crate::runtime::checkpoint::{self, PlanRecord};
-use crate::runtime::Layout;
+use crate::runtime::{Layout, TypedBlob};
+use crate::tensor::Dtype;
 
-use super::collective::{allreduce_bucket_time, Fabric};
+use super::collective::{allreduce_bucket_time, wire_bytes, Fabric};
 use super::fused_host::GroupGradSource;
 use super::pipeline::{BucketPlan, GradSource, PipelineConfig};
 
@@ -114,6 +115,12 @@ pub struct ExecPlan {
     pub wd: f32,
     pub n_shards: usize,
     pub fabric: Fabric,
+    /// Storage dtype of the params+state blob AND the modeled exchange
+    /// payloads: [`Dtype::Bf16`] halves blob bytes, checkpoint bytes and
+    /// the fabric's per-tile wire bytes. Compute stays f32 (the optimizer
+    /// widens per task through bounded scratch), and every `ExecPlan`
+    /// cell remains bitwise-identical at a FIXED dtype.
+    pub dtype: Dtype,
     /// Seed for deterministic host-mirror gradient sources. The engine
     /// itself never reads it — it rides along (and through checkpoints)
     /// so a resumed CLI run can reconstruct identical rank streams.
@@ -143,6 +150,7 @@ impl ExecPlan {
             wd: cfg.wd,
             n_shards: cfg.n_shards,
             fabric: cfg.fabric,
+            dtype: cfg.dtype,
             seed: 0,
         }
     }
@@ -260,13 +268,14 @@ impl ExecPlan {
         };
         format!(
             "{prod} production, {ord} exchange, {gran} steps; {} x {} \
-             ({:?}, {} shards), {} steps, bucket {} elems",
+             ({:?}, {} shards), {} steps, bucket {} elems, {} storage",
             self.n_ranks,
             self.kind.name(),
             self.mode,
             self.n_shards,
             self.steps,
-            self.bucket_elems
+            self.bucket_elems,
+            self.dtype.name()
         )
     }
 
@@ -291,6 +300,7 @@ impl ExecPlan {
                 ShardMode::Segments => checkpoint::MODE_SEGMENTS,
                 ShardMode::Contiguous => checkpoint::MODE_CONTIGUOUS,
             },
+            dtype: checkpoint::dtype_code(self.dtype),
             opt: self.kind.name().to_string(),
             steps: self.steps as u64,
             bucket_elems: self.bucket_elems as u64,
@@ -342,6 +352,7 @@ impl ExecPlan {
             wd: r.wd,
             n_shards: r.n_shards as usize,
             fabric: Fabric { alpha: r.fabric_alpha, bw: r.fabric_bw },
+            dtype: checkpoint::dtype_from_code(r.dtype)?,
             seed: r.seed,
         };
         plan.validate()?;
@@ -408,6 +419,19 @@ pub struct EngineReport {
     /// [`StepGranularity::Groups`] (the measured liveness curve
     /// `memsim::liveness::simulate_grouped` predicts); empty otherwise.
     pub curve_bytes: Vec<usize>,
+    /// Storage dtype of the blob and the modeled exchange payloads.
+    pub dtype: Dtype,
+    /// Actual storage bytes of the params+state+metrics blob at
+    /// [`Self::dtype`] — bf16 halves the params+state share (the
+    /// `blob_bytes_*` bench metrics).
+    pub blob_bytes: usize,
+    /// Modeled wire bytes one training step ships over the fabric
+    /// (sum of all exchange tiles at the wire dtype; 0 for a single
+    /// rank, which exchanges nothing — matching the fabric time model).
+    pub comm_bytes_per_step: usize,
+    /// Largest single exchange tile on the wire, in bytes at the wire
+    /// dtype (the `peak_comm_bytes_*` bench metrics; 0 for one rank).
+    pub peak_comm_bytes: usize,
 }
 
 impl EngineReport {
@@ -426,7 +450,8 @@ pub struct Engine {
     layout_key: String,
     plan: ExecPlan,
     opt: FlatOptimizer,
-    blob: Vec<f32>,
+    /// The training blob in its STORAGE dtype (the plan's dtype axis).
+    blob: TypedBlob,
     done_steps: u64,
     suspend_at: Option<u64>,
     /// Set when a run aborted mid-step: the blob may hold a partially
@@ -436,6 +461,10 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine from an f32 image: the layout is retagged to the
+    /// plan's storage dtype and the image rounded into it (the one lossy
+    /// moment of a bf16 run — identical for every plan cell, which is
+    /// what keeps fixed-dtype parity bitwise).
     pub fn new(layout: &Layout, blob0: &[f32], plan: ExecPlan) -> Result<Engine> {
         plan.validate()?;
         ensure!(
@@ -444,13 +473,16 @@ impl Engine {
             blob0.len(),
             layout.blob_len
         );
-        let opt = FlatOptimizer::new(plan.kind, layout, plan.n_shards, plan.mode)?;
+        let layout = layout.with_storage_dtype(plan.dtype);
+        let opt =
+            FlatOptimizer::new(plan.kind, &layout, plan.n_shards, plan.mode)?;
+        let blob = TypedBlob::from_f32(&layout, blob0, plan.dtype)?;
         Ok(Engine {
-            layout: layout.clone(),
+            layout,
             layout_key: format!("engine/{}", plan.kind.name()),
             plan,
             opt,
-            blob: blob0.to_vec(),
+            blob,
             done_steps: 0,
             suspend_at: None,
             poisoned: false,
@@ -471,12 +503,20 @@ impl Engine {
         self.layout_key = key.to_string();
     }
 
-    pub fn blob(&self) -> &[f32] {
+    /// Widen-on-read snapshot of the full blob at compute precision
+    /// (exact: bf16 ⊂ f32). For storage-level access — dtype, actual
+    /// bytes, raw bits — use [`Engine::typed_blob`].
+    pub fn blob(&self) -> Vec<f32> {
+        self.blob.to_f32()
+    }
+
+    /// The blob in its storage dtype.
+    pub fn typed_blob(&self) -> &TypedBlob {
         &self.blob
     }
 
     pub fn into_blob(self) -> Vec<f32> {
-        self.blob
+        self.blob.into_f32()
     }
 
     /// Completed optimizer steps.
@@ -536,12 +576,18 @@ impl Engine {
             ck.step,
             plan.steps
         );
+        ensure!(
+            ck.layout.storage_dtype()? == plan.dtype,
+            "checkpoint layout stores {} but the plan says {}",
+            ck.layout.storage_dtype()?.name(),
+            plan.dtype.name()
+        );
         let opt =
             FlatOptimizer::new(plan.kind, &ck.layout, plan.n_shards, plan.mode)?;
-        // Version-1 checkpoints are step-boundary only (cursors zero);
-        // validate the recorded (group, task) cursor pair against the
-        // rebuilt optimizer's walk anyway, so a future mid-step writer
-        // cannot hand us an inconsistent position silently.
+        // Step-boundary checkpoints have zero cursors; validate the
+        // recorded (group, task) cursor pair against the rebuilt
+        // optimizer's walk anyway, so a future mid-step writer cannot
+        // hand us an inconsistent position silently.
         ensure!(
             opt.group_cursor_task(ck.plan.cursor_group as usize)
                 == ck.plan.cursor_task as usize,
@@ -593,11 +639,13 @@ impl Engine {
         )?;
         // Per-tile fabric cost (ragged tiles costed by their own bytes —
         // identical tiling to `collective::bucketed_allreduce_times`).
+        // Payload bytes follow the plan's wire dtype: bf16 exchanges ship
+        // half the bytes, which the overlap/efficiency numbers reflect.
         let tile_comm: Vec<f64> = tiles
             .iter()
             .map(|&(lo, hi)| {
                 allreduce_bucket_time(
-                    ((hi - lo) * 4) as f64,
+                    wire_bytes(hi - lo, plan.dtype),
                     plan.n_ranks,
                     plan.fabric,
                 )
@@ -684,6 +732,18 @@ impl Engine {
         } else {
             Vec::new()
         };
+        // Wire accounting at the plan's dtype (exact integers; the bench
+        // gate pins them two-sided). A single rank ships nothing — the
+        // byte metrics agree with the fabric model, which charges such a
+        // plan zero time.
+        let wire = if plan.n_ranks > 1 { plan.dtype.bytes() } else { 0 };
+        let comm_bytes_per_step: usize =
+            tiles.iter().map(|&(lo, hi)| (hi - lo) * wire).sum();
+        let peak_comm_bytes = tiles
+            .iter()
+            .map(|&(lo, hi)| (hi - lo) * wire)
+            .max()
+            .unwrap_or(0);
         Ok(EngineReport {
             n_ranks: plan.n_ranks,
             steps: (stop - start) as usize,
@@ -697,6 +757,10 @@ impl Engine {
             peak_live_grad_bytes: 4 * peak_elems,
             full_grad_bytes: 4 * params_len,
             curve_bytes,
+            dtype: plan.dtype,
+            blob_bytes: self.blob.storage_bytes(),
+            comm_bytes_per_step,
+            peak_comm_bytes,
         })
     }
 }
@@ -927,7 +991,7 @@ fn spawn_grouped_producers(
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
     opt: &mut FlatOptimizer,
-    blob: &mut [f32],
+    blob: &mut TypedBlob,
     plan: &ExecPlan,
     tiles: &[(usize, usize)],
     visit: &[usize],
@@ -972,7 +1036,7 @@ fn leader_loop(
             let dt = match plan.granularity {
                 StepGranularity::Tasks if !ready[b].is_empty() => {
                     let t0 = Instant::now();
-                    opt.step_tasks(
+                    opt.step_tasks_typed(
                         blob, &grad, t, plan.lr, plan.wd, &ready[b],
                     )?;
                     t0.elapsed().as_secs_f64()
@@ -981,7 +1045,7 @@ fn leader_loop(
                 StepGranularity::Groups => {
                     let g = tiles.len() - 1 - b;
                     let t0 = Instant::now();
-                    opt.step_group(
+                    opt.step_group_typed(
                         blob,
                         g,
                         &grad[lo..hi],
@@ -993,7 +1057,7 @@ fn leader_loop(
                 }
                 StepGranularity::WholeImage if Some(b) == last_visit => {
                     let t0 = Instant::now();
-                    opt.step(blob, &grad, t, plan.lr, plan.wd)?;
+                    opt.step_typed(blob, &grad, t, plan.lr, plan.wd)?;
                     t0.elapsed().as_secs_f64()
                 }
                 StepGranularity::WholeImage => 0.0,
@@ -1061,21 +1125,25 @@ mod tests {
             ),
             ExecPlan::fused_host(OptKind::AdaLomo, ShardMode::Segments, 1, &c),
         ] {
-            let mut plan = plan;
-            plan.seed = 99;
-            let back = ExecPlan::from_record(&plan.to_record()).unwrap();
-            assert_eq!(back.production, plan.production);
-            assert_eq!(back.order, plan.order);
-            assert_eq!(back.granularity, plan.granularity);
-            assert_eq!(back.kind, plan.kind);
-            assert_eq!(back.mode, plan.mode);
-            assert_eq!(back.n_ranks, plan.n_ranks);
-            assert_eq!(back.steps, plan.steps);
-            assert_eq!(back.bucket_elems, plan.bucket_elems);
-            assert_eq!(back.lr.to_bits(), plan.lr.to_bits());
-            assert_eq!(back.wd.to_bits(), plan.wd.to_bits());
-            assert_eq!(back.n_shards, plan.n_shards);
-            assert_eq!(back.seed, plan.seed);
+            for dtype in [Dtype::F32, Dtype::Bf16] {
+                let mut plan = plan.clone();
+                plan.seed = 99;
+                plan.dtype = dtype;
+                let back = ExecPlan::from_record(&plan.to_record()).unwrap();
+                assert_eq!(back.production, plan.production);
+                assert_eq!(back.order, plan.order);
+                assert_eq!(back.granularity, plan.granularity);
+                assert_eq!(back.kind, plan.kind);
+                assert_eq!(back.mode, plan.mode);
+                assert_eq!(back.n_ranks, plan.n_ranks);
+                assert_eq!(back.steps, plan.steps);
+                assert_eq!(back.bucket_elems, plan.bucket_elems);
+                assert_eq!(back.lr.to_bits(), plan.lr.to_bits());
+                assert_eq!(back.wd.to_bits(), plan.wd.to_bits());
+                assert_eq!(back.n_shards, plan.n_shards);
+                assert_eq!(back.dtype, dtype);
+                assert_eq!(back.seed, plan.seed);
+            }
         }
         // Unknown codes are rejected.
         let mut rec = ExecPlan::sequential(
@@ -1154,9 +1222,9 @@ mod tests {
         assert_eq!(r2.steps, 3);
         assert!(resumed.is_finished());
 
-        for (i, (a, b)) in
-            full.blob().iter().zip(resumed.blob().iter()).enumerate()
-        {
+        let blob_full = full.blob();
+        let blob_res = resumed.blob();
+        for (i, (a, b)) in blob_full.iter().zip(blob_res.iter()).enumerate() {
             assert!(
                 a.to_bits() == b.to_bits(),
                 "elem {i}: {a} vs {b}"

@@ -47,6 +47,7 @@ use anyhow::{ensure, Result};
 use crate::optim::flat::{FlatOptimizer, ShardMode};
 use crate::optim::OptKind;
 use crate::runtime::Layout;
+use crate::tensor::Dtype;
 use crate::util::rng::Pcg32;
 
 use super::engine::{
@@ -280,6 +281,13 @@ pub fn fused_host_step(
         peak_live_grad_bytes: peak,
         full_grad_bytes: 4 * engine.params_len(),
         curve_bytes: curve,
+        // The single-rank mirror primitive steps a raw f32 slice and
+        // touches no fabric; the dtype-aware numbers come from the
+        // engine-driven paths.
+        dtype: Dtype::F32,
+        blob_bytes: 4 * blob.len(),
+        comm_bytes_per_step: 0,
+        peak_comm_bytes: 0,
     })
 }
 

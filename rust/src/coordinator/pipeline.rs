@@ -51,9 +51,10 @@ use crate::data::{DataLoader, Domain};
 use crate::optim::flat::ShardMode;
 use crate::optim::OptKind;
 use crate::runtime::Layout;
+use crate::tensor::Dtype;
 use crate::util::rng::Pcg32;
 
-use super::collective::Fabric;
+use super::collective::{self, Fabric};
 use super::engine::{Engine, EngineReport, ExecPlan, RankSources};
 use super::fused_host::GroupGradSource;
 
@@ -292,6 +293,9 @@ pub struct PipelineConfig {
     /// reduction). Results are deterministic for a FIXED value.
     pub n_shards: usize,
     pub fabric: Fabric,
+    /// Storage dtype of the blob and the modeled exchange payloads
+    /// (see `ExecPlan::dtype`); [`Dtype::F32`] by default.
+    pub dtype: Dtype,
 }
 
 impl PipelineConfig {
@@ -303,19 +307,22 @@ impl PipelineConfig {
             wd: 0.0,
             n_shards: 2,
             fabric: Fabric::default(),
+            dtype: Dtype::F32,
         }
     }
 
     /// [`Self::new`] with `bucket_elems` chosen by
     /// [`adaptive_bucket_elems`] under the default
     /// [`ADAPTIVE_COMM_FRACTION`] budget, for a measured per-element
-    /// optimizer step cost on this machine.
+    /// optimizer step cost on this machine and the wire dtype the
+    /// exchange will actually ship.
     pub fn adaptive(
         steps: usize,
         params_len: usize,
         n_ranks: usize,
         fabric: Fabric,
         step_secs_per_elem: f64,
+        dtype: Dtype,
     ) -> PipelineConfig {
         let bucket = adaptive_bucket_elems(
             params_len,
@@ -323,9 +330,11 @@ impl PipelineConfig {
             fabric,
             step_secs_per_elem,
             ADAPTIVE_COMM_FRACTION,
+            dtype,
         );
         let mut cfg = PipelineConfig::new(steps, bucket);
         cfg.fabric = fabric;
+        cfg.dtype = dtype;
         cfg
     }
 }
@@ -416,19 +425,23 @@ pub const ADAPTIVE_COMM_FRACTION: f64 = 0.5;
 ///
 /// Every bucket re-pays the full `2(n-1)` hop latencies
 /// ([`super::collective::bucketed_allreduce_times`]), so below the
-/// returned size the latency tax alone breaks the bound:
-/// `comm(b) = 2(n-1)(alpha + 4b/(n*bw)) <= f * b * c` solves to
-/// `b >= 2(n-1)alpha / (f*c - 8(n-1)/(n*bw))`. If the denominator is not
-/// positive — the bandwidth term alone exceeds the compute budget — no
-/// bucket size can hide the exchange and the choice degenerates to one
-/// monolithic bucket (minimizing the latency tax). A single rank pays no
-/// fabric at all, with the same degenerate answer.
+/// returned size the latency tax alone breaks the bound: with `e`
+/// wire bytes per element ([`super::collective::elem_bytes`] — 4 for
+/// f32, 2 for bf16; an earlier version hard-coded `2e = 8.0`, silently
+/// oversizing bf16 buckets),
+/// `comm(b) = 2(n-1)(alpha + e*b/(n*bw)) <= f * b * c` solves to
+/// `b >= 2(n-1)alpha / (f*c - 2e(n-1)/(n*bw))`. If the denominator is
+/// not positive — the bandwidth term alone exceeds the compute budget —
+/// no bucket size can hide the exchange and the choice degenerates to
+/// one monolithic bucket (minimizing the latency tax). A single rank
+/// pays no fabric at all, with the same degenerate answer.
 pub fn adaptive_bucket_elems(
     params_len: usize,
     n_ranks: usize,
     fabric: Fabric,
     step_secs_per_elem: f64,
     comm_fraction: f64,
+    dtype: Dtype,
 ) -> usize {
     assert!(params_len > 0, "params_len must be positive");
     assert!(
@@ -439,8 +452,9 @@ pub fn adaptive_bucket_elems(
         return params_len;
     }
     let n = n_ranks as f64;
+    let e = collective::elem_bytes(dtype);
     let slack = comm_fraction * step_secs_per_elem
-        - 8.0 * (n - 1.0) / (n * fabric.bw);
+        - 2.0 * e * (n - 1.0) / (n * fabric.bw);
     if slack <= 0.0 {
         return params_len;
     }
@@ -558,6 +572,7 @@ mod tests {
 
     #[test]
     fn adaptive_bucket_bounds_fabric_latency() {
+        use crate::coordinator::collective::elem_bytes;
         let c = 2e-9; // 2 ns per element of optimizer step
         let frac = ADAPTIVE_COMM_FRACTION;
         let params_len = 50_000_000usize;
@@ -566,39 +581,64 @@ mod tests {
             Fabric { alpha: 50e-6, bw: 25e9 },
             Fabric { alpha: 1e-6, bw: 400e9 },
         ];
-        for fabric in fabrics {
-            for n_ranks in [2usize, 4, 8] {
-                let b = adaptive_bucket_elems(
-                    params_len, n_ranks, fabric, c, frac,
-                );
-                assert!((1..=params_len).contains(&b));
-                if b < params_len {
-                    // The promised bound holds at the chosen size...
-                    let comm =
-                        allreduce_bucket_time((4 * b) as f64, n_ranks, fabric);
-                    assert!(
-                        comm <= frac * c * b as f64 * (1.0 + 1e-9),
-                        "{fabric:?} x{n_ranks}: comm {comm} vs budget {}",
-                        frac * c * b as f64
+        // Both wire widths: the bound must hold against the REAL
+        // per-bucket cost at that dtype's bytes-per-element (the
+        // regression this test pins: the bandwidth term used to
+        // hard-code 8.0 = 2 x 4 bytes, oversizing bf16 buckets).
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let e = elem_bytes(dtype);
+            for fabric in fabrics {
+                for n_ranks in [2usize, 4, 8] {
+                    let b = adaptive_bucket_elems(
+                        params_len, n_ranks, fabric, c, frac, dtype,
                     );
-                    // ...and the latency tax breaks it one notch below
-                    // (minimality of the choice).
-                    if b > 1 {
-                        let half = b / 2;
-                        let comm_half = allreduce_bucket_time(
-                            (4 * half) as f64,
+                    assert!((1..=params_len).contains(&b));
+                    if b < params_len {
+                        // The promised bound holds at the chosen size...
+                        let comm = allreduce_bucket_time(
+                            e * b as f64,
                             n_ranks,
                             fabric,
                         );
                         assert!(
-                            comm_half > frac * c * half as f64,
-                            "{fabric:?} x{n_ranks}: half-size bucket \
-                             should violate the budget"
+                            comm <= frac * c * b as f64 * (1.0 + 1e-9),
+                            "{dtype:?} {fabric:?} x{n_ranks}: comm {comm} \
+                             vs budget {}",
+                            frac * c * b as f64
                         );
+                        // ...and the latency tax breaks it one notch
+                        // below (minimality of the choice).
+                        if b > 1 {
+                            let half = b / 2;
+                            let comm_half = allreduce_bucket_time(
+                                e * half as f64,
+                                n_ranks,
+                                fabric,
+                            );
+                            assert!(
+                                comm_half > frac * c * half as f64,
+                                "{dtype:?} {fabric:?} x{n_ranks}: \
+                                 half-size bucket should violate the budget"
+                            );
+                        }
                     }
                 }
             }
         }
+        // bf16 ships half the bytes per element, so its bandwidth tax is
+        // smaller and the adaptive choice can afford finer buckets.
+        let bw_bound = Fabric { alpha: 8e-6, bw: 9e9 };
+        let b32 =
+            adaptive_bucket_elems(params_len, 4, bw_bound, c, frac, Dtype::F32);
+        let b16 = adaptive_bucket_elems(
+            params_len,
+            4,
+            bw_bound,
+            c,
+            frac,
+            Dtype::Bf16,
+        );
+        assert!(b16 < b32, "bf16 bucket {b16} vs f32 {b32}");
         // Chattier fabrics need coarser buckets.
         let quiet = adaptive_bucket_elems(
             params_len,
@@ -606,6 +646,7 @@ mod tests {
             Fabric { alpha: 1e-6, bw: 170e9 },
             c,
             frac,
+            Dtype::F32,
         );
         let chatty = adaptive_bucket_elems(
             params_len,
@@ -613,17 +654,35 @@ mod tests {
             Fabric { alpha: 100e-6, bw: 170e9 },
             c,
             frac,
+            Dtype::F32,
         );
         assert!(chatty > quiet, "{chatty} vs {quiet}");
         // Degenerate cases: single rank, or bandwidth alone over budget.
         assert_eq!(
-            adaptive_bucket_elems(params_len, 1, Fabric::default(), c, frac),
+            adaptive_bucket_elems(
+                params_len,
+                1,
+                Fabric::default(),
+                c,
+                frac,
+                Dtype::F32
+            ),
             params_len
         );
         let starved = Fabric { alpha: 8e-6, bw: 1e6 };
         assert_eq!(
-            adaptive_bucket_elems(params_len, 4, starved, c, frac),
+            adaptive_bucket_elems(params_len, 4, starved, c, frac, Dtype::F32),
             params_len
+        );
+        // A fabric starved for f32 can still be bucketable at bf16.
+        let tight = Fabric { alpha: 8e-6, bw: 4.5e9 };
+        assert_eq!(
+            adaptive_bucket_elems(params_len, 4, tight, c, frac, Dtype::F32),
+            params_len
+        );
+        assert!(
+            adaptive_bucket_elems(params_len, 4, tight, c, frac, Dtype::Bf16)
+                < params_len
         );
     }
 

@@ -93,6 +93,7 @@ mod tests {
             shape: vec![size],
             offset,
             size,
+            dtype: crate::tensor::Dtype::F32,
         };
         Layout {
             blob_len: 108,

@@ -21,7 +21,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use adalomo::config::{paper_lr, Phase, RunConfig};
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
@@ -35,6 +35,7 @@ use adalomo::metrics::ascii_curve;
 use adalomo::optim::flat::{seeded_blob_and_grads, synthetic_layout, ShardMode};
 use adalomo::optim::OptKind;
 use adalomo::runtime::{checkpoint, HostBlob, Session};
+use adalomo::tensor::Dtype;
 use adalomo::util::cli::Args;
 use adalomo::util::table::{fnum, Table};
 
@@ -86,10 +87,13 @@ USAGE: adalomo <subcommand> [--flag value ...]
   fused       run real fused-backward group programs (nano/micro)
   workers     thread-per-rank data-parallel training demo
   train       unified engine: --plan sequential|pipelined|pipelined-fused|
-              fused-host on a synthetic preset; --suspend-at K stops after
+              fused-host on a synthetic preset; --dtype f32|bf16 selects
+              params+state storage (bf16 halves blob/checkpoint/comm
+              bytes; compute stays f32); --suspend-at K stops after
               step K (0 = run to completion), --out writes the checkpoint,
               --resume CKPT continues a saved run bitwise-identically
-  checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH)
+  checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH;
+              --dtype D asserts the stored dtype is D)
   hparams     the paper's hyper-parameter tables (3/6/7)
   bench-check gate measured bench metrics against bench/baseline.json
   info        artifacts + manifest summary
@@ -491,8 +495,19 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     if let Some(ckpt) = args.get("resume") {
         let ckpt = ckpt.to_string();
+        // Optional assertion only: the checkpoint itself fixes the
+        // storage dtype a resumed run continues at.
+        let want_dtype = args.get("dtype").map(Dtype::parse).transpose()?;
         args.finish()?;
         let mut eng = Engine::resume(Path::new(&ckpt))?;
+        if let Some(d) = want_dtype {
+            ensure!(
+                eng.plan().dtype == d,
+                "{ckpt} stores {} but --dtype asked for {}",
+                eng.plan().dtype.name(),
+                d.name()
+            );
+        }
         println!(
             "resumed {ckpt} at step {} of {}: {}",
             eng.step(),
@@ -512,6 +527,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "contiguous" => ShardMode::Contiguous,
         other => bail!("unknown shard mode {other:?} (segments|contiguous)"),
     };
+    let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
     let kind = OptKind::parse(&spec.opt)?;
     let arch = Arch::preset(&spec.preset).ok_or_else(|| {
         anyhow!(
@@ -532,6 +548,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (blob0, _) = seeded_blob_and_grads(&layout, spec.seed);
     let mut cfg = PipelineConfig::new(steps, bucket);
     cfg.n_shards = shards;
+    cfg.dtype = dtype;
     let mut plan = match plan_name.as_str() {
         "sequential" => ExecPlan::sequential(kind, mode, ranks, &cfg),
         "pipelined" => ExecPlan::pipelined(kind, mode, ranks, &cfg),
@@ -582,11 +599,21 @@ fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
         report.peak_live_grad_bytes,
         report.full_grad_bytes
     );
+    println!(
+        "{} storage: blob {} bytes; modeled exchange {} bytes/step \
+         (peak tile {} bytes)",
+        report.dtype.name(),
+        report.blob_bytes,
+        report.comm_bytes_per_step,
+        report.peak_comm_bytes
+    );
     // Fixed-validation-set score of the parameter region (the host
-    // stand-in eval the suspend/resume tests pin bitwise).
+    // stand-in eval the suspend/resume tests pin bitwise; bf16 params
+    // are widened exactly, so the loss is a function of the stored bits).
     let params_len = eng.layout().params_len;
     let mut val = DataLoader::lm(Domain::C4, 9_999, 2, 32, 8_000);
-    let loss = pipeline::host_eval_loss(&eng.blob()[..params_len], &mut val, 4);
+    let blob = eng.blob();
+    let loss = pipeline::host_eval_loss(&blob[..params_len], &mut val, 4);
     println!("fixed-val-set eval loss {loss:.6e}");
     eng.save(Path::new(out))?;
     println!(
@@ -600,18 +627,39 @@ fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
 
 fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
     let path = args.str_or("ckpt", "engine_ckpt.bin");
+    let want_dtype = args.get("dtype").map(Dtype::parse).transpose()?;
     args.finish()?;
     let ck = checkpoint::load(Path::new(&path))?;
     let plan = ExecPlan::from_record(&ck.plan)?;
     let bytes = std::fs::metadata(&path)?.len();
+    let dtype = ck.layout.storage_dtype()?;
+    if let Some(d) = want_dtype {
+        ensure!(
+            dtype == d,
+            "{path} stores {} but --dtype asked to verify {}",
+            dtype.name(),
+            d.name()
+        );
+    }
     println!("checkpoint {path}");
-    println!("  format v{} | {bytes} bytes on disk", checkpoint::VERSION);
     println!(
-        "  layout {} | {} floats ({} params, {} segments)",
+        "  format v{}..v{} reader | {bytes} bytes on disk",
+        checkpoint::V1,
+        checkpoint::VERSION
+    );
+    println!(
+        "  layout {} | {} elements ({} params, {} segments)",
         ck.layout_key,
         ck.layout.blob_len,
         ck.layout.params_len,
         ck.layout.segments.len()
+    );
+    println!(
+        "  storage {} | params+state+metrics {} bytes in memory \
+         (f32 would be {})",
+        dtype.name(),
+        ck.blob.storage_bytes(),
+        ck.layout.blob_len * 4
     );
     println!(
         "  step {} of {} ({})",

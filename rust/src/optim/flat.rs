@@ -32,12 +32,34 @@
 //! coordinator's local-SGD round averaging and the micro benches already
 //! run on it, and a rank pipeline can hand each worker an actual rank's
 //! shard without changing the update code.
+//!
+//! # Storage dtype
+//!
+//! The typed entry points ([`FlatOptimizer::step_typed`],
+//! [`FlatOptimizer::step_tasks_typed`], [`FlatOptimizer::step_group_typed`])
+//! accept a [`TypedBlob`]: f32 storage routes to the zero-copy in-place
+//! paths above; bf16 storage steps each task by widening its parameter
+//! and state slices into per-worker f32 scratch, running the SAME slice
+//! kernels, and rounding back (round-to-nearest-even). The scratch is
+//! bounded by the largest single task — never a full-image f32 mirror —
+//! and the peak is MEASURED ([`FlatOptimizer::bf16_peak_scratch_elems`])
+//! and pinned against the analytic bound
+//! ([`FlatOptimizer::bf16_scratch_bound_elems`]) by the dtype tests.
+//! Because each task's widen→kernel→round is self-contained and depends
+//! only on that task's stored bits and its gradient slice, any partition
+//! of the tasks (buckets, groups, whole image) lands bit-identically —
+//! the same property the f32 pipelines rest on, which is what keeps every
+//! `ExecPlan` cell bitwise-reproducible at fixed dtype. Under bf16 both
+//! shard plans use whole-task (Segments-style) ownership: the conversion
+//! pass dominates, and intra-task cooperation would change the arithmetic
+//! without buying bandwidth.
 
 use std::sync::{Barrier, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::runtime::{HostBlob, Layout, Segment};
+use crate::runtime::{BlobPartsMut, HostBlob, Layout, Segment, TypedBlob};
+use crate::tensor::{round_bf16_slice, widen_bf16_into, Dtype};
 
 use super::update::sum_sq;
 use super::{pool, update, Hyper, OptKind};
@@ -214,12 +236,28 @@ impl SyncState {
 }
 
 /// Zero-copy per-(worker, task) views into the blob, produced by
-/// [`distribute`]. `a`/`b` are the state views (m/v/r rows, v/c).
+/// [`distribute`]. `a`/`b` are the state views (m/v/r rows, v/c). The
+/// element type is `f32` for in-place stepping and `u16` (raw bf16 bits)
+/// for the widen/round path.
 #[derive(Default)]
-struct TaskPart<'b> {
-    theta: Option<&'b mut [f32]>,
-    a: Option<&'b mut [f32]>,
-    b: Option<&'b mut [f32]>,
+struct TaskPart<'b, T = f32> {
+    theta: Option<&'b mut [T]>,
+    a: Option<&'b mut [T]>,
+    b: Option<&'b mut [T]>,
+}
+
+/// Per-worker widen/round scratch for bf16-stored blobs: f32 staging for
+/// one task's parameter + state slices (plus the kernels' own `u`
+/// scratch), reused across tasks and steps. `peak_elems` records the
+/// largest combined staging any task ever needed — the measured
+/// "bounded scratch, no full-image mirror" claim.
+#[derive(Debug, Clone, Default)]
+struct Bf16Scratch {
+    theta: Vec<f32>,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    inner: Scratch,
+    peak_elems: usize,
 }
 
 const ROLE_THETA: u8 = 0;
@@ -243,6 +281,9 @@ pub struct FlatOptimizer {
     n_shards: usize,
     blob_len: usize,
     params_len: usize,
+    /// Length of the shardable (params + state) region — the prefix a
+    /// bf16 blob stores as raw bits.
+    shardable_len: usize,
     tasks: Vec<TaskSpec>,
     /// Fused-backward groups over `tasks` (head block, layers L-1..0,
     /// embedding; out-of-convention segments become singleton groups).
@@ -252,9 +293,15 @@ pub struct FlatOptimizer {
     /// Blob spans for the configured mode, precomputed and offset-sorted —
     /// `step` only re-splits the borrowed blob along them.
     spans: Vec<Span>,
+    /// Whole-task (Segments-style) spans for the bf16 widen/round path,
+    /// which always steps whole tasks regardless of `mode`.
+    bf16_spans: Vec<Span>,
     /// Reusable cross-worker reduction state (contiguous mode).
     sync: SyncState,
     scratch: Vec<Scratch>,
+    /// Per-worker widen/round staging for bf16 blobs (empty cost when
+    /// unused: the Vecs only grow on the first bf16 step).
+    bf16_scratch: Vec<Bf16Scratch>,
 }
 
 impl FlatOptimizer {
@@ -451,6 +498,24 @@ impl FlatOptimizer {
         spans.retain(|s| s.len > 0);
         spans.sort_by_key(|s| s.offset);
 
+        // The bf16 path needs every span inside the shardable prefix (the
+        // region stored as raw bits) and always walks whole tasks, so its
+        // spans are Segments-style whatever the configured mode.
+        let shardable_len = layout.shardable_len();
+        for task in &tasks {
+            let (a, b) = state_refs(&task.state);
+            for s in [a, b].into_iter().flatten() {
+                ensure!(
+                    s.offset + s.size <= shardable_len,
+                    "state of segment {} reaches into the metrics region",
+                    task.name
+                );
+            }
+        }
+        let mut bf16_spans = build_spans(ShardMode::Segments, &tasks, &owner);
+        bf16_spans.retain(|s| s.len > 0);
+        bf16_spans.sort_by_key(|s| s.offset);
+
         Ok(FlatOptimizer {
             kind,
             hyper,
@@ -458,12 +523,15 @@ impl FlatOptimizer {
             n_shards,
             blob_len: layout.blob_len,
             params_len: layout.params_len,
+            shardable_len,
             tasks,
             groups,
             shard_tasks,
             spans,
+            bf16_spans,
             sync: SyncState::new(n_shards),
             scratch: vec![Scratch::default(); n_shards],
+            bf16_scratch: vec![Bf16Scratch::default(); n_shards],
         })
     }
 
@@ -646,18 +714,9 @@ impl FlatOptimizer {
         subset: &[usize],
     ) -> Result<()> {
         self.validate(blob, grads)?;
-        ensure!(
-            subset.windows(2).all(|w| w[0] < w[1]),
-            "task subset must be strictly increasing"
-        );
-        let Some(&last) = subset.last() else {
+        if !self.validate_subset(subset)? {
             return Ok(()); // empty subset: nothing to do, spawn no workers
-        };
-        ensure!(
-            last < self.tasks.len(),
-            "task index {last} out of range ({} tasks)",
-            self.tasks.len()
-        );
+        }
         match self.mode {
             ShardMode::Segments => {
                 self.step_segments(blob, grads, 0, t, lr, wd, Some(subset))
@@ -685,6 +744,23 @@ impl FlatOptimizer {
         Ok(())
     }
 
+    /// Shared subset checks; `Ok(false)` means an empty (no-op) subset.
+    fn validate_subset(&self, subset: &[usize]) -> Result<bool> {
+        ensure!(
+            subset.windows(2).all(|w| w[0] < w[1]),
+            "task subset must be strictly increasing"
+        );
+        let Some(&last) = subset.last() else {
+            return Ok(false);
+        };
+        ensure!(
+            last < self.tasks.len(),
+            "task index {last} out of range ({} tasks)",
+            self.tasks.len()
+        );
+        Ok(true)
+    }
+
     /// Convenience wrapper for [`HostBlob`]s.
     pub fn step_blob(
         &mut self,
@@ -695,6 +771,213 @@ impl FlatOptimizer {
         wd: f32,
     ) -> Result<()> {
         self.step(&mut blob.data, grads, t, lr, wd)
+    }
+
+    // --- dtype-aware entry points -------------------------------------
+
+    /// [`Self::step`] on a [`TypedBlob`]: f32 storage steps in place
+    /// through the zero-copy paths; bf16 storage widens per task into
+    /// bounded scratch, runs the identical slice kernels, and rounds the
+    /// results back (see the module docs' dtype section).
+    pub fn step_typed(
+        &mut self,
+        blob: &mut TypedBlob,
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        match blob.parts_mut() {
+            BlobPartsMut::F32(data) => self.step(data, grads, t, lr, wd),
+            BlobPartsMut::Bf16 { bits, tail } => {
+                self.validate_bits(bits, tail.len(), grads)?;
+                self.step_bf16(bits, grads, 0, t, lr, wd, None);
+                Ok(())
+            }
+        }
+    }
+
+    /// [`Self::step_tasks`] on a [`TypedBlob`]. Per-task widen→kernel→
+    /// round is self-contained, so any bucket partition of the tasks is
+    /// bit-identical to one whole-image [`Self::step_typed`] — the same
+    /// contract the async pipeline relies on at f32.
+    pub fn step_tasks_typed(
+        &mut self,
+        blob: &mut TypedBlob,
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+        subset: &[usize],
+    ) -> Result<()> {
+        match blob.parts_mut() {
+            BlobPartsMut::F32(data) => {
+                self.step_tasks(data, grads, t, lr, wd, subset)
+            }
+            BlobPartsMut::Bf16 { bits, tail } => {
+                self.validate_bits(bits, tail.len(), grads)?;
+                if self.validate_subset(subset)? {
+                    self.step_bf16(bits, grads, 0, t, lr, wd, Some(subset));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// [`Self::step_group`] on a [`TypedBlob`] (gradient slice covering
+    /// exactly the group's extent).
+    pub fn step_group_typed(
+        &mut self,
+        blob: &mut TypedBlob,
+        g: usize,
+        grads: &[f32],
+        t: u64,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        match blob.parts_mut() {
+            BlobPartsMut::F32(data) => {
+                self.step_group(data, g, grads, t, lr, wd)
+            }
+            BlobPartsMut::Bf16 { bits, tail } => {
+                ensure!(
+                    g < self.groups.len(),
+                    "group {g} out of range ({} groups)",
+                    self.groups.len()
+                );
+                let spec = self.groups[g];
+                self.check_bits_len(bits, tail.len())?;
+                ensure!(
+                    grads.len() == spec.hi - spec.lo,
+                    "group {g} grads len {} != extent {}",
+                    grads.len(),
+                    spec.hi - spec.lo
+                );
+                let subset: Vec<usize> =
+                    (spec.tasks.0..spec.tasks.1).collect();
+                self.step_bf16(
+                    bits,
+                    grads,
+                    spec.lo,
+                    t,
+                    lr,
+                    wd,
+                    Some(subset.as_slice()),
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// The one spelling of the bf16 storage-shape check (`tail_len` is
+    /// the f32 metrics tail the storage carries alongside the bits).
+    fn check_bits_len(&self, bits: &[u16], tail_len: usize) -> Result<()> {
+        ensure!(
+            bits.len() == self.shardable_len
+                && bits.len() + tail_len == self.blob_len,
+            "bf16 blob ({} + {} elems) does not match the layout \
+             (shardable {}, total {})",
+            bits.len(),
+            tail_len,
+            self.shardable_len,
+            self.blob_len
+        );
+        Ok(())
+    }
+
+    fn validate_bits(&self, bits: &[u16], tail_len: usize, grads: &[f32]) -> Result<()> {
+        self.check_bits_len(bits, tail_len)?;
+        ensure!(
+            grads.len() >= self.params_len,
+            "grads len {} < params_len {}",
+            grads.len(),
+            self.params_len
+        );
+        Ok(())
+    }
+
+    /// The bf16 walk: whole-task (Segments-style) LPT ownership whatever
+    /// the configured mode; each worker widens its task's slices into its
+    /// own scratch, steps, and rounds back.
+    #[allow(clippy::too_many_arguments)]
+    fn step_bf16(
+        &mut self,
+        bits: &mut [u16],
+        grads: &[f32],
+        grad_base: usize,
+        t: u64,
+        lr: f32,
+        wd: f32,
+        subset: Option<&[usize]>,
+    ) {
+        let parts = distribute(
+            bits,
+            &self.bf16_spans,
+            self.n_shards,
+            self.tasks.len(),
+        );
+        let kind = self.kind;
+        let h = self.hyper;
+        let tasks = &self.tasks;
+        let shard_tasks = &self.shard_tasks;
+        let mask = task_mask(self.tasks.len(), subset);
+        let mask = &mask;
+        let mut jobs = Vec::with_capacity(self.n_shards);
+        for ((w, mut my_parts), scratch) in parts
+            .into_iter()
+            .enumerate()
+            .zip(self.bf16_scratch.iter_mut())
+        {
+            let my = &shard_tasks[w];
+            jobs.push(move || {
+                for &ti in my {
+                    if !mask[ti] {
+                        continue;
+                    }
+                    let part = std::mem::take(&mut my_parts[ti]);
+                    run_task_bf16(
+                        &tasks[ti], part, grads, grad_base, kind, h, t, lr,
+                        wd, scratch,
+                    );
+                }
+            });
+        }
+        pool::run_jobs(jobs);
+    }
+
+    /// Measured peak widen/round scratch (f32 elements) any worker ever
+    /// staged for one bf16 task — parameter + state slices plus the
+    /// kernels' `u` buffer. Grows monotonically across steps.
+    ///
+    /// Precisely: this is the largest SINGLE-TASK staging. The per-slot
+    /// buffers (`theta`/`a`/`b`/`u`) are reused across tasks, so a
+    /// worker's resident scratch is the per-slot high-water marks — each
+    /// individually bounded by this peak, and in model-shaped layouts
+    /// all dominated by the same largest task, so resident ≈ peak. What
+    /// can never happen is a full-image f32 mirror: every buffer is
+    /// task-sized.
+    pub fn bf16_peak_scratch_elems(&self) -> usize {
+        self.bf16_scratch.iter().map(|s| s.peak_elems).max().unwrap_or(0)
+    }
+
+    /// Analytic bound the measured peak is pinned against: the largest
+    /// single task's `theta + state (+ u)` footprint. Always far below a
+    /// full-image f32 mirror (`shardable_len` elements) for model-shaped
+    /// layouts — the "bounded scratch" half of the bf16 memory claim.
+    pub fn bf16_scratch_bound_elems(&self) -> usize {
+        self.tasks
+            .iter()
+            .map(|task| {
+                let (a, b) = state_refs(&task.state);
+                let state = a.map_or(0, |s| s.size) + b.map_or(0, |s| s.size);
+                let u = match self.kind {
+                    OptKind::AdaLomo | OptKind::Adafactor => task.size,
+                    _ => 0,
+                };
+                task.size + state + u
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// `grad_base` is the blob offset `grads[0]` corresponds to: 0 for the
@@ -954,17 +1237,18 @@ fn group_key(name: &str, n_layers: usize, fallback: usize) -> (usize, usize) {
 
 /// Split `blob` into disjoint mutable views at the given spans (already
 /// offset-sorted, zero-length-free) and hand each to its (worker, task,
-/// role) slot.
-fn distribute<'b>(
-    blob: &'b mut [f32],
+/// role) slot. Generic over the element type: `f32` blobs for the
+/// in-place paths, raw bf16 bits (`u16`) for the widen/round path.
+fn distribute<'b, T: Default>(
+    blob: &'b mut [T],
     spans: &[Span],
     n_workers: usize,
     n_tasks: usize,
-) -> Vec<Vec<TaskPart<'b>>> {
-    let mut parts: Vec<Vec<TaskPart<'b>>> = (0..n_workers)
+) -> Vec<Vec<TaskPart<'b, T>>> {
+    let mut parts: Vec<Vec<TaskPart<'b, T>>> = (0..n_workers)
         .map(|_| (0..n_tasks).map(|_| TaskPart::default()).collect())
         .collect();
-    let mut rest: &'b mut [f32] = blob;
+    let mut rest: &'b mut [T] = blob;
     let mut cursor = 0usize;
     for s in spans {
         assert!(s.offset >= cursor, "overlapping blob spans");
@@ -1053,6 +1337,75 @@ fn run_task_sequential(
                 update::adafactor_vec_slice(theta, g, a.unwrap(), t, lr, h, u);
             }
         }
+    }
+}
+
+/// bf16-mode task runner: widen the task's stored bits into the worker's
+/// f32 scratch, run the ordinary whole-task slice kernels on the staged
+/// copies (identical arithmetic to the Segments-mode f32 path), then
+/// round every slice back to bf16 (round-to-nearest-even). The staging is
+/// the only conversion cost; its size — theta + state (+ the factored
+/// kernels' `u`) for THIS task alone — is tracked as the measured scratch
+/// peak.
+#[allow(clippy::too_many_arguments)]
+fn run_task_bf16(
+    spec: &TaskSpec,
+    part: TaskPart<'_, u16>,
+    grads: &[f32],
+    grad_base: usize,
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    scratch: &mut Bf16Scratch,
+) {
+    let theta_bits = part.theta.expect("theta bits assigned to owner");
+    let mut a_bits = part.a;
+    let mut b_bits = part.b;
+    let Bf16Scratch { theta, a, b, inner, peak_elems } = scratch;
+
+    let an = a_bits.as_deref().map_or(0, |s| s.len());
+    let bn = b_bits.as_deref().map_or(0, |s| s.len());
+    let u_elems = match kind {
+        OptKind::AdaLomo | OptKind::Adafactor => spec.size,
+        _ => 0,
+    };
+    *peak_elems = (*peak_elems).max(spec.size + an + bn + u_elems);
+
+    // Widen-on-read into the reusable staging buffers.
+    widen_bf16_into(theta_bits, theta);
+    let mut fa: Option<&mut [f32]> = None;
+    if let Some(src) = a_bits.as_deref() {
+        widen_bf16_into(src, a);
+        fa = Some(&mut a[..]);
+    }
+    let mut fb: Option<&mut [f32]> = None;
+    if let Some(src) = b_bits.as_deref() {
+        widen_bf16_into(src, b);
+        fb = Some(&mut b[..]);
+    }
+
+    run_task_sequential(
+        spec,
+        TaskPart { theta: Some(&mut theta[..]), a: fa, b: fb },
+        grads,
+        grad_base,
+        kind,
+        h,
+        t,
+        lr,
+        wd,
+        inner,
+    );
+
+    // Round-to-nearest-even on write-back.
+    round_bf16_slice(theta, theta_bits);
+    if let Some(dst) = a_bits.as_deref_mut() {
+        round_bf16_slice(&a[..dst.len()], dst);
+    }
+    if let Some(dst) = b_bits.as_deref_mut() {
+        round_bf16_slice(&b[..dst.len()], dst);
     }
 }
 
@@ -1164,7 +1517,7 @@ fn contiguous_task(
                     update::adalomo_vec_raw(g, a, bias, h, u);
                 } else {
                     let beta2t =
-                        1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+                        update::adafactor_beta2t(h.adafactor_decay_pow, t);
                     update::adafactor_vec_raw(g, a, beta2t, h, u);
                 }
             }
@@ -1190,7 +1543,7 @@ fn contiguous_task(
                 (h.adalomo_beta, 0.0)
             } else {
                 (
-                    1.0 - (t as f32).powf(-h.adafactor_decay_pow),
+                    update::adafactor_beta2t(h.adafactor_decay_pow, t),
                     h.adafactor_eps1,
                 )
             };
@@ -1299,6 +1652,7 @@ pub fn synthetic_layout(kind: OptKind, params: &[(&str, &[usize])]) -> Layout {
             shape: shape.to_vec(),
             offset: off,
             size,
+            dtype: Dtype::F32,
         });
         off += size;
     }
@@ -1327,6 +1681,7 @@ pub fn synthetic_layout(kind: OptKind, params: &[(&str, &[usize])]) -> Layout {
                 shape: sshape,
                 offset: off,
                 size: ssize,
+                dtype: Dtype::F32,
             });
             off += ssize;
         }
@@ -1337,6 +1692,7 @@ pub fn synthetic_layout(kind: OptKind, params: &[(&str, &[usize])]) -> Layout {
         shape: vec![8],
         offset: off,
         size: 8,
+        dtype: Dtype::F32,
     });
     Layout { blob_len: off + 8, params_len, segments }
 }
@@ -1596,6 +1952,122 @@ mod tests {
         for &(off, size) in &extents {
             assert!(off + size <= l.params_len);
         }
+    }
+
+    /// bf16 storage: any task partition — whole image, interleaved
+    /// subsets, the group walk — must land bit-identically, because each
+    /// task's widen→kernel→round is self-contained. Also pins the
+    /// measured scratch peak to the analytic bound and far below a
+    /// full-image mirror.
+    #[test]
+    fn bf16_partitions_and_groups_match_whole_step() {
+        for kind in [OptKind::AdaLomo, OptKind::AdamW] {
+            for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+                let l = layout_for(kind).with_storage_dtype(Dtype::Bf16);
+                let (image, grads) = seeded_blob_and_grads(&l, 23);
+                let blob0 =
+                    TypedBlob::from_f32(&l, &image, Dtype::Bf16).unwrap();
+
+                let mut full = blob0.clone();
+                let mut opt =
+                    FlatOptimizer::new(kind, &l, 3, mode).unwrap();
+                opt.step_typed(&mut full, &grads, 1, 1e-2, 0.01).unwrap();
+                // Scratch: measured == analytic bound, and far below a
+                // full-image f32 mirror.
+                assert_eq!(
+                    opt.bf16_peak_scratch_elems(),
+                    opt.bf16_scratch_bound_elems(),
+                    "{kind:?} {mode:?}"
+                );
+                assert!(
+                    opt.bf16_scratch_bound_elems() < l.shardable_len() / 2,
+                    "{kind:?} {mode:?}: scratch bound {} vs shardable {}",
+                    opt.bf16_scratch_bound_elems(),
+                    l.shardable_len()
+                );
+
+                // Interleaved task subsets.
+                let mut by_parts = blob0.clone();
+                let mut opt2 =
+                    FlatOptimizer::new(kind, &l, 3, mode).unwrap();
+                let n = opt2.n_tasks();
+                for k in 0..3usize {
+                    let subset: Vec<usize> = (k..n).step_by(3).collect();
+                    opt2.step_tasks_typed(
+                        &mut by_parts, &grads, 1, 1e-2, 0.01, &subset,
+                    )
+                    .unwrap();
+                }
+                assert_eq!(full, by_parts, "{kind:?} {mode:?} subsets");
+
+                // Group walk from extent-sized gradient slices.
+                let mut by_groups = blob0.clone();
+                let mut opt3 =
+                    FlatOptimizer::new(kind, &l, 3, mode).unwrap();
+                for (g, (lo, hi)) in
+                    opt3.group_extents().into_iter().enumerate()
+                {
+                    opt3.step_group_typed(
+                        &mut by_groups, g, &grads[lo..hi], 1, 1e-2, 0.01,
+                    )
+                    .unwrap();
+                }
+                assert_eq!(full, by_groups, "{kind:?} {mode:?} groups");
+
+                // bf16 stepping genuinely moved the stored bits.
+                assert_ne!(full, blob0, "{kind:?} {mode:?}");
+                // The f32 typed path defers to the in-place engine: one
+                // f32 TypedBlob step equals the raw-slice step bitwise.
+                let mut typed32 =
+                    TypedBlob::from_f32(&l, &image, Dtype::F32).unwrap();
+                let mut raw32 = image.clone();
+                let mut opt4 =
+                    FlatOptimizer::new(kind, &l, 3, mode).unwrap();
+                let mut opt5 =
+                    FlatOptimizer::new(kind, &l, 3, mode).unwrap();
+                opt4.step_typed(&mut typed32, &grads, 1, 1e-2, 0.01)
+                    .unwrap();
+                opt5.step(&mut raw32, &grads, 1, 1e-2, 0.01).unwrap();
+                assert_eq!(typed32.to_f32(), raw32, "{kind:?} {mode:?} f32");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_rejects_malformed_inputs() {
+        let l = layout_for(OptKind::AdaLomo).with_storage_dtype(Dtype::Bf16);
+        let (image, grads) = seeded_blob_and_grads(&l, 5);
+        let mut blob =
+            TypedBlob::from_f32(&l, &image, Dtype::Bf16).unwrap();
+        let mut opt =
+            FlatOptimizer::new(OptKind::AdaLomo, &l, 2, ShardMode::Segments)
+                .unwrap();
+        // Short gradient image.
+        assert!(opt
+            .step_typed(&mut blob, &grads[..3], 1, 1e-2, 0.0)
+            .is_err());
+        // Malformed subsets (same contract as the f32 path).
+        assert!(opt
+            .step_tasks_typed(&mut blob, &grads, 1, 1e-2, 0.0, &[1, 0])
+            .is_err());
+        let n = opt.n_tasks();
+        assert!(opt
+            .step_tasks_typed(&mut blob, &grads, 1, 1e-2, 0.0, &[n])
+            .is_err());
+        // Empty subset is a no-op.
+        let before = blob.clone();
+        opt.step_tasks_typed(&mut blob, &grads, 1, 1e-2, 0.0, &[])
+            .unwrap();
+        assert_eq!(blob, before);
+        // Group slice of the wrong length / bad group index.
+        assert!(opt
+            .step_group_typed(&mut blob, 0, &grads[0..1], 1, 1e-2, 0.0)
+            .is_err());
+        let g = opt.n_groups();
+        let (lo, hi) = opt.group_extents()[0];
+        assert!(opt
+            .step_group_typed(&mut blob, g, &grads[lo..hi], 1, 1e-2, 0.0)
+            .is_err());
     }
 
     #[test]

@@ -36,6 +36,16 @@ pub fn bias_correction(beta: f32, t: u64) -> f32 {
     1.0 - beta.powf(t as f32)
 }
 
+/// Adafactor's step-dependent decay `beta2_t = 1 - t^(-decay_pow)`,
+/// clamped to the 1-based step domain. An unguarded `t = 0` evaluates
+/// `(0)^(-p) = inf`, making `beta2_t = -inf` and poisoning the factored
+/// state (`r`/`c`/`v` go to `-inf`/NaN on the very first accumulate);
+/// clamping to `t = 1` yields the correct first-step value 0 instead.
+/// Regression: `adafactor_t0_is_clamped`.
+pub fn adafactor_beta2t(decay_pow: f32, t: u64) -> f32 {
+    1.0 - (t.max(1) as f32).powf(-decay_pow)
+}
+
 // The parity-critical reductions have a single definition in
 // `crate::tensor` (Tensor, TensorView and these kernels all share it);
 // re-exported here because the kernels are their hottest consumer.
@@ -280,7 +290,7 @@ pub fn adafactor_2d_slice(
     h: Hyper,
     u: &mut [f32],
 ) {
-    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    let beta2t = adafactor_beta2t(h.adafactor_decay_pow, t);
     for cj in c.iter_mut() {
         *cj *= beta2t;
     }
@@ -304,7 +314,7 @@ pub fn adafactor_vec_slice(
     h: Hyper,
     u: &mut [f32],
 ) {
-    let beta2t = 1.0 - (t as f32).powf(-h.adafactor_decay_pow);
+    let beta2t = adafactor_beta2t(h.adafactor_decay_pow, t);
     adafactor_vec_raw(g, v, beta2t, h, u);
     let clip = 1.0f32.max(rms(u) / h.adafactor_clip_d);
     let alpha = h.adafactor_eps2.max(rms(theta)) * lr;
@@ -565,6 +575,54 @@ mod tests {
         sgd_variance(&mut theta, &g, &mut vv, t, 1e-3, h);
         sgd_momentum(&mut theta, &g, &mut m, t, 1e-3, h);
         assert!(theta.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn adafactor_t0_is_clamped() {
+        // Regression: `1 - (0f32).powf(-p)` is `-inf`; the clamp makes
+        // t = 0 behave exactly like the first real step.
+        let h = hyper();
+        let b0 = adafactor_beta2t(h.adafactor_decay_pow, 0);
+        let b1 = adafactor_beta2t(h.adafactor_decay_pow, 1);
+        assert!(b0.is_finite());
+        assert_eq!(b0.to_bits(), b1.to_bits());
+        assert_eq!(b1, 0.0); // 1 - 1^(-p)
+        // A full factored step at t = 0 stays finite instead of poisoning
+        // the r/c/v state for every step after it.
+        let mut theta = Tensor::full(&[3, 4], 0.5);
+        let g = Tensor::from_fn(&[3, 4], |i| (i as f32 - 5.0) * 0.01);
+        let mut r = Tensor::zeros(&[3]);
+        let mut c = Tensor::zeros(&[4]);
+        let mut u = vec![0f32; 12];
+        adafactor_2d_slice(
+            theta.data_mut(),
+            g.data(),
+            4,
+            r.data_mut(),
+            c.data_mut(),
+            0,
+            0.01,
+            h,
+            &mut u,
+        );
+        assert!(theta.data().iter().all(|x| x.is_finite()));
+        assert!(r.data().iter().all(|x| x.is_finite() && *x >= 0.0));
+        assert!(c.data().iter().all(|x| x.is_finite() && *x >= 0.0));
+        let mut v = Tensor::zeros(&[5]);
+        let g1 = Tensor::full(&[5], 0.1);
+        let mut theta1 = Tensor::full(&[5], 1.0);
+        let mut u1 = vec![0f32; 5];
+        adafactor_vec_slice(
+            theta1.data_mut(),
+            g1.data(),
+            v.data_mut(),
+            0,
+            0.01,
+            h,
+            &mut u1,
+        );
+        assert!(theta1.data().iter().all(|x| x.is_finite()));
+        assert!(v.data().iter().all(|x| x.is_finite() && *x >= 0.0));
     }
 
     #[test]

@@ -1,14 +1,25 @@
-//! Host-side view of the training-state blob: checkpointing, optimizer
-//! conversion, and segment access via the manifest layout.
+//! Host-side views of the training-state blob.
 //!
-//! The blob lives on device during training; this type only appears at
-//! checkpoint boundaries (save/load/repack) — never on the step path.
+//! Two types share this module:
+//!
+//! * [`HostBlob`] — the all-f32 checkpoint-boundary view (save/load/
+//!   repack, segment access via the manifest layout). The blob lives on
+//!   device during PJRT training; this type never sits on a step path.
+//! * [`TypedBlob`] — dtype-aware storage for the host engine's training
+//!   blob: the shardable prefix (parameters + optimizer state) held at
+//!   the layout's storage [`Dtype`], the metrics tail always f32 (exact
+//!   counters). Reads widen (bf16 → f32 is exact); writes round to
+//!   nearest even. This is what the unified engine trains and
+//!   checkpoints, and where the paper's memory story becomes actual
+//!   halved storage bytes rather than a modeled number.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::tensor::{TensorView, TensorViewMut};
+use crate::tensor::{
+    bf16_to_f32, f32_to_bf16, Dtype, TensorView, TensorViewMut,
+};
 
 use super::manifest::Layout;
 
@@ -183,6 +194,281 @@ impl HostBlob {
             .with_context(|| format!("{path:?}: truncated checkpoint"))?;
         Ok(HostBlob { data, layout_key })
     }
+
+    /// Round this all-f32 blob into `dtype` storage for `layout` — the
+    /// entry to the dtype-aware engine path (see [`TypedBlob`]).
+    pub fn to_typed(&self, layout: &Layout, dtype: Dtype) -> Result<TypedBlob> {
+        TypedBlob::from_f32(layout, &self.data, dtype)
+    }
+}
+
+/// Dtype-aware training-blob storage (see the module docs): elements
+/// `[0, split)` — the params + optimizer-state prefix — at the storage
+/// dtype, elements `[split, len)` — the metrics tail — always f32.
+///
+/// Offsets into a `TypedBlob` are in ELEMENTS, exactly as in [`Layout`];
+/// only the byte width behind them changes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypedBlob {
+    dtype: Dtype,
+    /// Elements stored at `dtype` (the shardable-prefix length).
+    split: usize,
+    /// bf16 bit patterns of the prefix; empty for f32 storage.
+    bits: Vec<u16>,
+    /// f32 storage: the whole blob for f32, the metrics tail for bf16.
+    f32s: Vec<f32>,
+}
+
+/// Mutable raw-storage view of a [`TypedBlob`] — the optimizer fast path
+/// dispatches on this once per step and then works on plain slices.
+pub enum BlobPartsMut<'a> {
+    /// All-f32 storage: the full blob as one slice.
+    F32(&'a mut [f32]),
+    /// bf16 storage: the shardable prefix as raw bf16 bits plus the f32
+    /// metrics tail.
+    Bf16 {
+        /// bf16 bit patterns of elements `[0, split)`.
+        bits: &'a mut [u16],
+        /// f32 elements `[split, len)` (the metrics region).
+        tail: &'a mut [f32],
+    },
+}
+
+impl TypedBlob {
+    /// Round an f32 image into `dtype` storage for `layout`. This is the
+    /// single lossy moment of a bf16 run (round-to-nearest-even per
+    /// element); every later read widens exactly and every write rounds
+    /// the same way, so two paths that perform identical f32 writes hold
+    /// identical bits.
+    pub fn from_f32(
+        layout: &Layout,
+        data: &[f32],
+        dtype: Dtype,
+    ) -> Result<TypedBlob> {
+        ensure!(
+            data.len() == layout.blob_len,
+            "blob length {} != layout {}",
+            data.len(),
+            layout.blob_len
+        );
+        let split = layout.shardable_len();
+        Ok(match dtype {
+            Dtype::F32 => TypedBlob {
+                dtype,
+                split,
+                bits: Vec::new(),
+                f32s: data.to_vec(),
+            },
+            Dtype::Bf16 => TypedBlob {
+                dtype,
+                split,
+                bits: data[..split].iter().map(|&x| f32_to_bf16(x)).collect(),
+                f32s: data[split..].to_vec(),
+            },
+        })
+    }
+
+    /// Rebuild from raw storage parts — the checkpoint reader's bit-exact
+    /// path (no conversion happens).
+    pub fn from_parts(
+        dtype: Dtype,
+        split: usize,
+        bits: Vec<u16>,
+        f32s: Vec<f32>,
+    ) -> Result<TypedBlob> {
+        match dtype {
+            Dtype::F32 => ensure!(
+                bits.is_empty() && split <= f32s.len(),
+                "f32 storage takes no bf16 bits and split {} <= len {}",
+                split,
+                f32s.len()
+            ),
+            Dtype::Bf16 => ensure!(
+                bits.len() == split,
+                "bf16 prefix holds {} elems, split says {}",
+                bits.len(),
+                split
+            ),
+        }
+        Ok(TypedBlob { dtype, split, bits, f32s })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Total elements (the layout's `blob_len`).
+    pub fn len(&self) -> usize {
+        match self.dtype {
+            Dtype::F32 => self.f32s.len(),
+            Dtype::Bf16 => self.bits.len() + self.f32s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements stored at the storage dtype (the shardable prefix).
+    pub fn split(&self) -> usize {
+        self.split
+    }
+
+    /// Actual bytes this blob occupies — the measured half of the paper's
+    /// Table-1 memory story (`blob_bytes` in the bench gate).
+    pub fn storage_bytes(&self) -> usize {
+        self.bits.len() * 2 + self.f32s.len() * 4
+    }
+
+    /// Raw bf16 prefix bits (empty for f32 storage) — the checkpoint
+    /// codec's zero-conversion view.
+    pub fn prefix_bits(&self) -> &[u16] {
+        &self.bits
+    }
+
+    /// The f32-stored elements: the whole blob for f32 storage, the
+    /// metrics tail for bf16.
+    pub fn f32_part(&self) -> &[f32] {
+        &self.f32s
+    }
+
+    /// Widen-on-read: the full image at compute precision (exact for both
+    /// dtypes — bf16 ⊂ f32).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self.dtype {
+            Dtype::F32 => self.f32s.clone(),
+            Dtype::Bf16 => {
+                let mut out = Vec::with_capacity(self.len());
+                out.extend(self.bits.iter().map(|&b| bf16_to_f32(b)));
+                out.extend_from_slice(&self.f32s);
+                out
+            }
+        }
+    }
+
+    /// Consuming form of [`Self::to_f32`]: for f32 storage the existing
+    /// allocation moves out instead of being cloned (the common case on
+    /// the engine's `into_blob` path).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self.dtype {
+            Dtype::F32 => self.f32s,
+            Dtype::Bf16 => self.to_f32(),
+        }
+    }
+
+    /// Widen-on-read view of the half-open element range `[lo, hi)` into
+    /// `out` (which must hold exactly `hi - lo` elements).
+    pub fn read_range(&self, lo: usize, hi: usize, out: &mut [f32]) -> Result<()> {
+        ensure!(
+            lo <= hi && hi <= self.len(),
+            "range [{lo}, {hi}) outside blob of {}",
+            self.len()
+        );
+        ensure!(
+            out.len() == hi - lo,
+            "output holds {} elems for a range of {}",
+            out.len(),
+            hi - lo
+        );
+        match self.dtype {
+            Dtype::F32 => out.copy_from_slice(&self.f32s[lo..hi]),
+            Dtype::Bf16 => {
+                // Prefix overlap [plo, phi) and tail overlap [tlo, hi).
+                let plo = lo.min(self.split);
+                let phi = hi.min(self.split);
+                for (o, &b) in out[..phi.saturating_sub(lo)]
+                    .iter_mut()
+                    .zip(&self.bits[plo..phi])
+                {
+                    *o = bf16_to_f32(b);
+                }
+                if hi > self.split {
+                    let tlo = lo.max(self.split);
+                    out[tlo - lo..].copy_from_slice(
+                        &self.f32s[tlo - self.split..hi - self.split],
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Round-on-write of the element range `[lo, hi)` from f32 values
+    /// (round-to-nearest-even into a bf16-stored prefix; exact into the
+    /// f32 tail).
+    pub fn write_range(&mut self, lo: usize, hi: usize, src: &[f32]) -> Result<()> {
+        ensure!(
+            lo <= hi && hi <= self.len(),
+            "range [{lo}, {hi}) outside blob of {}",
+            self.len()
+        );
+        ensure!(
+            src.len() == hi - lo,
+            "source holds {} elems for a range of {}",
+            src.len(),
+            hi - lo
+        );
+        match self.dtype {
+            Dtype::F32 => self.f32s[lo..hi].copy_from_slice(src),
+            Dtype::Bf16 => {
+                let plo = lo.min(self.split);
+                let phi = hi.min(self.split);
+                for (b, &s) in self.bits[plo..phi]
+                    .iter_mut()
+                    .zip(&src[..phi.saturating_sub(lo)])
+                {
+                    *b = f32_to_bf16(s);
+                }
+                if hi > self.split {
+                    let tlo = lo.max(self.split);
+                    self.f32s[tlo - self.split..hi - self.split]
+                        .copy_from_slice(&src[tlo - lo..]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dtype-aware segment view: the named segment's values widened to
+    /// compute precision.
+    pub fn segment_f32(&self, layout: &Layout, name: &str) -> Result<Vec<f32>> {
+        let seg = layout
+            .segment(name)
+            .with_context(|| format!("no segment {name:?}"))?;
+        let mut out = vec![0f32; seg.size];
+        self.read_range(seg.offset, seg.offset + seg.size, &mut out)?;
+        Ok(out)
+    }
+
+    /// Dtype-aware segment write: round the f32 values into the named
+    /// segment's storage.
+    pub fn write_segment_f32(
+        &mut self,
+        layout: &Layout,
+        name: &str,
+        values: &[f32],
+    ) -> Result<()> {
+        let seg = layout
+            .segment(name)
+            .with_context(|| format!("no segment {name:?}"))?;
+        self.write_range(seg.offset, seg.offset + seg.size, values)
+    }
+
+    /// Mutable raw-storage view — what the flat optimizer dispatches on.
+    pub fn parts_mut(&mut self) -> BlobPartsMut<'_> {
+        match self.dtype {
+            Dtype::F32 => BlobPartsMut::F32(&mut self.f32s),
+            Dtype::Bf16 => BlobPartsMut::Bf16 {
+                bits: &mut self.bits,
+                tail: &mut self.f32s,
+            },
+        }
+    }
+
+    /// All-f32 [`HostBlob`] view (checkpoint-boundary interchange).
+    pub fn to_host(&self, layout_key: &str) -> HostBlob {
+        HostBlob { data: self.to_f32(), layout_key: layout_key.to_string() }
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +484,7 @@ mod tests {
                 shape: vec![2, 3],
                 offset: 0,
                 size: 6,
+                dtype: Dtype::F32,
             },
             Segment {
                 name: "w@s".into(),
@@ -205,6 +492,7 @@ mod tests {
                 shape: vec![state],
                 offset: 6,
                 size: state,
+                dtype: Dtype::F32,
             },
             Segment {
                 name: "metrics".into(),
@@ -212,6 +500,7 @@ mod tests {
                 shape: vec![8],
                 offset: 6 + state,
                 size: 8,
+                dtype: Dtype::F32,
             },
         ];
         Layout { blob_len: 14 + state, params_len: 6, segments }
@@ -347,5 +636,88 @@ mod tests {
         assert_eq!(loaded.layout_key, "nano/adalomo");
         assert_eq!(loaded.data, blob.data);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn typed_blob_f32_is_lossless_and_full_width() {
+        let l = layout(4);
+        let data: Vec<f32> = (0..18).map(|i| i as f32 * 0.31 - 2.0).collect();
+        let tb = TypedBlob::from_f32(&l, &data, Dtype::F32).unwrap();
+        assert_eq!(tb.dtype(), Dtype::F32);
+        assert_eq!(tb.len(), l.blob_len);
+        assert_eq!(tb.split(), l.shardable_len());
+        assert_eq!(tb.storage_bytes(), l.blob_len * 4);
+        assert_eq!(tb.to_f32(), data);
+        assert!(tb.prefix_bits().is_empty());
+        // Wrong-length image rejected, like HostBlob::new.
+        assert!(TypedBlob::from_f32(&l, &data[..5], Dtype::F32).is_err());
+    }
+
+    #[test]
+    fn typed_blob_bf16_halves_prefix_and_keeps_metrics_exact() {
+        use crate::tensor::snap_bf16;
+        let l = layout(4);
+        let data: Vec<f32> =
+            (0..18).map(|i| (i as f32 * 0.777).sin() * 3.0).collect();
+        let tb = TypedBlob::from_f32(&l, &data, Dtype::Bf16).unwrap();
+        assert_eq!(tb.dtype(), Dtype::Bf16);
+        assert_eq!(tb.len(), 18);
+        assert_eq!(tb.split(), 10);
+        // 10 prefix elems x 2B + 8 metrics x 4B.
+        assert_eq!(tb.storage_bytes(), 10 * 2 + 8 * 4);
+        let widened = tb.to_f32();
+        for (i, (&w, &x)) in widened.iter().zip(&data).enumerate() {
+            if i < 10 {
+                assert_eq!(w.to_bits(), snap_bf16(x).to_bits(), "elem {i}");
+            } else {
+                // Metrics tail is bit-exact f32.
+                assert_eq!(w.to_bits(), x.to_bits(), "metrics elem {i}");
+            }
+        }
+        // Dtype-aware segment views: widen-on-read...
+        let seg = tb.segment_f32(&l, "w@s").unwrap();
+        assert_eq!(seg.len(), 4);
+        assert_eq!(seg[0].to_bits(), snap_bf16(data[6]).to_bits());
+        // ...and round-on-write.
+        let mut tb2 = tb.clone();
+        tb2.write_segment_f32(&l, "w@s", &[1.001, 2.0, 3.0, 4.0]).unwrap();
+        let back = tb2.segment_f32(&l, "w@s").unwrap();
+        assert_eq!(back[0].to_bits(), snap_bf16(1.001).to_bits());
+        assert_eq!(back[1], 2.0); // exactly representable
+        assert!(tb2.segment_f32(&l, "nope").is_err());
+        // HostBlob interchange round-trips through the typed storage.
+        let host = tb.to_host("t/x");
+        assert_eq!(host.data, widened);
+        let again = host.to_typed(&l, Dtype::Bf16).unwrap();
+        assert_eq!(again, tb); // re-rounding representable values: no-op
+    }
+
+    #[test]
+    fn typed_blob_ranges_straddle_the_dtype_boundary() {
+        let l = layout(4);
+        let data: Vec<f32> = (0..18).map(|i| i as f32 + 0.25).collect();
+        let mut tb = TypedBlob::from_f32(&l, &data, Dtype::Bf16).unwrap();
+        // Read across the bf16/f32 boundary at element 10.
+        let mut out = vec![0f32; 6];
+        tb.read_range(8, 14, &mut out).unwrap();
+        assert_eq!(out[2..], data[10..14]); // tail part exact
+        // A pure-tail range must not touch the bf16 prefix.
+        let mut m = vec![0f32; 4];
+        tb.read_range(12, 16, &mut m).unwrap();
+        assert_eq!(m, data[12..16]);
+        // Write across the boundary, then read it back.
+        tb.write_range(9, 12, &[5.0, 6.0, 7.0]).unwrap();
+        let mut back = vec![0f32; 3];
+        tb.read_range(9, 12, &mut back).unwrap();
+        assert_eq!(back, [5.0, 6.0, 7.0]); // all exactly representable
+        // Bounds are enforced.
+        assert!(tb.read_range(4, 99, &mut m).is_err());
+        assert!(tb.read_range(8, 4, &mut m).is_err());
+        assert!(tb.write_range(0, 3, &[0.0; 2]).is_err());
+        // from_parts validates its invariants.
+        assert!(TypedBlob::from_parts(Dtype::Bf16, 3, vec![0; 2], vec![])
+            .is_err());
+        assert!(TypedBlob::from_parts(Dtype::F32, 1, vec![0; 1], vec![0.0])
+            .is_err());
     }
 }

@@ -12,23 +12,41 @@
 //!
 //! This module sits BELOW the coordinator layer, so it cannot name
 //! `ExecPlan` directly: [`PlanRecord`] is the plain-data mirror the
-//! coordinator converts to and from. The small f32 codec here
-//! ([`write_f32s`]/[`read_f32s`]) is shared with [`super::HostBlob`]'s
-//! simpler params-only checkpoint so the two file formats cannot drift in
-//! how they spell a float.
+//! coordinator converts to and from. The small float codecs here
+//! ([`write_f32s`]/[`read_f32s`], [`write_u16s`]/[`read_u16s`]) are shared
+//! with [`super::HostBlob`]'s simpler params-only checkpoint so the file
+//! formats cannot drift in how they spell an element.
+//!
+//! # Versions
+//!
+//! * **v1** — all-f32: segments carry no dtype tag and the blob is a flat
+//!   f32 array. Still readable: a v1 file loads as an all-[`Dtype::F32`]
+//!   checkpoint, bit-exactly.
+//! * **v2** (current) — dtype-aware: every segment record carries a
+//!   storage-dtype tag, the plan records its dtype axis, and the blob
+//!   body stores the shardable prefix at the storage dtype (raw bf16 bit
+//!   patterns for bf16 layouts) with the metrics tail always f32. A bf16
+//!   checkpoint is therefore ~half the bytes of its f32 twin — measured
+//!   and gated by `checkpoint_file_bytes_bf16` in the bench baseline.
 
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::tensor::Dtype;
+
+use super::blob::TypedBlob;
 use super::manifest::{Layout, Segment};
 
 /// File magic for engine checkpoints ("ADalomo CheckPoint").
 pub const MAGIC: &[u8; 4] = b"ADCP";
 
-/// Current format version. Readers reject anything newer; the version is
+/// Current format version. Readers accept [`V1`] and this; the version is
 /// bumped whenever a field is added or re-encoded.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+
+/// The all-f32 legacy format (no dtype tags, flat f32 blob body).
+pub const V1: u32 = 1;
 
 /// Plain-data mirror of the coordinator's `ExecPlan`, plus the position
 /// inside it. Enum axes are stored as u8 codes (see the `PROD_*`/`ORD_*`/
@@ -45,6 +63,9 @@ pub struct PlanRecord {
     pub granularity: u8,
     /// Shard plan: [`MODE_SEGMENTS`] | [`MODE_CONTIGUOUS`].
     pub mode: u8,
+    /// Storage dtype axis: [`DT_F32`] | [`DT_BF16`] (v1 files load as
+    /// [`DT_F32`]).
+    pub dtype: u8,
     /// Optimizer name (`OptKind::name()` spelling).
     pub opt: String,
     /// Total steps the plan runs for.
@@ -78,6 +99,25 @@ pub const GRAN_TASKS: u8 = 1;
 pub const GRAN_GROUPS: u8 = 2;
 pub const MODE_SEGMENTS: u8 = 0;
 pub const MODE_CONTIGUOUS: u8 = 1;
+pub const DT_F32: u8 = 0;
+pub const DT_BF16: u8 = 1;
+
+/// [`Dtype`] -> on-disk code.
+pub fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::F32 => DT_F32,
+        Dtype::Bf16 => DT_BF16,
+    }
+}
+
+/// On-disk code -> [`Dtype`], rejecting unknown codes loudly.
+pub fn dtype_from_code(c: u8) -> Result<Dtype> {
+    match c {
+        DT_F32 => Ok(Dtype::F32),
+        DT_BF16 => Ok(Dtype::Bf16),
+        other => bail!("unknown dtype code {other}"),
+    }
+}
 
 /// Everything a checkpoint file holds.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,8 +128,10 @@ pub struct Checkpoint {
     /// Completed optimizer steps at save time.
     pub step: u64,
     pub plan: PlanRecord,
-    /// Full blob: parameter, optimizer-state and metrics regions.
-    pub blob: Vec<f32>,
+    /// Full blob in its STORAGE dtype: parameter, optimizer-state and
+    /// metrics regions (bf16 prefixes round-trip bit-exactly — no widen/
+    /// re-round on the save/load path).
+    pub blob: TypedBlob,
 }
 
 // --- little-endian writers/readers -------------------------------------
@@ -126,17 +168,42 @@ pub fn write_f32s(out: &mut Vec<u8>, data: &[f32]) {
 
 /// Decode exactly `n` little-endian f32s; `bytes` must hold exactly
 /// `4 * n` bytes (a trailing-garbage or truncated body is an error, not a
-/// partial read).
+/// partial read). The byte count is computed with checked arithmetic and
+/// compared BEFORE any allocation, so a corrupt length can neither wrap
+/// the comparison nor trigger a huge `Vec` reservation.
 pub fn read_f32s(bytes: &[u8], n: usize) -> Result<Vec<f32>> {
     ensure!(
-        bytes.len() == n * 4,
-        "f32 body holds {} bytes, expected {}",
-        bytes.len(),
-        n * 4
+        n.checked_mul(4) == Some(bytes.len()),
+        "f32 body holds {} bytes, expected 4 x {n}",
+        bytes.len()
     );
     let mut data = Vec::with_capacity(n);
     for chunk in bytes.chunks_exact(4) {
         data.push(f32::from_le_bytes(chunk.try_into()?));
+    }
+    Ok(data)
+}
+
+/// Append `data` as raw little-endian u16s — the bf16-bit-pattern half of
+/// the blob codec ([`write_f32s`]'s 2-byte sibling).
+pub fn write_u16s(out: &mut Vec<u8>, data: &[u16]) {
+    out.reserve(data.len() * 2);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode exactly `n` little-endian u16s, with the same
+/// checked-before-allocating strictness as [`read_f32s`].
+pub fn read_u16s(bytes: &[u8], n: usize) -> Result<Vec<u16>> {
+    ensure!(
+        n.checked_mul(2) == Some(bytes.len()),
+        "u16 body holds {} bytes, expected 2 x {n}",
+        bytes.len()
+    );
+    let mut data = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(2) {
+        data.push(u16::from_le_bytes(chunk.try_into()?));
     }
     Ok(data)
 }
@@ -189,23 +256,55 @@ impl<'a> Reader<'a> {
     fn usize64(&mut self) -> Result<usize> {
         Ok(self.u64()? as usize)
     }
+
+    /// Read a u32 element count, bounded against the remaining input:
+    /// each counted element occupies at least `min_elem_bytes` of the
+    /// bytes still unread, so a corrupt header cannot demand a huge
+    /// allocation before the body parse fails.
+    fn count32(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.bytes.len() - self.pos;
+        ensure!(
+            n.checked_mul(min_elem_bytes).is_some_and(|b| b <= remaining),
+            "corrupt checkpoint: count {n} (x{min_elem_bytes}B) exceeds \
+             the {remaining} remaining bytes"
+        );
+        Ok(n)
+    }
+
+    /// Read a u64 element length with the same remaining-bytes bound as
+    /// [`Self::count32`] — the guarded form of the old unchecked
+    /// `u64 as usize` reads.
+    fn len64(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let remaining = (self.bytes.len() - self.pos) as u64;
+        ensure!(
+            min_elem_bytes > 0 && n <= remaining / min_elem_bytes as u64,
+            "corrupt checkpoint: length {n} (x{min_elem_bytes}B) exceeds \
+             the {remaining} remaining bytes"
+        );
+        Ok(n as usize)
+    }
 }
 
-/// Serialize `ck` into the version-1 byte layout.
+/// Serialize `ck` into the current (version-2) byte layout.
 pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
     encode(&ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.blob)
 }
 
-/// The version-1 encoder over borrowed parts — what [`write`] uses so
-/// the engine can checkpoint without cloning its blob first.
+/// The version-2 encoder over borrowed parts — what [`write`] uses so
+/// the engine can checkpoint without cloning its blob first. The blob
+/// body is the typed storage verbatim: bf16 prefix bits then the f32
+/// tail (for f32 storage the prefix is empty and the tail is the whole
+/// blob — one spelling covers both dtypes).
 fn encode(
     layout_key: &str,
     layout: &Layout,
     step: u64,
     plan: &PlanRecord,
-    blob: &[f32],
+    blob: &TypedBlob,
 ) -> Vec<u8> {
-    let mut out = Vec::with_capacity(64 + blob.len() * 4);
+    let mut out = Vec::with_capacity(64 + blob.storage_bytes());
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
     put_str(&mut out, layout_key);
@@ -222,6 +321,8 @@ fn encode(
         }
         put_u64(&mut out, s.offset as u64);
         put_u64(&mut out, s.size as u64);
+        // v2: per-region storage-dtype tag.
+        out.push(dtype_code(s.dtype));
     }
     put_u64(&mut out, step);
     // Plan record.
@@ -229,6 +330,8 @@ fn encode(
     out.push(plan.order);
     out.push(plan.granularity);
     out.push(plan.mode);
+    // v2: the plan's storage-dtype axis.
+    out.push(plan.dtype);
     put_str(&mut out, &plan.opt);
     put_u64(&mut out, plan.steps);
     put_u64(&mut out, plan.bucket_elems);
@@ -241,14 +344,70 @@ fn encode(
     put_u64(&mut out, plan.seed);
     put_u64(&mut out, plan.cursor_group);
     put_u64(&mut out, plan.cursor_task);
-    // Blob.
+    // Blob: element count, then the raw typed storage.
     put_u64(&mut out, blob.len() as u64);
-    write_f32s(&mut out, blob);
+    write_u16s(&mut out, blob.prefix_bits());
+    write_f32s(&mut out, blob.f32_part());
     out
 }
 
-/// Parse a version-1 checkpoint, validating magic, version, internal
-/// layout consistency and exact body length.
+/// Encode `ck` in the LEGACY v1 byte layout — all-f32 checkpoints only
+/// (v1 has no dtype tags). The single authoritative spelling of the
+/// legacy format: the compatibility tests (here and in
+/// `integration_engine.rs`) write their PR-4-era files through this, and
+/// the unit test additionally pins its output against an independent
+/// hand-rolled byte stream so the two readers/writers cannot drift.
+pub fn to_bytes_v1(ck: &Checkpoint) -> Result<Vec<u8>> {
+    ensure!(
+        ck.blob.dtype() == Dtype::F32
+            && ck.layout.storage_dtype()? == Dtype::F32
+            && ck.plan.dtype == DT_F32,
+        "the v1 format is all-f32; widen/retag the checkpoint first"
+    );
+    let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, V1);
+    put_str(&mut out, &ck.layout_key);
+    put_u64(&mut out, ck.layout.blob_len as u64);
+    put_u64(&mut out, ck.layout.params_len as u64);
+    put_u32(&mut out, ck.layout.segments.len() as u32);
+    for s in &ck.layout.segments {
+        put_str(&mut out, &s.name);
+        put_str(&mut out, &s.kind);
+        put_u32(&mut out, s.shape.len() as u32);
+        for &d in &s.shape {
+            put_u64(&mut out, d as u64);
+        }
+        put_u64(&mut out, s.offset as u64);
+        put_u64(&mut out, s.size as u64);
+        // v1: no per-segment dtype tag.
+    }
+    put_u64(&mut out, ck.step);
+    out.push(ck.plan.production);
+    out.push(ck.plan.order);
+    out.push(ck.plan.granularity);
+    out.push(ck.plan.mode);
+    // v1: no plan dtype byte.
+    put_str(&mut out, &ck.plan.opt);
+    put_u64(&mut out, ck.plan.steps);
+    put_u64(&mut out, ck.plan.bucket_elems);
+    put_u32(&mut out, ck.plan.n_ranks);
+    put_u32(&mut out, ck.plan.n_shards);
+    put_f32(&mut out, ck.plan.lr);
+    put_f32(&mut out, ck.plan.wd);
+    put_f64(&mut out, ck.plan.fabric_alpha);
+    put_f64(&mut out, ck.plan.fabric_bw);
+    put_u64(&mut out, ck.plan.seed);
+    put_u64(&mut out, ck.plan.cursor_group);
+    put_u64(&mut out, ck.plan.cursor_task);
+    put_u64(&mut out, ck.blob.len() as u64);
+    write_f32s(&mut out, ck.blob.f32_part());
+    Ok(out)
+}
+
+/// Parse a version-1 or version-2 checkpoint, validating magic, version,
+/// internal layout consistency and exact body length. v1 files load as
+/// all-f32 ([`DT_F32`] everywhere, flat f32 blob).
 pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     ensure!(
         bytes.len() >= 8 && &bytes[..4] == MAGIC,
@@ -257,25 +416,36 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     let mut r = Reader { bytes, pos: 4 };
     let version = r.u32()?;
     ensure!(
-        version == VERSION,
-        "checkpoint version {version} unsupported (this build reads {VERSION})"
+        version == V1 || version == VERSION,
+        "checkpoint version {version} unsupported (this build reads \
+         {V1}..={VERSION})"
     );
     let layout_key = r.str()?;
-    let blob_len = r.usize64()?;
+    // blob_len is bounded against the remaining bytes: every element
+    // occupies at least 2 bytes (bf16) in the body that must follow.
+    let blob_len = r.len64(2)?;
     let params_len = r.usize64()?;
-    let n_segments = r.u32()? as usize;
+    // Each segment record occupies at least 28 bytes (name len + kind len
+    // + ndim + offset + size), so the count is bounded before the
+    // allocation it sizes.
+    let n_segments = r.count32(28)?;
     let mut segments = Vec::with_capacity(n_segments);
     for _ in 0..n_segments {
         let name = r.str()?;
         let kind = r.str()?;
-        let ndim = r.u32()? as usize;
+        let ndim = r.count32(8)?;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(r.usize64()?);
         }
         let offset = r.usize64()?;
         let size = r.usize64()?;
-        segments.push(Segment { name, kind, shape, offset, size });
+        let dtype = if version >= 2 {
+            dtype_from_code(r.u8()?)?
+        } else {
+            Dtype::F32
+        };
+        segments.push(Segment { name, kind, shape, offset, size, dtype });
     }
     let layout = Layout { blob_len, params_len, segments };
     validate_layout(&layout)?;
@@ -285,6 +455,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         order: r.u8()?,
         granularity: r.u8()?,
         mode: r.u8()?,
+        dtype: if version >= 2 { r.u8()? } else { DT_F32 },
         opt: r.str()?,
         steps: r.u64()?,
         bucket_elems: r.u64()?,
@@ -300,24 +471,51 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     };
     ensure!(
         plan.cursor_group == 0 && plan.cursor_task == 0,
-        "mid-step checkpoint (group cursor {}, task cursor {}): version-1 \
-         readers only resume at step boundaries",
+        "mid-step checkpoint (group cursor {}, task cursor {}): readers \
+         only resume at step boundaries",
         plan.cursor_group,
         plan.cursor_task
     );
-    let n = r.usize64()?;
+    let dtype = layout.storage_dtype()?;
+    ensure!(
+        plan.dtype == dtype_code(dtype),
+        "plan dtype code {} disagrees with the layout's {} storage",
+        plan.dtype,
+        dtype.name()
+    );
+    let n = r.len64(dtype.bytes().min(4))?;
     ensure!(
         n == layout.blob_len,
-        "checkpoint blob holds {n} floats, layout says {}",
+        "checkpoint blob holds {n} elements, layout says {}",
         layout.blob_len
     );
-    let blob = read_f32s(&bytes[r.pos..], n)?;
+    let blob = match dtype {
+        Dtype::F32 => TypedBlob::from_parts(
+            dtype,
+            layout.shardable_len(),
+            Vec::new(),
+            read_f32s(&bytes[r.pos..], n)?,
+        )?,
+        Dtype::Bf16 => {
+            let split = layout.shardable_len();
+            let prefix_bytes = split
+                .checked_mul(2)
+                .filter(|&b| r.pos.checked_add(b).is_some_and(|e| e <= bytes.len()))
+                .with_context(|| {
+                    format!("truncated checkpoint: bf16 prefix of {split} elems")
+                })?;
+            let bits = read_u16s(&bytes[r.pos..r.pos + prefix_bytes], split)?;
+            let tail = read_f32s(&bytes[r.pos + prefix_bytes..], n - split)?;
+            TypedBlob::from_parts(dtype, split, bits, tail)?
+        }
+    };
     Ok(Checkpoint { layout_key, layout, step, plan, blob })
 }
 
 /// The serialized layout must be internally consistent before anything
 /// trusts its offsets: segments tile `[0, blob_len)` exactly and the
-/// parameter region is a prefix.
+/// parameter region is a prefix. All arithmetic on the untrusted sizes is
+/// checked, so crafted dimensions error instead of overflowing.
 fn validate_layout(layout: &Layout) -> Result<()> {
     let mut off = 0usize;
     for s in &layout.segments {
@@ -327,18 +525,27 @@ fn validate_layout(layout: &Layout) -> Result<()> {
             s.name,
             s.offset
         );
+        let shape_elems = s
+            .shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| {
+                format!("checkpoint layout: segment {} shape overflows", s.name)
+            })?;
         ensure!(
-            s.size == s.shape.iter().product::<usize>().max(1),
+            s.size == shape_elems.max(1),
             "checkpoint layout: segment {} size {} != shape {:?}",
             s.name,
             s.size,
             s.shape
         );
-        off += s.size;
+        off = off.checked_add(s.size).with_context(|| {
+            format!("checkpoint layout: offsets overflow at {}", s.name)
+        })?;
     }
     ensure!(
         off == layout.blob_len,
-        "checkpoint layout: segments cover {off} of {} floats",
+        "checkpoint layout: segments cover {off} of {} elements",
         layout.blob_len
     );
     ensure!(
@@ -346,6 +553,11 @@ fn validate_layout(layout: &Layout) -> Result<()> {
         "checkpoint layout: params_len {} > blob_len {}",
         layout.params_len,
         layout.blob_len
+    );
+    ensure!(
+        layout.params_len <= layout.shardable_len(),
+        "checkpoint layout: params_len {} reaches into the metrics region",
+        layout.params_len
     );
     Ok(())
 }
@@ -371,13 +583,33 @@ pub fn write(
     layout: &Layout,
     step: u64,
     plan: &PlanRecord,
-    blob: &[f32],
+    blob: &TypedBlob,
 ) -> Result<()> {
     ensure!(
         blob.len() == layout.blob_len,
-        "checkpoint blob {} floats != layout {}",
+        "checkpoint blob {} elements != layout {}",
         blob.len(),
         layout.blob_len
+    );
+    let dtype = layout.storage_dtype()?;
+    ensure!(
+        blob.dtype() == dtype,
+        "checkpoint blob stored as {} but the layout is tagged {}",
+        blob.dtype().name(),
+        dtype.name()
+    );
+    ensure!(
+        blob.dtype() == Dtype::F32 || blob.split() == layout.shardable_len(),
+        "checkpoint blob splits at {} but the layout's shardable region \
+         ends at {}",
+        blob.split(),
+        layout.shardable_len()
+    );
+    ensure!(
+        plan.dtype == dtype_code(dtype),
+        "plan dtype code {} disagrees with the layout's {} storage",
+        plan.dtype,
+        dtype.name()
     );
     validate_layout(layout)?;
     let tmp = temp_sibling(path);
@@ -417,7 +649,7 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
 mod tests {
     use super::*;
 
-    fn sample() -> Checkpoint {
+    fn sample_layout(dtype: Dtype) -> Layout {
         let segments = vec![
             Segment {
                 name: "w".into(),
@@ -425,6 +657,7 @@ mod tests {
                 shape: vec![2, 3],
                 offset: 0,
                 size: 6,
+                dtype,
             },
             Segment {
                 name: "w@v".into(),
@@ -432,6 +665,7 @@ mod tests {
                 shape: vec![6],
                 offset: 6,
                 size: 6,
+                dtype,
             },
             Segment {
                 name: "metrics".into(),
@@ -439,9 +673,16 @@ mod tests {
                 shape: vec![8],
                 offset: 12,
                 size: 8,
+                dtype: Dtype::F32,
             },
         ];
-        let layout = Layout { blob_len: 20, params_len: 6, segments };
+        Layout { blob_len: 20, params_len: 6, segments }
+    }
+
+    fn sample_with(dtype: Dtype) -> Checkpoint {
+        let layout = sample_layout(dtype);
+        let image: Vec<f32> = (0..20).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let blob = TypedBlob::from_f32(&layout, &image, dtype).unwrap();
         Checkpoint {
             layout_key: "nano/adalomo".into(),
             layout,
@@ -451,6 +692,7 @@ mod tests {
                 order: ORD_DESCENDING,
                 granularity: GRAN_TASKS,
                 mode: MODE_CONTIGUOUS,
+                dtype: dtype_code(dtype),
                 opt: "adalomo".into(),
                 steps: 12,
                 bucket_elems: 64,
@@ -464,22 +706,100 @@ mod tests {
                 cursor_group: 0,
                 cursor_task: 0,
             },
-            blob: (0..20).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            blob,
         }
+    }
+
+    fn sample() -> Checkpoint {
+        sample_with(Dtype::F32)
     }
 
     #[test]
     fn round_trip_is_exact() {
-        let ck = sample();
-        let bytes = to_bytes(&ck);
-        let back = from_bytes(&bytes).unwrap();
-        assert_eq!(back, ck);
-        // Exact float bits survive, not just approximate values.
-        for (a, b) in ck.blob.iter().zip(&back.blob) {
-            assert_eq!(a.to_bits(), b.to_bits());
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let ck = sample_with(dtype);
+            let bytes = to_bytes(&ck);
+            let back = from_bytes(&bytes).unwrap();
+            assert_eq!(back, ck);
+            // Exact storage bits survive, not just approximate values —
+            // for bf16 that means the raw u16 prefix, with no widen/
+            // re-round on the save/load path.
+            assert_eq!(back.blob.prefix_bits(), ck.blob.prefix_bits());
+            for (a, b) in ck.blob.to_f32().iter().zip(&back.blob.to_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // Serialization is deterministic: same checkpoint, same bytes.
+            assert_eq!(bytes, to_bytes(&back));
         }
-        // Serialization is deterministic: same checkpoint, same bytes.
-        assert_eq!(bytes, to_bytes(&back));
+        // The bf16 file is about half the f32 one (the tentpole's
+        // checkpoint-byte claim in miniature).
+        let f32_bytes = to_bytes(&sample_with(Dtype::F32)).len();
+        let bf16_bytes = to_bytes(&sample_with(Dtype::Bf16)).len();
+        // Identical headers (plus tags); blob 12x2+8x4 vs 20x4.
+        assert_eq!(f32_bytes - bf16_bytes, 20 * 4 - (12 * 2 + 8 * 4));
+    }
+
+    /// The v1 (all-f32, tagless) format still loads — as all-f32, with
+    /// every value bit-exact. This is the byte layout PR-4 era files have
+    /// on disk, reproduced by hand so the compatibility surface cannot
+    /// drift silently.
+    #[test]
+    fn v1_files_load_as_all_f32() {
+        let ck = sample();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, V1);
+        put_str(&mut out, &ck.layout_key);
+        put_u64(&mut out, ck.layout.blob_len as u64);
+        put_u64(&mut out, ck.layout.params_len as u64);
+        put_u32(&mut out, ck.layout.segments.len() as u32);
+        for s in &ck.layout.segments {
+            put_str(&mut out, &s.name);
+            put_str(&mut out, &s.kind);
+            put_u32(&mut out, s.shape.len() as u32);
+            for &d in &s.shape {
+                put_u64(&mut out, d as u64);
+            }
+            put_u64(&mut out, s.offset as u64);
+            put_u64(&mut out, s.size as u64);
+            // v1: NO dtype tag.
+        }
+        put_u64(&mut out, ck.step);
+        out.push(ck.plan.production);
+        out.push(ck.plan.order);
+        out.push(ck.plan.granularity);
+        out.push(ck.plan.mode);
+        // v1: NO plan dtype byte.
+        put_str(&mut out, &ck.plan.opt);
+        put_u64(&mut out, ck.plan.steps);
+        put_u64(&mut out, ck.plan.bucket_elems);
+        put_u32(&mut out, ck.plan.n_ranks);
+        put_u32(&mut out, ck.plan.n_shards);
+        put_f32(&mut out, ck.plan.lr);
+        put_f32(&mut out, ck.plan.wd);
+        put_f64(&mut out, ck.plan.fabric_alpha);
+        put_f64(&mut out, ck.plan.fabric_bw);
+        put_u64(&mut out, ck.plan.seed);
+        put_u64(&mut out, ck.plan.cursor_group);
+        put_u64(&mut out, ck.plan.cursor_task);
+        put_u64(&mut out, ck.blob.len() as u64);
+        write_f32s(&mut out, ck.blob.f32_part());
+
+        // The hand-rolled bytes ARE what the shared v1 encoder emits —
+        // the independent pin that keeps `to_bytes_v1` honest.
+        assert_eq!(out, to_bytes_v1(&ck).unwrap());
+        let back = from_bytes(&out).unwrap();
+        assert_eq!(back, ck); // sample() is all-f32 + DT_F32 already
+        assert_eq!(back.layout.storage_dtype().unwrap(), Dtype::F32);
+        assert_eq!(back.plan.dtype, DT_F32);
+        // And the v2 re-encoding of it is exactly 1 byte per segment + 1
+        // plan byte longer.
+        assert_eq!(
+            to_bytes(&back).len(),
+            out.len() + ck.layout.segments.len() + 1
+        );
+        // bf16 checkpoints cannot be downgraded to the all-f32 format.
+        assert!(to_bytes_v1(&sample_with(Dtype::Bf16)).is_err());
     }
 
     #[test]
@@ -523,15 +843,60 @@ mod tests {
         let mut mid = ck.clone();
         mid.plan.cursor_group = 1;
         assert!(from_bytes(&to_bytes(&mid)).is_err());
+        // Plan dtype disagreeing with the layout tags is rejected.
+        let mut skew = ck.clone();
+        skew.plan.dtype = DT_BF16;
+        assert!(from_bytes(&to_bytes(&skew)).is_err());
         // Blob/layout length mismatch rejected at save time.
         let mut short = ck.clone();
-        short.blob.pop();
+        short.blob = TypedBlob::from_parts(
+            Dtype::F32,
+            12,
+            Vec::new(),
+            vec![0.0; 19],
+        )
+        .unwrap();
         let path = std::env::temp_dir().join(format!(
             "adalomo_engine_ckpt_bad_{}.bin",
             std::process::id()
         ));
         assert!(save(&path, &short).is_err());
+        // A blob stored at the wrong dtype for the layout is rejected too.
+        let mut wrong = ck.clone();
+        wrong.blob = TypedBlob::from_parts(
+            Dtype::Bf16,
+            12,
+            vec![0u16; 12],
+            vec![0.0; 8],
+        )
+        .unwrap();
+        assert!(save(&path, &wrong).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    /// Fuzz-style sweep over mutated headers and every truncation: the
+    /// reader must come back with `Ok` or a clean `Err` — never a panic,
+    /// never an attempt to allocate a corrupt length (the bounded
+    /// `count32`/`len64` reads run before every allocation they size).
+    #[test]
+    fn mutated_headers_never_panic() {
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let bytes = to_bytes(&sample_with(dtype));
+            for i in 0..bytes.len() {
+                for flip in [0x01u8, 0x80, 0xFF] {
+                    let mut m = bytes.clone();
+                    m[i] ^= flip;
+                    let _ = from_bytes(&m); // must not panic or abort
+                }
+            }
+            for k in 0..bytes.len() {
+                assert!(from_bytes(&bytes[..k]).is_err(), "truncated at {k}");
+            }
+            // Trailing garbage stays an error.
+            let mut long = bytes.clone();
+            long.extend_from_slice(&[0u8; 3]);
+            assert!(from_bytes(&long).is_err());
+        }
     }
 
     #[test]
@@ -546,5 +911,20 @@ mod tests {
         }
         assert!(read_f32s(&bytes, 3).is_err());
         assert!(read_f32s(&bytes[..15], 4).is_err());
+        // A length whose byte count would overflow usize errors instead
+        // of wrapping the comparison (and never allocates).
+        assert!(read_f32s(&bytes, usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn u16_codec_mirrors_the_f32_one() {
+        let data = vec![0u16, 1, 0x3F80, 0xFFFF, 0x8000];
+        let mut bytes = Vec::new();
+        write_u16s(&mut bytes, &data);
+        assert_eq!(bytes.len(), 10);
+        assert_eq!(read_u16s(&bytes, 5).unwrap(), data);
+        assert!(read_u16s(&bytes, 4).is_err());
+        assert!(read_u16s(&bytes[..9], 5).is_err());
+        assert!(read_u16s(&bytes, usize::MAX / 2 + 1).is_err());
     }
 }

@@ -5,8 +5,9 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::tensor::Dtype;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -36,8 +37,15 @@ pub struct Segment {
     pub name: String,
     pub kind: String, // param | frozen | state | metric
     pub shape: Vec<usize>,
+    /// Blob offset in ELEMENTS (dtype-independent).
     pub offset: usize,
+    /// Element count (dtype-independent; storage bytes are
+    /// `size * dtype.bytes()`).
     pub size: usize,
+    /// Storage dtype of this region's elements. [`Dtype::F32`] unless the
+    /// layout was retagged via [`Layout::with_storage_dtype`]; metric
+    /// segments always stay f32 (they hold exact counters).
+    pub dtype: Dtype,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -103,6 +111,48 @@ impl Layout {
         self.segments
             .iter()
             .filter(move |s| lo < hi && s.offset < hi && s.offset + s.size > lo)
+    }
+
+    /// The uniform storage [`Dtype`] of the shardable (params + optimizer
+    /// state) region. Metric segments must stay f32 and the non-metric
+    /// segments must agree — the blob codecs store the prefix at one
+    /// width, so a mixed tagging is a reportable error, not a layout.
+    pub fn storage_dtype(&self) -> Result<Dtype> {
+        let mut dtype: Option<Dtype> = None;
+        for s in &self.segments {
+            if s.kind == "metric" {
+                ensure!(
+                    s.dtype == Dtype::F32,
+                    "metric segment {} must stay f32 (exact counters)",
+                    s.name
+                );
+            } else {
+                match dtype {
+                    None => dtype = Some(s.dtype),
+                    Some(d) => ensure!(
+                        d == s.dtype,
+                        "mixed storage dtypes: segment {} is {}, expected {}",
+                        s.name,
+                        s.dtype.name(),
+                        d.name()
+                    ),
+                }
+            }
+        }
+        Ok(dtype.unwrap_or(Dtype::F32))
+    }
+
+    /// Clone with every param/frozen/state segment tagged `dtype` (metric
+    /// segments always stay f32). Offsets and sizes are in elements and
+    /// do not move — only the storage width changes.
+    pub fn with_storage_dtype(&self, dtype: Dtype) -> Layout {
+        let mut out = self.clone();
+        for s in out.segments.iter_mut() {
+            if s.kind != "metric" {
+                s.dtype = dtype;
+            }
+        }
+        out
     }
 }
 
@@ -176,12 +226,19 @@ impl Manifest {
                 .as_arr()?
                 .iter()
                 .map(|s| {
+                    // Manifests written before the dtype axis carry no
+                    // tag; they are all-f32 by construction.
+                    let dtype = match s.opt("dtype") {
+                        Some(d) => Dtype::parse(d.as_str()?)?,
+                        None => Dtype::F32,
+                    };
                     Ok(Segment {
                         name: s.get("name")?.as_str()?.to_string(),
                         kind: s.get("kind")?.as_str()?.to_string(),
                         shape: shape_of(s.get("shape")?)?,
                         offset: s.get("offset")?.as_usize()?,
                         size: s.get("size")?.as_usize()?,
+                        dtype,
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;

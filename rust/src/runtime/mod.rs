@@ -15,6 +15,6 @@ pub mod checkpoint;
 pub mod manifest;
 pub mod session;
 
-pub use blob::HostBlob;
+pub use blob::{BlobPartsMut, HostBlob, TypedBlob};
 pub use manifest::{Entry, Layout, Manifest, PresetInfo, Segment};
 pub use session::Session;

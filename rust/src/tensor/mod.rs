@@ -7,6 +7,94 @@
 
 use anyhow::{bail, Result};
 
+/// Storage dtype of a blob region (parameters / optimizer state).
+///
+/// Training compute always runs in f32; `Dtype` selects only how a
+/// region's bits are *stored* — and, for the cost-modeled exchange, how
+/// many bytes an element occupies on the wire. `Bf16` keeps f32's 8-bit
+/// exponent and truncates the mantissa to 7 bits, so widening back to
+/// f32 ([`bf16_to_f32`]) is exact and rounding ([`f32_to_bf16`],
+/// round-to-nearest-even) is the only lossy direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// IEEE-754 binary32 — the compute precision; storage is lossless.
+    F32,
+    /// bfloat16 storage: round-to-nearest-even on write, exact widen on
+    /// read. Halves parameter/state/exchange bytes at ~2-3 significant
+    /// decimal digits.
+    Bf16,
+}
+
+impl Dtype {
+    /// Storage bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Canonical spelling (CLI flags, bench metric suffixes).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse the canonical spelling (accepts `bfloat16` for `bf16`).
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" | "float32" => Dtype::F32,
+            "bf16" | "bfloat16" => Dtype::Bf16,
+            other => bail!("unknown dtype {other:?} (f32|bf16)"),
+        })
+    }
+}
+
+/// Round an f32 to bfloat16 bits, round-to-nearest-even: the write half
+/// of the storage conversion. NaNs are quieted with their sign kept;
+/// values beyond bf16 range round to the infinities, exactly as hardware
+/// bf16 conversion units behave.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Force a payload bit that survives the truncation so the result
+        // stays a (quiet) NaN rather than collapsing to an infinity.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// Widen bfloat16 bits back to f32 — exact, since every bf16 value is
+/// representable in f32 (the read half of the storage conversion).
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Round `x` through bf16 storage and back: the value a bf16-stored blob
+/// actually holds after a write of `x`.
+pub fn snap_bf16(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Widen a bf16 slice into `dst`, clearing it first (capacity is reused
+/// across calls — the scratch-buffer pattern the flat engine relies on).
+pub fn widen_bf16_into(src: &[u16], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&b| bf16_to_f32(b)));
+}
+
+/// Round an f32 slice into equally-sized bf16 storage (the in-place
+/// write-back kernel; `dst.len()` must equal `src.len()`).
+pub fn round_bf16_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(s);
+    }
+}
+
 /// Sum of squares over a raw slice — THE parity-critical reduction. Single
 /// definition: [`Tensor`], [`TensorView`] and the optimizer slice kernels
 /// (`optim::update`) all delegate here so the implementations cannot drift.
@@ -421,5 +509,91 @@ mod tests {
         assert_eq!(v.as_view().sum(), 12.0);
         drop(v);
         assert!(buf.iter().all(|&x| (x - 2.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn dtype_basics() {
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("bf16").unwrap(), Dtype::Bf16);
+        assert_eq!(Dtype::parse("bfloat16").unwrap(), Dtype::Bf16);
+        assert!(Dtype::parse("f16").is_err());
+        assert_eq!(Dtype::parse(Dtype::Bf16.name()).unwrap(), Dtype::Bf16);
+    }
+
+    #[test]
+    fn bf16_round_trip_is_identity_on_representable_values() {
+        // round(widen(bits)) == bits for every value that IS a bf16
+        // (sweep all finite bf16 bit patterns): widening is exact and
+        // rounding a representable value must not move it.
+        for hi in 0..=0xFFFFu32 {
+            let bits = hi as u16;
+            let x = bf16_to_f32(bits);
+            if x.is_nan() {
+                assert!(bf16_to_f32(f32_to_bf16(x)).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_bf16(x), bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1 + 2^-8 sits exactly halfway between bf16(1.0) and the next
+        // value up; RNE resolves the tie toward the even mantissa.
+        assert_eq!(f32_to_bf16(1.0 + 2.0f32.powi(-8)), 0x3F80); // -> 1.0
+        assert_eq!(f32_to_bf16(1.0 + 3.0 * 2.0f32.powi(-8)), 0x3F82);
+        // Non-ties go to the nearest value.
+        assert_eq!(snap_bf16(1.001), 1.0);
+        assert!((snap_bf16(1.006) - 1.0078125).abs() < 1e-7);
+        // Sign, zero and infinities survive.
+        assert_eq!(snap_bf16(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(snap_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(snap_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // Overflow past bf16's max finite value rounds to infinity.
+        assert_eq!(snap_bf16(3.4e38), f32::INFINITY);
+        // NaN stays NaN with its sign.
+        assert!(snap_bf16(f32::NAN).is_nan());
+        assert!(snap_bf16(-f32::NAN).is_sign_negative());
+    }
+
+    #[test]
+    fn bf16_error_bound_and_monotonicity() {
+        // |x - snap(x)| <= |x| * 2^-8 for normal values (half a bf16 ULP),
+        // and rounding is monotone: x <= y => snap(x) <= snap(y).
+        let mut prev_x = f32::NEG_INFINITY;
+        let mut prev_s = f32::NEG_INFINITY;
+        for i in -2000i32..2000 {
+            let x = (i as f32) * 0.37 + (i as f32).powi(2) * 1.3e-4;
+            let s = snap_bf16(x);
+            assert!(
+                (x - s).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "x {x} -> {s}"
+            );
+            if x >= prev_x {
+                assert!(s >= prev_s, "monotonicity broke at {prev_x}->{x}");
+                prev_x = x;
+                prev_s = s;
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_slice_kernels_match_scalar_conversion() {
+        let src: Vec<f32> =
+            (0..257).map(|i| (i as f32 - 128.0) * 0.013).collect();
+        let mut bits = vec![0u16; src.len()];
+        round_bf16_slice(&src, &mut bits);
+        let mut widened = Vec::new();
+        widen_bf16_into(&bits, &mut widened);
+        assert_eq!(widened.len(), src.len());
+        for ((&x, &b), &w) in src.iter().zip(&bits).zip(&widened) {
+            assert_eq!(b, f32_to_bf16(x));
+            assert_eq!(w.to_bits(), snap_bf16(x).to_bits());
+        }
+        // The widen buffer is cleared, not appended to.
+        widen_bf16_into(&bits[..3], &mut widened);
+        assert_eq!(widened.len(), 3);
     }
 }

@@ -11,7 +11,7 @@ use adalomo::memsim::{liveness, memory, Arch};
 use adalomo::optim::flat::{synthetic_layout, FlatOptimizer, ShardMode};
 use adalomo::optim::{grouped_normalize, Hyper, OptKind, ParamOpt, ALL_OPTS};
 use adalomo::runtime::{Layout, Segment};
-use adalomo::tensor::Tensor;
+use adalomo::tensor::{Dtype, Tensor};
 use adalomo::util::rng::Pcg32;
 
 const CASES: u64 = 60;
@@ -125,6 +125,7 @@ fn prop_sharding_partitions_exactly() {
                 shape: vec![size],
                 offset: off,
                 size,
+                dtype: Dtype::F32,
             });
             off += size;
         }
@@ -134,6 +135,7 @@ fn prop_sharding_partitions_exactly() {
             shape: vec![8],
             offset: off,
             size: 8,
+            dtype: Dtype::F32,
         });
         let layout = Layout {
             blob_len: off + 8,
@@ -638,17 +640,23 @@ fn prop_engine_matches_legacy_bitwise() {
                 let buckets =
                     [1 + rng.below(layout.params_len), layout.params_len + 5];
                 for bucket_elems in buckets {
-                    for (mode, n_shards) in [
-                        (ShardMode::Segments, 2usize),
-                        (ShardMode::Contiguous, 3),
+                    for (mode, n_shards, dtype) in [
+                        (ShardMode::Segments, 2usize, Dtype::F32),
+                        (ShardMode::Contiguous, 3, Dtype::F32),
+                        // The dtype axis: at FIXED bf16 storage every cell
+                        // must still agree bitwise — per-task widen→
+                        // kernel→round is partition-independent.
+                        (ShardMode::Segments, 2, Dtype::Bf16),
+                        (ShardMode::Contiguous, 3, Dtype::Bf16),
                     ] {
                         let mut cfg =
                             pipeline::PipelineConfig::new(3, bucket_elems);
                         cfg.n_shards = n_shards;
+                        cfg.dtype = dtype;
                         let ctx = format!(
                             "{kind:?} {mode:?} ranks={n_ranks} \
                              bucket={bucket_elems} shards={n_shards} \
-                             seed={seed}"
+                             {dtype:?} seed={seed}"
                         );
                         // Wrapper results for the four legacy paths.
                         let (w_seq, _) = pipeline::run_sequential(
