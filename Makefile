@@ -8,8 +8,8 @@
 CARGO ?= cargo
 
 .PHONY: build test bench bench-smoke bench-json bench-gate bench-check \
-	bench-bless ckpt-smoke fmt fmt-fix clippy doc lint ci-tier1 ci \
-	test-pjrt artifacts
+	bench-bless ckpt-smoke fmt fmt-fix clippy doc analyze lint ci-tier1 \
+	ci miri tsan test-pjrt artifacts
 
 build:
 	$(CARGO) build --release
@@ -120,11 +120,36 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --package adalomo
 
-lint: fmt clippy doc
+# Repo-wide static analysis (docs/ANALYSIS.md): no-unsafe, determinism,
+# panic-discipline, and cross-artifact consistency over rust/src + the
+# Makefile/CI/bench-baseline/docs surfaces. Exits nonzero on any
+# unwaivered finding; the JSON report is a CI artifact.
+analyze:
+	$(CARGO) run --release --quiet -- analyze --json analysis-report.json
+
+lint: fmt clippy doc analyze
 
 ci-tier1: build test
 
 ci: lint ci-tier1 ckpt-smoke
+
+# Dynamic-analysis companions to `analyze` (nightly toolchain; CI runs
+# them as manually-dispatched jobs like `pjrt`). Miri interprets the
+# tensor/blob/checkpoint unit tests — the checkpoint read path parses
+# untrusted bytes, exactly where UB would hide. Isolation is off so the
+# checkpoint tests may touch their temp files.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" $(CARGO) +nightly miri test -q \
+		--lib -- tensor:: runtime::blob:: runtime::checkpoint::
+
+# ThreadSanitizer over the threaded paths (pool / pipeline / engine):
+# the producer threads + rank-ordered reductions the determinism rule
+# polices statically, checked dynamically. Needs the rust-src component
+# (-Zbuild-std rebuilds std with the sanitizer).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" $(CARGO) +nightly test -q --lib \
+		-Zbuild-std --target x86_64-unknown-linux-gnu -- \
+		optim::pool:: coordinator::pipeline:: coordinator::engine::
 
 # Artifact-gated integration tests (need `make artifacts` + real PJRT —
 # run by the workflow's manually-dispatched `pjrt` job).

@@ -1,0 +1,534 @@
+//! Repo-wide static analysis: machine-check the invariants the parity,
+//! determinism, and checkpoint guarantees rest on, on every PR.
+//!
+//! Everything this repo sells — bitwise parity across all ExecPlan
+//! cells, bit-exact suspend/resume, the bf16-vs-f32 tolerance harness —
+//! depends on properties no test can prove by sampling: no unordered
+//! iteration feeding a reduce, no stray threads outside the pool, no
+//! float reductions outside the blessed kernels, no panic mid-step that
+//! poisons the engine. [`analyze`] runs the rule registry
+//! ([`rules::RULES`]) over a [`Tree`] (Rust sources token-scanned by
+//! [`scanner`], plus the cross-artifact surfaces: Makefile, CI workflow,
+//! bench baseline, docs) and reports findings; `adalomo analyze` exits
+//! nonzero on any unwaivered violation and `make analyze` wires it into
+//! tier-1 CI. Dynamic companions (`make miri`, `make tsan`) cover what a
+//! token scan cannot.
+//!
+//! A finding is silenced in one of two ways, both explicit and both
+//! visible in the JSON report: an `ANALYZE-WAIVE` — `(rule): reason` —
+//! comment on (or directly above) the offending line, or — for
+//! panic-discipline — an annotated budget in
+//! [`rules::PANIC_ALLOWLIST`]. See docs/ANALYSIS.md.
+
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use scanner::SourceFile;
+
+/// Aux-artifact keys in [`Tree::aux`] (repo-relative paths).
+pub const AUX_MAKEFILE: &str = "Makefile";
+pub const AUX_CI: &str = ".github/workflows/ci.yml";
+pub const AUX_BASELINE: &str = "bench/baseline.json";
+pub const AUX_DOCS: &str = "docs/ANALYSIS.md";
+
+/// One rule hit. `line == 0` marks a file-level finding (missing
+/// attribute, count over budget, artifact drift).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// `Some(reason)` when an ANALYZE-WAIVE comment covers the line —
+    /// reported, but not a violation.
+    pub waived: Option<String>,
+}
+
+/// Everything the analyzer looks at. Tests build these in memory;
+/// [`Tree::load`] reads a real checkout.
+#[derive(Debug, Default)]
+pub struct Tree {
+    /// Scanned `rust/src/**/*.rs`, sorted by path.
+    pub sources: Vec<SourceFile>,
+    /// `(path, raw text)` of the CI micro benches (metric-name surface;
+    /// raw because the names live inside string literals).
+    pub benches: Vec<(String, String)>,
+    /// Cross-artifact files by repo-relative path (see the `AUX_*`
+    /// constants); absent files are simply not in the map.
+    pub aux: BTreeMap<String, String>,
+}
+
+impl Tree {
+    /// Load the analyzable surface of the checkout rooted at `root`.
+    pub fn load(root: &Path) -> Result<Tree> {
+        let mut tree = Tree::default();
+        let src = root.join("rust/src");
+        let mut paths = Vec::new();
+        walk_rs(&src, &mut paths)
+            .with_context(|| format!("scanning {src:?}"))?;
+        paths.sort();
+        for p in paths {
+            let rel = relative(&p, root);
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {p:?}"))?;
+            tree.sources.push(SourceFile::parse(&rel, &text));
+        }
+        let benches = root.join("rust/benches");
+        if benches.is_dir() {
+            let mut bpaths: Vec<PathBuf> = std::fs::read_dir(&benches)?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| {
+                            n.starts_with("bench_micro_") && n.ends_with(".rs")
+                        })
+                })
+                .collect();
+            bpaths.sort();
+            for p in bpaths {
+                let rel = relative(&p, root);
+                tree.benches.push((rel, std::fs::read_to_string(&p)?));
+            }
+        }
+        for key in [AUX_MAKEFILE, AUX_CI, AUX_BASELINE, AUX_DOCS] {
+            if let Ok(text) = std::fs::read_to_string(root.join(key)) {
+                tree.aux.insert(key.to_string(), text);
+            }
+        }
+        Ok(tree)
+    }
+}
+
+fn relative(p: &Path, root: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("read_dir {dir:?}"))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Build a finding, attaching any waiver that covers the line.
+fn finding(
+    file: &SourceFile,
+    rule: &'static str,
+    line: usize,
+    message: String,
+) -> Finding {
+    Finding {
+        rule,
+        file: file.path.clone(),
+        line,
+        message,
+        waived: file.waiver_for(rule, line).map(|w| w.reason.clone()),
+    }
+}
+
+/// The full analyzer output: findings (waived + not), advisory notes,
+/// and the independently re-derived bench-metric name set.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub notes: Vec<String>,
+    pub files_scanned: usize,
+    /// Metric names the micro benches emit, derived statically — the
+    /// set `bench-check` gates against `bench/baseline.json`.
+    pub bench_metrics: Vec<String>,
+}
+
+impl Report {
+    /// Unwaivered findings — what fails `make analyze`.
+    pub fn violations(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none()).collect()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived.is_some()).count()
+    }
+
+    /// Machine-readable report (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut per_rule: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+        for (id, _) in rules::RULES {
+            per_rule.insert(*id, (0, 0));
+        }
+        for f in &self.findings {
+            let e = per_rule.entry(f.rule).or_insert((0, 0));
+            if f.waived.is_some() {
+                e.1 += 1;
+            } else {
+                e.0 += 1;
+            }
+        }
+        let rules_json = Json::Obj(
+            per_rule
+                .into_iter()
+                .map(|(id, (viol, waived))| {
+                    (
+                        id.to_string(),
+                        obj(vec![
+                            ("violations", num(viol as f64)),
+                            ("waived", num(waived as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("analyzer_version", num(1.0)),
+            ("files_scanned", num(self.files_scanned as f64)),
+            ("violations", num(self.violations().len() as f64)),
+            ("waived", num(self.waived_count() as f64)),
+            ("rules", rules_json),
+            (
+                "findings",
+                arr(self
+                    .findings
+                    .iter()
+                    .map(|f| {
+                        let mut fields = vec![
+                            ("rule", s(f.rule)),
+                            ("file", s(&f.file)),
+                            ("line", num(f.line as f64)),
+                            ("message", s(&f.message)),
+                            ("waived", Json::Bool(f.waived.is_some())),
+                        ];
+                        if let Some(reason) = &f.waived {
+                            fields.push(("waiver_reason", s(reason)));
+                        }
+                        obj(fields)
+                    })
+                    .collect()),
+            ),
+            (
+                "bench_metrics",
+                arr(self.bench_metrics.iter().map(|m| s(m)).collect()),
+            ),
+            ("notes", arr(self.notes.iter().map(|n| s(n)).collect())),
+        ])
+    }
+}
+
+/// Run every rule over `tree`.
+pub fn analyze(tree: &Tree) -> Report {
+    let mut findings = Vec::new();
+    let mut notes = Vec::new();
+    rules::waiver_syntax(tree, &mut findings);
+    rules::no_unsafe(tree, &mut findings);
+    rules::determinism(tree, &mut findings);
+    rules::panic_discipline(tree, &mut findings, &mut notes);
+    let bench_metrics = rules::consistency(tree, &mut findings, &mut notes);
+    unused_waiver_notes(tree, &findings, &mut notes);
+    Report {
+        findings,
+        notes,
+        files_scanned: tree.sources.len()
+            + tree.benches.len()
+            + tree.aux.len(),
+        bench_metrics,
+    }
+}
+
+/// A waiver no finding consumed is stale — the offending code was fixed,
+/// so the comment should go. Advisory (a note, not a violation): a stale
+/// waiver cannot hide a real finding, only outlive one.
+fn unused_waiver_notes(
+    tree: &Tree,
+    findings: &[Finding],
+    notes: &mut Vec<String>,
+) {
+    for f in &tree.sources {
+        for w in &f.waivers {
+            if w.rule.is_empty() {
+                continue; // malformed — already a violation
+            }
+            let used = findings.iter().any(|fd| {
+                fd.file == f.path
+                    && fd.rule == w.rule
+                    && fd.waived.is_some()
+                    && f.waiver_for(fd.rule, fd.line)
+                        .is_some_and(|cov| cov.line == w.line)
+            });
+            if !used {
+                notes.push(format!(
+                    "stale waiver: {}:{} waives {:?} but nothing matches \
+                     — remove the comment",
+                    f.path, w.line, w.rule
+                ));
+            }
+        }
+    }
+}
+
+/// Convenience: load + analyze a checkout.
+pub fn run(root: &Path) -> Result<Report> {
+    Ok(analyze(&Tree::load(root)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree_of(files: &[(&str, &str)]) -> Tree {
+        let mut t = Tree::default();
+        for (path, text) in files {
+            t.sources.push(SourceFile::parse(path, text));
+        }
+        t
+    }
+
+    fn violations_of(tree: &Tree, rule: &str) -> usize {
+        analyze(tree)
+            .violations()
+            .iter()
+            .filter(|f| f.rule == rule)
+            .count()
+    }
+
+    const W: &str = "rust/src/coordinator/x.rs"; // a watched path
+
+    #[test]
+    fn unsafe_token_is_flagged_and_waivable() {
+        let t = tree_of(&[(W, "unsafe fn f() {}\n")]);
+        assert_eq!(violations_of(&t, "no-unsafe"), 1);
+        let t = tree_of(&[(
+            W,
+            "// ANALYZE-WAIVE(no-unsafe): documented soundness proof\n\
+             unsafe fn f() {}\n",
+        )]);
+        assert_eq!(violations_of(&t, "no-unsafe"), 0);
+        assert_eq!(analyze(&t).waived_count(), 1);
+    }
+
+    #[test]
+    fn forbid_attribute_required_in_crate_roots() {
+        let t = tree_of(&[("rust/src/lib.rs", "pub mod x;\n")]);
+        assert_eq!(violations_of(&t, "no-unsafe"), 1);
+        let t = tree_of(&[(
+            "rust/src/lib.rs",
+            "#![forbid(unsafe_code)]\npub mod x;\n",
+        )]);
+        assert_eq!(violations_of(&t, "no-unsafe"), 0);
+    }
+
+    #[test]
+    fn unordered_collections_flagged_in_watched_dirs_only() {
+        let bad = "use std::collections::HashMap;\n";
+        assert_eq!(violations_of(&tree_of(&[(W, bad)]), "determinism"), 1);
+        // util/ is outside the watched tree.
+        let t = tree_of(&[("rust/src/util/x.rs", bad)]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+        // Mentions in comments/strings don't count.
+        let t = tree_of(&[(W, "// a HashMap would be wrong here\n")]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+        // BTreeMap is the house type: clean.
+        let t = tree_of(&[(W, "use std::collections::BTreeMap;\n")]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+    }
+
+    #[test]
+    fn threads_belong_to_the_pool() {
+        let bad = "let h = std::thread::spawn(|| {});\n";
+        assert_eq!(violations_of(&tree_of(&[(W, bad)]), "determinism"), 1);
+        let t = tree_of(&[("rust/src/optim/pool.rs", bad)]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+        // Scoped spawns via the pool are not thread::spawn.
+        let t = tree_of(&[(W, "std::thread::scope(|s| s.spawn(f));\n")]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+    }
+
+    #[test]
+    fn clocks_and_float_ops_need_blessing_or_waivers() {
+        let t = tree_of(&[(W, "let t0 = Instant::now();\n")]);
+        assert_eq!(violations_of(&t, "determinism"), 1);
+        let t = tree_of(&[(
+            W,
+            "let t = Instant::now(); // ANALYZE-WAIVE(determinism): \
+             report-only timing\n",
+        )]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+        let sum = "let s = xs.iter().sum::<f32>();\n";
+        assert_eq!(violations_of(&tree_of(&[(W, sum)]), "determinism"), 1);
+        // The kernels are blessed for float reductions.
+        let t = tree_of(&[("rust/src/optim/update.rs", sum)]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+        // Tests are exempt from determinism scanning.
+        let t = tree_of(&[(
+            W,
+            "#[cfg(test)]\nmod tests {\n  fn f() { \
+             let t = Instant::now(); }\n}\n",
+        )]);
+        assert_eq!(violations_of(&t, "determinism"), 0);
+    }
+
+    #[test]
+    fn panic_budget_is_enforced() {
+        // engine.rs has a budget of 1: a second unwrap busts it.
+        let p = "rust/src/coordinator/engine.rs";
+        let t = tree_of(&[(p, "f().unwrap();\n")]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 0);
+        let t = tree_of(&[(p, "f().unwrap();\ng().unwrap();\n")]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 1);
+        // Under budget emits a ratchet note, not a violation.
+        let t = tree_of(&[(p, "fn ok() {}\n")]);
+        let r = analyze(&t);
+        assert_eq!(r.violations().len(), 0);
+        assert!(r.notes.iter().any(|n| n.contains("ratchet")));
+        // A watched file with no allowlist entry may not panic at all.
+        let t = tree_of(&[(W, "f().expect(\"boom\");\n")]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 1);
+        // The checkpoint read path is pinned at zero.
+        let t = tree_of(&[(
+            "rust/src/runtime/checkpoint.rs",
+            "bytes.get(0).unwrap();\n",
+        )]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 1);
+        // Test-module unwraps don't count.
+        let t = tree_of(&[(
+            "rust/src/runtime/checkpoint.rs",
+            "fn ok() {}\n#[cfg(test)]\nmod tests { fn t() { \
+             f().unwrap(); } }\n",
+        )]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 0);
+    }
+
+    #[test]
+    fn bench_metrics_must_match_baseline_both_ways() {
+        let bench = r#"
+            fn main() {
+                sink.metric("a_ns", 1.0);
+                sink.metric(&format!("bytes_{suffix}"), 2.0);
+            }
+        "#;
+        let mut t = Tree::default();
+        t.benches.push(("rust/benches/bench_micro_x.rs".into(), bench.into()));
+        t.aux.insert(
+            AUX_BASELINE.to_string(),
+            r#"{"a_ns": {}, "bytes_f32": {}, "bytes_bf16": {}}"#.to_string(),
+        );
+        let r = analyze(&t);
+        assert_eq!(r.violations().len(), 0, "{:?}", r.violations());
+        assert_eq!(
+            r.bench_metrics,
+            vec!["a_ns", "bytes_bf16", "bytes_f32"]
+        );
+        // Drop a baseline key -> emitted-but-untracked violation.
+        t.aux.insert(
+            AUX_BASELINE.to_string(),
+            r#"{"a_ns": {}, "bytes_f32": {}}"#.to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        // Phantom baseline key -> tracked-but-never-emitted violation.
+        t.aux.insert(
+            AUX_BASELINE.to_string(),
+            r#"{"a_ns": {}, "bytes_f32": {}, "bytes_bf16": {},
+                "ghost": {}}"#
+                .to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+    }
+
+    #[test]
+    fn ci_make_targets_must_exist() {
+        let mut t = Tree::default();
+        t.aux.insert(
+            AUX_MAKEFILE.to_string(),
+            "build:\n\tcargo build\nlint: build\n\t$(MAKE) build\n"
+                .to_string(),
+        );
+        t.aux.insert(
+            AUX_CI.to_string(),
+            "jobs:\n  x:\n    steps:\n      - run: make lint\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+        t.aux.insert(
+            AUX_CI.to_string(),
+            "      - run: make no-such-target\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        // Comments don't count as references.
+        t.aux.insert(
+            AUX_CI.to_string(),
+            "      # later: make imaginary\n      - run: make build\n"
+                .to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+        // A dangling $(MAKE) self-reference inside the Makefile fails too.
+        t.aux.insert(
+            AUX_MAKEFILE.to_string(),
+            "build:\n\t$(MAKE) gone\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+    }
+
+    #[test]
+    fn checkpoint_version_must_match_docs() {
+        let ckpt = "pub const VERSION: u32 = 2;\n";
+        let mut t = tree_of(&[("rust/src/runtime/checkpoint.rs", ckpt)]);
+        // No docs at all: violation.
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        t.aux.insert(
+            AUX_DOCS.to_string(),
+            "stale pin. ADCP format version: 1\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        t.aux.insert(
+            AUX_DOCS.to_string(),
+            "current pin. ADCP format version: 2\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+    }
+
+    #[test]
+    fn malformed_and_stale_waivers_surface() {
+        let t = tree_of(&[(W, "// ANALYZE-WAIVE(determinism) no colon\n")]);
+        assert_eq!(violations_of(&t, "waiver-syntax"), 1);
+        let t = tree_of(&[(W, "// ANALYZE-WAIVE(imaginary-rule): hi\n")]);
+        assert_eq!(violations_of(&t, "waiver-syntax"), 1);
+        let t = tree_of(&[(
+            W,
+            "// ANALYZE-WAIVE(determinism): nothing here needs this\n\
+             fn clean() {}\n",
+        )]);
+        let r = analyze(&t);
+        assert_eq!(r.violations().len(), 0);
+        assert!(r.notes.iter().any(|n| n.contains("stale waiver")));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let t = tree_of(&[(W, "let t = Instant::now();\n")]);
+        let r = analyze(&t);
+        let j = r.to_json();
+        assert_eq!(j.get("violations").unwrap().as_usize().unwrap(), 1);
+        let findings = j.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").unwrap().as_str().unwrap(),
+            "determinism"
+        );
+        // Round-trips through the JSON parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

@@ -1,0 +1,698 @@
+//! The rule registry: every machine-checked invariant, with the
+//! guarantee it protects. See docs/ANALYSIS.md for the prose rationale
+//! and the waiver syntax; the constants here are the single source of
+//! truth the analyzer, the tests, and the docs check against.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::tensor::Dtype;
+use crate::util::json::Json;
+
+use super::scanner::word_hit;
+use super::{Finding, Tree, AUX_BASELINE, AUX_CI, AUX_DOCS, AUX_MAKEFILE};
+
+/// Rule ids + one-line descriptions (the `analyze --list` output and the
+/// JSON report's rule table).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "waiver-syntax",
+        "every ANALYZE-WAIVE comment parses as (rule): reason",
+    ),
+    (
+        "no-unsafe",
+        "the tree is 100% safe Rust: no `unsafe` tokens, and lib.rs/main.rs \
+         carry #![forbid(unsafe_code)]",
+    ),
+    (
+        "determinism",
+        "no unordered iteration, stray threads, or unblessed float \
+         reductions/clocks in coordinator/, optim/, runtime/",
+    ),
+    (
+        "panic-discipline",
+        "unwrap()/expect() in the engine and checkpoint paths stay within \
+         the annotated allowlist",
+    ),
+    (
+        "consistency",
+        "bench metric names, Makefile targets vs CI steps, and the ADCP \
+         checkpoint version stay in sync across artifacts",
+    ),
+];
+
+/// Directories (repo-relative prefixes) the determinism and
+/// panic-discipline rules police: the paths every bitwise-parity and
+/// checkpoint guarantee flows through.
+pub const WATCHED_DIRS: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/optim/",
+    "rust/src/runtime/",
+];
+
+/// The blessed kernel files: float reductions (`powf`, `exp`,
+/// `.sum::<f32>()`) are the kernels' job, in a fixed, tested evaluation
+/// order. Everywhere else in the watched tree they are a parity hazard.
+pub const BLESSED_FLOAT_FILES: &[&str] =
+    &["rust/src/optim/update.rs", "rust/src/optim/flat.rs"];
+
+/// The one file allowed to create threads: `pool.rs` owns the scoped
+/// worker pool every parallel path runs on. Threads elsewhere need a
+/// waiver explaining why their schedule cannot reorder results.
+pub const THREAD_HOME: &str = "rust/src/optim/pool.rs";
+
+/// Identifier tokens whose presence in a watched file is a determinism
+/// finding: unordered iteration bleeds into reduce order and eval
+/// output.
+const UNORDERED_COLLECTIONS: &[&str] = &["HashMap", "HashSet"];
+
+/// Clock reads are nondeterministic inputs; report-only timing is fine
+/// but must say so with a waiver.
+const CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime::now"];
+
+/// Float reductions/transcendentals outside the blessed kernels — the
+/// operations whose evaluation order decides bitwise parity.
+const FLOAT_TOKENS: &[&str] = &[".powf(", ".exp(", ".sum::<f32>()"];
+
+/// Per-file unwrap()/expect() budgets (non-test code) inside the watched
+/// dirs, each with the reason the calls are sound. A file exceeding its
+/// budget — or absent here with a nonzero count — fails `analyze`;
+/// adding a budget entry IS the explicit waiver path for this rule.
+/// Counts below budget are reported as ratchet notes so budgets only
+/// ever shrink.
+pub const PANIC_ALLOWLIST: &[(&str, usize, &str)] = &[
+    (
+        "rust/src/optim/flat.rs",
+        20,
+        "worker-slot mutex locks + shard-plan invariants established by \
+         FlatOptimizer::new; a poisoned slot mutex means a worker already \
+         panicked mid-step, which must abort the run",
+    ),
+    (
+        "rust/src/runtime/session.rs",
+        9,
+        "compile-cache/stats mutex locks and a cache hit checked two lines \
+         above; lock poisoning is itself a crashed-thread symptom",
+    ),
+    (
+        "rust/src/coordinator/engine.rs",
+        1,
+        "pop_front() guarded by the front() match arm directly above",
+    ),
+    (
+        "rust/src/coordinator/fused.rs",
+        1,
+        "accumulator is Some after the n_groups >= 1 loop (validated by \
+         fused_groups)",
+    ),
+    (
+        "rust/src/coordinator/sharding.rs",
+        1,
+        "min_by_key over a shard vec sized n_ranks >= 1",
+    ),
+    (
+        "rust/src/coordinator/trainer.rs",
+        1,
+        "blob Option is initialized in Trainer::new and re-stored every \
+         step",
+    ),
+    (
+        "rust/src/optim/pool.rs",
+        1,
+        "scoped-thread join: a panicked pool worker must propagate, not \
+         vanish",
+    ),
+    (
+        "rust/src/runtime/checkpoint.rs",
+        0,
+        "fuzz-tested parser: the read path must NEVER panic on bad input \
+         (mutated_headers_never_panic pins this)",
+    ),
+    (
+        "rust/src/runtime/blob.rs",
+        0,
+        "HostBlob::load is checkpoint input surface: bounds-checked reads \
+         only, no panics on untrusted bytes",
+    ),
+];
+
+/// The string a waiver line must mention in docs/ANALYSIS.md's version
+/// pin, e.g. `ADCP format version: 2`.
+pub const DOCS_VERSION_MARK: &str = "ADCP format version:";
+
+fn in_watched(path: &str) -> bool {
+    WATCHED_DIRS.iter().any(|d| path.starts_with(d))
+}
+
+// --- rule: waiver-syntax ------------------------------------------------
+
+/// Malformed waivers (scanner parses them into empty-rule placeholders)
+/// are violations: an unreadable waiver silently waives nothing.
+pub fn waiver_syntax(tree: &Tree, out: &mut Vec<Finding>) {
+    let known: BTreeSet<&str> = RULES.iter().map(|(id, _)| *id).collect();
+    for f in &tree.sources {
+        for w in &f.waivers {
+            if w.rule.is_empty() {
+                out.push(Finding {
+                    rule: "waiver-syntax",
+                    file: f.path.clone(),
+                    line: w.line,
+                    message: format!("malformed waiver: {}", w.reason),
+                    waived: None,
+                });
+            } else if !known.contains(w.rule.as_str()) {
+                out.push(Finding {
+                    rule: "waiver-syntax",
+                    file: f.path.clone(),
+                    line: w.line,
+                    message: format!(
+                        "waiver names unknown rule {:?}",
+                        w.rule
+                    ),
+                    waived: None,
+                });
+            }
+        }
+    }
+}
+
+// --- rule: no-unsafe ----------------------------------------------------
+
+/// The tree is 100% safe Rust today; this locks it. A future waiver is
+/// possible but must be explicit (and will show in the JSON report).
+pub fn no_unsafe(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.sources {
+        for l in &f.lines {
+            if word_hit(&l.code, "unsafe") {
+                out.push(super::finding(
+                    f,
+                    "no-unsafe",
+                    l.number,
+                    "`unsafe` token (the crate is #![forbid(unsafe_code)]; \
+                     a waiver here must explain the soundness argument)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    for root in ["rust/src/lib.rs", "rust/src/main.rs"] {
+        let Some(f) = tree.sources.iter().find(|f| f.path == root) else {
+            continue;
+        };
+        let has_forbid = f
+            .lines
+            .iter()
+            .any(|l| l.code.contains("#![forbid(unsafe_code)]"));
+        if !has_forbid {
+            out.push(Finding {
+                rule: "no-unsafe",
+                file: root.to_string(),
+                line: 0,
+                message: "missing #![forbid(unsafe_code)] crate attribute"
+                    .to_string(),
+                waived: None,
+            });
+        }
+    }
+}
+
+// --- rule: determinism --------------------------------------------------
+
+/// Forbid the nondeterminism sources the parity proptests cannot see:
+/// unordered iteration, threads outside the pool, clocks and float
+/// reductions outside the blessed kernels.
+pub fn determinism(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.sources {
+        if !in_watched(&f.path) {
+            continue;
+        }
+        let blessed_floats = BLESSED_FLOAT_FILES.contains(&f.path.as_str());
+        for l in &f.lines {
+            if l.is_test {
+                continue;
+            }
+            for tok in UNORDERED_COLLECTIONS {
+                if word_hit(&l.code, tok) {
+                    out.push(super::finding(
+                        f,
+                        "determinism",
+                        l.number,
+                        format!(
+                            "{tok} iteration order is nondeterministic — \
+                             use BTreeMap/BTreeSet (bitwise parity across \
+                             ExecPlan cells depends on stable order)"
+                        ),
+                    ));
+                }
+            }
+            if f.path != THREAD_HOME && l.code.contains("thread::spawn") {
+                out.push(super::finding(
+                    f,
+                    "determinism",
+                    l.number,
+                    format!(
+                        "thread::spawn outside {THREAD_HOME} — reductions \
+                         must consume results in rank order; waive only \
+                         with a schedule-independence argument"
+                    ),
+                ));
+            }
+            for tok in CLOCK_TOKENS {
+                if l.code.contains(tok) {
+                    out.push(super::finding(
+                        f,
+                        "determinism",
+                        l.number,
+                        format!(
+                            "{tok} is a nondeterministic input — waive if \
+                             report-only, never feed it into stepping or \
+                             exchange decisions"
+                        ),
+                    ));
+                }
+            }
+            if !blessed_floats {
+                for tok in FLOAT_TOKENS {
+                    if l.code.contains(tok) {
+                        out.push(super::finding(
+                            f,
+                            "determinism",
+                            l.number,
+                            format!(
+                                "float op {tok} outside the blessed \
+                                 kernels ({BLESSED_FLOAT_FILES:?}) — \
+                                 reduction/transcendental order decides \
+                                 bitwise parity"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --- rule: panic-discipline ---------------------------------------------
+
+/// Count unwrap()/expect() in non-test code per watched file and pin the
+/// counts to [`PANIC_ALLOWLIST`]. New panics fail; removed panics emit a
+/// ratchet note so the budget follows the count down.
+pub fn panic_discipline(
+    tree: &Tree,
+    out: &mut Vec<Finding>,
+    notes: &mut Vec<String>,
+) {
+    let budgets: BTreeMap<&str, (usize, &str)> = PANIC_ALLOWLIST
+        .iter()
+        .map(|(p, n, why)| (*p, (*n, *why)))
+        .collect();
+    for f in &tree.sources {
+        if !in_watched(&f.path) {
+            continue;
+        }
+        let count: usize = f
+            .lines
+            .iter()
+            .filter(|l| !l.is_test)
+            .map(|l| {
+                l.code.matches(".unwrap()").count()
+                    + l.code.matches(".expect(").count()
+            })
+            .sum();
+        match budgets.get(f.path.as_str()) {
+            Some((budget, _)) if count > *budget => out.push(Finding {
+                rule: "panic-discipline",
+                file: f.path.clone(),
+                line: 0,
+                message: format!(
+                    "{count} unwrap()/expect() calls exceed the allowlist \
+                     budget of {budget} — convert the new ones to anyhow \
+                     errors, or raise the budget in analysis::rules with \
+                     a soundness justification"
+                ),
+                waived: None,
+            }),
+            Some((budget, _)) if count < *budget => notes.push(format!(
+                "panic-discipline: {} holds {count} unwrap()/expect() \
+                 calls, under its budget of {budget} — ratchet the \
+                 allowlist down",
+                f.path
+            )),
+            Some(_) => {}
+            None if count > 0 => out.push(Finding {
+                rule: "panic-discipline",
+                file: f.path.clone(),
+                line: 0,
+                message: format!(
+                    "{count} unwrap()/expect() calls in a watched file \
+                     with no allowlist entry — convert them to anyhow \
+                     errors or add an annotated budget in analysis::rules"
+                ),
+                waived: None,
+            }),
+            None => {}
+        }
+    }
+}
+
+// --- rule: consistency --------------------------------------------------
+
+/// Cross-artifact drift: bench metric names vs the baseline, `make`
+/// references in CI vs Makefile targets, and the checkpoint format
+/// version vs its documentation. Returns the re-derived bench-metric
+/// name set (reported as machine-readable output — the independent
+/// derivation of what `bench-check` gates against).
+pub fn consistency(
+    tree: &Tree,
+    out: &mut Vec<Finding>,
+    notes: &mut Vec<String>,
+) -> Vec<String> {
+    let metrics = bench_metrics_vs_baseline(tree, out);
+    makefile_vs_ci(tree, out, notes);
+    checkpoint_version_vs_docs(tree, out);
+    metrics.into_iter().collect()
+}
+
+/// Derive the metric-name set the micro benches emit (expanding the
+/// `{suffix}` dtype placeholder) and require exact two-way agreement
+/// with the keys of bench/baseline.json — the same two-way contract
+/// `util::bench::check_against_baseline` enforces at run time, checked
+/// here without running anything.
+fn bench_metrics_vs_baseline(
+    tree: &Tree,
+    out: &mut Vec<Finding>,
+) -> BTreeSet<String> {
+    let mut emitted = BTreeSet::new();
+    for (path, text) in &tree.benches {
+        extract_metric_names(path, text, &mut emitted, out);
+    }
+    if tree.benches.is_empty() {
+        return emitted;
+    }
+    let Some(baseline_text) = tree.aux.get(AUX_BASELINE) else {
+        out.push(Finding {
+            rule: "consistency",
+            file: AUX_BASELINE.to_string(),
+            line: 0,
+            message: "micro benches emit metrics but bench/baseline.json \
+                      is missing"
+                .to_string(),
+            waived: None,
+        });
+        return emitted;
+    };
+    let baseline: BTreeSet<String> = match Json::parse(baseline_text) {
+        Ok(j) => match j.as_obj() {
+            Ok(o) => o.keys().cloned().collect(),
+            Err(e) => {
+                out.push(Finding {
+                    rule: "consistency",
+                    file: AUX_BASELINE.to_string(),
+                    line: 0,
+                    message: format!("baseline is not an object: {e}"),
+                    waived: None,
+                });
+                return emitted;
+            }
+        },
+        Err(e) => {
+            out.push(Finding {
+                rule: "consistency",
+                file: AUX_BASELINE.to_string(),
+                line: 0,
+                message: format!("baseline does not parse: {e}"),
+                waived: None,
+            });
+            return emitted;
+        }
+    };
+    for name in emitted.difference(&baseline) {
+        out.push(Finding {
+            rule: "consistency",
+            file: AUX_BASELINE.to_string(),
+            line: 0,
+            message: format!(
+                "benches emit metric {name:?} but the baseline does not \
+                 track it — bench-check will fail; add a baseline entry \
+                 with tolerance/direction"
+            ),
+            waived: None,
+        });
+    }
+    for name in baseline.difference(&emitted) {
+        out.push(Finding {
+            rule: "consistency",
+            file: AUX_BASELINE.to_string(),
+            line: 0,
+            message: format!(
+                "baseline tracks metric {name:?} but no micro bench emits \
+                 it — the gate would fail on a phantom metric"
+            ),
+            waived: None,
+        });
+    }
+    emitted
+}
+
+/// Pull the string literal out of every `.metric(` call in a bench
+/// source. Names are literal except the dtype-suffixed pair, which the
+/// benches spell `format!("...{suffix}")` with `suffix = dtype.name()`;
+/// the scanner expands that placeholder over the [`Dtype`] names so the
+/// derived set matches what a run would emit.
+fn extract_metric_names(
+    path: &str,
+    text: &str,
+    emitted: &mut BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let mut from = 0usize;
+    while let Some(at) = text[from..].find(".metric(") {
+        let idx = from + at;
+        from = idx + ".metric(".len();
+        let line_start = text[..idx].rfind('\n').map_or(0, |p| p + 1);
+        let line_no = text[..idx].matches('\n').count() + 1;
+        if text[line_start..idx].contains("//") {
+            continue; // commented-out call
+        }
+        // The name literal opens within the next few tokens (possibly
+        // behind `&format!(`).
+        let window_end = (idx + 200).min(text.len());
+        let window = &text[from..window_end];
+        let Some(q) = window.find('"') else {
+            out.push(Finding {
+                rule: "consistency",
+                file: path.to_string(),
+                line: line_no,
+                message: ".metric( call with no derivable name literal"
+                    .to_string(),
+                waived: None,
+            });
+            continue;
+        };
+        let lit_body = &window[q + 1..];
+        let Some(close) = lit_body.find('"') else {
+            continue;
+        };
+        let lit = &lit_body[..close];
+        if lit.contains("{suffix}") {
+            for d in [Dtype::F32, Dtype::Bf16] {
+                emitted.insert(lit.replace("{suffix}", d.name()));
+            }
+        } else if lit.contains('{') {
+            out.push(Finding {
+                rule: "consistency",
+                file: path.to_string(),
+                line: line_no,
+                message: format!(
+                    "metric name {lit:?} uses a placeholder the analyzer \
+                     cannot expand — use a literal name or the {{suffix}} \
+                     dtype convention"
+                ),
+                waived: None,
+            });
+        } else {
+            emitted.insert(lit.to_string());
+        }
+    }
+}
+
+/// Every `make X` the CI workflow runs (and every `$(MAKE) X`
+/// self-reference inside the Makefile) must resolve to a defined target —
+/// the "CI = the Makefile, verbatim" contract, machine-checked.
+fn makefile_vs_ci(
+    tree: &Tree,
+    out: &mut Vec<Finding>,
+    notes: &mut Vec<String>,
+) {
+    let Some(makefile) = tree.aux.get(AUX_MAKEFILE) else {
+        return;
+    };
+    let targets = makefile_targets(makefile);
+    if let Some(ci) = tree.aux.get(AUX_CI) {
+        for (line_no, target) in make_refs(ci, "make ") {
+            if !targets.contains(&target) {
+                out.push(Finding {
+                    rule: "consistency",
+                    file: AUX_CI.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "CI runs `make {target}` but the Makefile defines \
+                         no such target"
+                    ),
+                    waived: None,
+                });
+            }
+        }
+    } else {
+        notes.push(
+            "consistency: no CI workflow found — Makefile/CI cross-check \
+             skipped"
+                .to_string(),
+        );
+    }
+    for (line_no, target) in make_refs(makefile, "$(MAKE) ") {
+        if !targets.contains(&target) {
+            out.push(Finding {
+                rule: "consistency",
+                file: AUX_MAKEFILE.to_string(),
+                line: line_no,
+                message: format!(
+                    "Makefile recipe invokes `$(MAKE) {target}` but no \
+                     such target is defined"
+                ),
+                waived: None,
+            });
+        }
+    }
+}
+
+/// Target names defined by a Makefile (rule lines, excluding variable
+/// assignments, dot-targets like .PHONY, and recipe lines).
+pub fn makefile_targets(text: &str) -> BTreeSet<String> {
+    let mut targets = BTreeSet::new();
+    for line in text.lines() {
+        if line.starts_with('\t') || line.starts_with('#') {
+            continue;
+        }
+        let Some(colon) = line.find(':') else { continue };
+        if line[colon + 1..].starts_with('=') {
+            continue; // `NAME := value` assignment
+        }
+        let name = line[..colon].trim();
+        if !name.is_empty()
+            && !name.starts_with('.')
+            && name
+                .bytes()
+                .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            targets.insert(name.to_string());
+        }
+    }
+    targets
+}
+
+/// `(line, target)` for every `<lead>target` reference outside comments
+/// (`#` starts a comment in both YAML and Make).
+fn make_refs(text: &str, lead: &str) -> Vec<(usize, String)> {
+    let mut refs = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("");
+        let mut from = 0usize;
+        while let Some(at) = line[from..].find(lead) {
+            let idx = from + at;
+            from = idx + lead.len();
+            // `make` must start a word (not "rust-cache@v2 make"-like
+            // tails of identifiers).
+            if idx > 0 {
+                let prev = line.as_bytes()[idx - 1];
+                if prev.is_ascii_alphanumeric() || prev == b'_' || prev == b'-'
+                {
+                    continue;
+                }
+            }
+            let target: String = line[from..]
+                .chars()
+                .take_while(|c| {
+                    c.is_ascii_alphanumeric() || *c == '-' || *c == '_'
+                })
+                .collect();
+            if !target.is_empty() {
+                refs.push((i + 1, target));
+            }
+        }
+    }
+    refs
+}
+
+/// The `ADCP` on-disk version constant must match its documentation —
+/// exactly the drift class of PR 5's `checkpoint_file_bytes` re-pin,
+/// caught before a reviewer has to re-derive it.
+fn checkpoint_version_vs_docs(tree: &Tree, out: &mut Vec<Finding>) {
+    let Some(ckpt) = tree
+        .sources
+        .iter()
+        .find(|f| f.path.ends_with("runtime/checkpoint.rs"))
+    else {
+        return; // fixture trees without a checkpoint module skip this
+    };
+    let code_version = ckpt.lines.iter().find_map(|l| {
+        let tail = l.code.split("pub const VERSION: u32 =").nth(1)?;
+        tail.trim().trim_end_matches(';').trim().parse::<u32>().ok()
+    });
+    let Some(code_version) = code_version else {
+        out.push(Finding {
+            rule: "consistency",
+            file: ckpt.path.clone(),
+            line: 0,
+            message: "could not locate `pub const VERSION: u32 = N;` in \
+                      the checkpoint module"
+                .to_string(),
+            waived: None,
+        });
+        return;
+    };
+    let Some(docs) = tree.aux.get(AUX_DOCS) else {
+        out.push(Finding {
+            rule: "consistency",
+            file: AUX_DOCS.to_string(),
+            line: 0,
+            message: format!(
+                "docs/ANALYSIS.md is missing — it must pin \
+                 {DOCS_VERSION_MARK:?} {code_version}"
+            ),
+            waived: None,
+        });
+        return;
+    };
+    let documented = docs.lines().enumerate().find_map(|(i, l)| {
+        let tail = l.split(DOCS_VERSION_MARK).nth(1)?;
+        let num: String = tail
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        num.parse::<u32>().ok().map(|v| (i + 1, v))
+    });
+    match documented {
+        Some((_, v)) if v == code_version => {}
+        Some((line, v)) => out.push(Finding {
+            rule: "consistency",
+            file: AUX_DOCS.to_string(),
+            line,
+            message: format!(
+                "docs pin ADCP format version {v} but checkpoint.rs says \
+                 {code_version}"
+            ),
+            waived: None,
+        }),
+        None => out.push(Finding {
+            rule: "consistency",
+            file: AUX_DOCS.to_string(),
+            line: 0,
+            message: format!(
+                "docs never state {DOCS_VERSION_MARK:?} {code_version} — \
+                 add the pin so format bumps must touch the docs"
+            ),
+            waived: None,
+        }),
+    }
+}

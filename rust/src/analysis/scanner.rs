@@ -1,0 +1,475 @@
+//! Lightweight token scanner over Rust sources — the analyzer's front
+//! end. No AST, no external deps (the build is offline-first): a small
+//! character-level pass strips comments and string-literal *contents* so
+//! rule tokens never match documentation or message text, tracks the
+//! trailing `#[cfg(test)]` region every module in this repo uses, and
+//! parses `ANALYZE-WAIVE` comments — `(rule): reason` form — into structured
+//! waivers the rules consult.
+//!
+//! The scanner is deliberately conservative and its limits are
+//! documented (docs/ANALYSIS.md): it assumes test modules are trailing
+//! (true across the tree, and new mid-file test mods would only make
+//! scanning *more* lenient, never produce false violations on shipped
+//! code), and it matches tokens, not types — a renamed `use
+//! std::collections::HashMap as Map;` would evade it, which review
+//! catches far more easily than an unnamed import would.
+
+/// One physical source line, post-strip.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The line with comments removed and string/char-literal contents
+    /// blanked (quotes kept, so `""` still reads as an expression).
+    pub code: String,
+    /// Comment text on this line (line + block comments), used for
+    /// waiver parsing only.
+    pub comment: String,
+    /// True from the first `#[cfg(test)]` line to end of file.
+    pub is_test: bool,
+}
+
+/// A parsed `ANALYZE-WAIVE` comment (`(rule): reason` form).
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub reason: String,
+    /// Line the waiver comment sits on.
+    pub line: usize,
+    /// True when the line holds no code — the waiver then applies to the
+    /// next code line below it; a trailing waiver applies to its own
+    /// line.
+    pub standalone: bool,
+}
+
+/// A scanned source file: repo-relative path + per-line code/comments.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub waivers: Vec<Waiver>,
+}
+
+/// The marker rules look for inside comments.
+pub const WAIVE_MARK: &str = "ANALYZE-WAIVE(";
+
+impl SourceFile {
+    /// Scan `text` into stripped lines + waivers. `path` should be
+    /// repo-relative with forward slashes (`rust/src/...`).
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let (lines, mut malformed) = strip(text);
+        let mut waivers = Vec::new();
+        for l in &lines {
+            match parse_waivers(&l.comment, l.number, l.code.trim().is_empty())
+            {
+                Ok(mut ws) => waivers.append(&mut ws),
+                Err(msg) => malformed.push((l.number, msg)),
+            }
+        }
+        // Malformed waivers surface as pseudo-waivers with an empty rule;
+        // the driver turns them into findings (an unreadable waiver must
+        // fail loudly, not silently waive nothing).
+        for (line, msg) in malformed {
+            waivers.push(Waiver {
+                rule: String::new(),
+                reason: msg,
+                line,
+                standalone: false,
+            });
+        }
+        SourceFile { path: path.to_string(), lines, waivers }
+    }
+
+    /// Waivers for `rule` covering `line`: trailing waivers on the line
+    /// itself plus standalone waiver lines stacked directly above it.
+    pub fn waiver_for(&self, rule: &str, line: usize) -> Option<&Waiver> {
+        if let Some(w) = self
+            .waivers
+            .iter()
+            .find(|w| w.rule == rule && w.line == line && !w.standalone)
+        {
+            return Some(w);
+        }
+        // Walk upward through a contiguous block of standalone waiver
+        // lines (several rules may be waived for one statement).
+        let mut above = line;
+        while above > 1 {
+            above -= 1;
+            let ws: Vec<&Waiver> = self
+                .waivers
+                .iter()
+                .filter(|w| w.line == above && w.standalone)
+                .collect();
+            if ws.is_empty() {
+                return None;
+            }
+            if let Some(w) = ws.iter().find(|w| w.rule == rule) {
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+/// Parse every waiver in one line's comment text. Errors on a marker
+/// whose rule or reason is missing — an unreadable waiver is worse than
+/// none.
+fn parse_waivers(
+    comment: &str,
+    line: usize,
+    standalone: bool,
+) -> Result<Vec<Waiver>, String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(at) = rest.find(WAIVE_MARK) {
+        rest = &rest[at + WAIVE_MARK.len()..];
+        let Some(close) = rest.find(')') else {
+            return Err("unterminated ANALYZE-WAIVE(".to_string());
+        };
+        let rule = rest[..close].trim().to_string();
+        rest = &rest[close + 1..];
+        let Some(tail) = rest.strip_prefix(':') else {
+            return Err(format!(
+                "ANALYZE-WAIVE({rule}) needs a `: reason` suffix"
+            ));
+        };
+        // Reason runs to the next waiver marker or end of comment.
+        let end = tail.find(WAIVE_MARK).unwrap_or(tail.len());
+        let reason = tail[..end].trim().trim_end_matches("//").trim();
+        if rule.is_empty() || reason.is_empty() {
+            return Err(
+                "ANALYZE-WAIVE needs both a rule and a reason".to_string()
+            );
+        }
+        out.push(Waiver {
+            rule,
+            reason: reason.to_string(),
+            line,
+            standalone,
+        });
+        rest = &tail[end..];
+    }
+    Ok(out)
+}
+
+#[derive(PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+}
+
+/// Split `text` into per-line code/comment channels. Returns the lines
+/// plus any (line, message) scan diagnostics.
+#[allow(clippy::type_complexity)]
+fn strip(text: &str) -> (Vec<Line>, Vec<(usize, String)>) {
+    let bytes = text.as_bytes();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut number = 1usize;
+    let mut mode = Mode::Code;
+    let mut in_test = false;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\n' {
+            if code.contains("#[cfg(test)]") {
+                in_test = true;
+            }
+            if let Mode::LineComment = mode {
+                mode = Mode::Code;
+            }
+            lines.push(Line {
+                number,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                is_test: in_test,
+            });
+            number += 1;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                match b {
+                    b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                        mode = Mode::LineComment;
+                        i += 2;
+                        continue;
+                    }
+                    b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                        mode = Mode::BlockComment(1);
+                        i += 2;
+                        continue;
+                    }
+                    b'"' => {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                        continue;
+                    }
+                    b'r' | b'b' if is_raw_str_start(bytes, i) => {
+                        let (hashes, skip) = raw_str_open(bytes, i);
+                        code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i += skip;
+                        continue;
+                    }
+                    b'\'' => {
+                        // Char literal vs lifetime: a literal closes
+                        // within a few bytes; a lifetime has no closing
+                        // quote before a non-ident char.
+                        if let Some(len) = char_literal_len(bytes, i) {
+                            code.push_str("''");
+                            i += len;
+                            continue;
+                        }
+                        code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+                code.push(b as char);
+                i += 1;
+            }
+            Mode::LineComment => {
+                comment.push(b as char);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(b as char);
+                    i += 1;
+                }
+            }
+            Mode::Str => match b {
+                b'\\' => i += 2,
+                b'"' => {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                }
+                _ => i += 1,
+            },
+            Mode::RawStr(hashes) => {
+                if b == b'"' && closes_raw(bytes, i, hashes) {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        if code.contains("#[cfg(test)]") {
+            in_test = true;
+        }
+        lines.push(Line { number, code, comment, is_test: in_test });
+    }
+    let mut diags = Vec::new();
+    if !matches!(mode, Mode::Code | Mode::LineComment) {
+        diags.push((number, "unterminated comment or string".to_string()));
+    }
+    (lines, diags)
+}
+
+/// Does `r`/`br` at `i` open a raw string (`r"`, `r#"`, `br##"` ...)?
+fn is_raw_str_start(bytes: &[u8], i: usize) -> bool {
+    // Must not be the tail of an identifier (`for`, `attr` ...).
+    if i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+    {
+        return false;
+    }
+    let mut j = i + 1;
+    if bytes.get(i) == Some(&b'b') {
+        if bytes.get(j) != Some(&b'r') {
+            return false;
+        }
+        j += 1;
+    }
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    bytes.get(j) == Some(&b'"')
+}
+
+/// Number of `#`s and bytes to skip for the raw-string opener at `i`.
+fn raw_str_open(bytes: &[u8], i: usize) -> (usize, usize) {
+    let mut j = i + 1;
+    if bytes[i] == b'b' {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (hashes, j + 1 - i)
+}
+
+/// Does the `"` at `i` close a raw string opened with `hashes` `#`s?
+fn closes_raw(bytes: &[u8], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| bytes.get(i + k) == Some(&b'#'))
+}
+
+/// Length of a char literal starting at the `'` at `i`, or `None` for a
+/// lifetime.
+fn char_literal_len(bytes: &[u8], i: usize) -> Option<usize> {
+    match bytes.get(i + 1)? {
+        b'\\' => {
+            // Escaped char: scan to the closing quote (handles \n, \u{..}).
+            let mut j = i + 2;
+            while j < bytes.len() && j < i + 12 {
+                if bytes[j] == b'\'' {
+                    return Some(j + 1 - i);
+                }
+                j += 1;
+            }
+            None
+        }
+        _ => {
+            if bytes.get(i + 2) == Some(&b'\'') {
+                Some(3)
+            } else {
+                // Multi-byte char literal ('é') — closing quote within
+                // the UTF-8 sequence.
+                let j = i + 1 + utf8_len(bytes[i + 1]);
+                (bytes.get(j) == Some(&b'\'')).then_some(j + 1 - i)
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Word-boundary token match over stripped code: `needle` must be an
+/// identifier-like token not embedded in a longer identifier
+/// (`unsafe_code` does not hit `unsafe`; `HashMap::new` hits `HashMap`).
+pub fn word_hit(code: &str, needle: &str) -> bool {
+    let mut rest = code;
+    let mut offset = 0usize;
+    while let Some(at) = rest.find(needle) {
+        let start = offset + at;
+        let end = start + needle.len();
+        let before_ok = start == 0
+            || !is_ident(code.as_bytes()[start - 1]);
+        let after_ok = end >= code.len() || !is_ident(code.as_bytes()[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        rest = &rest[at + needle.len()..];
+        offset = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "let a = \"HashMap in a string\"; // HashMap in a comment\n\
+             /* HashMap in\na block */ let b = HashMap::new();\n",
+        );
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[0].comment.contains("HashMap in a comment"));
+        assert!(!f.lines[1].code.contains("HashMap"));
+        assert!(f.lines[2].code.contains("HashMap::new"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "let a = r#\"unsafe { }\"#; let c = '\\n'; let d: &'a str = s;\n\
+             let e = 'x';\n",
+        );
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("&'a str"));
+        assert!(!f.lines[1].code.contains('x'));
+    }
+
+    #[test]
+    fn test_region_is_trailing() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn a() {}\n#[cfg(test)]\nmod tests { fn b() {} }\n",
+        );
+        assert!(!f.lines[0].is_test);
+        assert!(f.lines[1].is_test);
+        assert!(f.lines[2].is_test);
+    }
+
+    #[test]
+    fn waiver_parse_and_lookup() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "// ANALYZE-WAIVE(determinism): report-only timing\n\
+             let t = Instant::now();\n\
+             let u = Instant::now(); // ANALYZE-WAIVE(determinism): also ok\n\
+             let v = Instant::now();\n",
+        );
+        assert_eq!(f.waivers.len(), 2);
+        assert!(f.waiver_for("determinism", 2).is_some());
+        assert!(f.waiver_for("determinism", 3).is_some());
+        assert!(f.waiver_for("determinism", 4).is_none());
+        assert!(f.waiver_for("no-unsafe", 2).is_none());
+    }
+
+    #[test]
+    fn stacked_standalone_waivers() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "// ANALYZE-WAIVE(determinism): threads are rank-ordered\n\
+             // ANALYZE-WAIVE(no-unsafe): ffi shim\n\
+             thread::spawn(|| {});\n",
+        );
+        assert!(f.waiver_for("determinism", 3).is_some());
+        assert!(f.waiver_for("no-unsafe", 3).is_some());
+    }
+
+    #[test]
+    fn malformed_waiver_is_flagged() {
+        let f = SourceFile::parse("x.rs", "// ANALYZE-WAIVE(determinism)\n");
+        assert_eq!(f.waivers.len(), 1);
+        assert!(f.waivers[0].rule.is_empty());
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(word_hit("unsafe fn f()", "unsafe"));
+        assert!(!word_hit("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(word_hit("HashMap::new()", "HashMap"));
+        assert!(!word_hit("MyHashMapLike", "HashMap"));
+    }
+}

@@ -613,6 +613,7 @@ impl Engine {
     /// first), updating the blob in place. Returns the report for the
     /// steps this call executed.
     pub fn run(&mut self, sources: RankSources) -> Result<EngineReport> {
+        // ANALYZE-WAIVE(determinism): wall-clock report fields only
         let started = Instant::now();
         let plan = self.plan.clone();
         ensure!(!sources.is_empty(), "need at least one rank");
@@ -875,6 +876,7 @@ fn spawn_full_producers(
         let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
         rx_ranks.push(rx);
         let ship = ship.clone();
+        // ANALYZE-WAIVE(determinism): producers feed per-rank channels drained in rank order
         handles.push(thread::spawn(move || -> usize {
             let mut grad = vec![0f32; params_len];
             for s in 1..=start {
@@ -922,6 +924,7 @@ fn spawn_grouped_producers(
         rx_ranks.push(rx);
         let tiles = tiles.clone();
         let extents = extents.clone();
+        // ANALYZE-WAIVE(determinism): producers feed per-rank channels drained in rank order
         handles.push(thread::spawn(move || -> usize {
             let mut scratch = Vec::new();
             for s in 1..=start {
@@ -1035,6 +1038,7 @@ fn leader_loop(
             // Step: whatever this tile's landing makes ready.
             let dt = match plan.granularity {
                 StepGranularity::Tasks if !ready[b].is_empty() => {
+                    // ANALYZE-WAIVE(determinism): step-time report metric only
                     let t0 = Instant::now();
                     opt.step_tasks_typed(
                         blob, &grad, t, plan.lr, plan.wd, &ready[b],
@@ -1044,6 +1048,7 @@ fn leader_loop(
                 StepGranularity::Tasks => 0.0,
                 StepGranularity::Groups => {
                     let g = tiles.len() - 1 - b;
+                    // ANALYZE-WAIVE(determinism): step-time report metric only
                     let t0 = Instant::now();
                     opt.step_group_typed(
                         blob,
@@ -1056,6 +1061,7 @@ fn leader_loop(
                     t0.elapsed().as_secs_f64()
                 }
                 StepGranularity::WholeImage if Some(b) == last_visit => {
+                    // ANALYZE-WAIVE(determinism): step-time report metric only
                     let t0 = Instant::now();
                     opt.step_typed(blob, &grad, t, plan.lr, plan.wd)?;
                     t0.elapsed().as_secs_f64()

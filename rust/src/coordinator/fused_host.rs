@@ -238,6 +238,7 @@ pub fn fused_host_step(
     lr: f32,
     wd: f32,
 ) -> Result<EngineReport> {
+    // ANALYZE-WAIVE(determinism): wall-clock report fields only
     let started = Instant::now();
     let extents = engine.group_extents();
     ensure!(
@@ -264,6 +265,7 @@ pub fn fused_host_step(
         let live = 4 * gbuf.len();
         peak = peak.max(live);
         curve.push(live);
+        // ANALYZE-WAIVE(determinism): compute-time report metric only
         let t0 = Instant::now();
         engine.step_group(blob, g, &gbuf, t, lr, wd)?;
         compute += t0.elapsed().as_secs_f64();

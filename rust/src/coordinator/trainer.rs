@@ -159,7 +159,9 @@ impl<'s> Trainer<'s> {
         let mut curve = Vec::new();
         let mut eval_curve = Vec::new();
         let mut last_loss = f32::NAN;
+        // ANALYZE-WAIVE(determinism): wall-clock report fields only
         let started = Instant::now();
+        // ANALYZE-WAIVE(determinism): steps/s logging only
         let mut step_t0 = Instant::now();
 
         for step in 1..=self.cfg.steps {
@@ -182,6 +184,7 @@ impl<'s> Trainer<'s> {
                 let slots = self.read_metrics()?;
                 let dt = step_t0.elapsed().as_secs_f64()
                     / self.cfg.log_every as f64;
+                // ANALYZE-WAIVE(determinism): steps/s logging only
                 step_t0 = Instant::now();
                 let m = StepMetrics::from_slots(step, &slots, lr, dt);
                 last_loss = m.loss;
@@ -194,6 +197,7 @@ impl<'s> Trainer<'s> {
                 && self.val_loader.is_some()
                 && (step % self.cfg.eval_every == 0 || step == self.cfg.steps)
             {
+                // ANALYZE-WAIVE(determinism): eval-time logging only
                 let eval_t0 = Instant::now();
                 let e = self.evaluate()?;
                 eval_curve.push((step, e.perplexity(), e.accuracy()));

@@ -136,6 +136,7 @@ pub fn run_local_sgd(
     rounds: usize,
     sync_every: usize,
 ) -> Result<WorkerReport> {
+    // ANALYZE-WAIVE(determinism): wall-clock report fields only
     let started = std::time::Instant::now();
     let layout_key = Manifest::layout_key(&base_cfg.preset, &base_cfg.opt);
 
@@ -159,6 +160,7 @@ pub fn run_local_sgd(
         };
         let dir = artifacts_dir.clone();
         let rank_layout_key = layout_key.clone();
+        // ANALYZE-WAIVE(determinism): rank threads sync on rank-ordered channels
         handles.push(thread::spawn(move || -> Result<()> {
             let session = Session::open(&dir)?;
             let layout =

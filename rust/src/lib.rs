@@ -14,7 +14,13 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `adalomo` binary is self-contained.
+//!
+//! The tree is 100% safe Rust, and the `analyze` static pass ([`analysis`])
+//! keeps it that way — the forbid below makes any future `unsafe` a
+//! compile error until it is explicitly, visibly waived.
+#![forbid(unsafe_code)]
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -16,8 +16,10 @@
 //! adalomo train      --plan pipelined-fused [--resume ckpt]       (unified engine)
 //! adalomo checkpoint-inspect --ckpt engine_ckpt.bin               (ckpt header dump)
 //! adalomo hparams                                                 (Tables 3/6/7)
+//! adalomo analyze    [--root DIR --json REPORT.json]              (static analysis)
 //! adalomo info                                                    (artifacts summary)
 //! ```
+#![forbid(unsafe_code)]
 
 use std::path::Path;
 
@@ -62,6 +64,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "checkpoint-inspect" => cmd_checkpoint_inspect(&args),
         "hparams" => cmd_hparams(&args),
+        "analyze" => cmd_analyze(&args),
         "bench-check" => cmd_bench_check(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -95,6 +98,10 @@ USAGE: adalomo <subcommand> [--flag value ...]
   checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH;
               --dtype D asserts the stored dtype is D)
   hparams     the paper's hyper-parameter tables (3/6/7)
+  analyze     static analysis over rust/src + cross-artifact checks:
+              no-unsafe, determinism, panic-discipline, consistency
+              (--root DIR, --json REPORT.json, --list shows the rules);
+              exits nonzero on any unwaivered finding
   bench-check gate measured bench metrics against bench/baseline.json
   info        artifacts + manifest summary
 
@@ -708,6 +715,67 @@ fn cmd_hparams(args: &Args) -> Result<()> {
             ]);
         }
         t.print();
+    }
+    Ok(())
+}
+
+/// The `make analyze` entry point: scan the tree, print every finding,
+/// write the JSON report, and exit nonzero if any violation is not
+/// explicitly waived. docs/ANALYSIS.md documents the rules and the
+/// `ANALYZE-WAIVE` comment syntax.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let root = args.str_or("root", ".");
+    let json_path = args.get("json").map(str::to_string);
+    let list = args.bool("list");
+    args.finish()?;
+    if list {
+        let mut t = Table::new("analyze — rule registry")
+            .header(&["rule", "checks that"]);
+        for (id, desc) in adalomo::analysis::rules::RULES {
+            t.row(vec![(*id).into(), (*desc).into()]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let report = adalomo::analysis::run(Path::new(&root))?;
+    if let Some(path) = &json_path {
+        std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+    }
+    let violations = report.violations();
+    for f in &violations {
+        if f.line > 0 {
+            println!("VIOLATION [{}] {}:{}: {}", f.rule, f.file, f.line, f.message);
+        } else {
+            println!("VIOLATION [{}] {}: {}", f.rule, f.file, f.message);
+        }
+    }
+    for f in report.findings.iter().filter(|f| f.waived.is_some()) {
+        println!(
+            "waived    [{}] {}:{}: {}",
+            f.rule,
+            f.file,
+            f.line,
+            f.waived.as_deref().unwrap_or("")
+        );
+    }
+    for n in &report.notes {
+        println!("note      {n}");
+    }
+    println!(
+        "analyze: {} files, {} bench metrics derived, {} violation(s), \
+         {} waived",
+        report.files_scanned,
+        report.bench_metrics.len(),
+        violations.len(),
+        report.waived_count()
+    );
+    if !violations.is_empty() {
+        bail!(
+            "{} unwaivered finding(s) — fix them or add \
+             `// ANALYZE-WAIVE(rule): reason` (see docs/ANALYSIS.md)",
+            violations.len()
+        );
     }
     Ok(())
 }

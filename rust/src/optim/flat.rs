@@ -12,6 +12,11 @@
 //! (AdaLomo Alg. 1; factored second moments à la Anil et al. 2019):
 //! operate on contiguous state with minimal temporaries.
 //!
+//! Like [`super::update`], this is a blessed float-kernel file under the
+//! `analyze` determinism rule (docs/ANALYSIS.md): the norm/trust-ratio
+//! reductions here run in a fixed order regardless of shard plan, which
+//! is exactly what the byte-identity guarantees below rest on.
+//!
 //! Parallelism comes in two shard plans (see [`ShardMode`]):
 //!
 //! * **`Segments`** — whole-tensor ownership balanced by greedy LPT (the

@@ -6,6 +6,12 @@
 //! Everything here is deterministic by construction: work is partitioned by
 //! *data position*, never by thread arrival order, so a result never
 //! depends on scheduling.
+//!
+//! This module is the tree's one blessed thread home: the `analyze`
+//! determinism rule (docs/ANALYSIS.md) flags `thread::spawn` everywhere
+//! else in coordinator/optim/runtime, so new parallelism either lands
+//! here or carries an explicit waiver with a schedule-independence
+//! argument.
 
 /// Default shard/worker count: one per available hardware thread.
 pub fn default_shards() -> usize {

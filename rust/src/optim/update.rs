@@ -12,6 +12,12 @@
 //!   The factored wrappers still allocate one `u` temporary per call; the
 //!   flat engine instead passes a persistent per-worker scratch buffer.
 //!
+//! This file (with [`super::flat`]) is a blessed float-kernel file under
+//! the `analyze` determinism rule (docs/ANALYSIS.md): transcendentals and
+//! `f32` reductions are allowed *here*, in a fixed and tested evaluation
+//! order, and flagged everywhere else in the watched tree — bitwise
+//! parity across ExecPlan cells depends on that order never forking.
+//!
 //! Bias corrections use `powf(t as f32)` rather than `powi(t as i32)`:
 //! the latter wraps for steps beyond `i32::MAX` and produces a garbage
 //! (possibly negative) correction; `powf` saturates cleanly to 0 for

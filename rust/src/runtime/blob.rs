@@ -1,5 +1,11 @@
 //! Host-side views of the training-state blob.
 //!
+//! Load paths here parse **untrusted bytes**, so — like
+//! `runtime/checkpoint.rs` — this file's `analyze` panic budget is
+//! pinned at zero `unwrap()`/`expect()` in non-test code
+//! (docs/ANALYSIS.md): parse failures surface as `anyhow` errors, never
+//! panics.
+//!
 //! Two types share this module:
 //!
 //! * [`HostBlob`] — the all-f32 checkpoint-boundary view (save/load/

@@ -10,6 +10,13 @@
 //! `ADCP` magic + version word make incompatible readers fail loudly
 //! instead of misparsing.
 //!
+//! The read path parses **untrusted bytes** and must never panic: every
+//! length is bounds-checked before use, the fuzz test
+//! `mutated_headers_never_panic` pins it, and the `analyze`
+//! panic-discipline rule budgets this file at zero `unwrap()`/`expect()`
+//! in non-test code (docs/ANALYSIS.md). Keep new read-path errors on the
+//! `anyhow` path.
+//!
 //! This module sits BELOW the coordinator layer, so it cannot name
 //! `ExecPlan` directly: [`PlanRecord`] is the plain-data mirror the
 //! coordinator converts to and from. The small float codecs here

@@ -1,6 +1,6 @@
 //! PJRT session: HLO loading, compilation cache, typed execution.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -25,7 +25,9 @@ pub enum HostArg<'a> {
 pub struct Session {
     client: PjRtClient,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    // BTreeMap (not HashMap) so any future iteration over the cache is
+    // deterministic — the `analyze` determinism rule pins this.
+    cache: Mutex<BTreeMap<String, PjRtLoadedExecutable>>,
     stats: Mutex<SessionStats>,
 }
 
@@ -46,7 +48,7 @@ impl Session {
         Ok(Session {
             client,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
             stats: Mutex::new(SessionStats::default()),
         })
     }
@@ -78,6 +80,7 @@ impl Session {
         }
         let entry = self.manifest.entry(entry_name)?;
         let path = self.manifest.hlo_path(entry);
+        // ANALYZE-WAIVE(determinism): compile-time stats only, never fed back
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("bad path"))?,
@@ -157,6 +160,7 @@ impl Session {
     ) -> Result<PjRtBuffer> {
         let entry = self.manifest.entry(entry_name)?;
         self.check_args(entry, args.len())?;
+        // ANALYZE-WAIVE(determinism): execute-time stats only, never fed back
         let t0 = Instant::now();
         let mut out = self.with_exe(entry_name, |exe| {
             exe.execute_b(args).map_err(|e| anyhow!("{entry_name}: {e:?}"))

@@ -1,0 +1,195 @@
+//! End-to-end tests for the `analyze` static-analysis pass: the library
+//! API over the real checkout, and the `adalomo analyze` binary's exit
+//! codes over seeded-violation fixture trees (one per rule) and the
+//! clean tree.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use adalomo::analysis;
+use adalomo::util::json::Json;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The tree as committed must carry zero unwaivered findings — this is
+/// the library-level twin of the `make analyze` gate.
+#[test]
+fn clean_tree_has_no_violations() {
+    let report = analysis::run(&repo_root()).expect("analyze runs");
+    let violations = report.violations();
+    assert!(
+        violations.is_empty(),
+        "unwaivered findings on the committed tree: {violations:#?}"
+    );
+    assert!(report.files_scanned > 20, "tree walk looks too small");
+}
+
+/// The consistency rule must independently re-derive the bench-metric
+/// name set that `bench-check` gates against: exactly the keys of
+/// bench/baseline.json.
+#[test]
+fn consistency_rederives_bench_metric_set() {
+    let report = analysis::run(&repo_root()).expect("analyze runs");
+    let baseline_text =
+        std::fs::read_to_string(repo_root().join("bench/baseline.json"))
+            .expect("baseline exists");
+    let baseline = Json::parse(&baseline_text).expect("baseline parses");
+    let keys: Vec<String> =
+        baseline.as_obj().expect("object").keys().cloned().collect();
+    assert_eq!(
+        report.bench_metrics, keys,
+        "statically derived metric set != baseline keys"
+    );
+    assert!(
+        report.bench_metrics.len() >= 13,
+        "expected the full tracked-metric set, got {:?}",
+        report.bench_metrics
+    );
+}
+
+/// Scratch area for fixture trees. Unique per test (no clocks/randomness:
+/// pid + test name), cleaned up on entry so reruns start fresh.
+fn fixture_root(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("adalomo-analyze-{}-{test}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("rust/src")).expect("mkdir fixture");
+    dir
+}
+
+fn write(root: &Path, rel: &str, text: &str) {
+    let path = root.join(rel);
+    std::fs::create_dir_all(path.parent().expect("parent")).expect("mkdir");
+    std::fs::write(path, text).expect("write fixture file");
+}
+
+/// Run `adalomo analyze --root <root>` and return (exit_code, stdout).
+fn run_analyze(root: &Path) -> (i32, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_adalomo"))
+        .args(["analyze", "--root"])
+        .arg(root)
+        .arg("--json")
+        .arg(root.join("report.json"))
+        .output()
+        .expect("spawn adalomo analyze");
+    (
+        out.status.code().expect("exit code"),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+    )
+}
+
+/// Every rule's seeded violation must drive a nonzero exit, and the
+/// fixed fixture must come back clean — the binary-level acceptance
+/// criterion for the gate.
+#[test]
+fn binary_exits_nonzero_on_each_seeded_rule_violation() {
+    // (rule, file, content) — one minimal violation per registry rule.
+    let seeds: &[(&str, &str, &str)] = &[
+        (
+            "waiver-syntax",
+            "rust/src/coordinator/x.rs",
+            "// ANALYZE-WAIVE(determinism) missing colon\nfn f() {}\n",
+        ),
+        ("no-unsafe", "rust/src/coordinator/x.rs", "unsafe fn f() {}\n"),
+        (
+            "determinism",
+            "rust/src/coordinator/x.rs",
+            "use std::collections::HashMap;\n",
+        ),
+        (
+            "panic-discipline",
+            "rust/src/coordinator/x.rs",
+            "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        ),
+        (
+            "consistency",
+            "rust/src/runtime/checkpoint.rs",
+            "pub const VERSION: u32 = 2;\n", // no docs pin anywhere
+        ),
+    ];
+    for (rule, file, content) in seeds {
+        let root = fixture_root(&format!("seed-{rule}"));
+        write(&root, file, content);
+        let (code, stdout) = run_analyze(&root);
+        assert_eq!(
+            code, 1,
+            "{rule}: seeded violation must exit 1; stdout:\n{stdout}"
+        );
+        assert!(
+            stdout.contains(&format!("VIOLATION [{rule}]")),
+            "{rule}: violation line missing from output:\n{stdout}"
+        );
+        // The JSON report is written even on failure and attributes the
+        // violation to the right rule.
+        let report =
+            std::fs::read_to_string(root.join("report.json")).expect("json");
+        let j = Json::parse(&report).expect("report parses");
+        assert!(
+            j.get("rules")
+                .and_then(|r| r.get(rule))
+                .and_then(|r| r.get("violations"))
+                .and_then(|v| v.as_usize())
+                .expect("rule counter")
+                >= 1,
+            "{rule}: JSON report counter not bumped"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// A fixture with the violation fixed (or waived) exits 0 — the gate
+/// passes clean trees, not just fails dirty ones.
+#[test]
+fn binary_exits_zero_on_clean_fixture() {
+    let root = fixture_root("clean");
+    write(
+        &root,
+        "rust/src/coordinator/x.rs",
+        "use std::collections::BTreeMap;\n\
+         pub fn f() -> BTreeMap<u32, u32> {\n    BTreeMap::new()\n}\n",
+    );
+    write(
+        &root,
+        "rust/src/runtime/y.rs",
+        "pub fn t() -> std::time::Instant {\n    \
+         // ANALYZE-WAIVE(determinism): report-only timing\n    \
+         std::time::Instant::now()\n}\n",
+    );
+    let (code, stdout) = run_analyze(&root);
+    assert_eq!(code, 0, "clean fixture must exit 0; stdout:\n{stdout}");
+    assert!(
+        stdout.contains("1 waived"),
+        "waived finding should be reported:\n{stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The shipped binary exits 0 on the shipped tree — the exact command
+/// `make analyze` runs in CI.
+#[test]
+fn binary_exits_zero_on_real_tree() {
+    let root = fixture_root("real");
+    let out = Command::new(env!("CARGO_BIN_EXE_adalomo"))
+        .args(["analyze", "--root"])
+        .arg(repo_root())
+        .arg("--json")
+        .arg(root.join("report.json"))
+        .output()
+        .expect("spawn adalomo analyze");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "analyze must pass on the committed tree; stdout:\n{stdout}"
+    );
+    let report =
+        std::fs::read_to_string(root.join("report.json")).expect("json");
+    let j = Json::parse(&report).expect("report parses");
+    assert_eq!(
+        j.get("violations").and_then(|v| v.as_usize()).expect("count"),
+        0
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
