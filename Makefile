@@ -72,7 +72,11 @@ bench-bless: bench-json
 # header (step counter + plan position) in one shot. Runs BOTH storage
 # dtypes: the bf16 leg additionally asserts (checkpoint-inspect --dtype)
 # that the resumed file really stores bf16, and that it undercuts the f32
-# twin's size (the tentpole's 2x claim, smoke-tested end to end).
+# twin's size (the tentpole's 2x claim, smoke-tested end to end). A third
+# cell runs the q8 wire rung (--wire q8) so the checkpointed
+# error-feedback accumulators are exercised across a real suspend/resume:
+# the resume must land byte-identical too, and checkpoint-inspect --wire
+# asserts the rung survived the round trip.
 CKPT_SMOKE_DIR := $(CURDIR)/target/ckpt-smoke
 ckpt-smoke:
 	rm -rf $(CKPT_SMOKE_DIR) && mkdir -p $(CKPT_SMOKE_DIR)
@@ -103,7 +107,19 @@ ckpt-smoke:
 	@test $$(wc -c < $(CKPT_SMOKE_DIR)/full16.bin) -lt \
 		$$(( $$(wc -c < $(CKPT_SMOKE_DIR)/full.bin) * 55 / 100 )) \
 		|| { echo "bf16 checkpoint not under 55% of f32"; exit 1; }
-	@echo "ckpt-smoke OK: suspend/resume reproduced both dtypes byte-for-byte; bf16 file under 55% of f32"
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 --wire q8 \
+		--out $(CKPT_SMOKE_DIR)/fullq8.bin
+	$(CARGO) run --release --quiet -- train --plan pipelined-fused \
+		--preset nano --steps 6 --ranks 2 --wire q8 --suspend-at 3 \
+		--out $(CKPT_SMOKE_DIR)/midq8.bin
+	$(CARGO) run --release --quiet -- train \
+		--resume $(CKPT_SMOKE_DIR)/midq8.bin \
+		--out $(CKPT_SMOKE_DIR)/resumedq8.bin
+	$(CARGO) run --release --quiet -- checkpoint-inspect \
+		--ckpt $(CKPT_SMOKE_DIR)/resumedq8.bin --dtype f32 --wire q8
+	cmp $(CKPT_SMOKE_DIR)/fullq8.bin $(CKPT_SMOKE_DIR)/resumedq8.bin
+	@echo "ckpt-smoke OK: suspend/resume reproduced both dtypes and the q8 wire byte-for-byte; bf16 file under 55% of f32"
 
 fmt:
 	$(CARGO) fmt --all -- --check

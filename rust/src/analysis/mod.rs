@@ -37,6 +37,8 @@ pub const AUX_MAKEFILE: &str = "Makefile";
 pub const AUX_CI: &str = ".github/workflows/ci.yml";
 pub const AUX_BASELINE: &str = "bench/baseline.json";
 pub const AUX_DOCS: &str = "docs/ANALYSIS.md";
+pub const AUX_README: &str = "README.md";
+pub const AUX_EXCHANGE: &str = "docs/EXCHANGE.md";
 
 /// One rule hit. `line == 0` marks a file-level finding (missing
 /// attribute, count over budget, artifact drift).
@@ -98,7 +100,14 @@ impl Tree {
                 tree.benches.push((rel, std::fs::read_to_string(&p)?));
             }
         }
-        for key in [AUX_MAKEFILE, AUX_CI, AUX_BASELINE, AUX_DOCS] {
+        for key in [
+            AUX_MAKEFILE,
+            AUX_CI,
+            AUX_BASELINE,
+            AUX_DOCS,
+            AUX_README,
+            AUX_EXCHANGE,
+        ] {
             if let Ok(text) = std::fs::read_to_string(root.join(key)) {
                 tree.aux.insert(key.to_string(), text);
             }
@@ -495,6 +504,51 @@ mod tests {
         t.aux.insert(
             AUX_DOCS.to_string(),
             "current pin. ADCP format version: 2\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+    }
+
+    #[test]
+    fn readme_make_references_must_exist() {
+        let mut t = Tree::default();
+        t.aux.insert(
+            AUX_MAKEFILE.to_string(),
+            "build:\n\tcargo build\n".to_string(),
+        );
+        t.aux.insert(
+            AUX_README.to_string(),
+            "Run `make build` to get started.\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+        t.aux.insert(
+            AUX_README.to_string(),
+            "Run `make imaginary` to get started.\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        // Comments (and markdown headings, which share the `#` lead)
+        // don't count as references.
+        t.aux.insert(
+            AUX_README.to_string(),
+            "# how to make things\nRun `make build`.\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 0);
+    }
+
+    #[test]
+    fn q8_block_size_must_match_exchange_docs() {
+        let coll = "pub const Q8_BLOCK: usize = 64;\n";
+        let mut t =
+            tree_of(&[("rust/src/coordinator/collective.rs", coll)]);
+        // No docs/EXCHANGE.md at all: violation.
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        t.aux.insert(
+            AUX_EXCHANGE.to_string(),
+            "stale pin. q8 block size: 32\n".to_string(),
+        );
+        assert_eq!(violations_of(&t, "consistency"), 1);
+        t.aux.insert(
+            AUX_EXCHANGE.to_string(),
+            "current pin. q8 block size: 64\n".to_string(),
         );
         assert_eq!(violations_of(&t, "consistency"), 0);
     }

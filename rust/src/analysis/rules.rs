@@ -9,7 +9,10 @@ use crate::tensor::Dtype;
 use crate::util::json::Json;
 
 use super::scanner::word_hit;
-use super::{Finding, Tree, AUX_BASELINE, AUX_CI, AUX_DOCS, AUX_MAKEFILE};
+use super::{
+    Finding, Tree, AUX_BASELINE, AUX_CI, AUX_DOCS, AUX_EXCHANGE,
+    AUX_MAKEFILE, AUX_README,
+};
 
 /// Rule ids + one-line descriptions (the `analyze --list` output and the
 /// JSON report's rule table).
@@ -35,8 +38,9 @@ pub const RULES: &[(&str, &str)] = &[
     ),
     (
         "consistency",
-        "bench metric names, Makefile targets vs CI steps, and the ADCP \
-         checkpoint version stay in sync across artifacts",
+        "bench metric names, Makefile targets vs CI steps and README \
+         references, the ADCP checkpoint version, and the q8 wire block \
+         size stay in sync across artifacts",
     ),
 ];
 
@@ -138,6 +142,10 @@ pub const PANIC_ALLOWLIST: &[(&str, usize, &str)] = &[
 /// The string a waiver line must mention in docs/ANALYSIS.md's version
 /// pin, e.g. `ADCP format version: 2`.
 pub const DOCS_VERSION_MARK: &str = "ADCP format version:";
+
+/// The wire-format pin docs/EXCHANGE.md must carry, e.g.
+/// `q8 block size: 64` — the on-the-wire contract of the q8 rung.
+pub const DOCS_Q8_MARK: &str = "q8 block size:";
 
 fn in_watched(path: &str) -> bool {
     WATCHED_DIRS.iter().any(|d| path.starts_with(d))
@@ -369,6 +377,7 @@ pub fn consistency(
     let metrics = bench_metrics_vs_baseline(tree, out);
     makefile_vs_ci(tree, out, notes);
     checkpoint_version_vs_docs(tree, out);
+    q8_block_vs_docs(tree, out);
     metrics.into_iter().collect()
 }
 
@@ -515,9 +524,11 @@ fn extract_metric_names(
     }
 }
 
-/// Every `make X` the CI workflow runs (and every `$(MAKE) X`
-/// self-reference inside the Makefile) must resolve to a defined target —
-/// the "CI = the Makefile, verbatim" contract, machine-checked.
+/// Every `make X` the CI workflow runs or the README quotes (and every
+/// `$(MAKE) X` self-reference inside the Makefile) must resolve to a
+/// defined target — the "CI = the Makefile, verbatim" contract,
+/// machine-checked, with the README held to the same standard so its
+/// quickstart never rots.
 fn makefile_vs_ci(
     tree: &Tree,
     out: &mut Vec<Finding>,
@@ -548,6 +559,22 @@ fn makefile_vs_ci(
              skipped"
                 .to_string(),
         );
+    }
+    if let Some(readme) = tree.aux.get(AUX_README) {
+        for (line_no, target) in make_refs(readme, "make ") {
+            if !targets.contains(&target) {
+                out.push(Finding {
+                    rule: "consistency",
+                    file: AUX_README.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "README references `make {target}` but the \
+                         Makefile defines no such target"
+                    ),
+                    waived: None,
+                });
+            }
+        }
     }
     for (line_no, target) in make_refs(makefile, "$(MAKE) ") {
         if !targets.contains(&target) {
@@ -691,6 +718,81 @@ fn checkpoint_version_vs_docs(tree: &Tree, out: &mut Vec<Finding>) {
             message: format!(
                 "docs never state {DOCS_VERSION_MARK:?} {code_version} — \
                  add the pin so format bumps must touch the docs"
+            ),
+            waived: None,
+        }),
+    }
+}
+
+/// The q8 wire rung's block size is an on-the-wire AND on-disk contract
+/// (block scales ride the exchange; error-feedback state rides ADCP v3):
+/// the constant in collective.rs must match docs/EXCHANGE.md's pin —
+/// the same drift class as the ADCP version check above.
+fn q8_block_vs_docs(tree: &Tree, out: &mut Vec<Finding>) {
+    let Some(coll) = tree
+        .sources
+        .iter()
+        .find(|f| f.path.ends_with("coordinator/collective.rs"))
+    else {
+        return; // fixture trees without the collective module skip this
+    };
+    let code_block = coll.lines.iter().find_map(|l| {
+        let tail = l.code.split("pub const Q8_BLOCK: usize =").nth(1)?;
+        tail.trim().trim_end_matches(';').trim().parse::<usize>().ok()
+    });
+    let Some(code_block) = code_block else {
+        out.push(Finding {
+            rule: "consistency",
+            file: coll.path.clone(),
+            line: 0,
+            message: "could not locate `pub const Q8_BLOCK: usize = N;` \
+                      in the collective module"
+                .to_string(),
+            waived: None,
+        });
+        return;
+    };
+    let Some(docs) = tree.aux.get(AUX_EXCHANGE) else {
+        out.push(Finding {
+            rule: "consistency",
+            file: AUX_EXCHANGE.to_string(),
+            line: 0,
+            message: format!(
+                "docs/EXCHANGE.md is missing — it must pin \
+                 {DOCS_Q8_MARK:?} {code_block}"
+            ),
+            waived: None,
+        });
+        return;
+    };
+    let documented = docs.lines().enumerate().find_map(|(i, l)| {
+        let tail = l.split(DOCS_Q8_MARK).nth(1)?;
+        let num: String = tail
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        num.parse::<usize>().ok().map(|v| (i + 1, v))
+    });
+    match documented {
+        Some((_, v)) if v == code_block => {}
+        Some((line, v)) => out.push(Finding {
+            rule: "consistency",
+            file: AUX_EXCHANGE.to_string(),
+            line,
+            message: format!(
+                "docs pin a q8 block size of {v} but collective.rs says \
+                 {code_block}"
+            ),
+            waived: None,
+        }),
+        None => out.push(Finding {
+            rule: "consistency",
+            file: AUX_EXCHANGE.to_string(),
+            line: 0,
+            message: format!(
+                "docs never state {DOCS_Q8_MARK:?} {code_block} — add the \
+                 pin so wire-format changes must touch the docs"
             ),
             waived: None,
         }),

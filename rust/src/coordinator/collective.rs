@@ -1,4 +1,5 @@
-//! Ring-collective cost model (the NVLink fabric substitute).
+//! Ring-collective cost model (the NVLink fabric substitute) and the
+//! wire-compression ladder.
 //!
 //! Standard alpha-beta model on a ring of `n` ranks: each of the (n-1)
 //! steps moves `bytes/n` per rank, so
@@ -6,8 +7,17 @@
 //! All-reduce = reduce-scatter + all-gather. Used by the throughput report
 //! and by the worker pool to model what real NCCL collectives would cost
 //! alongside the measured local step times.
+//!
+//! [`WireCodec`] is the second half of this module: the encoding bucket
+//! payloads ride the wire in during the engine's gradient exchange
+//! (f32 identity | bf16 round-trip | blockwise int8 with error
+//! feedback). The codec decides both the *bytes* a tile costs on the
+//! fabric model and the *values* the leader's f32 reduction tree sees —
+//! docs/EXCHANGE.md specifies the format per rung.
 
-use crate::tensor::Dtype;
+use anyhow::{bail, Result};
+
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Dtype};
 
 #[derive(Debug, Clone, Copy)]
 pub struct Fabric {
@@ -36,6 +46,170 @@ impl Default for Fabric {
     fn default() -> Self {
         // NVLink-class: ~8 µs hop latency, 170 GB/s effective per link.
         Fabric { alpha: 8e-6, bw: 170e9 }
+    }
+}
+
+/// Elements per q8 quantization block. Each block ships one f32 scale
+/// next to its `Q8_BLOCK` signed bytes, so the q8 wire cost is
+/// `1 + 4/64 = 1.0625` bytes/element — documented as the block-size pin
+/// in docs/EXCHANGE.md (the analysis pass cross-checks the two).
+pub const Q8_BLOCK: usize = 64;
+
+/// One rung of the wire-compression ladder: how a bucket payload is
+/// encoded for the exchange, independent of the *storage* dtype the
+/// parameters and optimizer state live at.
+///
+/// The engine round-trips every received per-rank chunk through the
+/// codec (encode + immediate decode — the host mirror never keeps the
+/// encoded form) and then reduces the decoded values in an f32 tree in
+/// rank order, so the reduction stays deterministic at every rung.
+///
+/// ```
+/// use adalomo::coordinator::collective::WireCodec;
+///
+/// // 128 q8 elements = 128 payload bytes + 2 block scales of 4 bytes.
+/// assert_eq!(WireCodec::Q8Block.payload_bytes(128), 128 + 8);
+/// assert_eq!(WireCodec::F32.payload_bytes(128), 512);
+/// assert_eq!(WireCodec::parse("bf16").unwrap(), WireCodec::Bf16);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Raw IEEE-754 f32 — the identity rung. Bitwise-identical to the
+    /// pre-ladder exchange (no value ever changes).
+    F32,
+    /// Element-wise bf16 round-trip (round-to-nearest-even on encode,
+    /// exact widening on decode). Tiling-independent, so cross-plan
+    /// bitwise parity at a fixed wire dtype is preserved.
+    Bf16,
+    /// Blockwise int8: each [`Q8_BLOCK`]-element block is scaled by
+    /// `max|x| / 127` and rounded to a signed byte, with per-rank
+    /// error-feedback residuals re-injecting the quantization error
+    /// into that rank's next bucket.
+    Q8Block,
+}
+
+impl WireCodec {
+    /// Short rung name (`f32` | `bf16` | `q8`) — the `--wire` CLI
+    /// vocabulary, the bench-metric suffix, and [`parse`](Self::parse)'s
+    /// inverse.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::F32 => "f32",
+            WireCodec::Bf16 => "bf16",
+            WireCodec::Q8Block => "q8",
+        }
+    }
+
+    /// Parse a rung name as printed by [`name`](Self::name).
+    pub fn parse(s: &str) -> Result<WireCodec> {
+        match s {
+            "f32" => Ok(WireCodec::F32),
+            "bf16" => Ok(WireCodec::Bf16),
+            "q8" => Ok(WireCodec::Q8Block),
+            other => bail!("unknown wire codec {other:?} (f32|bf16|q8)"),
+        }
+    }
+
+    /// The rung a plan defaults to when none is chosen explicitly: the
+    /// wire follows the storage dtype (bf16 storage already shipped
+    /// bf16-sized buckets before the ladder existed; q8 is always an
+    /// explicit opt-in).
+    pub fn default_for(dtype: Dtype) -> WireCodec {
+        match dtype {
+            Dtype::F32 => WireCodec::F32,
+            Dtype::Bf16 => WireCodec::Bf16,
+        }
+    }
+
+    /// Average wire bytes per element (fractional for q8, whose scale
+    /// overhead amortizes over each block) — what
+    /// [`crate::coordinator::pipeline::adaptive_bucket_elems`] feeds the
+    /// fabric bandwidth term, so compressed rungs pick finer buckets.
+    pub fn elem_bytes(self) -> f64 {
+        match self {
+            WireCodec::F32 => 4.0,
+            WireCodec::Bf16 => 2.0,
+            WireCodec::Q8Block => 1.0 + 4.0 / Q8_BLOCK as f64,
+        }
+    }
+
+    /// Exact wire bytes of an `elems`-element payload (q8 includes one
+    /// 4-byte scale per started block) — the integer form
+    /// `EngineReport::{comm_bytes_per_step,peak_comm_bytes}` pins in the
+    /// bench gate.
+    pub fn payload_bytes(self, elems: usize) -> usize {
+        match self {
+            WireCodec::F32 => 4 * elems,
+            WireCodec::Bf16 => 2 * elems,
+            WireCodec::Q8Block => elems + 4 * elems.div_ceil(Q8_BLOCK),
+        }
+    }
+
+    /// Whether the rung keeps per-rank error-feedback accumulators
+    /// (only q8 is lossy enough to need them; they are checkpointed in
+    /// ADCP v3 so suspend/resume stays bit-exact).
+    pub fn uses_error_feedback(self) -> bool {
+        matches!(self, WireCodec::Q8Block)
+    }
+
+    /// Round-trip one received chunk through the codec in place.
+    ///
+    /// `residual` is the owning rank's error-feedback slice for the
+    /// same parameter range; it must be the same length as `buf` when
+    /// [`uses_error_feedback`](Self::uses_error_feedback) and is
+    /// untouched (may be empty) otherwise. For q8 each block adds the
+    /// carried residual *before* quantizing and stores the new
+    /// quantization error back, so nothing is lost across buckets —
+    /// only delayed. Block boundaries are chunk-relative, which makes
+    /// the q8 rung tiling-dependent (same plan ⇒ same bits; different
+    /// bucket sizes ⇒ different rounding), unlike the element-wise f32
+    /// and bf16 rungs.
+    pub fn encode_decode(self, buf: &mut [f32], residual: &mut [f32]) {
+        match self {
+            WireCodec::F32 => {}
+            WireCodec::Bf16 => {
+                for x in buf.iter_mut() {
+                    *x = bf16_to_f32(f32_to_bf16(*x));
+                }
+            }
+            WireCodec::Q8Block => {
+                debug_assert_eq!(buf.len(), residual.len());
+                for (block, res) in buf
+                    .chunks_mut(Q8_BLOCK)
+                    .zip(residual.chunks_mut(Q8_BLOCK))
+                {
+                    // Carried error re-enters the signal first, so the
+                    // scale sees the corrected values.
+                    for (x, r) in block.iter_mut().zip(res.iter()) {
+                        *x += *r;
+                    }
+                    // Fixed-order max (fold, not a float reduction the
+                    // determinism rule forbids): the scan order is the
+                    // slice order, always.
+                    let max_abs = block
+                        .iter()
+                        .fold(0.0f32, |m, &x| if x.abs() > m { x.abs() } else { m });
+                    if max_abs == 0.0 || !max_abs.is_finite() {
+                        // All-zero block ships zeros exactly; a
+                        // non-finite block passes through undamaged
+                        // (quantizing infinities would turn them into
+                        // finite garbage).
+                        for r in res.iter_mut() {
+                            *r = 0.0;
+                        }
+                        continue;
+                    }
+                    let scale = max_abs / 127.0;
+                    let inv = 127.0 / max_abs;
+                    for (x, r) in block.iter_mut().zip(res.iter_mut()) {
+                        let q = (*x * inv).round().clamp(-127.0, 127.0);
+                        let deq = q * scale;
+                        *r = *x - deq;
+                        *x = deq;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -194,5 +368,149 @@ mod tests {
         let expect = 2.0 * time(Op::AllGather, 2e9, 8, f)
             + time(Op::ReduceScatter, 2e9, 8, f);
         assert_eq!(t, expect);
+    }
+
+    #[test]
+    fn codec_names_round_trip() {
+        for w in [WireCodec::F32, WireCodec::Bf16, WireCodec::Q8Block] {
+            assert_eq!(WireCodec::parse(w.name()).unwrap(), w);
+        }
+        assert!(WireCodec::parse("int4").is_err());
+        assert_eq!(WireCodec::default_for(Dtype::F32), WireCodec::F32);
+        assert_eq!(WireCodec::default_for(Dtype::Bf16), WireCodec::Bf16);
+        assert!(WireCodec::Q8Block.uses_error_feedback());
+        assert!(!WireCodec::F32.uses_error_feedback());
+        assert!(!WireCodec::Bf16.uses_error_feedback());
+    }
+
+    #[test]
+    fn codec_payload_bytes_are_exact() {
+        assert_eq!(WireCodec::F32.payload_bytes(100), 400);
+        assert_eq!(WireCodec::Bf16.payload_bytes(100), 200);
+        // 100 elems = 2 started blocks of 64 -> 100 + 2 scales.
+        assert_eq!(WireCodec::Q8Block.payload_bytes(100), 108);
+        assert_eq!(WireCodec::Q8Block.payload_bytes(64), 64 + 4);
+        assert_eq!(WireCodec::Q8Block.payload_bytes(65), 65 + 8);
+        assert_eq!(WireCodec::Q8Block.payload_bytes(0), 0);
+        // elem_bytes is the exact per-element cost at block multiples.
+        for w in [WireCodec::F32, WireCodec::Bf16, WireCodec::Q8Block] {
+            let elems = 4 * Q8_BLOCK;
+            let exact = w.payload_bytes(elems) as f64;
+            assert!((exact - w.elem_bytes() * elems as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn f32_rung_is_the_identity() {
+        let vals = [1.0f32, -0.3333, 1e-30, f32::MAX, -0.0];
+        let mut buf = vals;
+        WireCodec::F32.encode_decode(&mut buf, &mut []);
+        for (a, b) in buf.iter().zip(vals.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_rung_matches_the_tensor_kernels() {
+        let vals = [1.0f32, -0.3333, 2.5e-3, 1234.567, -7e-8];
+        let mut buf = vals;
+        WireCodec::Bf16.encode_decode(&mut buf, &mut []);
+        for (a, b) in buf.iter().zip(vals.iter()) {
+            assert_eq!(a.to_bits(), bf16_to_f32(f32_to_bf16(*b)).to_bits());
+        }
+    }
+
+    #[test]
+    fn q8_rung_bounds_per_block_error() {
+        // Without error feedback carried in, each element's error is at
+        // most half a quantization step = max|x| / 254 per block.
+        let mut buf: Vec<f32> =
+            (0..3 * Q8_BLOCK).map(|i| ((i * 37 % 200) as f32 - 100.0) * 0.01).collect();
+        let orig = buf.clone();
+        let mut res = vec![0.0f32; buf.len()];
+        WireCodec::Q8Block.encode_decode(&mut buf, &mut res);
+        for (block, (dec, src)) in
+            orig.chunks(Q8_BLOCK).zip(buf.chunks(Q8_BLOCK)).enumerate()
+        {
+            let max_abs = orig[block * Q8_BLOCK..block * Q8_BLOCK + Q8_BLOCK]
+                .iter()
+                .fold(0.0f32, |m, &x| if x.abs() > m { x.abs() } else { m });
+            for (d, s) in dec.iter().zip(src.iter()) {
+                assert!((d - s).abs() <= max_abs / 254.0 + 1e-7);
+            }
+        }
+        // The residual is exactly what the wire dropped.
+        for ((d, s), r) in buf.iter().zip(orig.iter()).zip(res.iter()) {
+            assert!((s - (d + r)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn q8_error_feedback_reinjects_residuals() {
+        // A constant signal too small to survive one quantization round
+        // still gets through over repeated buckets: the residual
+        // accumulates until it crosses a quantization step.
+        let n = Q8_BLOCK;
+        let mut res = vec![0.0f32; n];
+        let mut shipped_sum = vec![0.0f32; n];
+        let rounds = 100;
+        for _ in 0..rounds {
+            let mut buf = vec![0.003f32; n - 1];
+            buf.push(1.0); // one big element sets the block scale
+            WireCodec::Q8Block.encode_decode(&mut buf, &mut res);
+            for (s, b) in shipped_sum.iter_mut().zip(buf.iter()) {
+                *s += b;
+            }
+        }
+        // 0.003 < half a step (1/254 of the scale-setting 1.0) so a
+        // feedback-free codec would ship 0 forever; with EF the
+        // long-run average converges to the true signal.
+        let avg = shipped_sum[0] / rounds as f32;
+        assert!((avg - 0.003).abs() < 1e-3, "EF average drifted: {avg}");
+        // Zero blocks ship zeros and clear the residual.
+        let mut z = vec![0.0f32; n];
+        let mut zr = vec![0.5f32; n];
+        WireCodec::Q8Block.encode_decode(&mut z, &mut zr);
+        // (0 + 0.5 residual) is quantized against its own max: exact.
+        assert!(z.iter().all(|&x| (x - 0.5).abs() < 1e-6));
+        let mut truly_zero = vec![0.0f32; n];
+        let mut no_res = vec![0.0f32; n];
+        WireCodec::Q8Block.encode_decode(&mut truly_zero, &mut no_res);
+        assert!(truly_zero.iter().all(|&x| x == 0.0));
+        assert!(no_res.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn q8_is_deterministic_per_chunk() {
+        let mk = || -> (Vec<f32>, Vec<f32>) {
+            let buf: Vec<f32> =
+                (0..130).map(|i| (i as f32 * 0.7).sin_approx()).collect();
+            (buf, vec![0.0; 130])
+        };
+        // Same input, same residuals -> identical bits.
+        let (mut a, mut ra) = mk();
+        let (mut b, mut rb) = mk();
+        WireCodec::Q8Block.encode_decode(&mut a, &mut ra);
+        WireCodec::Q8Block.encode_decode(&mut b, &mut rb);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            ra.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// Cheap deterministic pseudo-sine for test data (no libm calls in
+    /// the test vectors keeps the expected values platform-pinned).
+    trait SinApprox {
+        fn sin_approx(self) -> f32;
+    }
+    impl SinApprox for f32 {
+        fn sin_approx(self) -> f32 {
+            let x = self - (self / 6.2832).floor() * 6.2832 - 3.1416;
+            x * (1.0 - x.abs() / 3.1416) * 1.2732
+        }
     }
 }

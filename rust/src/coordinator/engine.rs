@@ -22,8 +22,9 @@
 //!   [`FlatOptimizer::step_tasks`] the moment a task's last (or, in the
 //!   descending walk, first) element lands, or per-group
 //!   [`FlatOptimizer::step_group`] walks;
-//! * plus ranks × fabric model ([`Fabric`]) and the shared optimizer
-//!   hyper-surface (`lr`/`wd`/shards).
+//! * plus ranks × fabric model ([`Fabric`]), the storage dtype and the
+//!   exchange wire rung ([`WireCodec`] — see `docs/EXCHANGE.md`), and
+//!   the shared optimizer hyper-surface (`lr`/`wd`/shards).
 //!
 //! One generic leader loop executes any plan over any
 //! [`GradSource`]/[`GroupGradSource`] set, so bitwise parity between the
@@ -57,7 +58,7 @@ use crate::runtime::checkpoint::{self, PlanRecord};
 use crate::runtime::{Layout, TypedBlob};
 use crate::tensor::Dtype;
 
-use super::collective::{allreduce_bucket_time, wire_bytes, Fabric};
+use super::collective::{allreduce_bucket_time, Fabric, WireCodec};
 use super::fused_host::GroupGradSource;
 use super::pipeline::{BucketPlan, GradSource, PipelineConfig};
 
@@ -97,7 +98,20 @@ pub enum StepGranularity {
 
 /// A complete execution schedule: which of the (production × order ×
 /// granularity) cell to run, over how many ranks/steps, on which
-/// optimizer/shard plan, against which fabric model.
+/// optimizer/shard plan, against which fabric model, at which storage
+/// dtype and exchange wire rung.
+///
+/// ```
+/// use adalomo::coordinator::engine::ExecPlan;
+/// use adalomo::coordinator::pipeline::PipelineConfig;
+/// use adalomo::optim::flat::ShardMode;
+/// use adalomo::optim::OptKind;
+///
+/// let cfg = PipelineConfig::new(3, 64);
+/// let plan = ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Segments, 2, &cfg);
+/// assert!(plan.validate().is_ok());
+/// assert!(plan.describe().contains("f32 storage, f32 wire"));
+/// ```
 #[derive(Debug, Clone)]
 pub struct ExecPlan {
     pub production: GradProduction,
@@ -121,6 +135,13 @@ pub struct ExecPlan {
     /// widens per task through bounded scratch), and every `ExecPlan`
     /// cell remains bitwise-identical at a FIXED dtype.
     pub dtype: Dtype,
+    /// Wire rung of the gradient exchange ([`WireCodec`]): what bucket
+    /// payloads are round-tripped through before the leader's f32
+    /// reduction tree, independent of the storage dtype axis. The f32
+    /// rung is the identity (bitwise-identical to the pre-ladder
+    /// exchange); [`WireCodec::Q8Block`] adds per-rank error-feedback
+    /// state that checkpoints alongside the blob (ADCP v3).
+    pub wire: WireCodec,
     /// Seed for deterministic host-mirror gradient sources. The engine
     /// itself never reads it — it rides along (and through checkpoints)
     /// so a resumed CLI run can reconstruct identical rank streams.
@@ -151,6 +172,7 @@ impl ExecPlan {
             n_shards: cfg.n_shards,
             fabric: cfg.fabric,
             dtype: cfg.dtype,
+            wire: cfg.wire_codec(),
             seed: 0,
         }
     }
@@ -268,14 +290,16 @@ impl ExecPlan {
         };
         format!(
             "{prod} production, {ord} exchange, {gran} steps; {} x {} \
-             ({:?}, {} shards), {} steps, bucket {} elems, {} storage",
+             ({:?}, {} shards), {} steps, bucket {} elems, {} storage, \
+             {} wire",
             self.n_ranks,
             self.kind.name(),
             self.mode,
             self.n_shards,
             self.steps,
             self.bucket_elems,
-            self.dtype.name()
+            self.dtype.name(),
+            self.wire.name()
         )
     }
 
@@ -301,6 +325,11 @@ impl ExecPlan {
                 ShardMode::Contiguous => checkpoint::MODE_CONTIGUOUS,
             },
             dtype: checkpoint::dtype_code(self.dtype),
+            wire: match self.wire {
+                WireCodec::F32 => checkpoint::WIRE_F32,
+                WireCodec::Bf16 => checkpoint::WIRE_BF16,
+                WireCodec::Q8Block => checkpoint::WIRE_Q8,
+            },
             opt: self.kind.name().to_string(),
             steps: self.steps as u64,
             bucket_elems: self.bucket_elems as u64,
@@ -353,6 +382,12 @@ impl ExecPlan {
             n_shards: r.n_shards as usize,
             fabric: Fabric { alpha: r.fabric_alpha, bw: r.fabric_bw },
             dtype: checkpoint::dtype_from_code(r.dtype)?,
+            wire: match r.wire {
+                checkpoint::WIRE_F32 => WireCodec::F32,
+                checkpoint::WIRE_BF16 => WireCodec::Bf16,
+                checkpoint::WIRE_Q8 => WireCodec::Q8Block,
+                other => bail!("unknown wire-codec code {other}"),
+            },
             seed: r.seed,
         };
         plan.validate()?;
@@ -419,18 +454,23 @@ pub struct EngineReport {
     /// [`StepGranularity::Groups`] (the measured liveness curve
     /// `memsim::liveness::simulate_grouped` predicts); empty otherwise.
     pub curve_bytes: Vec<usize>,
-    /// Storage dtype of the blob and the modeled exchange payloads.
+    /// Storage dtype of the blob.
     pub dtype: Dtype,
+    /// Wire rung the exchange payloads were round-tripped through
+    /// (independent of [`Self::dtype`] since the compression ladder).
+    pub wire: WireCodec,
     /// Actual storage bytes of the params+state+metrics blob at
     /// [`Self::dtype`] — bf16 halves the params+state share (the
     /// `blob_bytes_*` bench metrics).
     pub blob_bytes: usize,
-    /// Modeled wire bytes one training step ships over the fabric
-    /// (sum of all exchange tiles at the wire dtype; 0 for a single
-    /// rank, which exchanges nothing — matching the fabric time model).
+    /// Modeled wire bytes one training step ships over the fabric: the
+    /// sum of [`WireCodec::payload_bytes`] over all exchange tiles
+    /// (q8 includes the per-block scale words; 0 for a single rank,
+    /// which exchanges nothing — matching the fabric time model).
     pub comm_bytes_per_step: usize,
-    /// Largest single exchange tile on the wire, in bytes at the wire
-    /// dtype (the `peak_comm_bytes_*` bench metrics; 0 for one rank).
+    /// Largest single exchange tile on the wire, in
+    /// [`WireCodec::payload_bytes`] (the `peak_comm_bytes_*` bench
+    /// metrics; 0 for one rank).
     pub peak_comm_bytes: usize,
 }
 
@@ -452,6 +492,13 @@ pub struct Engine {
     opt: FlatOptimizer,
     /// The training blob in its STORAGE dtype (the plan's dtype axis).
     blob: TypedBlob,
+    /// Per-rank error-feedback accumulators for lossy-with-residual wire
+    /// rungs ([`WireCodec::uses_error_feedback`]): `ef[r]` holds rank
+    /// `r`'s unsent quantization residual per parameter, re-injected into
+    /// that rank's next payload for the same region. Empty for f32/bf16
+    /// wires. Checkpointed (ADCP v3) so a resume replays the exact
+    /// residual stream.
+    ef: Vec<Vec<f32>>,
     done_steps: u64,
     suspend_at: Option<u64>,
     /// Set when a run aborted mid-step: the blob may hold a partially
@@ -477,12 +524,18 @@ impl Engine {
         let opt =
             FlatOptimizer::new(plan.kind, &layout, plan.n_shards, plan.mode)?;
         let blob = TypedBlob::from_f32(&layout, blob0, plan.dtype)?;
+        let ef = if plan.wire.uses_error_feedback() {
+            vec![vec![0.0f32; layout.params_len]; plan.n_ranks]
+        } else {
+            Vec::new()
+        };
         Ok(Engine {
             layout,
             layout_key: format!("engine/{}", plan.kind.name()),
             plan,
             opt,
             blob,
+            ef,
             done_steps: 0,
             suspend_at: None,
             poisoned: false,
@@ -559,6 +612,7 @@ impl Engine {
             &self.layout,
             self.done_steps,
             &self.plan.to_record(),
+            &self.ef,
             &self.blob,
         )
     }
@@ -596,12 +650,45 @@ impl Engine {
             ck.plan.cursor_group,
             ck.plan.cursor_task
         );
+        let ef = if plan.wire.uses_error_feedback() {
+            if ck.ef.is_empty() {
+                // A q8 plan saved before ADCP v3 could exist only by
+                // hand-construction; start its residuals from zero.
+                vec![vec![0.0f32; ck.layout.params_len]; plan.n_ranks]
+            } else {
+                ensure!(
+                    ck.ef.len() == plan.n_ranks,
+                    "checkpoint carries error-feedback for {} ranks, but \
+                     the plan runs {}",
+                    ck.ef.len(),
+                    plan.n_ranks
+                );
+                for (r, e) in ck.ef.iter().enumerate() {
+                    ensure!(
+                        e.len() == ck.layout.params_len,
+                        "rank {r} error-feedback length {} != params {}",
+                        e.len(),
+                        ck.layout.params_len
+                    );
+                }
+                ck.ef
+            }
+        } else {
+            ensure!(
+                ck.ef.is_empty(),
+                "checkpoint carries error-feedback state, but the plan's \
+                 {} wire rung keeps none",
+                plan.wire.name()
+            );
+            Vec::new()
+        };
         Ok(Engine {
             layout_key: ck.layout_key,
             layout: ck.layout,
             plan,
             opt,
             blob: ck.blob,
+            ef,
             done_steps: ck.step,
             suspend_at: None,
             poisoned: false,
@@ -640,13 +727,14 @@ impl Engine {
         )?;
         // Per-tile fabric cost (ragged tiles costed by their own bytes —
         // identical tiling to `collective::bucketed_allreduce_times`).
-        // Payload bytes follow the plan's wire dtype: bf16 exchanges ship
-        // half the bytes, which the overlap/efficiency numbers reflect.
+        // Payload bytes follow the plan's wire rung: bf16 ships half the
+        // f32 bytes, q8 just over a quarter (elements + block scales) —
+        // which the overlap/efficiency numbers reflect.
         let tile_comm: Vec<f64> = tiles
             .iter()
             .map(|&(lo, hi)| {
                 allreduce_bucket_time(
-                    wire_bytes(hi - lo, plan.dtype),
+                    plan.wire.payload_bytes(hi - lo) as f64,
                     plan.n_ranks,
                     plan.fabric,
                 )
@@ -688,6 +776,7 @@ impl Engine {
         let outcome = leader_loop(
             &mut self.opt,
             &mut self.blob,
+            &mut self.ef,
             &plan,
             &tiles,
             &visit,
@@ -733,18 +822,22 @@ impl Engine {
         } else {
             Vec::new()
         };
-        // Wire accounting at the plan's dtype (exact integers; the bench
-        // gate pins them two-sided). A single rank ships nothing — the
-        // byte metrics agree with the fabric model, which charges such a
-        // plan zero time.
-        let wire = if plan.n_ranks > 1 { plan.dtype.bytes() } else { 0 };
-        let comm_bytes_per_step: usize =
-            tiles.iter().map(|&(lo, hi)| (hi - lo) * wire).sum();
-        let peak_comm_bytes = tiles
-            .iter()
-            .map(|&(lo, hi)| (hi - lo) * wire)
-            .max()
-            .unwrap_or(0);
+        // Wire accounting at the plan's wire rung (exact integers; the
+        // bench gate pins them two-sided). A single rank ships nothing —
+        // the byte metrics agree with the fabric model, which charges
+        // such a plan zero time.
+        let (comm_bytes_per_step, peak_comm_bytes) = if plan.n_ranks > 1 {
+            let mut total = 0usize;
+            let mut peak = 0usize;
+            for &(lo, hi) in &tiles {
+                let b = plan.wire.payload_bytes(hi - lo);
+                total += b;
+                peak = peak.max(b);
+            }
+            (total, peak)
+        } else {
+            (0, 0)
+        };
         Ok(EngineReport {
             n_ranks: plan.n_ranks,
             steps: (stop - start) as usize,
@@ -759,6 +852,7 @@ impl Engine {
             full_grad_bytes: 4 * params_len,
             curve_bytes,
             dtype: plan.dtype,
+            wire: plan.wire,
             blob_bytes: self.blob.storage_bytes(),
             comm_bytes_per_step,
             peak_comm_bytes,
@@ -987,14 +1081,19 @@ fn spawn_grouped_producers(
 }
 
 /// THE leader loop — the single copy that used to exist per path: receive
-/// and reduce each tile's per-rank contributions in rank order (the fixed
-/// reduction order determinism rests on), step whatever the plan's
-/// granularity makes ready, and advance the modeled timeline. Returns
-/// `(compute, comm, exposed)` seconds.
+/// each tile's per-rank contribution, round-trip it through the plan's
+/// wire codec (with that rank's error-feedback slice, for rungs that keep
+/// one), then reduce in rank order on an f32 tree (the fixed reduction
+/// order determinism rests on), step whatever the plan's granularity
+/// makes ready, and advance the modeled timeline. A single rank exchanges
+/// nothing, so the codec is bypassed there — every wire rung is exact at
+/// `n_ranks == 1`, matching the zero-byte/zero-time fabric accounting.
+/// Returns `(compute, comm, exposed)` seconds.
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
     opt: &mut FlatOptimizer,
     blob: &mut TypedBlob,
+    ef: &mut [Vec<f32>],
     plan: &ExecPlan,
     tiles: &[(usize, usize)],
     visit: &[usize],
@@ -1005,6 +1104,7 @@ fn leader_loop(
     stop: u64,
 ) -> Result<(f64, f64, f64)> {
     let n_ranks = rx_ranks.len();
+    let wire_active = n_ranks > 1;
     let inv = 1.0 / n_ranks as f32;
     let params_len = tiles.iter().map(|&(_, hi)| hi).max().unwrap_or(0);
     let mut grad = vec![0f32; params_len];
@@ -1019,13 +1119,24 @@ fn leader_loop(
         for &b in visit {
             let (lo, hi) = tiles[b];
             // Accumulate: one contribution per rank, received in rank
-            // order.
+            // order and round-tripped through the wire codec — exactly
+            // what a real fabric would deliver after decode. Error-
+            // feedback rungs fold rank r's residual slice for this
+            // region into the payload before quantizing and bank the
+            // new residual for the next step's same-region send.
             let mut chunks = Vec::with_capacity(n_ranks);
-            for rx in rx_ranks {
-                let chunk = rx.recv().map_err(|_| {
+            for (r, rx) in rx_ranks.iter().enumerate() {
+                let mut chunk = rx.recv().map_err(|_| {
                     anyhow!("rank gradient stream ended early")
                 })?;
                 ensure!(chunk.len() == hi - lo, "tile size mismatch");
+                if wire_active {
+                    let residual: &mut [f32] = match ef.get_mut(r) {
+                        Some(e) => &mut e[lo..hi],
+                        None => &mut [],
+                    };
+                    plan.wire.encode_decode(&mut chunk, residual);
+                }
                 chunks.push(chunk);
             }
             // Reduce: mean in rank order, element-parallel on the pool
@@ -1132,23 +1243,30 @@ mod tests {
             ExecPlan::fused_host(OptKind::AdaLomo, ShardMode::Segments, 1, &c),
         ] {
             for dtype in [Dtype::F32, Dtype::Bf16] {
-                let mut plan = plan.clone();
-                plan.seed = 99;
-                plan.dtype = dtype;
-                let back = ExecPlan::from_record(&plan.to_record()).unwrap();
-                assert_eq!(back.production, plan.production);
-                assert_eq!(back.order, plan.order);
-                assert_eq!(back.granularity, plan.granularity);
-                assert_eq!(back.kind, plan.kind);
-                assert_eq!(back.mode, plan.mode);
-                assert_eq!(back.n_ranks, plan.n_ranks);
-                assert_eq!(back.steps, plan.steps);
-                assert_eq!(back.bucket_elems, plan.bucket_elems);
-                assert_eq!(back.lr.to_bits(), plan.lr.to_bits());
-                assert_eq!(back.wd.to_bits(), plan.wd.to_bits());
-                assert_eq!(back.n_shards, plan.n_shards);
-                assert_eq!(back.dtype, dtype);
-                assert_eq!(back.seed, plan.seed);
+                for wire in
+                    [WireCodec::F32, WireCodec::Bf16, WireCodec::Q8Block]
+                {
+                    let mut plan = plan.clone();
+                    plan.seed = 99;
+                    plan.dtype = dtype;
+                    plan.wire = wire;
+                    let back =
+                        ExecPlan::from_record(&plan.to_record()).unwrap();
+                    assert_eq!(back.production, plan.production);
+                    assert_eq!(back.order, plan.order);
+                    assert_eq!(back.granularity, plan.granularity);
+                    assert_eq!(back.kind, plan.kind);
+                    assert_eq!(back.mode, plan.mode);
+                    assert_eq!(back.n_ranks, plan.n_ranks);
+                    assert_eq!(back.steps, plan.steps);
+                    assert_eq!(back.bucket_elems, plan.bucket_elems);
+                    assert_eq!(back.lr.to_bits(), plan.lr.to_bits());
+                    assert_eq!(back.wd.to_bits(), plan.wd.to_bits());
+                    assert_eq!(back.n_shards, plan.n_shards);
+                    assert_eq!(back.dtype, dtype);
+                    assert_eq!(back.wire, wire);
+                    assert_eq!(back.seed, plan.seed);
+                }
             }
         }
         // Unknown codes are rejected.
@@ -1161,6 +1279,55 @@ mod tests {
         .to_record();
         rec.granularity = 99;
         assert!(ExecPlan::from_record(&rec).is_err());
+        rec.granularity = checkpoint::GRAN_WHOLE_IMAGE;
+        rec.wire = 99;
+        assert!(ExecPlan::from_record(&rec).is_err());
+    }
+
+    #[test]
+    fn q8_wire_shrinks_payloads_and_stays_deterministic() {
+        let kind = OptKind::AdaLomo;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 21);
+        let mut c = cfg(4, layout.params_len.div_ceil(5));
+        c.wire = Some(WireCodec::Q8Block);
+        let plan = ExecPlan::pipelined(kind, ShardMode::Segments, 2, &c);
+        assert_eq!(plan.wire, WireCodec::Q8Block);
+        let run = |plan: &ExecPlan| {
+            let mut eng =
+                Engine::new(&layout, &blob0, plan.clone()).unwrap();
+            let r = eng
+                .run(RankSources::Full(synthetic_sources(2, 17, 0.05)))
+                .unwrap();
+            (eng.blob(), r)
+        };
+        let (blob_a, ra) = run(&plan);
+        let (blob_b, _) = run(&plan);
+        assert_eq!(ra.wire, WireCodec::Q8Block);
+        // Quantized exchange is still exactly reproducible run to run.
+        for (x, y) in blob_a.iter().zip(blob_b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Payload accounting follows the codec: elements + one f32 scale
+        // per 64-element block, summed over the exact exchange tiling.
+        let bp = BucketPlan::new(layout.params_len, plan.bucket_elems);
+        let expect: usize = bp
+            .buckets
+            .iter()
+            .map(|&(lo, hi)| WireCodec::Q8Block.payload_bytes(hi - lo))
+            .sum();
+        assert_eq!(ra.comm_bytes_per_step, expect);
+        // ... and the codec really touched the exchanged values: the q8
+        // run diverges from the identical schedule on the f32 wire.
+        let plan_f32 =
+            ExecPlan::pipelined(kind, ShardMode::Segments, 2, &cfg(4, c.bucket_elems));
+        assert_eq!(plan_f32.wire, WireCodec::F32);
+        let (blob_f, rf) = run(&plan_f32);
+        assert!(ra.comm_bytes_per_step * 100 <= rf.comm_bytes_per_step * 30);
+        assert!(blob_a
+            .iter()
+            .zip(blob_f.iter())
+            .any(|(a, b)| a.to_bits() != b.to_bits()));
     }
 
     #[test]

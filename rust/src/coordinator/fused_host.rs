@@ -50,6 +50,7 @@ use crate::runtime::Layout;
 use crate::tensor::Dtype;
 use crate::util::rng::Pcg32;
 
+use super::collective::WireCodec;
 use super::engine::{
     Engine, EngineReport, ExecPlan, GradProduction, RankSources,
 };
@@ -284,9 +285,10 @@ pub fn fused_host_step(
         full_grad_bytes: 4 * engine.params_len(),
         curve_bytes: curve,
         // The single-rank mirror primitive steps a raw f32 slice and
-        // touches no fabric; the dtype-aware numbers come from the
+        // touches no fabric; the dtype/wire-aware numbers come from the
         // engine-driven paths.
         dtype: Dtype::F32,
+        wire: WireCodec::F32,
         blob_bytes: 4 * blob.len(),
         comm_bytes_per_step: 0,
         peak_comm_bytes: 0,

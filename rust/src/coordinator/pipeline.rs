@@ -54,12 +54,20 @@ use crate::runtime::Layout;
 use crate::tensor::Dtype;
 use crate::util::rng::Pcg32;
 
-use super::collective::{self, Fabric};
+use super::collective::{Fabric, WireCodec};
 use super::engine::{Engine, EngineReport, ExecPlan, RankSources};
 use super::fused_host::GroupGradSource;
 
 /// Fixed-size exchange buckets tiling the gradient image `[0,
 /// params_len)` in offset order.
+///
+/// ```
+/// use adalomo::coordinator::pipeline::BucketPlan;
+///
+/// let plan = BucketPlan::new(10, 4);
+/// assert_eq!(plan.buckets, vec![(0, 4), (4, 8), (8, 10)]);
+/// assert_eq!(plan.n_buckets(), 3);
+/// ```
 #[derive(Debug, Clone)]
 pub struct BucketPlan {
     pub params_len: usize,
@@ -293,9 +301,17 @@ pub struct PipelineConfig {
     /// reduction). Results are deterministic for a FIXED value.
     pub n_shards: usize,
     pub fabric: Fabric,
-    /// Storage dtype of the blob and the modeled exchange payloads
-    /// (see `ExecPlan::dtype`); [`Dtype::F32`] by default.
+    /// Storage dtype of the blob (see `ExecPlan::dtype`);
+    /// [`Dtype::F32`] by default.
     pub dtype: Dtype,
+    /// Wire rung for the bucket exchange. `None` (the default) resolves
+    /// at plan-construction time to
+    /// [`WireCodec::default_for`]`(dtype)` — the wire follows the
+    /// storage dtype unless a rung is chosen explicitly, so pre-ladder
+    /// configs behave exactly as before. Resolution is deferred (rather
+    /// than baked into [`Self::new`]) because callers routinely mutate
+    /// `dtype` after construction.
+    pub wire: Option<WireCodec>,
 }
 
 impl PipelineConfig {
@@ -308,14 +324,21 @@ impl PipelineConfig {
             n_shards: 2,
             fabric: Fabric::default(),
             dtype: Dtype::F32,
+            wire: None,
         }
+    }
+
+    /// The wire rung this config resolves to (explicit choice, else the
+    /// storage dtype's default rung).
+    pub fn wire_codec(&self) -> WireCodec {
+        self.wire.unwrap_or(WireCodec::default_for(self.dtype))
     }
 
     /// [`Self::new`] with `bucket_elems` chosen by
     /// [`adaptive_bucket_elems`] under the default
     /// [`ADAPTIVE_COMM_FRACTION`] budget, for a measured per-element
-    /// optimizer step cost on this machine and the wire dtype the
-    /// exchange will actually ship.
+    /// optimizer step cost on this machine and the wire rung the
+    /// exchange will actually ship (`None` = the `dtype` default rung).
     pub fn adaptive(
         steps: usize,
         params_len: usize,
@@ -323,18 +346,21 @@ impl PipelineConfig {
         fabric: Fabric,
         step_secs_per_elem: f64,
         dtype: Dtype,
+        wire: Option<WireCodec>,
     ) -> PipelineConfig {
+        let codec = wire.unwrap_or(WireCodec::default_for(dtype));
         let bucket = adaptive_bucket_elems(
             params_len,
             n_ranks,
             fabric,
             step_secs_per_elem,
             ADAPTIVE_COMM_FRACTION,
-            dtype,
+            codec,
         );
         let mut cfg = PipelineConfig::new(steps, bucket);
         cfg.fabric = fabric;
         cfg.dtype = dtype;
+        cfg.wire = wire;
         cfg
     }
 }
@@ -426,22 +452,26 @@ pub const ADAPTIVE_COMM_FRACTION: f64 = 0.5;
 /// Every bucket re-pays the full `2(n-1)` hop latencies
 /// ([`super::collective::bucketed_allreduce_times`]), so below the
 /// returned size the latency tax alone breaks the bound: with `e`
-/// wire bytes per element ([`super::collective::elem_bytes`] — 4 for
-/// f32, 2 for bf16; an earlier version hard-coded `2e = 8.0`, silently
-/// oversizing bf16 buckets),
+/// wire bytes per element ([`WireCodec::elem_bytes`] — 4 for f32, 2
+/// for bf16, 1.0625 for blockwise q8; an earlier version hard-coded
+/// `2e = 8.0`, silently oversizing bf16 buckets),
 /// `comm(b) = 2(n-1)(alpha + e*b/(n*bw)) <= f * b * c` solves to
 /// `b >= 2(n-1)alpha / (f*c - 2e(n-1)/(n*bw))`. If the denominator is
 /// not positive — the bandwidth term alone exceeds the compute budget —
 /// no bucket size can hide the exchange and the choice degenerates to
 /// one monolithic bucket (minimizing the latency tax). A single rank
 /// pays no fabric at all, with the same degenerate answer.
+///
+/// Compressed rungs shrink `e`, which both shrinks the bandwidth tax
+/// and lets the solver afford FINER buckets — the end-to-end reward
+/// the benches measure as higher overlap efficiency.
 pub fn adaptive_bucket_elems(
     params_len: usize,
     n_ranks: usize,
     fabric: Fabric,
     step_secs_per_elem: f64,
     comm_fraction: f64,
-    dtype: Dtype,
+    wire: WireCodec,
 ) -> usize {
     assert!(params_len > 0, "params_len must be positive");
     assert!(
@@ -452,7 +482,7 @@ pub fn adaptive_bucket_elems(
         return params_len;
     }
     let n = n_ranks as f64;
-    let e = collective::elem_bytes(dtype);
+    let e = wire.elem_bytes();
     let slack = comm_fraction * step_secs_per_elem
         - 2.0 * e * (n - 1.0) / (n * fabric.bw);
     if slack <= 0.0 {
@@ -572,7 +602,6 @@ mod tests {
 
     #[test]
     fn adaptive_bucket_bounds_fabric_latency() {
-        use crate::coordinator::collective::elem_bytes;
         let c = 2e-9; // 2 ns per element of optimizer step
         let frac = ADAPTIVE_COMM_FRACTION;
         let params_len = 50_000_000usize;
@@ -581,16 +610,16 @@ mod tests {
             Fabric { alpha: 50e-6, bw: 25e9 },
             Fabric { alpha: 1e-6, bw: 400e9 },
         ];
-        // Both wire widths: the bound must hold against the REAL
-        // per-bucket cost at that dtype's bytes-per-element (the
+        // All three wire rungs: the bound must hold against the REAL
+        // per-bucket cost at that rung's bytes-per-element (the
         // regression this test pins: the bandwidth term used to
-        // hard-code 8.0 = 2 x 4 bytes, oversizing bf16 buckets).
-        for dtype in [Dtype::F32, Dtype::Bf16] {
-            let e = elem_bytes(dtype);
+        // hard-code 8.0 = 2 x 4 bytes, oversizing compressed buckets).
+        for wire in [WireCodec::F32, WireCodec::Bf16, WireCodec::Q8Block] {
+            let e = wire.elem_bytes();
             for fabric in fabrics {
                 for n_ranks in [2usize, 4, 8] {
                     let b = adaptive_bucket_elems(
-                        params_len, n_ranks, fabric, c, frac, dtype,
+                        params_len, n_ranks, fabric, c, frac, wire,
                     );
                     assert!((1..=params_len).contains(&b));
                     if b < params_len {
@@ -602,7 +631,7 @@ mod tests {
                         );
                         assert!(
                             comm <= frac * c * b as f64 * (1.0 + 1e-9),
-                            "{dtype:?} {fabric:?} x{n_ranks}: comm {comm} \
+                            "{wire:?} {fabric:?} x{n_ranks}: comm {comm} \
                              vs budget {}",
                             frac * c * b as f64
                         );
@@ -617,7 +646,7 @@ mod tests {
                             );
                             assert!(
                                 comm_half > frac * c * half as f64,
-                                "{dtype:?} {fabric:?} x{n_ranks}: \
+                                "{wire:?} {fabric:?} x{n_ranks}: \
                                  half-size bucket should violate the budget"
                             );
                         }
@@ -625,20 +654,38 @@ mod tests {
                 }
             }
         }
-        // bf16 ships half the bytes per element, so its bandwidth tax is
-        // smaller and the adaptive choice can afford finer buckets.
+        // Each compression rung ships fewer bytes per element, so its
+        // bandwidth tax is smaller and the adaptive choice can afford
+        // strictly finer buckets on a bandwidth-bound fabric.
         let bw_bound = Fabric { alpha: 8e-6, bw: 9e9 };
-        let b32 =
-            adaptive_bucket_elems(params_len, 4, bw_bound, c, frac, Dtype::F32);
+        let b32 = adaptive_bucket_elems(
+            params_len,
+            4,
+            bw_bound,
+            c,
+            frac,
+            WireCodec::F32,
+        );
         let b16 = adaptive_bucket_elems(
             params_len,
             4,
             bw_bound,
             c,
             frac,
-            Dtype::Bf16,
+            WireCodec::Bf16,
         );
-        assert!(b16 < b32, "bf16 bucket {b16} vs f32 {b32}");
+        let b8 = adaptive_bucket_elems(
+            params_len,
+            4,
+            bw_bound,
+            c,
+            frac,
+            WireCodec::Q8Block,
+        );
+        assert!(
+            b8 < b16 && b16 < b32,
+            "q8 {b8} vs bf16 {b16} vs f32 {b32}"
+        );
         // Chattier fabrics need coarser buckets.
         let quiet = adaptive_bucket_elems(
             params_len,
@@ -646,7 +693,7 @@ mod tests {
             Fabric { alpha: 1e-6, bw: 170e9 },
             c,
             frac,
-            Dtype::F32,
+            WireCodec::F32,
         );
         let chatty = adaptive_bucket_elems(
             params_len,
@@ -654,7 +701,7 @@ mod tests {
             Fabric { alpha: 100e-6, bw: 170e9 },
             c,
             frac,
-            Dtype::F32,
+            WireCodec::F32,
         );
         assert!(chatty > quiet, "{chatty} vs {quiet}");
         // Degenerate cases: single rank, or bandwidth alone over budget.
@@ -665,25 +712,53 @@ mod tests {
                 Fabric::default(),
                 c,
                 frac,
-                Dtype::F32
+                WireCodec::F32
             ),
             params_len
         );
         let starved = Fabric { alpha: 8e-6, bw: 1e6 };
         assert_eq!(
-            adaptive_bucket_elems(params_len, 4, starved, c, frac, Dtype::F32),
+            adaptive_bucket_elems(
+                params_len,
+                4,
+                starved,
+                c,
+                frac,
+                WireCodec::F32
+            ),
             params_len
         );
         // A fabric starved for f32 can still be bucketable at bf16.
         let tight = Fabric { alpha: 8e-6, bw: 4.5e9 };
         assert_eq!(
-            adaptive_bucket_elems(params_len, 4, tight, c, frac, Dtype::F32),
+            adaptive_bucket_elems(
+                params_len,
+                4,
+                tight,
+                c,
+                frac,
+                WireCodec::F32
+            ),
             params_len
         );
         assert!(
-            adaptive_bucket_elems(params_len, 4, tight, c, frac, Dtype::Bf16)
-                < params_len
+            adaptive_bucket_elems(
+                params_len,
+                4,
+                tight,
+                c,
+                frac,
+                WireCodec::Bf16
+            ) < params_len
         );
+        // Config-level resolution: explicit wire overrides the storage
+        // default; None follows the (possibly later-mutated) dtype.
+        let mut cfg = PipelineConfig::new(3, 64);
+        assert_eq!(cfg.wire_codec(), WireCodec::F32);
+        cfg.dtype = Dtype::Bf16;
+        assert_eq!(cfg.wire_codec(), WireCodec::Bf16);
+        cfg.wire = Some(WireCodec::Q8Block);
+        assert_eq!(cfg.wire_codec(), WireCodec::Q8Block);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use adalomo::config::{paper_lr, Phase, RunConfig};
+use adalomo::coordinator::collective::WireCodec;
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::fused_host;
 use adalomo::coordinator::pipeline::{self, PipelineConfig};
@@ -92,11 +93,14 @@ USAGE: adalomo <subcommand> [--flag value ...]
   train       unified engine: --plan sequential|pipelined|pipelined-fused|
               fused-host on a synthetic preset; --dtype f32|bf16 selects
               params+state storage (bf16 halves blob/checkpoint/comm
-              bytes; compute stays f32); --suspend-at K stops after
-              step K (0 = run to completion), --out writes the checkpoint,
-              --resume CKPT continues a saved run bitwise-identically
+              bytes; compute stays f32); --wire f32|bf16|q8 selects the
+              gradient-exchange rung (default follows the storage dtype;
+              q8 adds blockwise int8 + error feedback — docs/EXCHANGE.md);
+              --suspend-at K stops after step K (0 = run to completion),
+              --out writes the checkpoint, --resume CKPT continues a
+              saved run bitwise-identically
   checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH;
-              --dtype D asserts the stored dtype is D)
+              --dtype D asserts the stored dtype, --wire W the wire rung)
   hparams     the paper's hyper-parameter tables (3/6/7)
   analyze     static analysis over rust/src + cross-artifact checks:
               no-unsafe, determinism, panic-discipline, consistency
@@ -502,9 +506,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     if let Some(ckpt) = args.get("resume") {
         let ckpt = ckpt.to_string();
-        // Optional assertion only: the checkpoint itself fixes the
-        // storage dtype a resumed run continues at.
+        // Optional assertions only: the checkpoint itself fixes the
+        // storage dtype and wire rung a resumed run continues at.
         let want_dtype = args.get("dtype").map(Dtype::parse).transpose()?;
+        let want_wire = args.get("wire").map(WireCodec::parse).transpose()?;
         args.finish()?;
         let mut eng = Engine::resume(Path::new(&ckpt))?;
         if let Some(d) = want_dtype {
@@ -513,6 +518,14 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "{ckpt} stores {} but --dtype asked for {}",
                 eng.plan().dtype.name(),
                 d.name()
+            );
+        }
+        if let Some(w) = want_wire {
+            ensure!(
+                eng.plan().wire == w,
+                "{ckpt} exchanges over the {} wire but --wire asked for {}",
+                eng.plan().wire.name(),
+                w.name()
             );
         }
         println!(
@@ -535,6 +548,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         other => bail!("unknown shard mode {other:?} (segments|contiguous)"),
     };
     let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
+    let wire = args.get("wire").map(WireCodec::parse).transpose()?;
     let kind = OptKind::parse(&spec.opt)?;
     let arch = Arch::preset(&spec.preset).ok_or_else(|| {
         anyhow!(
@@ -556,6 +570,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = PipelineConfig::new(steps, bucket);
     cfg.n_shards = shards;
     cfg.dtype = dtype;
+    cfg.wire = wire;
     let mut plan = match plan_name.as_str() {
         "sequential" => ExecPlan::sequential(kind, mode, ranks, &cfg),
         "pipelined" => ExecPlan::pipelined(kind, mode, ranks, &cfg),
@@ -607,9 +622,10 @@ fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
         report.full_grad_bytes
     );
     println!(
-        "{} storage: blob {} bytes; modeled exchange {} bytes/step \
+        "{} storage, {} wire: blob {} bytes; modeled exchange {} bytes/step \
          (peak tile {} bytes)",
         report.dtype.name(),
+        report.wire.name(),
         report.blob_bytes,
         report.comm_bytes_per_step,
         report.peak_comm_bytes
@@ -635,6 +651,7 @@ fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
 fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
     let path = args.str_or("ckpt", "engine_ckpt.bin");
     let want_dtype = args.get("dtype").map(Dtype::parse).transpose()?;
+    let want_wire = args.get("wire").map(WireCodec::parse).transpose()?;
     args.finish()?;
     let ck = checkpoint::load(Path::new(&path))?;
     let plan = ExecPlan::from_record(&ck.plan)?;
@@ -646,6 +663,15 @@ fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
             "{path} stores {} but --dtype asked to verify {}",
             dtype.name(),
             d.name()
+        );
+    }
+    if let Some(w) = want_wire {
+        ensure!(
+            plan.wire == w,
+            "{path} exchanges over the {} wire but --wire asked to \
+             verify {}",
+            plan.wire.name(),
+            w.name()
         );
     }
     println!("checkpoint {path}");
@@ -667,6 +693,11 @@ fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
         dtype.name(),
         ck.blob.storage_bytes(),
         ck.layout.blob_len * 4
+    );
+    println!(
+        "  wire {} | error-feedback ranks {}",
+        plan.wire.name(),
+        ck.ef.len()
     );
     println!(
         "  step {} of {} ({})",

@@ -29,12 +29,22 @@
 //! * **v1** — all-f32: segments carry no dtype tag and the blob is a flat
 //!   f32 array. Still readable: a v1 file loads as an all-[`Dtype::F32`]
 //!   checkpoint, bit-exactly.
-//! * **v2** (current) — dtype-aware: every segment record carries a
-//!   storage-dtype tag, the plan records its dtype axis, and the blob
-//!   body stores the shardable prefix at the storage dtype (raw bf16 bit
-//!   patterns for bf16 layouts) with the metrics tail always f32. A bf16
-//!   checkpoint is therefore ~half the bytes of its f32 twin — measured
-//!   and gated by `checkpoint_file_bytes_bf16` in the bench baseline.
+//! * **v2** — dtype-aware: every segment record carries a storage-dtype
+//!   tag, the plan records its dtype axis, and the blob body stores the
+//!   shardable prefix at the storage dtype (raw bf16 bit patterns for
+//!   bf16 layouts) with the metrics tail always f32. A bf16 checkpoint
+//!   is therefore ~half the bytes of its f32 twin — measured and gated
+//!   by `checkpoint_file_bytes_bf16` in the bench baseline. Still
+//!   readable: the wire rung defaults to the plan's storage dtype and
+//!   the error-feedback section to empty, bit-exactly what a pre-ladder
+//!   run would resume as.
+//! * **v3** (current) — wire-ladder-aware: the plan records its exchange
+//!   wire rung (`WIRE_*` byte after the plan dtype byte), and a per-rank
+//!   error-feedback section (count + length-prefixed f32 arrays) sits
+//!   between the plan cursors and the blob so quantized (q8) exchanges
+//!   resume with their exact unsent residuals (docs/EXCHANGE.md). For
+//!   f32/bf16 wires the section is an empty count and the file is 5
+//!   bytes longer than its v2 twin.
 
 use std::path::Path;
 
@@ -48,12 +58,16 @@ use super::manifest::{Layout, Segment};
 /// File magic for engine checkpoints ("ADalomo CheckPoint").
 pub const MAGIC: &[u8; 4] = b"ADCP";
 
-/// Current format version. Readers accept [`V1`] and this; the version is
+/// Current format version. Readers accept [`V1`]..=this; the version is
 /// bumped whenever a field is added or re-encoded.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// The all-f32 legacy format (no dtype tags, flat f32 blob body).
 pub const V1: u32 = 1;
+
+/// The dtype-aware, pre-wire-ladder format (no wire byte, no
+/// error-feedback section).
+pub const V2: u32 = 2;
 
 /// Plain-data mirror of the coordinator's `ExecPlan`, plus the position
 /// inside it. Enum axes are stored as u8 codes (see the `PROD_*`/`ORD_*`/
@@ -73,6 +87,11 @@ pub struct PlanRecord {
     /// Storage dtype axis: [`DT_F32`] | [`DT_BF16`] (v1 files load as
     /// [`DT_F32`]).
     pub dtype: u8,
+    /// Exchange wire rung: [`WIRE_F32`] | [`WIRE_BF16`] | [`WIRE_Q8`].
+    /// Pre-v3 files load with the wire following the plan dtype (their
+    /// only possible behavior) — the `WIRE_*` codes deliberately equal
+    /// the `DT_*` codes so that default is a plain byte copy.
+    pub wire: u8,
     /// Optimizer name (`OptKind::name()` spelling).
     pub opt: String,
     /// Total steps the plan runs for.
@@ -108,6 +127,12 @@ pub const MODE_SEGMENTS: u8 = 0;
 pub const MODE_CONTIGUOUS: u8 = 1;
 pub const DT_F32: u8 = 0;
 pub const DT_BF16: u8 = 1;
+/// Wire-rung codes (v3). [`WIRE_F32`]/[`WIRE_BF16`] intentionally match
+/// [`DT_F32`]/[`DT_BF16`] so pre-v3 readers' wire-follows-dtype default
+/// is a byte copy of the plan dtype code.
+pub const WIRE_F32: u8 = 0;
+pub const WIRE_BF16: u8 = 1;
+pub const WIRE_Q8: u8 = 2;
 
 /// [`Dtype`] -> on-disk code.
 pub fn dtype_code(d: Dtype) -> u8 {
@@ -135,6 +160,12 @@ pub struct Checkpoint {
     /// Completed optimizer steps at save time.
     pub step: u64,
     pub plan: PlanRecord,
+    /// Per-rank error-feedback accumulators (v3): one `params_len`-long
+    /// f32 array per rank when the plan's wire rung is [`WIRE_Q8`], empty
+    /// otherwise (and always empty in pre-v3 files). The coordinator
+    /// re-injects these residuals into each rank's next quantized
+    /// payload, so they must resume bit-exactly.
+    pub ef: Vec<Vec<f32>>,
     /// Full blob in its STORAGE dtype: parameter, optimizer-state and
     /// metrics regions (bf16 prefixes round-trip bit-exactly — no widen/
     /// re-round on the save/load path).
@@ -294,12 +325,12 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize `ck` into the current (version-2) byte layout.
+/// Serialize `ck` into the current (version-3) byte layout.
 pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
-    encode(&ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.blob)
+    encode(&ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.ef, &ck.blob)
 }
 
-/// The version-2 encoder over borrowed parts — what [`write`] uses so
+/// The version-3 encoder over borrowed parts — what [`write`] uses so
 /// the engine can checkpoint without cloning its blob first. The blob
 /// body is the typed storage verbatim: bf16 prefix bits then the f32
 /// tail (for f32 storage the prefix is empty and the tail is the whole
@@ -309,6 +340,7 @@ fn encode(
     layout: &Layout,
     step: u64,
     plan: &PlanRecord,
+    ef: &[Vec<f32>],
     blob: &TypedBlob,
 ) -> Vec<u8> {
     let mut out = Vec::with_capacity(64 + blob.storage_bytes());
@@ -339,6 +371,8 @@ fn encode(
     out.push(plan.mode);
     // v2: the plan's storage-dtype axis.
     out.push(plan.dtype);
+    // v3: the plan's exchange wire rung.
+    out.push(plan.wire);
     put_str(&mut out, &plan.opt);
     put_u64(&mut out, plan.steps);
     put_u64(&mut out, plan.bucket_elems);
@@ -351,6 +385,13 @@ fn encode(
     put_u64(&mut out, plan.seed);
     put_u64(&mut out, plan.cursor_group);
     put_u64(&mut out, plan.cursor_task);
+    // v3: per-rank error-feedback section (empty count for exact wires),
+    // kept BEFORE the blob so the blob body stays the strict file tail.
+    put_u32(&mut out, ef.len() as u32);
+    for e in ef {
+        put_u64(&mut out, e.len() as u64);
+        write_f32s(&mut out, e);
+    }
     // Blob: element count, then the raw typed storage.
     put_u64(&mut out, blob.len() as u64);
     write_u16s(&mut out, blob.prefix_bits());
@@ -370,6 +411,11 @@ pub fn to_bytes_v1(ck: &Checkpoint) -> Result<Vec<u8>> {
             && ck.layout.storage_dtype()? == Dtype::F32
             && ck.plan.dtype == DT_F32,
         "the v1 format is all-f32; widen/retag the checkpoint first"
+    );
+    ensure!(
+        ck.plan.wire == WIRE_F32 && ck.ef.is_empty(),
+        "the v1 format predates the wire ladder; it can only spell the \
+         f32 wire with no error-feedback state"
     );
     let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
     out.extend_from_slice(MAGIC);
@@ -412,9 +458,67 @@ pub fn to_bytes_v1(ck: &Checkpoint) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Parse a version-1 or version-2 checkpoint, validating magic, version,
+/// Encode `ck` in the LEGACY v2 byte layout — dtype-aware but
+/// pre-wire-ladder, so it can only spell wire-follows-storage plans with
+/// no error-feedback state. Like [`to_bytes_v1`], this is the single
+/// authoritative spelling of the legacy format: the compatibility tests
+/// write their PR-5-era fixture files through it (and pin its output
+/// against an independent hand-rolled byte stream).
+pub fn to_bytes_v2(ck: &Checkpoint) -> Result<Vec<u8>> {
+    ensure!(
+        ck.plan.wire == ck.plan.dtype && ck.ef.is_empty(),
+        "the v2 format predates the wire ladder; it can only spell \
+         wire-follows-storage checkpoints with no error-feedback state"
+    );
+    let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, V2);
+    put_str(&mut out, &ck.layout_key);
+    put_u64(&mut out, ck.layout.blob_len as u64);
+    put_u64(&mut out, ck.layout.params_len as u64);
+    put_u32(&mut out, ck.layout.segments.len() as u32);
+    for s in &ck.layout.segments {
+        put_str(&mut out, &s.name);
+        put_str(&mut out, &s.kind);
+        put_u32(&mut out, s.shape.len() as u32);
+        for &d in &s.shape {
+            put_u64(&mut out, d as u64);
+        }
+        put_u64(&mut out, s.offset as u64);
+        put_u64(&mut out, s.size as u64);
+        out.push(dtype_code(s.dtype));
+    }
+    put_u64(&mut out, ck.step);
+    out.push(ck.plan.production);
+    out.push(ck.plan.order);
+    out.push(ck.plan.granularity);
+    out.push(ck.plan.mode);
+    out.push(ck.plan.dtype);
+    // v2: NO wire byte.
+    put_str(&mut out, &ck.plan.opt);
+    put_u64(&mut out, ck.plan.steps);
+    put_u64(&mut out, ck.plan.bucket_elems);
+    put_u32(&mut out, ck.plan.n_ranks);
+    put_u32(&mut out, ck.plan.n_shards);
+    put_f32(&mut out, ck.plan.lr);
+    put_f32(&mut out, ck.plan.wd);
+    put_f64(&mut out, ck.plan.fabric_alpha);
+    put_f64(&mut out, ck.plan.fabric_bw);
+    put_u64(&mut out, ck.plan.seed);
+    put_u64(&mut out, ck.plan.cursor_group);
+    put_u64(&mut out, ck.plan.cursor_task);
+    // v2: NO error-feedback section.
+    put_u64(&mut out, ck.blob.len() as u64);
+    write_u16s(&mut out, ck.blob.prefix_bits());
+    write_f32s(&mut out, ck.blob.f32_part());
+    Ok(out)
+}
+
+/// Parse a version-1, -2 or -3 checkpoint, validating magic, version,
 /// internal layout consistency and exact body length. v1 files load as
-/// all-f32 ([`DT_F32`] everywhere, flat f32 blob).
+/// all-f32 ([`DT_F32`] everywhere, flat f32 blob); pre-v3 files load
+/// with the wire rung equal to the plan dtype and no error-feedback
+/// state.
 pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     ensure!(
         bytes.len() >= 8 && &bytes[..4] == MAGIC,
@@ -423,7 +527,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     let mut r = Reader { bytes, pos: 4 };
     let version = r.u32()?;
     ensure!(
-        version == V1 || version == VERSION,
+        (V1..=VERSION).contains(&version),
         "checkpoint version {version} unsupported (this build reads \
          {V1}..={VERSION})"
     );
@@ -457,12 +561,25 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     let layout = Layout { blob_len, params_len, segments };
     validate_layout(&layout)?;
     let step = r.u64()?;
+    let production = r.u8()?;
+    let order = r.u8()?;
+    let granularity = r.u8()?;
+    let mode = r.u8()?;
+    let plan_dtype = if version >= 2 { r.u8()? } else { DT_F32 };
+    // Pre-v3 exchanges could only ship at the storage dtype, and the
+    // WIRE_* codes equal the DT_* codes — the default is a byte copy.
+    let wire = if version >= 3 { r.u8()? } else { plan_dtype };
+    ensure!(
+        matches!(wire, WIRE_F32 | WIRE_BF16 | WIRE_Q8),
+        "unknown wire-codec code {wire}"
+    );
     let plan = PlanRecord {
-        production: r.u8()?,
-        order: r.u8()?,
-        granularity: r.u8()?,
-        mode: r.u8()?,
-        dtype: if version >= 2 { r.u8()? } else { DT_F32 },
+        production,
+        order,
+        granularity,
+        mode,
+        dtype: plan_dtype,
+        wire,
         opt: r.str()?,
         steps: r.u64()?,
         bucket_elems: r.u64()?,
@@ -490,6 +607,41 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         plan.dtype,
         dtype.name()
     );
+    // v3: per-rank error-feedback section. Each counted entry occupies
+    // at least its 8-byte length word, so the count is bounded before
+    // the allocation it sizes (same discipline as the segment count).
+    let ef = if version >= 3 {
+        let n_ranks = r.count32(8)?;
+        let mut ef = Vec::with_capacity(n_ranks);
+        for _ in 0..n_ranks {
+            let len = r.len64(4)?;
+            let body = r.take(len * 4)?;
+            ef.push(read_f32s(body, len)?);
+        }
+        ef
+    } else {
+        Vec::new()
+    };
+    ensure!(
+        plan.wire == WIRE_Q8 || ef.is_empty(),
+        "checkpoint carries error-feedback state, but wire code {} keeps \
+         none",
+        plan.wire
+    );
+    ensure!(
+        ef.is_empty() || ef.len() == plan.n_ranks as usize,
+        "error-feedback section holds {} ranks, plan says {}",
+        ef.len(),
+        plan.n_ranks
+    );
+    for (rank, e) in ef.iter().enumerate() {
+        ensure!(
+            e.len() == layout.params_len,
+            "rank {rank} error-feedback length {} != params_len {}",
+            e.len(),
+            layout.params_len
+        );
+    }
     let n = r.len64(dtype.bytes().min(4))?;
     ensure!(
         n == layout.blob_len,
@@ -516,7 +668,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
             TypedBlob::from_parts(dtype, split, bits, tail)?
         }
     };
-    Ok(Checkpoint { layout_key, layout, step, plan, blob })
+    Ok(Checkpoint { layout_key, layout, step, plan, ef, blob })
 }
 
 /// The serialized layout must be internally consistent before anything
@@ -571,7 +723,15 @@ fn validate_layout(layout: &Layout) -> Result<()> {
 
 /// Write `ck` to `path` crash-safely (see [`write`]).
 pub fn save(path: &Path, ck: &Checkpoint) -> Result<()> {
-    write(path, &ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.blob)
+    write(
+        path,
+        &ck.layout_key,
+        &ck.layout,
+        ck.step,
+        &ck.plan,
+        &ck.ef,
+        &ck.blob,
+    )
 }
 
 /// [`save`] over borrowed parts: validates and serializes without the
@@ -590,6 +750,7 @@ pub fn write(
     layout: &Layout,
     step: u64,
     plan: &PlanRecord,
+    ef: &[Vec<f32>],
     blob: &TypedBlob,
 ) -> Result<()> {
     ensure!(
@@ -618,9 +779,30 @@ pub fn write(
         plan.dtype,
         dtype.name()
     );
+    ensure!(
+        plan.wire == WIRE_Q8 || ef.is_empty(),
+        "wire code {} keeps no error-feedback state, but {} rank \
+         accumulators were passed",
+        plan.wire,
+        ef.len()
+    );
+    ensure!(
+        ef.is_empty() || ef.len() == plan.n_ranks as usize,
+        "error-feedback for {} ranks, plan says {}",
+        ef.len(),
+        plan.n_ranks
+    );
+    for (rank, e) in ef.iter().enumerate() {
+        ensure!(
+            e.len() == layout.params_len,
+            "rank {rank} error-feedback length {} != params_len {}",
+            e.len(),
+            layout.params_len
+        );
+    }
     validate_layout(layout)?;
     let tmp = temp_sibling(path);
-    std::fs::write(&tmp, encode(layout_key, layout, step, plan, blob))
+    std::fs::write(&tmp, encode(layout_key, layout, step, plan, ef, blob))
         .with_context(|| format!("write checkpoint {tmp:?}"))?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("publish checkpoint {path:?}"))
@@ -700,6 +882,7 @@ mod tests {
                 granularity: GRAN_TASKS,
                 mode: MODE_CONTIGUOUS,
                 dtype: dtype_code(dtype),
+                wire: dtype_code(dtype),
                 opt: "adalomo".into(),
                 steps: 12,
                 bucket_elems: 64,
@@ -713,8 +896,21 @@ mod tests {
                 cursor_group: 0,
                 cursor_task: 0,
             },
+            ef: Vec::new(),
             blob,
         }
+    }
+
+    /// An f32 sample retagged to the q8 wire, carrying per-rank
+    /// error-feedback accumulators.
+    fn sample_q8() -> Checkpoint {
+        let mut ck = sample_with(Dtype::F32);
+        ck.plan.wire = WIRE_Q8;
+        let params = ck.layout.params_len;
+        ck.ef = (0..ck.plan.n_ranks as usize)
+            .map(|r| (0..params).map(|i| (r * params + i) as f32 * 1e-3).collect())
+            .collect();
+        ck
     }
 
     fn sample() -> Checkpoint {
@@ -799,14 +995,133 @@ mod tests {
         assert_eq!(back, ck); // sample() is all-f32 + DT_F32 already
         assert_eq!(back.layout.storage_dtype().unwrap(), Dtype::F32);
         assert_eq!(back.plan.dtype, DT_F32);
-        // And the v2 re-encoding of it is exactly 1 byte per segment + 1
-        // plan byte longer.
+        // ... and the wire ladder's defaults: f32 wire, no error-feedback.
+        assert_eq!(back.plan.wire, WIRE_F32);
+        assert!(back.ef.is_empty());
+        // The v3 re-encoding of it is exactly 1 dtype byte per segment +
+        // 1 plan dtype byte + 1 wire byte + the 4-byte empty
+        // error-feedback count longer.
         assert_eq!(
             to_bytes(&back).len(),
-            out.len() + ck.layout.segments.len() + 1
+            out.len() + ck.layout.segments.len() + 6
         );
         // bf16 checkpoints cannot be downgraded to the all-f32 format.
         assert!(to_bytes_v1(&sample_with(Dtype::Bf16)).is_err());
+        // Neither can q8-wire (error-feedback-carrying) ones.
+        assert!(to_bytes_v1(&sample_q8()).is_err());
+    }
+
+    /// Pre-ladder (v2) files — the byte layout PR-5/6-era checkpoints
+    /// have on disk, reproduced by hand — load with the wire rung
+    /// defaulted to the storage dtype and no error-feedback state, every
+    /// value bit-exact.
+    #[test]
+    fn v2_files_load_with_wire_following_storage() {
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let ck = sample_with(dtype);
+            let mut out = Vec::new();
+            out.extend_from_slice(MAGIC);
+            put_u32(&mut out, V2);
+            put_str(&mut out, &ck.layout_key);
+            put_u64(&mut out, ck.layout.blob_len as u64);
+            put_u64(&mut out, ck.layout.params_len as u64);
+            put_u32(&mut out, ck.layout.segments.len() as u32);
+            for s in &ck.layout.segments {
+                put_str(&mut out, &s.name);
+                put_str(&mut out, &s.kind);
+                put_u32(&mut out, s.shape.len() as u32);
+                for &d in &s.shape {
+                    put_u64(&mut out, d as u64);
+                }
+                put_u64(&mut out, s.offset as u64);
+                put_u64(&mut out, s.size as u64);
+                out.push(dtype_code(s.dtype));
+            }
+            put_u64(&mut out, ck.step);
+            out.push(ck.plan.production);
+            out.push(ck.plan.order);
+            out.push(ck.plan.granularity);
+            out.push(ck.plan.mode);
+            out.push(ck.plan.dtype);
+            // v2: NO wire byte.
+            put_str(&mut out, &ck.plan.opt);
+            put_u64(&mut out, ck.plan.steps);
+            put_u64(&mut out, ck.plan.bucket_elems);
+            put_u32(&mut out, ck.plan.n_ranks);
+            put_u32(&mut out, ck.plan.n_shards);
+            put_f32(&mut out, ck.plan.lr);
+            put_f32(&mut out, ck.plan.wd);
+            put_f64(&mut out, ck.plan.fabric_alpha);
+            put_f64(&mut out, ck.plan.fabric_bw);
+            put_u64(&mut out, ck.plan.seed);
+            put_u64(&mut out, ck.plan.cursor_group);
+            put_u64(&mut out, ck.plan.cursor_task);
+            // v2: NO error-feedback section.
+            put_u64(&mut out, ck.blob.len() as u64);
+            write_u16s(&mut out, ck.blob.prefix_bits());
+            write_f32s(&mut out, ck.blob.f32_part());
+
+            // The hand-rolled bytes ARE what the shared v2 encoder emits.
+            assert_eq!(out, to_bytes_v2(&ck).unwrap());
+            let back = from_bytes(&out).unwrap();
+            assert_eq!(back, ck); // sample_with already spells wire=dtype
+            assert_eq!(back.plan.wire, dtype_code(dtype));
+            assert!(back.ef.is_empty());
+            for (a, b) in ck.blob.to_f32().iter().zip(&back.blob.to_f32())
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // The v3 re-encoding is exactly the wire byte + the 4-byte
+            // empty error-feedback count longer.
+            assert_eq!(to_bytes(&back).len(), out.len() + 5);
+        }
+        // The v2 format cannot spell a decoupled wire or carry residuals.
+        let mut decoupled = sample_with(Dtype::F32);
+        decoupled.plan.wire = WIRE_BF16;
+        assert!(to_bytes_v2(&decoupled).is_err());
+        assert!(to_bytes_v2(&sample_q8()).is_err());
+    }
+
+    /// ADCP v3 round-trips the q8 wire's per-rank error-feedback
+    /// accumulators bit-exactly, and rejects inconsistent sections.
+    #[test]
+    fn error_feedback_round_trip_and_validation() {
+        let ck = sample_q8();
+        let bytes = to_bytes(&ck);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.plan.wire, WIRE_Q8);
+        assert_eq!(back.ef.len(), ck.plan.n_ranks as usize);
+        for (a, b) in ck.ef.iter().flatten().zip(back.ef.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Exact-wire plans must not carry residual state.
+        let mut stray = sample_q8();
+        stray.plan.wire = WIRE_F32;
+        assert!(from_bytes(&to_bytes(&stray)).is_err());
+        // Rank count must match the plan.
+        let mut short = sample_q8();
+        short.ef.pop();
+        assert!(from_bytes(&to_bytes(&short)).is_err());
+        // Accumulator length must match params_len.
+        let mut ragged = sample_q8();
+        ragged.ef[0].push(0.0);
+        assert!(from_bytes(&to_bytes(&ragged)).is_err());
+        // A q8 file with an EMPTY section stays loadable (a hand-written
+        // pre-run checkpoint): residuals simply start from zero.
+        let mut empty = sample_q8();
+        empty.ef.clear();
+        let back = from_bytes(&to_bytes(&empty)).unwrap();
+        assert!(back.ef.is_empty());
+        // save() applies the same rules before touching the disk.
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_ckpt_ef_{}.bin",
+            std::process::id()
+        ));
+        assert!(save(&path, &stray).is_err());
+        save(&path, &ck).unwrap();
+        assert_eq!(load(&path).unwrap(), ck);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]
@@ -887,8 +1202,11 @@ mod tests {
     /// `count32`/`len64` reads run before every allocation they size).
     #[test]
     fn mutated_headers_never_panic() {
-        for dtype in [Dtype::F32, Dtype::Bf16] {
-            let bytes = to_bytes(&sample_with(dtype));
+        for bytes in [
+            to_bytes(&sample_with(Dtype::F32)),
+            to_bytes(&sample_with(Dtype::Bf16)),
+            to_bytes(&sample_q8()),
+        ] {
             for i in 0..bytes.len() {
                 for flip in [0x01u8, 0x80, 0xFF] {
                     let mut m = bytes.clone();

@@ -12,10 +12,14 @@
 //!   halved, bounded per-task scratch (measured == analytic, far below
 //!   a full-image mirror);
 //! * bf16 suspend/checkpoint/resume reproducing an uninterrupted bf16
-//!   run bit-for-bit (raw u16 prefixes included).
+//!   run bit-for-bit (raw u16 prefixes included);
+//! * the wire-ladder twin of the optimizer sweep: bf16/q8 exchange rungs
+//!   on f32 storage tracking the f32-wire run within DOCUMENTED
+//!   tolerances (see `WIRE_*_TOL_*` below and docs/EXCHANGE.md).
 
 use std::path::PathBuf;
 
+use adalomo::coordinator::collective::WireCodec;
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::fused_host;
 use adalomo::coordinator::pipeline::PipelineConfig;
@@ -30,6 +34,21 @@ use adalomo::util::rng::Pcg32;
 /// Documented bf16-vs-f32 parity tolerance (see module docs).
 const BF16_TOL_ABS: f32 = 5e-3;
 const BF16_TOL_REL: f32 = 0.05;
+
+/// Documented wire-rung tolerances against the f32-wire reference at
+/// fixed f32 storage (see docs/EXCHANGE.md for the derivation):
+///
+/// * bf16 wire rounds each shipped gradient element at 2^-9 relative —
+///   the same error model as bf16 storage, so it inherits the bf16
+///   tolerance above;
+/// * q8 wire quantizes each 64-element block at ~max|g|/254 absolute,
+///   so near-zero elements in a live block can see their whole update
+///   direction perturbed for the adaptive-ratio optimizers. Error
+///   feedback re-injects the residual next exchange, bounding the drift
+///   by roughly 2·steps·lr (= 3e-2 at lr 5e-3, 3 steps) in that
+///   worst case; the pin below adds headroom on top.
+const WIRE_Q8_TOL_ABS: f32 = 4e-2;
+const WIRE_Q8_TOL_REL: f32 = 0.10;
 
 fn model_layout(kind: OptKind) -> Layout {
     let params: Vec<(&str, &[usize])> = vec![
@@ -306,4 +325,58 @@ fn dtype_is_checkpointed_not_guessed() {
     let resumed = Engine::resume(&path).unwrap();
     assert_eq!(resumed.plan().dtype, Dtype::Bf16);
     std::fs::remove_file(path).ok();
+}
+
+/// All seven optimizers, both shard plans, at fixed f32 storage: the
+/// bf16 and q8 wire rungs must track the f32-wire reference within their
+/// documented tolerances (`WIRE_*` consts above). Same plan, same
+/// gradient values — only the exchange encoding differs, so this is the
+/// convergence-bound half of the wire ladder's acceptance criteria.
+#[test]
+fn compressed_wire_rungs_track_f32_wire_for_all_seven_optimizers() {
+    for kind in ALL_OPTS {
+        for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+            let layout = model_layout(kind);
+            let (blob0, _) = seeded_blob_and_grads(&layout, 31);
+            let mut cfg = PipelineConfig::new(3, layout.params_len.div_ceil(6));
+            cfg.n_shards = 2;
+            cfg.lr = 5e-3;
+            cfg.wd = 0.01;
+            let run = |wire: Option<WireCodec>| -> Vec<f32> {
+                let mut cfg = cfg.clone();
+                cfg.wire = wire;
+                let mut plan =
+                    ExecPlan::pipelined_fused(kind, mode, 2, &cfg);
+                plan.seed = 19;
+                let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+                let sources = fused_host::plan_sources(
+                    eng.plan(),
+                    eng.group_extents(),
+                    0.05,
+                );
+                eng.run(sources).unwrap();
+                eng.into_blob()
+            };
+            // f32 storage with no override resolves to the f32 wire.
+            let reference = run(None);
+            for (wire, abs, rel) in [
+                (WireCodec::Bf16, BF16_TOL_ABS, BF16_TOL_REL),
+                (WireCodec::Q8Block, WIRE_Q8_TOL_ABS, WIRE_Q8_TOL_REL),
+            ] {
+                let b = run(Some(wire));
+                for (i, (&x, &y)) in reference[..layout.params_len]
+                    .iter()
+                    .zip(&b[..layout.params_len])
+                    .enumerate()
+                {
+                    assert!(
+                        (x - y).abs() <= abs + rel * x.abs(),
+                        "{kind:?} {mode:?} {} wire param {i}: \
+                         f32-wire {x} vs {y}",
+                        wire.name()
+                    );
+                }
+            }
+        }
+    }
 }

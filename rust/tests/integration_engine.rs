@@ -219,7 +219,7 @@ fn v1_checkpoint_resumes_bit_exactly() {
     let srcs = sources_for(&full);
     full.run(srcs).unwrap();
 
-    // Suspend at step 2, save (v2), then transcode the checkpoint to the
+    // Suspend at step 2, save (v3), then transcode the checkpoint to the
     // legacy v1 byte layout by hand.
     let mut part = Engine::new(&layout, &blob0, plan).unwrap();
     part.suspend_at(2);
@@ -245,6 +245,126 @@ fn v1_checkpoint_resumes_bit_exactly() {
         assert!(a.to_bits() == b.to_bits(), "elem {i}: {a} vs {b}");
     }
     for p in [p1, p2] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// A PR-5/6-era (version-2, dtype-aware, pre-wire-ladder) checkpoint
+/// still loads AND resumes bit-exactly, for both storage dtypes: the v2
+/// file is produced through the shared legacy encoder (pinned by hand in
+/// the checkpoint unit tests), loads with the wire rung defaulted to the
+/// storage dtype, and carries the run to the uninterrupted final state.
+#[test]
+fn v2_checkpoint_resumes_bit_exactly() {
+    use adalomo::tensor::Dtype;
+    let kind = OptKind::AdaLomo;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 93);
+    for dtype in [Dtype::F32, Dtype::Bf16] {
+        let mut cfg = PipelineConfig::new(5, layout.params_len.div_ceil(4));
+        cfg.n_shards = 2;
+        cfg.dtype = dtype;
+        let mut plan =
+            ExecPlan::pipelined(kind, ShardMode::Segments, 2, &cfg);
+        plan.seed = 37;
+
+        // Uninterrupted reference.
+        let mut full = Engine::new(&layout, &blob0, plan.clone()).unwrap();
+        let srcs = sources_for(&full);
+        full.run(srcs).unwrap();
+
+        // Suspend at step 2, save (v3), transcode to the legacy v2 bytes.
+        let mut part = Engine::new(&layout, &blob0, plan).unwrap();
+        part.suspend_at(2);
+        let srcs = sources_for(&part);
+        part.run(srcs).unwrap();
+        let p3 = tmp(&format!("v2_src_{}", dtype.name()));
+        part.save(&p3).unwrap();
+        let ck = checkpoint::load(&p3).unwrap();
+        let v2 = checkpoint::to_bytes_v2(&ck).unwrap();
+        // The transcoding dropped exactly the wire byte and the empty
+        // error-feedback count — nothing else.
+        assert_eq!(std::fs::read(&p3).unwrap().len(), v2.len() + 5);
+
+        let p2 = tmp(&format!("v2_file_{}", dtype.name()));
+        std::fs::write(&p2, &v2).unwrap();
+        let mut resumed = Engine::resume(&p2).unwrap();
+        assert_eq!(resumed.step(), 2);
+        let srcs = sources_for(&resumed);
+        resumed.run(srcs).unwrap();
+        assert!(resumed.is_finished());
+        let a_blob = full.blob();
+        let b_blob = resumed.blob();
+        for (i, (a, b)) in a_blob.iter().zip(b_blob.iter()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{} elem {i}: {a} vs {b}",
+                dtype.name()
+            );
+        }
+        for p in [p2, p3] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+/// The q8 wire's error-feedback accumulators survive a checkpoint:
+/// suspend/resume of a quantized exchange matches the uninterrupted run
+/// bitwise, which can only happen if the per-rank residuals resume
+/// exactly (a fresh engine would re-inject zeros instead).
+#[test]
+fn q8_wire_suspend_resume_is_bit_exact() {
+    use adalomo::coordinator::collective::WireCodec;
+    let kind = OptKind::AdaLomo;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 95);
+    let mut cfg = PipelineConfig::new(6, layout.params_len.div_ceil(7));
+    cfg.n_shards = 2;
+    cfg.wire = Some(WireCodec::Q8Block);
+    let mut plan = ExecPlan::pipelined(kind, ShardMode::Contiguous, 2, &cfg);
+    plan.seed = 41;
+
+    // Uninterrupted reference.
+    let mut full = Engine::new(&layout, &blob0, plan.clone()).unwrap();
+    let srcs = sources_for(&full);
+    full.run(srcs).unwrap();
+    assert!(full.is_finished());
+
+    // Suspend mid-run: the residual accumulators are non-trivial here.
+    let mid = tmp("q8_mid");
+    let mut part = Engine::new(&layout, &blob0, plan).unwrap();
+    part.suspend_at(3);
+    let srcs = sources_for(&part);
+    part.run(srcs).unwrap();
+    part.save(&mid).unwrap();
+    let ck = checkpoint::load(&mid).unwrap();
+    assert_eq!(ck.plan.wire, checkpoint::WIRE_Q8);
+    assert_eq!(ck.ef.len(), 2);
+    assert!(
+        ck.ef.iter().flatten().any(|&x| x != 0.0),
+        "a quantized run should have banked non-zero residuals"
+    );
+
+    let mut resumed = Engine::resume(&mid).unwrap();
+    assert_eq!(resumed.step(), 3);
+    let srcs = sources_for(&resumed);
+    resumed.run(srcs).unwrap();
+    assert!(resumed.is_finished());
+    let a_blob = full.blob();
+    let b_blob = resumed.blob();
+    for (i, (a, b)) in a_blob.iter().zip(b_blob.iter()).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "elem {i}: {a} vs {b}");
+    }
+    // Final checkpoints (including the final residual state) byte-equal.
+    let p_full = tmp("q8_full");
+    let p_rest = tmp("q8_rest");
+    full.save(&p_full).unwrap();
+    resumed.save(&p_rest).unwrap();
+    assert_eq!(
+        std::fs::read(&p_full).unwrap(),
+        std::fs::read(&p_rest).unwrap()
+    );
+    for p in [mid, p_full, p_rest] {
         std::fs::remove_file(p).ok();
     }
 }

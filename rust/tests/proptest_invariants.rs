@@ -2,6 +2,7 @@
 //! not in the offline registry). Each property runs across a deterministic
 //! sweep of random cases; failures print the case seed.
 
+use adalomo::coordinator::collective::WireCodec;
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::fused_host::{self, FusedHostGrads, GroupGradSource};
 use adalomo::coordinator::pipeline::GradSource;
@@ -640,23 +641,40 @@ fn prop_engine_matches_legacy_bitwise() {
                 let buckets =
                     [1 + rng.below(layout.params_len), layout.params_len + 5];
                 for bucket_elems in buckets {
-                    for (mode, n_shards, dtype) in [
-                        (ShardMode::Segments, 2usize, Dtype::F32),
-                        (ShardMode::Contiguous, 3, Dtype::F32),
+                    for (mode, n_shards, dtype, wire) in [
+                        (ShardMode::Segments, 2usize, Dtype::F32, None),
+                        (ShardMode::Contiguous, 3, Dtype::F32, None),
                         // The dtype axis: at FIXED bf16 storage every cell
                         // must still agree bitwise — per-task widen→
                         // kernel→round is partition-independent.
-                        (ShardMode::Segments, 2, Dtype::Bf16),
-                        (ShardMode::Contiguous, 3, Dtype::Bf16),
+                        (ShardMode::Segments, 2, Dtype::Bf16, None),
+                        (ShardMode::Contiguous, 3, Dtype::Bf16, None),
+                        // The wire axis: a bf16 wire on f32 storage
+                        // decouples the two. The rung is element-wise
+                        // (tiling-independent), so at a FIXED wire every
+                        // cell must still agree bitwise.
+                        (
+                            ShardMode::Segments,
+                            2,
+                            Dtype::F32,
+                            Some(WireCodec::Bf16),
+                        ),
+                        (
+                            ShardMode::Contiguous,
+                            3,
+                            Dtype::F32,
+                            Some(WireCodec::Bf16),
+                        ),
                     ] {
                         let mut cfg =
                             pipeline::PipelineConfig::new(3, bucket_elems);
                         cfg.n_shards = n_shards;
                         cfg.dtype = dtype;
+                        cfg.wire = wire;
                         let ctx = format!(
                             "{kind:?} {mode:?} ranks={n_ranks} \
                              bucket={bucket_elems} shards={n_shards} \
-                             {dtype:?} seed={seed}"
+                             {dtype:?} wire={wire:?} seed={seed}"
                         );
                         // Wrapper results for the four legacy paths.
                         let (w_seq, _) = pipeline::run_sequential(
@@ -739,6 +757,35 @@ fn prop_engine_matches_legacy_bitwise() {
                                 assert!(
                                     x.to_bits() == y.to_bits(),
                                     "{ctx} [{label}] elem {i}: {x} vs {y}"
+                                );
+                            }
+                        }
+                        // The f32 wire rung is the identity: requesting
+                        // it EXPLICITLY must reproduce this cell's
+                        // default (pre-ladder) exchange bit for bit.
+                        if wire.is_none() && dtype == Dtype::F32 {
+                            let mut cfg_w = pipeline::PipelineConfig::new(
+                                3,
+                                bucket_elems,
+                            );
+                            cfg_w.n_shards = n_shards;
+                            cfg_w.dtype = dtype;
+                            cfg_w.wire = Some(WireCodec::F32);
+                            let e_explicit = run_plan(
+                                ExecPlan::pipelined(
+                                    kind, mode, n_ranks, &cfg_w,
+                                ),
+                                RankSources::Full(full(n_ranks)),
+                            );
+                            for (i, (x, y)) in e_pipe
+                                .iter()
+                                .zip(e_explicit.iter())
+                                .enumerate()
+                            {
+                                assert!(
+                                    x.to_bits() == y.to_bits(),
+                                    "{ctx} [explicit f32 wire] elem {i}: \
+                                     {x} vs {y}"
                                 );
                             }
                         }
