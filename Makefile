@@ -8,8 +8,8 @@
 CARGO ?= cargo
 
 .PHONY: build test bench bench-smoke bench-json bench-gate bench-check \
-	bench-bless ckpt-smoke fmt fmt-fix clippy doc analyze lint ci-tier1 \
-	ci miri tsan test-pjrt artifacts
+	bench-bless ckpt-smoke chaos fmt fmt-fix clippy doc analyze lint \
+	ci-tier1 ci miri tsan test-pjrt artifacts
 
 build:
 	$(CARGO) build --release
@@ -119,7 +119,22 @@ ckpt-smoke:
 	$(CARGO) run --release --quiet -- checkpoint-inspect \
 		--ckpt $(CKPT_SMOKE_DIR)/resumedq8.bin --dtype f32 --wire q8
 	cmp $(CKPT_SMOKE_DIR)/fullq8.bin $(CKPT_SMOKE_DIR)/resumedq8.bin
-	@echo "ckpt-smoke OK: suspend/resume reproduced both dtypes and the q8 wire byte-for-byte; bf16 file under 55% of f32"
+	@if $(CARGO) run --release --quiet -- train \
+		--resume $(CKPT_SMOKE_DIR)/midq8.bin --ranks 3 \
+		--out $(CKPT_SMOKE_DIR)/never.bin 2>/dev/null; then \
+		echo "resume accepted a mismatched --ranks 3; it must refuse"; \
+		exit 1; fi
+	@test ! -f $(CKPT_SMOKE_DIR)/never.bin \
+		|| { echo "refused resume still wrote an output file"; exit 1; }
+	@echo "ckpt-smoke OK: suspend/resume reproduced both dtypes and the q8 wire byte-for-byte; bf16 file under 55% of f32; mismatched --ranks resume refused"
+
+# Chaos lane: ranks killed/revived at random (seed-pinned) step
+# boundaries — the elastic engine must stay byte-identical to the
+# fixed-membership checkpoint splice (rust/tests/chaos_elastic.rs). On a
+# red case the test shrinks the schedule and drops the reproducer into
+# target/chaos/, which the CI job uploads as an artifact.
+chaos:
+	$(CARGO) test --release -q --test chaos_elastic
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -147,7 +162,7 @@ lint: fmt clippy doc analyze
 
 ci-tier1: build test
 
-ci: lint ci-tier1 ckpt-smoke
+ci: lint ci-tier1 ckpt-smoke chaos
 
 # Dynamic-analysis companions to `analyze` (nightly toolchain; CI runs
 # them as manually-dispatched jobs like `pjrt`). Miri interprets the

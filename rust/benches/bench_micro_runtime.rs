@@ -2,7 +2,7 @@
 //! uploads, metrics reads — the L3 hot-path components the perf pass
 //! optimizes (EXPERIMENTS.md §Perf).
 
-use adalomo::coordinator::collective::WireCodec;
+use adalomo::coordinator::collective::{self, WireCodec};
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::pipeline;
 use adalomo::data::{loader::DataLoader, Domain};
@@ -247,6 +247,53 @@ fn host_blob_section(sink: &mut JsonSink) {
             "adaptive bucket under q8 wire: {} elems vs {} at f32",
             q8_bucket, cfg.bucket_elems
         );
+    }
+
+    // --- elastic scale-out: hierarchical fabric + re-plan splice ------
+    // hier_allreduce_speedup is the inter-node byte ratio of a flat ring
+    // vs the two-level all-reduce at 8 ranks / 4 per node — a pure
+    // function of the topology algebra (collective.rs), not a timing, so
+    // the baseline pins it EXACT: flat crosses the node boundary from
+    // every rank (2 nodes x 2(n-1)/n x B), hierarchical once per node
+    // (2(nodes-1)/m x B) = 7.0x fewer inter-node bytes.
+    {
+        let bytes = 4.0 * layout.params_len as f64;
+        let flat = collective::inter_node_bytes_flat(bytes, 8, 4);
+        let hier = collective::inter_node_bytes_hier(bytes, 8, 4);
+        sink.metric("hier_allreduce_speedup", flat / hier);
+        println!(
+            "hier allreduce at 8 ranks / 4 per node: {:.0} inter-node \
+             bytes flat vs {:.0} hierarchical ({:.1}x)",
+            flat,
+            hier,
+            flat / hier
+        );
+    }
+    // replan_splice_ns: the membership-epoch boundary cost — rebuild the
+    // effective plan from its checkpoint record and re-bank the per-rank
+    // error-feedback buffers at the incoming fleet size (what
+    // Engine::run_elastic does between segments). Timing metric: wide
+    // tolerance in the baseline, gated one-sided.
+    {
+        let mut scfg = pipeline::PipelineConfig::new(4, fixed_bucket);
+        scfg.n_shards = 2;
+        scfg.wire = Some(WireCodec::Q8Block);
+        let mut plan =
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Contiguous, 2, &scfg);
+        plan.ranks_schedule = vec![(1, 4), (2, 2), (3, 4)];
+        let rec = plan.to_record();
+        let splice = bench_units(
+            "elastic re-plan splice (from_record + EF re-bank, 4 ranks)",
+            layout.params_len as f64,
+            || {
+                let mut p = ExecPlan::from_record(&rec).unwrap();
+                p.n_ranks = p.ranks_for_step(2) as usize;
+                p.ranks_schedule.clear();
+                let ef = vec![vec![0.0f32; layout.params_len]; p.n_ranks];
+                std::hint::black_box((p, ef));
+            },
+        );
+        sink.metric("replan_splice_ns", splice.timing.mean * 1e9);
     }
     println!();
 }

@@ -253,6 +253,170 @@ pub fn allreduce_bucket_time(bucket_bytes: f64, n_ranks: usize, fabric: Fabric) 
     time(Op::AllReduce, bucket_bytes, n_ranks, fabric)
 }
 
+/// Two-level fabric: a fast ring *inside* each node and a slower ring
+/// *between* node leaders. `ranks_per_node` ranks share one node; the
+/// remaining cost parameters are ordinary [`Fabric`]s, so every flat
+/// helper above keeps working on either level.
+///
+/// The model is a cost overlay only — it never changes what bytes mean
+/// or what values the reduction tree sees, so it is deliberately NOT
+/// part of [`crate::runtime::checkpoint::PlanRecord`]: resuming a
+/// checkpoint under a different fabric spec is always bit-exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierFabric {
+    /// Intra-node ring (e.g. NVLink class).
+    pub intra: Fabric,
+    /// Inter-node ring over one leader per node (e.g. IB/ethernet class).
+    pub inter: Fabric,
+    /// Ranks sharing a node; the hierarchy collapses to a flat ring when
+    /// this reaches the world size (all ranks on one node) or 1 (one
+    /// rank per node).
+    pub ranks_per_node: usize,
+}
+
+impl Default for HierFabric {
+    fn default() -> Self {
+        HierFabric {
+            intra: Fabric::default(),
+            // IB-class inter-node: ~15 µs hop latency, 25 GB/s per link.
+            inter: Fabric { alpha: 15e-6, bw: 25e9 },
+            ranks_per_node: 4,
+        }
+    }
+}
+
+/// A parsed `--fabric` CLI spec: either a flat single-ring fabric or a
+/// hierarchical two-level one. Grammar (docs/FAULTS.md):
+///
+/// - `flat` | `flat:<alpha_s>:<bw_Bps>`
+/// - `hier:<ranks_per_node>` |
+///   `hier:<ranks_per_node>:<intra_alpha>:<intra_bw>:<inter_alpha>:<inter_bw>`
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FabricSpec {
+    Flat(Fabric),
+    Hier(HierFabric),
+}
+
+impl FabricSpec {
+    /// Parse the `--fabric` grammar above. Short forms take the model
+    /// defaults ([`Fabric::default`] / [`HierFabric::default`]).
+    pub fn parse(s: &str) -> Result<FabricSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |p: &str, what: &str| -> Result<f64> {
+            let v: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad {what} {p:?} in fabric spec {s:?}"))?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{what} must be finite and positive in fabric spec {s:?}, got {p:?}");
+            }
+            Ok(v)
+        };
+        match parts.as_slice() {
+            ["flat"] => Ok(FabricSpec::Flat(Fabric::default())),
+            ["flat", a, b] => Ok(FabricSpec::Flat(Fabric {
+                alpha: num(a, "alpha")?,
+                bw: num(b, "bandwidth")?,
+            })),
+            ["hier", m] | ["hier", m, ..] if parts.len() == 2 || parts.len() == 6 => {
+                let ranks_per_node: usize = m.parse().map_err(|_| {
+                    anyhow::anyhow!("bad ranks_per_node {m:?} in fabric spec {s:?}")
+                })?;
+                if ranks_per_node == 0 {
+                    bail!("ranks_per_node must be >= 1 in fabric spec {s:?}");
+                }
+                let mut h = HierFabric { ranks_per_node, ..HierFabric::default() };
+                if let ["hier", _, ia, ibw, ea, ebw] = parts.as_slice() {
+                    h.intra = Fabric {
+                        alpha: num(ia, "intra alpha")?,
+                        bw: num(ibw, "intra bandwidth")?,
+                    };
+                    h.inter = Fabric {
+                        alpha: num(ea, "inter alpha")?,
+                        bw: num(ebw, "inter bandwidth")?,
+                    };
+                }
+                Ok(FabricSpec::Hier(h))
+            }
+            _ => bail!(
+                "unknown fabric spec {s:?} \
+                 (flat | flat:<alpha>:<bw> | hier:<ranks_per_node>[:<intra_alpha>:<intra_bw>:<inter_alpha>:<inter_bw>])"
+            ),
+        }
+    }
+
+    /// The flat fabric the plan's serialized `(alpha, bw)` pair carries:
+    /// the intra-node ring for hierarchical specs (checkpoint
+    /// compatibility — the hierarchy itself is a runtime overlay).
+    pub fn base(self) -> Fabric {
+        match self {
+            FabricSpec::Flat(f) => f,
+            FabricSpec::Hier(h) => h.intra,
+        }
+    }
+
+    /// The hierarchical overlay, when the spec is hierarchical.
+    pub fn topology(self) -> Option<HierFabric> {
+        match self {
+            FabricSpec::Flat(_) => None,
+            FabricSpec::Hier(h) => Some(h),
+        }
+    }
+}
+
+/// Hierarchical all-reduce cost of one bucket: intra-node reduce-scatter
+/// (over the `m = ranks_per_node` ranks of each node, concurrently across
+/// nodes), inter-node ring all-reduce over the `k = ceil(n/m)` node
+/// leaders of the `bytes/m` shard each leader owns, then intra-node
+/// all-gather. Degenerates to the flat ring on the matching level when
+/// the hierarchy collapses (`m >= n` ⇒ pure intra, `m == 1` ⇒ pure
+/// inter), so this is a strict generalization of
+/// [`allreduce_bucket_time`].
+pub fn hier_allreduce_bucket_time(bucket_bytes: f64, n_ranks: usize, h: HierFabric) -> f64 {
+    if n_ranks <= 1 {
+        return 0.0;
+    }
+    let m = h.ranks_per_node.max(1);
+    if m >= n_ranks {
+        return time(Op::AllReduce, bucket_bytes, n_ranks, h.intra);
+    }
+    if m == 1 {
+        return time(Op::AllReduce, bucket_bytes, n_ranks, h.inter);
+    }
+    let nodes = n_ranks.div_ceil(m);
+    let intra_phase = time(Op::ReduceScatter, bucket_bytes, m, h.intra);
+    let inter_phase = time(Op::AllReduce, bucket_bytes / m as f64, nodes, h.inter);
+    // reduce-scatter in + all-gather out cost the same ring pass.
+    2.0 * intra_phase + inter_phase
+}
+
+/// Total bytes crossing *inter-node* links when a flat ring of `n_ranks`
+/// (laid out `ranks_per_node` per node, ring order grouped by node) all-
+/// reduces one `bytes` payload: the ring crosses a node boundary once per
+/// node, and every link carries `2 (n-1) bytes / n`.
+pub fn inter_node_bytes_flat(bytes: f64, n_ranks: usize, ranks_per_node: usize) -> f64 {
+    let m = ranks_per_node.max(1);
+    let nodes = n_ranks.div_ceil(m);
+    if n_ranks <= 1 || nodes <= 1 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    nodes as f64 * 2.0 * (n - 1.0) * bytes / n
+}
+
+/// Total inter-node bytes of the hierarchical all-reduce of the same
+/// payload: only the `k = ceil(n/m)` node leaders talk across nodes, each
+/// link carrying `2 (k-1) (bytes/m) / k`, for `2 (k-1) bytes / m` across
+/// all `k` links. The flat/hier ratio `k·m·(n−1) / (n·(k−1))` is the
+/// exact `hier_allreduce_speedup` pin in the bench gate.
+pub fn inter_node_bytes_hier(bytes: f64, n_ranks: usize, ranks_per_node: usize) -> f64 {
+    let m = ranks_per_node.max(1);
+    let nodes = n_ranks.div_ceil(m);
+    if n_ranks <= 1 || nodes <= 1 {
+        return 0.0;
+    }
+    2.0 * (nodes as f64 - 1.0) * bytes / m as f64
+}
+
 /// Per-bucket times for an all-reduce of `total_bytes` executed in
 /// `bucket_bytes` grains (last bucket partial). The sum is what a bucketed
 /// exchange pays end-to-end; each element is the grain the pipeline can
@@ -500,6 +664,94 @@ mod tests {
             ra.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             rb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn hier_allreduce_degenerates_to_flat() {
+        let h = HierFabric::default();
+        // Single rank: free, like the flat model.
+        assert_eq!(hier_allreduce_bucket_time(1e9, 1, h), 0.0);
+        // All ranks on one node: exactly the intra flat ring.
+        let one_node = HierFabric { ranks_per_node: 8, ..h };
+        assert_eq!(
+            hier_allreduce_bucket_time(1e8, 8, one_node),
+            allreduce_bucket_time(1e8, 8, h.intra)
+        );
+        // One rank per node: exactly the inter flat ring.
+        let leaders_only = HierFabric { ranks_per_node: 1, ..h };
+        assert_eq!(
+            hier_allreduce_bucket_time(1e8, 8, leaders_only),
+            allreduce_bucket_time(1e8, 8, h.inter)
+        );
+    }
+
+    #[test]
+    fn hier_allreduce_beats_flat_on_a_slow_inter_ring() {
+        // 8 ranks, 4 per node: the hierarchy moves 1/m of the payload
+        // across the slow ring instead of the whole thing.
+        let h = HierFabric::default();
+        let hier = hier_allreduce_bucket_time(64e6, 8, h);
+        let flat_over_inter = allreduce_bucket_time(64e6, 8, h.inter);
+        assert!(hier < flat_over_inter, "{hier} vs {flat_over_inter}");
+        // And it decomposes exactly into its three phases.
+        let intra = time(Op::ReduceScatter, 64e6, 4, h.intra);
+        let inter = time(Op::AllReduce, 64e6 / 4.0, 2, h.inter);
+        assert!((hier - (2.0 * intra + inter)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inter_node_byte_ratio_is_exact() {
+        // n=8 ranks, m=4 per node, k=2 nodes: flat crosses node
+        // boundaries with 2·(n−1)/n of the payload per link over k links;
+        // hier ships 2·(k−1)/m. Ratio = k·m·(n−1)/(n·(k−1)) = 7 exactly —
+        // the bench gate's `hier_allreduce_speedup` pin.
+        let bytes = 1 << 20;
+        let flat = inter_node_bytes_flat(bytes as f64, 8, 4);
+        let hier = inter_node_bytes_hier(bytes as f64, 8, 4);
+        assert_eq!(flat / hier, 7.0);
+        // Single node: no inter-node traffic on either path.
+        assert_eq!(inter_node_bytes_flat(1e6, 4, 4), 0.0);
+        assert_eq!(inter_node_bytes_hier(1e6, 4, 4), 0.0);
+        assert_eq!(inter_node_bytes_flat(1e6, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn fabric_spec_parses_the_cli_grammar() {
+        assert_eq!(
+            FabricSpec::parse("flat").unwrap(),
+            FabricSpec::Flat(Fabric::default())
+        );
+        match FabricSpec::parse("flat:1e-6:200e9").unwrap() {
+            FabricSpec::Flat(f) => {
+                assert_eq!(f.alpha, 1e-6);
+                assert_eq!(f.bw, 200e9);
+            }
+            other => panic!("expected flat, got {other:?}"),
+        }
+        let h = match FabricSpec::parse("hier:4").unwrap() {
+            FabricSpec::Hier(h) => h,
+            other => panic!("expected hier, got {other:?}"),
+        };
+        assert_eq!(h.ranks_per_node, 4);
+        assert_eq!(h.intra.bw, Fabric::default().bw);
+        let full = FabricSpec::parse("hier:2:1e-6:100e9:2e-5:10e9").unwrap();
+        match full {
+            FabricSpec::Hier(h) => {
+                assert_eq!(h.ranks_per_node, 2);
+                assert_eq!(h.intra.alpha, 1e-6);
+                assert_eq!(h.inter.bw, 10e9);
+                assert_eq!(full.base().alpha, 1e-6);
+                assert_eq!(full.topology(), Some(h));
+            }
+            other => panic!("expected hier, got {other:?}"),
+        }
+        assert_eq!(FabricSpec::parse("flat").unwrap().topology(), None);
+        for bad in [
+            "mesh", "flat:1e-6", "hier", "hier:0", "hier:4:1:2:3",
+            "hier:4:-1:2:3:4", "flat:nan:1e9", "flat:0:1e9",
+        ] {
+            assert!(FabricSpec::parse(bad).is_err(), "{bad} should fail");
+        }
     }
 
     /// Cheap deterministic pseudo-sine for test data (no libm calls in

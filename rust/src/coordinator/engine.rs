@@ -58,7 +58,10 @@ use crate::runtime::checkpoint::{self, PlanRecord};
 use crate::runtime::{Layout, TypedBlob};
 use crate::tensor::Dtype;
 
-use super::collective::{allreduce_bucket_time, Fabric, WireCodec};
+use super::collective::{
+    allreduce_bucket_time, hier_allreduce_bucket_time, Fabric, HierFabric,
+    WireCodec,
+};
 use super::fused_host::GroupGradSource;
 use super::pipeline::{BucketPlan, GradSource, PipelineConfig};
 
@@ -146,6 +149,22 @@ pub struct ExecPlan {
     /// itself never reads it — it rides along (and through checkpoints)
     /// so a resumed CLI run can reconstruct identical rank streams.
     pub seed: u64,
+    /// Membership schedule for elastic runs: `(s, r)` means "after
+    /// completed step `s`, the run continues with `r` ranks" (steps
+    /// `s+1..` form a new membership epoch). [`ExecPlan::n_ranks`] stays
+    /// the epoch-0 count; empty means fixed membership for the whole run.
+    /// Serialized as the ADCP v4 epoch section and driven by
+    /// [`Engine::run_elastic`] (see `docs/FAULTS.md`).
+    pub ranks_schedule: Vec<(u64, u32)>,
+    /// Optional hierarchical fabric overlay ([`HierFabric`]): when set,
+    /// exchange tiles are costed through
+    /// [`hier_allreduce_bucket_time`] (intra-node reduce-scatter /
+    /// broadcast around an inter-node ring) instead of the flat
+    /// [`Fabric`] ring. Cost-model only — gradient values are
+    /// unaffected — and deliberately NOT checkpointed: [`Self::fabric`]
+    /// remains the serialized pair, and a resume re-applies the overlay
+    /// from the CLI (`--fabric hier:...`).
+    pub topology: Option<HierFabric>,
 }
 
 impl ExecPlan {
@@ -174,6 +193,8 @@ impl ExecPlan {
             dtype: cfg.dtype,
             wire: cfg.wire_codec(),
             seed: 0,
+            ranks_schedule: Vec::new(),
+            topology: cfg.topology,
         }
     }
 
@@ -270,7 +291,42 @@ impl ExecPlan {
                  buckets can only ship in descending offset order"
             );
         }
+        // Membership schedule: same invariants `checkpoint::from_bytes`
+        // enforces on the ADCP v4 epoch section.
+        let mut prev = 0u64;
+        for &(s, r) in &self.ranks_schedule {
+            ensure!(
+                r >= 1,
+                "membership epoch at step {s} needs at least one rank"
+            );
+            ensure!(
+                s >= 1 && s < self.steps as u64,
+                "membership boundary {s} must lie strictly inside the run \
+                 (1..{})",
+                self.steps
+            );
+            ensure!(
+                s > prev,
+                "membership boundaries must be strictly increasing \
+                 ({s} after {prev})"
+            );
+            prev = s;
+        }
         Ok(())
+    }
+
+    /// Effective rank count executing optimizer step `t` (1-based) under
+    /// the membership schedule: the last epoch whose boundary lies
+    /// strictly before `t`, falling back to the epoch-0
+    /// [`ExecPlan::n_ranks`].
+    pub fn ranks_for_step(&self, t: u64) -> u32 {
+        let mut ranks = self.n_ranks as u32;
+        for &(s, r) in &self.ranks_schedule {
+            if s < t {
+                ranks = r;
+            }
+        }
+        ranks
     }
 
     /// One-line human description (the `checkpoint-inspect` output).
@@ -288,7 +344,7 @@ impl ExecPlan {
             StepGranularity::Tasks => "step_tasks",
             StepGranularity::Groups => "step_group",
         };
-        format!(
+        let mut out = format!(
             "{prod} production, {ord} exchange, {gran} steps; {} x {} \
              ({:?}, {} shards), {} steps, bucket {} elems, {} storage, \
              {} wire",
@@ -300,7 +356,14 @@ impl ExecPlan {
             self.bucket_elems,
             self.dtype.name(),
             self.wire.name()
-        )
+        );
+        if !self.ranks_schedule.is_empty() {
+            out.push_str(&format!(
+                ", {} membership epochs",
+                self.ranks_schedule.len() + 1
+            ));
+        }
+        out
     }
 
     /// Serialize to the runtime-layer [`PlanRecord`] (cursors zero: the
@@ -342,6 +405,7 @@ impl ExecPlan {
             seed: self.seed,
             cursor_group: 0,
             cursor_task: 0,
+            epochs: self.ranks_schedule.clone(),
         }
     }
 
@@ -389,6 +453,10 @@ impl ExecPlan {
                 other => bail!("unknown wire-codec code {other}"),
             },
             seed: r.seed,
+            ranks_schedule: r.epochs.clone(),
+            // The hierarchical overlay is a per-process cost model, not
+            // plan state: a resume re-applies it from the CLI.
+            topology: None,
         };
         plan.validate()?;
         Ok(plan)
@@ -472,12 +540,114 @@ pub struct EngineReport {
     /// [`WireCodec::payload_bytes`] (the `peak_comm_bytes_*` bench
     /// metrics; 0 for one rank).
     pub peak_comm_bytes: usize,
+    /// Exchange tiles the [`StragglerPolicy`] moved off late ranks,
+    /// summed over every step this run executed (0 without a policy).
+    /// Modeled-timeline accounting only — gradient values never move.
+    pub reassigned_tiles: usize,
 }
 
 impl EngineReport {
     /// Peak live gradient as a fraction of the full-image baseline.
     pub fn live_fraction(&self) -> f64 {
         self.peak_live_grad_bytes as f64 / self.full_grad_bytes.max(1) as f64
+    }
+
+    /// Fold a later epoch segment's report into this one: step counts,
+    /// modeled times and reassignment counts add; peaks take the max;
+    /// per-step shape fields (tiles, bytes, rank count) follow the later
+    /// segment, which is the membership the run ended on.
+    fn absorb(self, later: EngineReport) -> EngineReport {
+        let compute = self.compute_secs + later.compute_secs;
+        let comm = self.comm_secs + later.comm_secs;
+        let exposed = self.exposed_secs + later.exposed_secs;
+        EngineReport {
+            n_ranks: later.n_ranks,
+            steps: self.steps + later.steps,
+            n_buckets: later.n_buckets,
+            n_groups: later.n_groups,
+            compute_secs: compute,
+            comm_secs: comm,
+            exposed_secs: exposed,
+            overlap_efficiency: if exposed > 0.0 {
+                (compute + comm) / exposed
+            } else {
+                1.0
+            },
+            wall_secs: self.wall_secs + later.wall_secs,
+            peak_live_grad_bytes: self
+                .peak_live_grad_bytes
+                .max(later.peak_live_grad_bytes),
+            full_grad_bytes: later.full_grad_bytes,
+            curve_bytes: later.curve_bytes,
+            dtype: later.dtype,
+            wire: later.wire,
+            blob_bytes: later.blob_bytes,
+            comm_bytes_per_step: later.comm_bytes_per_step,
+            peak_comm_bytes: self.peak_comm_bytes.max(later.peak_comm_bytes),
+            reassigned_tiles: self.reassigned_tiles + later.reassigned_tiles,
+        }
+    }
+}
+
+/// Deterministic straggler handling for the modeled exchange timeline.
+///
+/// `slowdown[r]` is rank `r`'s modeled fabric-cost multiplier (`1.0` =
+/// on time; ranks beyond the vector, and non-finite or sub-1.0 entries,
+/// are treated as nominal). A rank is LATE when its slowdown exceeds
+/// `threshold ×` the fleet minimum. Exchange tiles are owned round-robin
+/// (tile `b` → rank `b % n_ranks`); every tile a late rank owns is
+/// reassigned round-robin across the on-time ranks in ascending rank
+/// order, and each tile's modeled comm time is scaled by its final
+/// owner's slowdown. Entirely a cost-model overlay: gradient values, the
+/// rank-order reduction and the blob are untouched, so the policy can
+/// never perturb bitwise parity — and like the fabric constants it is
+/// NOT checkpointed (see `docs/FAULTS.md`).
+#[derive(Debug, Clone)]
+pub struct StragglerPolicy {
+    /// Per-rank modeled slowdown factors (1.0 = nominal).
+    pub slowdown: Vec<f64>,
+    /// Late when `slowdown[r] > threshold * min(slowdown)`; values
+    /// `>= 1.0` make sense (1.5 = "50% slower than the fastest rank").
+    pub threshold: f64,
+}
+
+impl StragglerPolicy {
+    /// Scale each tile's modeled comm time by its (possibly reassigned)
+    /// owner's slowdown. Returns the adjusted times plus how many tiles
+    /// moved off late ranks.
+    fn apply(
+        &self,
+        mut tile_comm: Vec<f64>,
+        n_ranks: usize,
+    ) -> (Vec<f64>, usize) {
+        if n_ranks <= 1 || self.slowdown.is_empty() {
+            return (tile_comm, 0);
+        }
+        let slow = |r: usize| -> f64 {
+            let s = self.slowdown.get(r).copied().unwrap_or(1.0);
+            if s.is_finite() && s >= 1.0 {
+                s
+            } else {
+                1.0
+            }
+        };
+        let mut fleet_min = f64::INFINITY;
+        for r in 0..n_ranks {
+            fleet_min = fleet_min.min(slow(r));
+        }
+        let on_time: Vec<usize> = (0..n_ranks)
+            .filter(|&r| slow(r) <= self.threshold * fleet_min)
+            .collect();
+        let mut reassigned = 0usize;
+        for (b, t) in tile_comm.iter_mut().enumerate() {
+            let mut owner = b % n_ranks;
+            if !on_time.is_empty() && !on_time.contains(&owner) {
+                owner = on_time[b % on_time.len()];
+                reassigned += 1;
+            }
+            *t *= slow(owner);
+        }
+        (tile_comm, reassigned)
     }
 }
 
@@ -499,6 +669,9 @@ pub struct Engine {
     /// wires. Checkpointed (ADCP v3) so a resume replays the exact
     /// residual stream.
     ef: Vec<Vec<f32>>,
+    /// Optional straggler overlay for the modeled timeline
+    /// ([`Engine::set_straggler`]); never serialized.
+    straggler: Option<StragglerPolicy>,
     done_steps: u64,
     suspend_at: Option<u64>,
     /// Set when a run aborted mid-step: the blob may hold a partially
@@ -536,6 +709,7 @@ impl Engine {
             opt,
             blob,
             ef,
+            straggler: None,
             done_steps: 0,
             suspend_at: None,
             poisoned: false,
@@ -650,18 +824,26 @@ impl Engine {
             ck.plan.cursor_group,
             ck.plan.cursor_task
         );
+        // Error feedback is sized to the membership epoch the run resumes
+        // INTO (`ranks_for_step(step + 1)`), not the epoch-0 rank count:
+        // `run_elastic` flushes + resizes the residuals at every epoch
+        // boundary, so a boundary checkpoint already carries the next
+        // epoch's shape.
+        let eff_ranks =
+            plan.ranks_for_step(ck.step.saturating_add(1)) as usize;
         let ef = if plan.wire.uses_error_feedback() {
             if ck.ef.is_empty() {
                 // A q8 plan saved before ADCP v3 could exist only by
                 // hand-construction; start its residuals from zero.
-                vec![vec![0.0f32; ck.layout.params_len]; plan.n_ranks]
+                vec![vec![0.0f32; ck.layout.params_len]; eff_ranks]
             } else {
                 ensure!(
-                    ck.ef.len() == plan.n_ranks,
+                    ck.ef.len() == eff_ranks,
                     "checkpoint carries error-feedback for {} ranks, but \
-                     the plan runs {}",
+                     the membership epoch resuming at step {} runs {}",
                     ck.ef.len(),
-                    plan.n_ranks
+                    ck.step.saturating_add(1),
+                    eff_ranks
                 );
                 for (r, e) in ck.ef.iter().enumerate() {
                     ensure!(
@@ -689,20 +871,115 @@ impl Engine {
             opt,
             blob: ck.blob,
             ef,
+            straggler: None,
             done_steps: ck.step,
             suspend_at: None,
             poisoned: false,
         })
     }
 
-    /// Execute the plan from the current step counter up to the plan's
-    /// step budget (or the [`Engine::suspend_at`] point, whichever comes
-    /// first), updating the blob in place. Returns the report for the
-    /// steps this call executed.
+    /// Install (or clear) the deterministic [`StragglerPolicy`] overlay
+    /// for subsequent runs. Cost-model only; never serialized.
+    pub fn set_straggler(&mut self, policy: Option<StragglerPolicy>) {
+        self.straggler = policy;
+    }
+
+    /// Re-apply a hierarchical fabric overlay (e.g. after
+    /// [`Engine::resume`], which deliberately drops it — topology is a
+    /// per-process cost model, not checkpoint state).
+    pub fn set_topology(&mut self, topology: Option<HierFabric>) {
+        self.plan.topology = topology;
+    }
+
+    /// Execute a fixed-membership plan from the current step counter up
+    /// to the plan's step budget (or the [`Engine::suspend_at`] point,
+    /// whichever comes first), updating the blob in place. Returns the
+    /// report for the steps this call executed. Plans carrying a
+    /// membership schedule must go through [`Engine::run_elastic`], which
+    /// knows where the epoch boundaries are.
     pub fn run(&mut self, sources: RankSources) -> Result<EngineReport> {
+        ensure!(
+            self.plan.ranks_schedule.is_empty(),
+            "plan carries a membership schedule ({} epochs); drive it \
+             with Engine::run_elastic",
+            self.plan.ranks_schedule.len() + 1
+        );
+        let plan = self.plan.clone();
+        let stop = (plan.steps as u64)
+            .min(self.suspend_at.unwrap_or(u64::MAX))
+            .max(self.done_steps);
+        self.run_span(&plan, sources, stop)
+    }
+
+    /// Execute an elastic plan across its membership epochs: each epoch
+    /// segment runs with that epoch's rank count under the otherwise
+    /// unchanged plan, and `sources_for` is called once per segment with
+    /// the segment's effective plan (its `n_ranks` is the epoch count,
+    /// its `ranks_schedule` empty) to build matching rank streams — the
+    /// producers fast-forward past completed steps, so every segment
+    /// consumes exactly the gradient stream a fixed-membership run over
+    /// the same span would.
+    ///
+    /// At every epoch boundary the per-rank error-feedback residuals are
+    /// flushed to zero and resized to the incoming membership (the
+    /// deterministic splice rule — `docs/FAULTS.md`). A checkpoint saved
+    /// exactly at a boundary therefore carries EF sized to the epoch it
+    /// resumes INTO, which is what [`Engine::resume`] (and the ADCP v4
+    /// reader) validate.
+    pub fn run_elastic(
+        &mut self,
+        mut sources_for: impl FnMut(&ExecPlan) -> RankSources,
+    ) -> Result<EngineReport> {
+        let stop = (self.plan.steps as u64)
+            .min(self.suspend_at.unwrap_or(u64::MAX))
+            .max(self.done_steps);
+        let schedule = self.plan.ranks_schedule.clone();
+        let mut merged: Option<EngineReport> = None;
+        loop {
+            // Segment end: the first boundary past the cursor, capped by
+            // the overall stop.
+            let seg_stop = schedule
+                .iter()
+                .map(|&(s, _)| s)
+                .find(|&s| s > self.done_steps)
+                .map_or(stop, |s| s.min(stop));
+            let mut seg_plan = self.plan.clone();
+            seg_plan.n_ranks =
+                self.plan.ranks_for_step(self.done_steps + 1) as usize;
+            seg_plan.ranks_schedule = Vec::new();
+            let sources = sources_for(&seg_plan);
+            let report = self.run_span(&seg_plan, sources, seg_stop)?;
+            merged = Some(match merged {
+                None => report,
+                Some(acc) => acc.absorb(report),
+            });
+            if self.plan.wire.uses_error_feedback()
+                && schedule.iter().any(|&(s, _)| s == self.done_steps)
+            {
+                let next =
+                    self.plan.ranks_for_step(self.done_steps + 1) as usize;
+                self.ef =
+                    vec![vec![0.0f32; self.layout.params_len]; next];
+            }
+            if self.done_steps >= stop {
+                break;
+            }
+        }
+        merged.ok_or_else(|| anyhow!("run_elastic executed no segment"))
+    }
+
+    /// One fixed-membership span: the single leader-loop body every path
+    /// (and every epoch segment) runs through. `plan` carries the
+    /// effective rank count for this span; `stop` is the absolute step
+    /// to halt after.
+    fn run_span(
+        &mut self,
+        plan: &ExecPlan,
+        sources: RankSources,
+        stop: u64,
+    ) -> Result<EngineReport> {
         // ANALYZE-WAIVE(determinism): wall-clock report fields only
         let started = Instant::now();
-        let plan = self.plan.clone();
         ensure!(!sources.is_empty(), "need at least one rank");
         ensure!(
             sources.len() == plan.n_ranks,
@@ -712,9 +989,7 @@ impl Engine {
         );
         let params_len = self.layout.params_len;
         let start = self.done_steps;
-        let stop = (plan.steps as u64)
-            .min(self.suspend_at.unwrap_or(u64::MAX))
-            .max(start);
+        let stop = stop.max(start);
 
         // Exchange tiling + what each tile's landing makes steppable.
         let extents = self.opt.task_extents();
@@ -729,17 +1004,28 @@ impl Engine {
         // identical tiling to `collective::bucketed_allreduce_times`).
         // Payload bytes follow the plan's wire rung: bf16 ships half the
         // f32 bytes, q8 just over a quarter (elements + block scales) —
-        // which the overlap/efficiency numbers reflect.
+        // which the overlap/efficiency numbers reflect. A hierarchical
+        // topology overlay swaps the flat ring for the two-level model;
+        // the straggler overlay then rescales tiles by their (possibly
+        // reassigned) owner's slowdown.
         let tile_comm: Vec<f64> = tiles
             .iter()
             .map(|&(lo, hi)| {
-                allreduce_bucket_time(
-                    plan.wire.payload_bytes(hi - lo) as f64,
-                    plan.n_ranks,
-                    plan.fabric,
-                )
+                let bytes = plan.wire.payload_bytes(hi - lo) as f64;
+                match plan.topology {
+                    Some(h) => {
+                        hier_allreduce_bucket_time(bytes, plan.n_ranks, h)
+                    }
+                    None => {
+                        allreduce_bucket_time(bytes, plan.n_ranks, plan.fabric)
+                    }
+                }
             })
             .collect();
+        let (tile_comm, reassigned_per_step) = match &self.straggler {
+            Some(pol) => pol.apply(tile_comm, plan.n_ranks),
+            None => (tile_comm, 0),
+        };
 
         // Producers: one thread per rank, streaming tiles over bounded
         // channels (the fixed depth is the backpressure a real exchange
@@ -777,7 +1063,7 @@ impl Engine {
             &mut self.opt,
             &mut self.blob,
             &mut self.ef,
-            &plan,
+            plan,
             &tiles,
             &visit,
             &ready,
@@ -856,6 +1142,8 @@ impl Engine {
             blob_bytes: self.blob.storage_bytes(),
             comm_bytes_per_step,
             peak_comm_bytes,
+            reassigned_tiles: reassigned_per_step
+                * (stop - start) as usize,
         })
     }
 }
@@ -1491,5 +1779,167 @@ mod tests {
         assert!(report.curve_bytes.is_empty());
         // Lockstep: nothing overlaps.
         assert!((report.overlap_efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn membership_schedule_validates_and_resolves_epochs() {
+        let c = cfg(6, 16);
+        let mut plan =
+            ExecPlan::pipelined(OptKind::AdaLomo, ShardMode::Segments, 3, &c);
+        plan.ranks_schedule = vec![(2, 1), (4, 2)];
+        plan.validate().unwrap();
+        assert!(plan.describe().contains("3 membership epochs"));
+        // Step → rank-count lookup: the r of the last boundary passed.
+        for (t, want) in [(1, 3), (2, 3), (3, 1), (4, 1), (5, 2), (6, 2)] {
+            assert_eq!(plan.ranks_for_step(t), want, "step {t}");
+        }
+        // The schedule rides the plan record (ADCP v4 epoch section).
+        let back = ExecPlan::from_record(&plan.to_record()).unwrap();
+        assert_eq!(back.ranks_schedule, plan.ranks_schedule);
+        // Degenerate schedules are rejected up front.
+        for bad in [
+            vec![(2u64, 0u32)],  // zero ranks
+            vec![(0, 2)],        // boundary before the first step
+            vec![(6, 2)],        // boundary at/after the run's end
+            vec![(3, 2), (3, 1)] // not strictly increasing
+        ] {
+            let mut p = plan.clone();
+            p.ranks_schedule = bad.clone();
+            assert!(p.validate().is_err(), "{bad:?}");
+        }
+        // And run() refuses to silently ignore a schedule.
+        let layout = model_layout(OptKind::AdaLomo);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 13);
+        let mut p = ExecPlan::pipelined(
+            OptKind::AdaLomo,
+            ShardMode::Segments,
+            2,
+            &cfg(4, 16),
+        );
+        p.ranks_schedule = vec![(2, 1)];
+        let mut eng = Engine::new(&layout, &blob0, p).unwrap();
+        let err = eng
+            .run(RankSources::Full(synthetic_sources(2, 5, 0.05)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("run_elastic"));
+    }
+
+    #[test]
+    fn elastic_run_is_deterministic_and_reports_merged_shape() {
+        let kind = OptKind::AdaLomo;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 29);
+        let c = cfg(6, layout.params_len.div_ceil(5));
+        let mut plan = ExecPlan::pipelined(kind, ShardMode::Segments, 3, &c);
+        plan.seed = 51;
+        plan.ranks_schedule = vec![(2, 1), (4, 2)];
+        let run = || {
+            let mut eng =
+                Engine::new(&layout, &blob0, plan.clone()).unwrap();
+            let extents = eng.group_extents();
+            let r = eng
+                .run_elastic(|seg| {
+                    crate::coordinator::fused_host::plan_sources(
+                        seg,
+                        extents.clone(),
+                        0.05,
+                    )
+                })
+                .unwrap();
+            assert!(eng.is_finished());
+            (eng.blob(), r)
+        };
+        let (a, ra) = run();
+        let (b, _) = run();
+        assert_eq!(ra.steps, 6);
+        // The merged report carries the LAST epoch's fleet shape.
+        assert_eq!(ra.n_ranks, 2);
+        assert_eq!(ra.reassigned_tiles, 0);
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(x.to_bits() == y.to_bits(), "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn straggler_policy_rescales_the_timeline_without_touching_bits() {
+        let kind = OptKind::AdaLomo;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 31);
+        let c = cfg(4, layout.params_len.div_ceil(6));
+        let plan = ExecPlan::pipelined(kind, ShardMode::Segments, 2, &c);
+        let run = |policy: Option<StragglerPolicy>| {
+            let mut eng =
+                Engine::new(&layout, &blob0, plan.clone()).unwrap();
+            eng.set_straggler(policy);
+            let r = eng
+                .run(RankSources::Full(synthetic_sources(2, 23, 0.05)))
+                .unwrap();
+            (eng.blob(), r)
+        };
+        let (blob_plain, plain) = run(None);
+        // Rank 1 is 4x late; the 2.0 threshold trips, so its tiles move
+        // to the on-time rank 0 and cost rank-0 time again.
+        let (blob_moved, moved) = run(Some(StragglerPolicy {
+            slowdown: vec![1.0, 4.0],
+            threshold: 2.0,
+        }));
+        // Same slowdown but a threshold nothing trips: the late rank
+        // keeps its tiles and the exchange eats the full 4x.
+        let (blob_kept, kept) = run(Some(StragglerPolicy {
+            slowdown: vec![1.0, 4.0],
+            threshold: 10.0,
+        }));
+        // The policy is a cost-model overlay: bits never move.
+        for (x, y) in blob_plain.iter().zip(&blob_moved) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in blob_plain.iter().zip(&blob_kept) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Reassignment accounting: every odd tile (owned by rank 1 under
+        // round-robin) moves, every step.
+        assert_eq!(plain.reassigned_tiles, 0);
+        assert_eq!(kept.reassigned_tiles, 0);
+        assert_eq!(
+            moved.reassigned_tiles,
+            (plain.n_buckets / 2) * plain.steps
+        );
+        assert!(moved.reassigned_tiles > 0);
+        // And the modeled timeline orders exactly as the policy says:
+        // keeping tiles on a 4x rank costs more than rebalancing them.
+        assert!(kept.comm_secs > moved.comm_secs);
+        assert!(moved.comm_secs <= plain.comm_secs + 1e-12);
+    }
+
+    #[test]
+    fn hier_topology_swaps_the_fabric_model_without_touching_bits() {
+        let kind = OptKind::AdaLomo;
+        let layout = model_layout(kind);
+        let (blob0, _) = seeded_blob_and_grads(&layout, 37);
+        let c = cfg(3, layout.params_len.div_ceil(4));
+        let plan = ExecPlan::pipelined(kind, ShardMode::Contiguous, 4, &c);
+        let run = |topology: Option<HierFabric>| {
+            let mut eng =
+                Engine::new(&layout, &blob0, plan.clone()).unwrap();
+            eng.set_topology(topology);
+            let r = eng
+                .run(RankSources::Full(synthetic_sources(4, 43, 0.05)))
+                .unwrap();
+            (eng.blob(), r)
+        };
+        let (blob_flat, flat) = run(None);
+        // Two nodes of two ranks over a slow inter-node link.
+        let (blob_hier, hier) = run(Some(HierFabric {
+            intra: plan.fabric,
+            inter: Fabric { alpha: 15e-6, bw: 25e9 },
+            ranks_per_node: 2,
+        }));
+        for (x, y) in blob_flat.iter().zip(&blob_hier) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // The modeled exchange time changed (the slow inter ring is in
+        // the path), the exchanged bytes did not.
+        assert!((flat.comm_secs - hier.comm_secs).abs() > 1e-12);
+        assert_eq!(flat.comm_bytes_per_step, hier.comm_bytes_per_step);
     }
 }

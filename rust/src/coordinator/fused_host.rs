@@ -292,6 +292,7 @@ pub fn fused_host_step(
         blob_bytes: 4 * blob.len(),
         comm_bytes_per_step: 0,
         peak_comm_bytes: 0,
+        reassigned_tiles: 0,
     })
 }
 

@@ -54,7 +54,7 @@ use crate::runtime::Layout;
 use crate::tensor::Dtype;
 use crate::util::rng::Pcg32;
 
-use super::collective::{Fabric, WireCodec};
+use super::collective::{Fabric, HierFabric, WireCodec};
 use super::engine::{Engine, EngineReport, ExecPlan, RankSources};
 use super::fused_host::GroupGradSource;
 
@@ -312,6 +312,11 @@ pub struct PipelineConfig {
     /// than baked into [`Self::new`]) because callers routinely mutate
     /// `dtype` after construction.
     pub wire: Option<WireCodec>,
+    /// Optional hierarchical fabric overlay (see `ExecPlan::topology`):
+    /// when set, plans built from this config cost their exchange tiles
+    /// through the two-level intra/inter-node model instead of the flat
+    /// [`Fabric`] ring. Cost-model only; `None` by default.
+    pub topology: Option<HierFabric>,
 }
 
 impl PipelineConfig {
@@ -325,6 +330,7 @@ impl PipelineConfig {
             fabric: Fabric::default(),
             dtype: Dtype::F32,
             wire: None,
+            topology: None,
         }
     }
 

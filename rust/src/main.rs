@@ -26,7 +26,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use adalomo::config::{paper_lr, Phase, RunConfig};
-use adalomo::coordinator::collective::WireCodec;
+use adalomo::coordinator::collective::{FabricSpec, WireCodec};
 use adalomo::coordinator::engine::{Engine, ExecPlan, RankSources};
 use adalomo::coordinator::fused_host;
 use adalomo::coordinator::pipeline::{self, PipelineConfig};
@@ -98,7 +98,13 @@ USAGE: adalomo <subcommand> [--flag value ...]
               q8 adds blockwise int8 + error feedback — docs/EXCHANGE.md);
               --suspend-at K stops after step K (0 = run to completion),
               --out writes the checkpoint, --resume CKPT continues a
-              saved run bitwise-identically
+              saved run bitwise-identically (--ranks must then match the
+              plan; membership changes go through epochs instead);
+              --ranks-schedule S:R[,S:R...] declares membership epochs
+              ("after step S continue with R ranks", ADCP v4);
+              --fabric flat|flat:A:BW|hier:M[:IA:IBW:EA:EBW] picks the
+              modeled exchange fabric (hier = two-level intra/inter-node
+              rings — docs/FAULTS.md)
   checkpoint-inspect  dump an engine checkpoint header (--ckpt PATH;
               --dtype D asserts the stored dtype, --wire W the wire rung)
   hparams     the paper's hyper-parameter tables (3/6/7)
@@ -510,8 +516,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         // storage dtype and wire rung a resumed run continues at.
         let want_dtype = args.get("dtype").map(Dtype::parse).transpose()?;
         let want_wire = args.get("wire").map(WireCodec::parse).transpose()?;
+        let want_ranks = args
+            .get("ranks")
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|e| anyhow!("--ranks {s:?}: {e}"))
+            })
+            .transpose()?;
+        // The hierarchical overlay is per-process cost model, never
+        // checkpoint state: re-apply it from the flag on every resume.
+        let fabric = args.get("fabric").map(FabricSpec::parse).transpose()?;
         args.finish()?;
         let mut eng = Engine::resume(Path::new(&ckpt))?;
+        if let Some(r) = want_ranks {
+            ensure!(
+                eng.plan().n_ranks == r,
+                "{ckpt} was planned for {} ranks, but --ranks asked for \
+                 {r}; a silent re-plan would diverge — membership changes \
+                 must be spelled as --ranks-schedule epochs (docs/FAULTS.md)",
+                eng.plan().n_ranks
+            );
+        }
+        if let Some(f) = fabric {
+            eng.set_topology(f.topology());
+        }
         if let Some(d) = want_dtype {
             ensure!(
                 eng.plan().dtype == d,
@@ -549,6 +577,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let dtype = Dtype::parse(&args.str_or("dtype", "f32"))?;
     let wire = args.get("wire").map(WireCodec::parse).transpose()?;
+    let fabric = args.get("fabric").map(FabricSpec::parse).transpose()?;
+    let ranks_schedule = args
+        .get("ranks-schedule")
+        .map(parse_ranks_schedule)
+        .transpose()?
+        .unwrap_or_default();
     let kind = OptKind::parse(&spec.opt)?;
     let arch = Arch::preset(&spec.preset).ok_or_else(|| {
         anyhow!(
@@ -571,6 +605,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.n_shards = shards;
     cfg.dtype = dtype;
     cfg.wire = wire;
+    if let Some(f) = fabric {
+        cfg.fabric = f.base();
+        cfg.topology = f.topology();
+    }
     let mut plan = match plan_name.as_str() {
         "sequential" => ExecPlan::sequential(kind, mode, ranks, &cfg),
         "pipelined" => ExecPlan::pipelined(kind, mode, ranks, &cfg),
@@ -582,6 +620,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ),
     };
     plan.seed = spec.seed;
+    plan.ranks_schedule = ranks_schedule;
     let mut eng = Engine::new(&layout, &blob0, plan)?;
     eng.set_layout_key(&format!("{}/{}", spec.preset, spec.opt));
     println!(
@@ -593,23 +632,46 @@ fn cmd_train(args: &Args) -> Result<()> {
     run_engine(&mut eng, suspend, &out)
 }
 
-/// Reconstruct the deterministic rank sources a plan trains on — the
-/// canonical [`fused_host::plan_sources`] reconstruction, so `--resume`
-/// rebuilds byte-identical streams from the checkpointed plan alone.
-fn engine_sources(eng: &Engine) -> RankSources {
-    fused_host::plan_sources(
-        eng.plan(),
-        eng.group_extents(),
-        TRAIN_SOURCE_SCALE,
-    )
+/// Parse a `--ranks-schedule STEP:RANKS[,STEP:RANKS...]` membership
+/// schedule: "after completed step STEP, continue with RANKS ranks".
+/// Ordering/bounds are validated by `ExecPlan::validate`.
+fn parse_ranks_schedule(s: &str) -> Result<Vec<(u64, u32)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let (step, ranks) = part.split_once(':').ok_or_else(|| {
+            anyhow!(
+                "--ranks-schedule entries are STEP:RANKS, got {part:?}"
+            )
+        })?;
+        let step: u64 = step
+            .trim()
+            .parse()
+            .map_err(|e| anyhow!("--ranks-schedule step {step:?}: {e}"))?;
+        let ranks: u32 = ranks
+            .trim()
+            .parse()
+            .map_err(|e| anyhow!("--ranks-schedule ranks {ranks:?}: {e}"))?;
+        out.push((step, ranks));
+    }
+    Ok(out)
 }
 
+/// Reconstruct the deterministic rank sources a plan (or one membership
+/// epoch of it) trains on — the canonical [`fused_host::plan_sources`]
+/// reconstruction, so `--resume` rebuilds byte-identical streams from
+/// the checkpointed plan alone.
 fn run_engine(eng: &mut Engine, suspend: u64, out: &str) -> Result<()> {
     if suspend > 0 {
         eng.suspend_at(suspend);
     }
-    let sources = engine_sources(eng);
-    let report = eng.run(sources)?;
+    let extents = eng.group_extents();
+    let report = eng.run_elastic(|seg_plan: &ExecPlan| -> RankSources {
+        fused_host::plan_sources(
+            seg_plan,
+            extents.clone(),
+            TRAIN_SOURCE_SCALE,
+        )
+    })?;
     println!(
         "ran {} steps x {} buckets: exposed {:.3}ms vs compute+comm \
          {:.3}ms ({:.2}x overlap); peak live grad {} of {} bytes",
@@ -698,6 +760,19 @@ fn cmd_checkpoint_inspect(args: &Args) -> Result<()> {
         "  wire {} | error-feedback ranks {}",
         plan.wire.name(),
         ck.ef.len()
+    );
+    println!(
+        "  ranks {} (epoch 0){} | resumes with {}",
+        plan.n_ranks,
+        if plan.ranks_schedule.is_empty() {
+            String::from(" | fixed membership")
+        } else {
+            format!(
+                " | membership epochs {:?}",
+                plan.ranks_schedule
+            )
+        },
+        plan.ranks_for_step(ck.step.saturating_add(1))
     );
     println!(
         "  step {} of {} ({})",

@@ -38,13 +38,21 @@
 //!   readable: the wire rung defaults to the plan's storage dtype and
 //!   the error-feedback section to empty, bit-exactly what a pre-ladder
 //!   run would resume as.
-//! * **v3** (current) — wire-ladder-aware: the plan records its exchange
+//! * **v3** — wire-ladder-aware: the plan records its exchange
 //!   wire rung (`WIRE_*` byte after the plan dtype byte), and a per-rank
 //!   error-feedback section (count + length-prefixed f32 arrays) sits
 //!   between the plan cursors and the blob so quantized (q8) exchanges
 //!   resume with their exact unsent residuals (docs/EXCHANGE.md). For
 //!   f32/bf16 wires the section is an empty count and the file is 5
 //!   bytes longer than its v2 twin.
+//! * **v4** (current) — membership-epoch-aware (docs/FAULTS.md): the plan
+//!   record gains an epoch schedule (count + `(start_step u64,
+//!   n_ranks u32)` entries, directly after the cursors) describing rank
+//!   join/leave points, so an elastic run resumes under the same
+//!   membership it would have had uninterrupted. Pre-v4 files load with
+//!   an empty schedule (fixed membership — their only possible
+//!   behavior); a fixed-membership v4 file is 4 bytes (one empty count)
+//!   longer than its v3 twin.
 
 use std::path::Path;
 
@@ -60,7 +68,7 @@ pub const MAGIC: &[u8; 4] = b"ADCP";
 
 /// Current format version. Readers accept [`V1`]..=this; the version is
 /// bumped whenever a field is added or re-encoded.
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 
 /// The all-f32 legacy format (no dtype tags, flat f32 blob body).
 pub const V1: u32 = 1;
@@ -68,6 +76,9 @@ pub const V1: u32 = 1;
 /// The dtype-aware, pre-wire-ladder format (no wire byte, no
 /// error-feedback section).
 pub const V2: u32 = 2;
+
+/// The wire-ladder format (no membership-epoch schedule).
+pub const V3: u32 = 3;
 
 /// Plain-data mirror of the coordinator's `ExecPlan`, plus the position
 /// inside it. Enum axes are stored as u8 codes (see the `PROD_*`/`ORD_*`/
@@ -114,6 +125,38 @@ pub struct PlanRecord {
     /// rather than silently resuming mid-step.
     pub cursor_group: u64,
     pub cursor_task: u64,
+    /// Membership-epoch schedule (v4, docs/FAULTS.md): each `(s, r)`
+    /// entry means "after completed step `s`, membership becomes `r`
+    /// ranks" — steps `s+1..` run with `r` ranks until the next entry.
+    /// [`PlanRecord::n_ranks`] stays the epoch-0 count. Entries are
+    /// strictly increasing in `s` with `1 <= s < steps` and `r >= 1`;
+    /// empty means fixed membership (every pre-v4 file).
+    pub epochs: Vec<(u64, u32)>,
+}
+
+impl PlanRecord {
+    /// Rank count in effect while executing step `t` (1-based): the `r`
+    /// of the last epoch entry with `s < t`, or [`Self::n_ranks`] before
+    /// any boundary has passed.
+    pub fn ranks_at(&self, t: u64) -> u32 {
+        let mut ranks = self.n_ranks;
+        for &(s, r) in &self.epochs {
+            if s < t {
+                ranks = r;
+            } else {
+                break;
+            }
+        }
+        ranks
+    }
+
+    /// Rank count governing the NEXT step after `done` completed steps —
+    /// what a resumed engine (and its error-feedback state) must be
+    /// sized for. Entries pin `s < steps`, so this is also well-defined
+    /// for a finished run.
+    pub fn current_ranks(&self, done: u64) -> u32 {
+        self.ranks_at(done.saturating_add(1))
+    }
 }
 
 pub const PROD_FULL_IMAGE: u8 = 0;
@@ -325,12 +368,12 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize `ck` into the current (version-3) byte layout.
+/// Serialize `ck` into the current (version-4) byte layout.
 pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
     encode(&ck.layout_key, &ck.layout, ck.step, &ck.plan, &ck.ef, &ck.blob)
 }
 
-/// The version-3 encoder over borrowed parts — what [`write`] uses so
+/// The version-4 encoder over borrowed parts — what [`write`] uses so
 /// the engine can checkpoint without cloning its blob first. The blob
 /// body is the typed storage verbatim: bf16 prefix bits then the f32
 /// tail (for f32 storage the prefix is empty and the tail is the whole
@@ -385,6 +428,12 @@ fn encode(
     put_u64(&mut out, plan.seed);
     put_u64(&mut out, plan.cursor_group);
     put_u64(&mut out, plan.cursor_task);
+    // v4: membership-epoch schedule (empty count for fixed membership).
+    put_u32(&mut out, plan.epochs.len() as u32);
+    for &(s, ranks) in &plan.epochs {
+        put_u64(&mut out, s);
+        put_u32(&mut out, ranks);
+    }
     // v3: per-rank error-feedback section (empty count for exact wires),
     // kept BEFORE the blob so the blob body stays the strict file tail.
     put_u32(&mut out, ef.len() as u32);
@@ -416,6 +465,11 @@ pub fn to_bytes_v1(ck: &Checkpoint) -> Result<Vec<u8>> {
         ck.plan.wire == WIRE_F32 && ck.ef.is_empty(),
         "the v1 format predates the wire ladder; it can only spell the \
          f32 wire with no error-feedback state"
+    );
+    ensure!(
+        ck.plan.epochs.is_empty(),
+        "the v1 format predates membership epochs; it can only spell \
+         fixed-membership plans"
     );
     let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
     out.extend_from_slice(MAGIC);
@@ -470,6 +524,11 @@ pub fn to_bytes_v2(ck: &Checkpoint) -> Result<Vec<u8>> {
         "the v2 format predates the wire ladder; it can only spell \
          wire-follows-storage checkpoints with no error-feedback state"
     );
+    ensure!(
+        ck.plan.epochs.is_empty(),
+        "the v2 format predates membership epochs; it can only spell \
+         fixed-membership plans"
+    );
     let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, V2);
@@ -514,11 +573,72 @@ pub fn to_bytes_v2(ck: &Checkpoint) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Parse a version-1, -2 or -3 checkpoint, validating magic, version,
+/// Encode `ck` in the LEGACY v3 byte layout — wire-ladder-aware but
+/// pre-elastic, so it can only spell fixed-membership plans. Like its v1
+/// and v2 siblings, this is the single authoritative spelling of the
+/// legacy format, pinned against an independent hand-rolled byte stream
+/// in the unit tests.
+pub fn to_bytes_v3(ck: &Checkpoint) -> Result<Vec<u8>> {
+    ensure!(
+        ck.plan.epochs.is_empty(),
+        "the v3 format predates membership epochs; it can only spell \
+         fixed-membership plans"
+    );
+    let mut out = Vec::with_capacity(64 + ck.blob.storage_bytes());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, V3);
+    put_str(&mut out, &ck.layout_key);
+    put_u64(&mut out, ck.layout.blob_len as u64);
+    put_u64(&mut out, ck.layout.params_len as u64);
+    put_u32(&mut out, ck.layout.segments.len() as u32);
+    for s in &ck.layout.segments {
+        put_str(&mut out, &s.name);
+        put_str(&mut out, &s.kind);
+        put_u32(&mut out, s.shape.len() as u32);
+        for &d in &s.shape {
+            put_u64(&mut out, d as u64);
+        }
+        put_u64(&mut out, s.offset as u64);
+        put_u64(&mut out, s.size as u64);
+        out.push(dtype_code(s.dtype));
+    }
+    put_u64(&mut out, ck.step);
+    out.push(ck.plan.production);
+    out.push(ck.plan.order);
+    out.push(ck.plan.granularity);
+    out.push(ck.plan.mode);
+    out.push(ck.plan.dtype);
+    out.push(ck.plan.wire);
+    put_str(&mut out, &ck.plan.opt);
+    put_u64(&mut out, ck.plan.steps);
+    put_u64(&mut out, ck.plan.bucket_elems);
+    put_u32(&mut out, ck.plan.n_ranks);
+    put_u32(&mut out, ck.plan.n_shards);
+    put_f32(&mut out, ck.plan.lr);
+    put_f32(&mut out, ck.plan.wd);
+    put_f64(&mut out, ck.plan.fabric_alpha);
+    put_f64(&mut out, ck.plan.fabric_bw);
+    put_u64(&mut out, ck.plan.seed);
+    put_u64(&mut out, ck.plan.cursor_group);
+    put_u64(&mut out, ck.plan.cursor_task);
+    // v3: NO membership-epoch section.
+    put_u32(&mut out, ck.ef.len() as u32);
+    for e in &ck.ef {
+        put_u64(&mut out, e.len() as u64);
+        write_f32s(&mut out, e);
+    }
+    put_u64(&mut out, ck.blob.len() as u64);
+    write_u16s(&mut out, ck.blob.prefix_bits());
+    write_f32s(&mut out, ck.blob.f32_part());
+    Ok(out)
+}
+
+/// Parse a version-1 through -4 checkpoint, validating magic, version,
 /// internal layout consistency and exact body length. v1 files load as
 /// all-f32 ([`DT_F32`] everywhere, flat f32 blob); pre-v3 files load
 /// with the wire rung equal to the plan dtype and no error-feedback
-/// state.
+/// state; pre-v4 files load with an empty (fixed-membership) epoch
+/// schedule.
 pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
     ensure!(
         bytes.len() >= 8 && &bytes[..4] == MAGIC,
@@ -573,7 +693,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         matches!(wire, WIRE_F32 | WIRE_BF16 | WIRE_Q8),
         "unknown wire-codec code {wire}"
     );
-    let plan = PlanRecord {
+    let mut plan = PlanRecord {
         production,
         order,
         granularity,
@@ -592,7 +712,21 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         seed: r.u64()?,
         cursor_group: r.u64()?,
         cursor_task: r.u64()?,
+        epochs: Vec::new(),
     };
+    // v4: membership-epoch schedule. Each counted entry occupies 12
+    // bytes, so the count is bounded before the allocation it sizes.
+    if version >= 4 {
+        let n_epochs = r.count32(12)?;
+        let mut epochs = Vec::with_capacity(n_epochs);
+        for _ in 0..n_epochs {
+            let s = r.u64()?;
+            let ranks = r.u32()?;
+            epochs.push((s, ranks));
+        }
+        plan.epochs = epochs;
+    }
+    validate_epochs(&plan)?;
     ensure!(
         plan.cursor_group == 0 && plan.cursor_task == 0,
         "mid-step checkpoint (group cursor {}, task cursor {}): readers \
@@ -628,11 +762,16 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
          none",
         plan.wire
     );
+    // EF accumulators belong to the ranks that will run the NEXT step —
+    // under an epoch schedule that is the current epoch's count, not
+    // necessarily the plan's epoch-0 `n_ranks`.
     ensure!(
-        ef.is_empty() || ef.len() == plan.n_ranks as usize,
-        "error-feedback section holds {} ranks, plan says {}",
+        ef.is_empty() || ef.len() == plan.current_ranks(step) as usize,
+        "error-feedback section holds {} ranks, the plan's membership at \
+         step {} is {}",
         ef.len(),
-        plan.n_ranks
+        step.saturating_add(1),
+        plan.current_ranks(step)
     );
     for (rank, e) in ef.iter().enumerate() {
         ensure!(
@@ -669,6 +808,30 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         }
     };
     Ok(Checkpoint { layout_key, layout, step, plan, ef, blob })
+}
+
+/// Epoch-schedule invariants, shared by [`from_bytes`] and [`write`]:
+/// boundaries strictly increasing and strictly inside the run
+/// (`1 <= s < steps` — a boundary at step 0 or past the end describes a
+/// membership change that can never happen), every epoch at least one
+/// rank. The checked arithmetic-free walk cannot panic on crafted input.
+fn validate_epochs(plan: &PlanRecord) -> Result<()> {
+    let mut prev = 0u64;
+    for &(s, ranks) in &plan.epochs {
+        ensure!(ranks >= 1, "membership epoch at step {s} declares 0 ranks");
+        ensure!(
+            s >= 1 && s < plan.steps,
+            "membership epoch boundary {s} outside the run (1..{} valid)",
+            plan.steps
+        );
+        ensure!(
+            s > prev,
+            "membership epoch boundaries must be strictly increasing \
+             ({s} follows {prev})"
+        );
+        prev = s;
+    }
+    Ok(())
 }
 
 /// The serialized layout must be internally consistent before anything
@@ -787,10 +950,12 @@ pub fn write(
         ef.len()
     );
     ensure!(
-        ef.is_empty() || ef.len() == plan.n_ranks as usize,
-        "error-feedback for {} ranks, plan says {}",
+        ef.is_empty() || ef.len() == plan.current_ranks(step) as usize,
+        "error-feedback for {} ranks, the plan's membership at step {} \
+         is {}",
         ef.len(),
-        plan.n_ranks
+        step.saturating_add(1),
+        plan.current_ranks(step)
     );
     for (rank, e) in ef.iter().enumerate() {
         ensure!(
@@ -800,6 +965,7 @@ pub fn write(
             layout.params_len
         );
     }
+    validate_epochs(plan)?;
     validate_layout(layout)?;
     let tmp = temp_sibling(path);
     std::fs::write(&tmp, encode(layout_key, layout, step, plan, ef, blob))
@@ -895,10 +1061,19 @@ mod tests {
                 seed: 42,
                 cursor_group: 0,
                 cursor_task: 0,
+                epochs: Vec::new(),
             },
             ef: Vec::new(),
             blob,
         }
+    }
+
+    /// An f32 sample with a two-boundary membership schedule: 2 ranks
+    /// for steps 1..=4, then 3 for 5..=9, then 1 for 10..=12.
+    fn sample_elastic() -> Checkpoint {
+        let mut ck = sample_with(Dtype::F32);
+        ck.plan.epochs = vec![(4, 3), (9, 1)];
+        ck
     }
 
     /// An f32 sample retagged to the q8 wire, carrying per-rank
@@ -998,17 +1173,19 @@ mod tests {
         // ... and the wire ladder's defaults: f32 wire, no error-feedback.
         assert_eq!(back.plan.wire, WIRE_F32);
         assert!(back.ef.is_empty());
-        // The v3 re-encoding of it is exactly 1 dtype byte per segment +
-        // 1 plan dtype byte + 1 wire byte + the 4-byte empty
-        // error-feedback count longer.
+        // The v4 re-encoding of it is exactly 1 dtype byte per segment +
+        // 1 plan dtype byte + 1 wire byte + the 4-byte empty epoch count
+        // + the 4-byte empty error-feedback count longer.
         assert_eq!(
             to_bytes(&back).len(),
-            out.len() + ck.layout.segments.len() + 6
+            out.len() + ck.layout.segments.len() + 10
         );
         // bf16 checkpoints cannot be downgraded to the all-f32 format.
         assert!(to_bytes_v1(&sample_with(Dtype::Bf16)).is_err());
         // Neither can q8-wire (error-feedback-carrying) ones.
         assert!(to_bytes_v1(&sample_q8()).is_err());
+        // Nor elastic (epoch-carrying) ones.
+        assert!(to_bytes_v1(&sample_elastic()).is_err());
     }
 
     /// Pre-ladder (v2) files — the byte layout PR-5/6-era checkpoints
@@ -1071,15 +1248,147 @@ mod tests {
             {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
-            // The v3 re-encoding is exactly the wire byte + the 4-byte
-            // empty error-feedback count longer.
-            assert_eq!(to_bytes(&back).len(), out.len() + 5);
+            // The v4 re-encoding is exactly the wire byte + the 4-byte
+            // empty epoch count + the 4-byte empty error-feedback count
+            // longer.
+            assert_eq!(to_bytes(&back).len(), out.len() + 9);
         }
         // The v2 format cannot spell a decoupled wire or carry residuals.
         let mut decoupled = sample_with(Dtype::F32);
         decoupled.plan.wire = WIRE_BF16;
         assert!(to_bytes_v2(&decoupled).is_err());
         assert!(to_bytes_v2(&sample_q8()).is_err());
+        // Nor a membership schedule.
+        assert!(to_bytes_v2(&sample_elastic()).is_err());
+    }
+
+    /// Pre-elastic (v3) files — the byte layout PR-7-era checkpoints
+    /// have on disk, reproduced by hand — load with an empty
+    /// (fixed-membership) epoch schedule, every value bit-exact.
+    #[test]
+    fn v3_files_load_with_fixed_membership() {
+        for ck in [sample_with(Dtype::Bf16), sample_q8()] {
+            let mut out = Vec::new();
+            out.extend_from_slice(MAGIC);
+            put_u32(&mut out, V3);
+            put_str(&mut out, &ck.layout_key);
+            put_u64(&mut out, ck.layout.blob_len as u64);
+            put_u64(&mut out, ck.layout.params_len as u64);
+            put_u32(&mut out, ck.layout.segments.len() as u32);
+            for s in &ck.layout.segments {
+                put_str(&mut out, &s.name);
+                put_str(&mut out, &s.kind);
+                put_u32(&mut out, s.shape.len() as u32);
+                for &d in &s.shape {
+                    put_u64(&mut out, d as u64);
+                }
+                put_u64(&mut out, s.offset as u64);
+                put_u64(&mut out, s.size as u64);
+                out.push(dtype_code(s.dtype));
+            }
+            put_u64(&mut out, ck.step);
+            out.push(ck.plan.production);
+            out.push(ck.plan.order);
+            out.push(ck.plan.granularity);
+            out.push(ck.plan.mode);
+            out.push(ck.plan.dtype);
+            out.push(ck.plan.wire);
+            put_str(&mut out, &ck.plan.opt);
+            put_u64(&mut out, ck.plan.steps);
+            put_u64(&mut out, ck.plan.bucket_elems);
+            put_u32(&mut out, ck.plan.n_ranks);
+            put_u32(&mut out, ck.plan.n_shards);
+            put_f32(&mut out, ck.plan.lr);
+            put_f32(&mut out, ck.plan.wd);
+            put_f64(&mut out, ck.plan.fabric_alpha);
+            put_f64(&mut out, ck.plan.fabric_bw);
+            put_u64(&mut out, ck.plan.seed);
+            put_u64(&mut out, ck.plan.cursor_group);
+            put_u64(&mut out, ck.plan.cursor_task);
+            // v3: NO membership-epoch section.
+            put_u32(&mut out, ck.ef.len() as u32);
+            for e in &ck.ef {
+                put_u64(&mut out, e.len() as u64);
+                write_f32s(&mut out, e);
+            }
+            put_u64(&mut out, ck.blob.len() as u64);
+            write_u16s(&mut out, ck.blob.prefix_bits());
+            write_f32s(&mut out, ck.blob.f32_part());
+
+            // The hand-rolled bytes ARE what the shared v3 encoder emits.
+            assert_eq!(out, to_bytes_v3(&ck).unwrap());
+            let back = from_bytes(&out).unwrap();
+            assert_eq!(back, ck); // sample plans carry no epochs already
+            assert!(back.plan.epochs.is_empty());
+            // The v4 re-encoding is exactly the 4-byte empty epoch count
+            // longer.
+            assert_eq!(to_bytes(&back).len(), out.len() + 4);
+        }
+        // The v3 format cannot spell a membership schedule.
+        assert!(to_bytes_v3(&sample_elastic()).is_err());
+    }
+
+    /// ADCP v4 round-trips the membership-epoch schedule bit-exactly,
+    /// rejects malformed schedules, and sizes the error-feedback section
+    /// by the CURRENT epoch's rank count.
+    #[test]
+    fn membership_epochs_round_trip_and_validation() {
+        let ck = sample_elastic();
+        let back = from_bytes(&to_bytes(&ck)).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.plan.epochs, vec![(4, 3), (9, 1)]);
+        // The membership helpers walk the schedule deterministically.
+        assert_eq!(ck.plan.ranks_at(1), 2);
+        assert_eq!(ck.plan.ranks_at(4), 2);
+        assert_eq!(ck.plan.ranks_at(5), 3);
+        assert_eq!(ck.plan.ranks_at(9), 3);
+        assert_eq!(ck.plan.ranks_at(10), 1);
+        assert_eq!(ck.plan.ranks_at(12), 1);
+        assert_eq!(ck.plan.current_ranks(0), 2);
+        assert_eq!(ck.plan.current_ranks(4), 3); // next step is 5
+        assert_eq!(ck.plan.current_ranks(12), 1);
+        // Non-increasing boundaries are rejected.
+        let mut unsorted = sample_elastic();
+        unsorted.plan.epochs = vec![(9, 3), (4, 1)];
+        assert!(from_bytes(&to_bytes(&unsorted)).is_err());
+        let mut dup = sample_elastic();
+        dup.plan.epochs = vec![(4, 3), (4, 1)];
+        assert!(from_bytes(&to_bytes(&dup)).is_err());
+        // Boundaries outside the run (0, or >= steps) are rejected.
+        let mut zero = sample_elastic();
+        zero.plan.epochs = vec![(0, 3)];
+        assert!(from_bytes(&to_bytes(&zero)).is_err());
+        let mut past = sample_elastic();
+        past.plan.epochs = vec![(12, 3)]; // steps = 12; only 1..=11 valid
+        assert!(from_bytes(&to_bytes(&past)).is_err());
+        // A zero-rank epoch is rejected.
+        let mut empty_epoch = sample_elastic();
+        empty_epoch.plan.epochs = vec![(4, 0)];
+        assert!(from_bytes(&to_bytes(&empty_epoch)).is_err());
+        // save() applies the same rules before touching the disk.
+        let path = std::env::temp_dir().join(format!(
+            "adalomo_ckpt_epochs_{}.bin",
+            std::process::id()
+        ));
+        assert!(save(&path, &zero).is_err());
+        save(&path, &ck).unwrap();
+        assert_eq!(load(&path).unwrap(), ck);
+        std::fs::remove_file(path).ok();
+
+        // q8 + epochs: the EF section is validated against the rank
+        // count of the epoch the file resumes INTO, not epoch 0's.
+        let mut q8 = sample_q8();
+        q8.plan.epochs = vec![(4, 3), (9, 1)]; // step 7 resumes into 3 ranks
+        assert!(
+            from_bytes(&to_bytes(&q8)).is_err(),
+            "2 EF ranks must not pass a 3-rank epoch"
+        );
+        q8.ef = (0..3)
+            .map(|r| vec![r as f32 * 0.5; q8.layout.params_len])
+            .collect();
+        let back = from_bytes(&to_bytes(&q8)).unwrap();
+        assert_eq!(back.ef.len(), 3);
+        assert_eq!(back, q8);
     }
 
     /// ADCP v3 round-trips the q8 wire's per-rank error-feedback
@@ -1202,10 +1511,21 @@ mod tests {
     /// `count32`/`len64` reads run before every allocation they size).
     #[test]
     fn mutated_headers_never_panic() {
+        let elastic_q8 = {
+            let mut ck = sample_elastic();
+            ck.plan.wire = WIRE_Q8;
+            let ranks = ck.plan.current_ranks(ck.step) as usize;
+            ck.ef = (0..ranks)
+                .map(|r| vec![r as f32 * 1e-3; ck.layout.params_len])
+                .collect();
+            ck
+        };
         for bytes in [
             to_bytes(&sample_with(Dtype::F32)),
             to_bytes(&sample_with(Dtype::Bf16)),
             to_bytes(&sample_q8()),
+            to_bytes(&sample_elastic()),
+            to_bytes(&elastic_q8),
         ] {
             for i in 0..bytes.len() {
                 for flip in [0x01u8, 0x80, 0xFF] {

@@ -1,0 +1,268 @@
+//! Chaos lane: ranks are killed and revived at random step boundaries
+//! (a `Pcg32`-seeded membership schedule) and the elastic engine run must
+//! stay **byte-identical** to the equivalent sequence of fixed-membership
+//! runs spliced together through checkpoint files at the same boundaries.
+//!
+//! The reference side is deliberately built the slow, boring way — one
+//! engine per epoch, `suspend_at` the boundary, rewrite the checkpoint
+//! with the next epoch's rank count (exactly the re-plan `--ranks-schedule`
+//! spells), `Engine::resume` — so the invariant being pinned is "elastic
+//! execution is pure sugar over deterministic re-sharding, not a new
+//! numeric path".
+//!
+//! The offline crate registry has no `proptest`, so the sweep is a
+//! hand-rolled seed matrix (the same style as `proptest_invariants.rs`)
+//! with a greedy schedule shrinker. On a red case the failing seed plus
+//! the minimized schedule are written to `target/chaos/failure.txt`
+//! before panicking — the CI `chaos` job uploads that directory as an
+//! artifact.
+
+use std::path::PathBuf;
+
+use adalomo::coordinator::collective::WireCodec;
+use adalomo::coordinator::engine::{Engine, ExecPlan};
+use adalomo::coordinator::fused_host;
+use adalomo::coordinator::pipeline::PipelineConfig;
+use adalomo::optim::flat::{
+    seeded_blob_and_grads, synthetic_layout, ShardMode,
+};
+use adalomo::optim::OptKind;
+use adalomo::runtime::{checkpoint, Layout};
+use adalomo::util::rng::Pcg32;
+
+/// Steps per run: small enough to keep the matrix fast, large enough
+/// that every boundary position 1..=5 is exercisable.
+const STEPS: usize = 6;
+const SCALE: f32 = 0.05;
+/// Fixed seed matrix — the CI lane must be reproducible, so chaos here
+/// means "adversarial but pinned", not wall-clock entropy.
+const SEEDS: [u64; 6] = [1, 2, 3, 4, 5, 6];
+
+fn model_layout(kind: OptKind) -> Layout {
+    let params: Vec<(&str, &[usize])> = vec![
+        ("embed", &[16, 8][..]),
+        ("l0.attn_norm", &[8][..]),
+        ("l0.wq", &[8, 8][..]),
+        ("l1.wq", &[8, 8][..]),
+        ("final_norm", &[8][..]),
+        ("head", &[8, 16][..]),
+    ];
+    synthetic_layout(kind, &params)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("adalomo_chaos_{}_{name}.bin", std::process::id()))
+}
+
+/// Build the plan for one case. Even seeds take the grouped-backward
+/// producer, odd seeds the fused one, so both production axes face
+/// membership churn.
+fn plan_for(
+    seed: u64,
+    mode: ShardMode,
+    wire: WireCodec,
+    schedule: &[(u64, u32)],
+) -> (Layout, Vec<f32>, ExecPlan) {
+    let kind = OptKind::AdaLomo;
+    let layout = model_layout(kind);
+    let (blob0, _) = seeded_blob_and_grads(&layout, 17 + seed);
+    let mut cfg = PipelineConfig::new(STEPS, layout.params_len.div_ceil(5));
+    cfg.n_shards = 2;
+    cfg.wire = Some(wire);
+    let mut plan = if seed % 2 == 0 {
+        ExecPlan::pipelined(kind, mode, 2, &cfg)
+    } else {
+        ExecPlan::pipelined_fused(kind, mode, 2, &cfg)
+    };
+    plan.seed = 1000 + seed;
+    plan.ranks_schedule = schedule.to_vec();
+    (layout, blob0, plan)
+}
+
+/// Each inner boundary is killed-or-revived with probability 1/2; the
+/// surviving fleet size is 1..=4 ranks. Drawn from the case seed only.
+fn random_schedule(rng: &mut Pcg32) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    for s in 1..STEPS as u64 {
+        if rng.below(2) == 0 {
+            out.push((s, 1 + rng.below(4) as u32));
+        }
+    }
+    out
+}
+
+/// Straight-through elastic run: one engine, the full schedule, final
+/// blob bits out.
+fn run_elastic(
+    seed: u64,
+    mode: ShardMode,
+    wire: WireCodec,
+    schedule: &[(u64, u32)],
+) -> Vec<f32> {
+    let (layout, blob0, plan) = plan_for(seed, mode, wire, schedule);
+    let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+    let extents = eng.group_extents();
+    let report = eng
+        .run_elastic(|seg| fused_host::plan_sources(seg, extents.clone(), SCALE))
+        .unwrap();
+    assert_eq!(report.steps as usize, STEPS);
+    assert!(eng.is_finished());
+    eng.blob()
+}
+
+/// Reference: chained fixed-membership engines. At every boundary the
+/// checkpoint is rewritten with the next epoch's rank count and a
+/// flushed error-feedback bank (the exact splice `run_elastic` performs
+/// in memory), then resumed as if a fresh fleet picked it up.
+fn run_reference(
+    seed: u64,
+    mode: ShardMode,
+    wire: WireCodec,
+    schedule: &[(u64, u32)],
+) -> Vec<f32> {
+    let (layout, blob0, plan) = plan_for(seed, mode, wire, &[]);
+    let mut eng = Engine::new(&layout, &blob0, plan).unwrap();
+    for (i, &(s, r)) in schedule.iter().enumerate() {
+        eng.suspend_at(s);
+        let srcs =
+            fused_host::plan_sources(eng.plan(), eng.group_extents(), SCALE);
+        eng.run(srcs).unwrap();
+        assert_eq!(eng.step(), s);
+        let path = tmp(&format!("ref_{seed}_{i}"));
+        eng.save(&path).unwrap();
+        let ck = checkpoint::load(&path).unwrap();
+        let mut rec = ck.plan.clone();
+        rec.n_ranks = r;
+        let ef: Vec<Vec<f32>> = if wire.uses_error_feedback() {
+            vec![vec![0.0f32; ck.layout.params_len]; r as usize]
+        } else {
+            Vec::new()
+        };
+        checkpoint::write(
+            &path,
+            &ck.layout_key,
+            &ck.layout,
+            ck.step,
+            &rec,
+            &ef,
+            &ck.blob,
+        )
+        .unwrap();
+        eng = Engine::resume(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+    let srcs = fused_host::plan_sources(eng.plan(), eng.group_extents(), SCALE);
+    eng.run(srcs).unwrap();
+    assert!(eng.is_finished());
+    eng.blob()
+}
+
+fn case_matches(
+    seed: u64,
+    mode: ShardMode,
+    wire: WireCodec,
+    schedule: &[(u64, u32)],
+) -> bool {
+    let a = run_elastic(seed, mode, wire, schedule);
+    let b = run_reference(seed, mode, wire, schedule);
+    a.len() == b.len()
+        && a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Greedy delta-debugging on the schedule: drop any entry whose removal
+/// keeps the case red, so the artifact names the smallest reproducer.
+fn shrink(
+    seed: u64,
+    mode: ShardMode,
+    wire: WireCodec,
+    mut schedule: Vec<(u64, u32)>,
+) -> Vec<(u64, u32)> {
+    let mut i = 0;
+    while i < schedule.len() {
+        let mut cand = schedule.clone();
+        cand.remove(i);
+        if !case_matches(seed, mode, wire, &cand) {
+            schedule = cand;
+        } else {
+            i += 1;
+        }
+    }
+    schedule
+}
+
+/// The chaos gate itself: every (seed, shard plan, wire rung) cell draws
+/// its kill/revive schedule and must match the fixed-membership splice
+/// bitwise. Covers both shard plans and the f32 + q8 wire rungs as the
+/// acceptance criteria demand.
+#[test]
+fn chaos_kill_revive_matches_fixed_membership_bitwise() {
+    for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+        for wire in [WireCodec::F32, WireCodec::Q8Block] {
+            for seed in SEEDS {
+                let mut rng = Pcg32::seeded(0xC4A0_5000 + seed);
+                let schedule = random_schedule(&mut rng);
+                if case_matches(seed, mode, wire, &schedule) {
+                    continue;
+                }
+                let minimized =
+                    shrink(seed, mode, wire, schedule.clone());
+                let report = format!(
+                    "seed {seed} mode {mode:?} wire {} \
+                     schedule {schedule:?} minimized {minimized:?}\n",
+                    wire.name(),
+                );
+                std::fs::create_dir_all("target/chaos").ok();
+                std::fs::write("target/chaos/failure.txt", &report).ok();
+                panic!(
+                    "elastic run diverged from fixed-membership splice \
+                     (reproducer in target/chaos/failure.txt): {report}"
+                );
+            }
+        }
+    }
+}
+
+/// An elastic run suspended mid-flight checkpoints its remaining
+/// schedule (ADCP v4 epoch records) and resumes to the same final bits
+/// as the uninterrupted elastic run — fault tolerance on top of
+/// elasticity.
+#[test]
+fn elastic_run_suspends_and_resumes_bit_exactly() {
+    let mode = ShardMode::Segments;
+    let wire = WireCodec::Q8Block;
+    let schedule = [(2u64, 3u32), (4, 1)];
+
+    let full = run_elastic(9, mode, wire, &schedule);
+
+    let (layout, blob0, plan) = plan_for(9, mode, wire, &schedule);
+    let mut part = Engine::new(&layout, &blob0, plan).unwrap();
+    part.suspend_at(3);
+    let extents = part.group_extents();
+    let r = part
+        .run_elastic(|seg| fused_host::plan_sources(seg, extents.clone(), SCALE))
+        .unwrap();
+    assert_eq!(r.steps, 3);
+    assert!(!part.is_finished());
+    let mid = tmp("elastic_mid");
+    part.save(&mid).unwrap();
+
+    // The epoch section must round-trip through the file.
+    let ck = checkpoint::load(&mid).unwrap();
+    assert_eq!(ck.plan.epochs, schedule.to_vec());
+    assert_eq!(ck.plan.ranks_at(3), 3, "step 3 runs inside epoch 1");
+    assert_eq!(ck.plan.current_ranks(ck.step), 3);
+
+    let mut resumed = Engine::resume(&mid).unwrap();
+    assert_eq!(resumed.step(), 3);
+    let extents = resumed.group_extents();
+    resumed
+        .run_elastic(|seg| fused_host::plan_sources(seg, extents.clone(), SCALE))
+        .unwrap();
+    assert!(resumed.is_finished());
+    let b = resumed.blob();
+    for (i, (x, y)) in full.iter().zip(&b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "elem {i}: {x} vs {y}");
+    }
+    std::fs::remove_file(mid).ok();
+}

@@ -283,8 +283,8 @@ fn v2_checkpoint_resumes_bit_exactly() {
         let ck = checkpoint::load(&p3).unwrap();
         let v2 = checkpoint::to_bytes_v2(&ck).unwrap();
         // The transcoding dropped exactly the wire byte and the empty
-        // error-feedback count — nothing else.
-        assert_eq!(std::fs::read(&p3).unwrap().len(), v2.len() + 5);
+        // error-feedback + membership-epoch counts — nothing else.
+        assert_eq!(std::fs::read(&p3).unwrap().len(), v2.len() + 9);
 
         let p2 = tmp(&format!("v2_file_{}", dtype.name()));
         std::fs::write(&p2, &v2).unwrap();
