@@ -11,6 +11,7 @@ use adalomo::optim::{pool, OptKind, ParamOpt, ALL_OPTS};
 use adalomo::tensor::Tensor;
 use adalomo::util::bench::{banner, bench_units, JsonSink};
 use adalomo::util::rng::Pcg32;
+use std::sync::RwLock;
 
 /// Model-shaped parameter list (embed + L layers + head) so the engine has
 /// a realistic multi-segment workload to shard.
@@ -159,6 +160,34 @@ fn main() {
                 if flat_best.map_or(true, |b| mean < b) {
                     flat_best = Some(mean);
                 }
+            }
+
+            // Persistent-session path: identical math on the parked
+            // crew — the per-step scoped-spawn tax is gone, which is
+            // what the re-blessed optim_step baseline banks on.
+            let mut engine =
+                FlatOptimizer::new(kind, &layout, cores, mode).unwrap();
+            let mut blob = blob0.clone();
+            let grads_lock = RwLock::new(grads.clone());
+            let mut t = 0u64;
+            let r = engine
+                .session(&mut blob, &grads_lock, |s| {
+                    bench_units(
+                        &format!(
+                            "{} flat session {label} x{cores}",
+                            kind.name()
+                        ),
+                        model_elems,
+                        || {
+                            t += 1;
+                            s.step(t, 1e-3, 0.01).unwrap();
+                        },
+                    )
+                })
+                .unwrap();
+            let mean = r.timing.mean;
+            if flat_best.map_or(true, |b| mean < b) {
+                flat_best = Some(mean);
             }
         }
         if let Some(best) = flat_best {

@@ -12,6 +12,47 @@ use adalomo::optim::{pool, OptKind};
 use adalomo::runtime::{checkpoint, Manifest};
 use adalomo::tensor::Dtype;
 use adalomo::util::bench::{banner, bench, bench_units, JsonSink};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Counting allocator: every heap allocation (and growth-realloc) bumps a
+/// counter. The steady-state section snapshots it around a window of
+/// persistent-session steps to prove the hot loop is allocation-free —
+/// `steady_state_allocs_per_step` is pinned at exactly 0 in
+/// bench/baseline.json, so a single stray `Vec` in the step path fails
+/// `make bench-gate`.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
 
 /// Host-side blob operations on the flat engine: the coordinator-path
 /// costs that exist even without PJRT (local-SGD round averaging, host
@@ -69,7 +110,61 @@ fn host_blob_section(sink: &mut JsonSink) {
     );
     let step_secs_per_elem =
         step_result.timing.mean / layout.params_len as f64;
-    sink.metric("host_flat_step_ns_per_elem", step_secs_per_elem * 1e9);
+
+    // Persistent-session steady state: the crew is spawned once and
+    // parked between rounds, and the first step grows every scratch
+    // buffer. After that warm-up, a window of bare steps must perform
+    // ZERO heap allocations and ZERO thread spawns — both per-step
+    // counters are pinned exactly at 0 in bench/baseline.json. The
+    // timing metric is also taken from this path: it is the steady-state
+    // cost the coordinator actually pays, minus the per-call spawn tax
+    // of the scoped-thread step above.
+    let grads_lock = RwLock::new(grads.clone());
+    let mut blob = blob0.clone();
+    let mut t = 0u64;
+    let (sess_mean, d_allocs, d_spawns, window) = engine
+        .session(&mut blob, &grads_lock, |s| {
+            let r = bench_units(
+                "flat adalomo step (persistent session)",
+                layout.params_len as f64,
+                || {
+                    t += 1;
+                    s.step(t, 1e-3, 0.0).unwrap();
+                },
+            );
+            // Measured window kept clean of harness allocations:
+            // snapshot the counters, run bare steps, diff.
+            let window = 64u64;
+            let a0 = alloc_count();
+            let s0 = pool::spawn_count();
+            for _ in 0..window {
+                t += 1;
+                s.step(t, 1e-3, 0.0).unwrap();
+            }
+            (
+                r.timing.mean,
+                alloc_count() - a0,
+                pool::spawn_count() - s0,
+                window,
+            )
+        })
+        .unwrap();
+    sink.metric(
+        "host_flat_step_ns_per_elem",
+        sess_mean / layout.params_len as f64 * 1e9,
+    );
+    println!(
+        "steady state over {window} session steps: {d_allocs} heap allocs, \
+         {d_spawns} thread spawns"
+    );
+    sink.metric(
+        "steady_state_allocs_per_step",
+        d_allocs as f64 / window as f64,
+    );
+    sink.metric(
+        "steady_state_thread_spawns_per_step",
+        d_spawns as f64 / window as f64,
+    );
 
     // Bucketed-exchange overlap on the same blob (coordinator/pipeline):
     // exposed step time vs the fully-exposed compute + comm sum. The

@@ -246,6 +246,7 @@ pub fn analyze(tree: &Tree) -> Report {
     rules::no_unsafe(tree, &mut findings);
     rules::determinism(tree, &mut findings);
     rules::panic_discipline(tree, &mut findings, &mut notes);
+    rules::hot_path_alloc(tree, &mut findings);
     let bench_metrics = rules::consistency(tree, &mut findings, &mut notes);
     unused_waiver_notes(tree, &findings, &mut notes);
     Report {
@@ -392,8 +393,8 @@ mod tests {
 
     #[test]
     fn panic_budget_is_enforced() {
-        // engine.rs has a budget of 1: a second unwrap busts it.
-        let p = "rust/src/coordinator/engine.rs";
+        // fused.rs has a budget of 1: a second unwrap busts it.
+        let p = "rust/src/coordinator/fused.rs";
         let t = tree_of(&[(p, "f().unwrap();\n")]);
         assert_eq!(violations_of(&t, "panic-discipline"), 0);
         let t = tree_of(&[(p, "f().unwrap();\ng().unwrap();\n")]);
@@ -403,6 +404,12 @@ mod tests {
         let r = analyze(&t);
         assert_eq!(r.violations().len(), 0);
         assert!(r.notes.iter().any(|n| n.contains("ratchet")));
+        // engine.rs is ratcheted to zero: any panic site fails.
+        let t = tree_of(&[(
+            "rust/src/coordinator/engine.rs",
+            "f().unwrap();\n",
+        )]);
+        assert_eq!(violations_of(&t, "panic-discipline"), 1);
         // A watched file with no allowlist entry may not panic at all.
         let t = tree_of(&[(W, "f().expect(\"boom\");\n")]);
         assert_eq!(violations_of(&t, "panic-discipline"), 1);
@@ -567,6 +574,70 @@ mod tests {
         let r = analyze(&t);
         assert_eq!(r.violations().len(), 0);
         assert!(r.notes.iter().any(|n| n.contains("stale waiver")));
+    }
+
+    #[test]
+    fn hot_regions_forbid_allocation_tokens() {
+        // Alloc token inside a closed region: violation.
+        let t = tree_of(&[(
+            W,
+            "fn f() {\n\
+             // ANALYZE-HOT: dispatch loop\n\
+             let v = xs.to_vec();\n\
+             // ANALYZE-HOT-END\n\
+             }\n",
+        )]);
+        assert_eq!(violations_of(&t, "hot-path-alloc"), 1);
+        // The same token outside the region is fine.
+        let t = tree_of(&[(
+            W,
+            "let v = xs.to_vec();\n\
+             // ANALYZE-HOT: dispatch loop\n\
+             let n = xs.len();\n\
+             // ANALYZE-HOT-END\n",
+        )]);
+        assert_eq!(violations_of(&t, "hot-path-alloc"), 0);
+        // Every token class is caught.
+        for bad in [
+            "let a = vec![0f32; n];",
+            "let b = xs.to_vec();",
+            "let c = Vec::with_capacity(n);",
+            "let d = xs.clone();",
+            "let e = Box::new(f);",
+        ] {
+            let src = format!(
+                "// ANALYZE-HOT: k\n{bad}\n// ANALYZE-HOT-END\n"
+            );
+            let t = tree_of(&[(W, src.as_str())]);
+            assert_eq!(violations_of(&t, "hot-path-alloc"), 1, "{bad}");
+        }
+        // Waivable with the standard grammar.
+        let t = tree_of(&[(
+            W,
+            "// ANALYZE-HOT: k\n\
+             // ANALYZE-WAIVE(hot-path-alloc): warm-up only, ring reuses it\n\
+             let v = xs.to_vec();\n\
+             // ANALYZE-HOT-END\n",
+        )]);
+        assert_eq!(violations_of(&t, "hot-path-alloc"), 0);
+        assert_eq!(analyze(&t).waived_count(), 1);
+        // An unterminated region is itself a violation.
+        let t = tree_of(&[(
+            W,
+            "// ANALYZE-HOT: forgot to close\nlet n = xs.len();\n",
+        )]);
+        assert_eq!(violations_of(&t, "hot-path-alloc"), 1);
+        // Alloc tokens in test code under a region don't count (mirrors
+        // every other rule's test exemption).
+        let t = tree_of(&[(
+            W,
+            "// ANALYZE-HOT: k\n\
+             fn f() {}\n\
+             #[cfg(test)]\n\
+             mod tests { fn t() { let v = xs.to_vec(); } }\n\
+             // ANALYZE-HOT-END\n",
+        )]);
+        assert_eq!(violations_of(&t, "hot-path-alloc"), 0);
     }
 
     #[test]

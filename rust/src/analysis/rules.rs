@@ -42,6 +42,12 @@ pub const RULES: &[(&str, &str)] = &[
          references, the ADCP checkpoint version, and the q8 wire block \
          size stay in sync across artifacts",
     ),
+    (
+        "hot-path-alloc",
+        "no allocation tokens (vec!, to_vec, Vec::with_capacity, .clone, \
+         Box::new) inside ANALYZE-HOT regions — the marked steady-state \
+         dispatch paths stay heap-free",
+    ),
 ];
 
 /// Directories (repo-relative prefixes) the determinism and
@@ -99,8 +105,9 @@ pub const PANIC_ALLOWLIST: &[(&str, usize, &str)] = &[
     ),
     (
         "rust/src/coordinator/engine.rs",
-        1,
-        "pop_front() guarded by the front() match arm directly above",
+        0,
+        "engine and leader paths are anyhow-error clean; the recycled-ring \
+         refactor replaced the last guarded pop_front expect with if-let",
     ),
     (
         "rust/src/coordinator/fused.rs",
@@ -358,6 +365,62 @@ pub fn panic_discipline(
                 waived: None,
             }),
             None => {}
+        }
+    }
+}
+
+// --- rule: hot-path-alloc -----------------------------------------------
+
+/// Allocation tokens whose presence inside an `ANALYZE-HOT` region is a
+/// violation: the steady-state dispatch paths those regions mark must
+/// not touch the heap. The `steady_state_allocs_per_step = 0` bench pin
+/// is this check's runtime twin — the scan catches the token before a
+/// bench run has to.
+pub const HOT_ALLOC_TOKENS: &[&str] =
+    &["vec!", ".to_vec()", "Vec::with_capacity", ".clone()", "Box::new"];
+
+/// Flag allocation tokens inside `ANALYZE-HOT` regions (non-test code;
+/// waivable with the standard grammar), and flag regions that are never
+/// closed — an open-ended region would silently police the rest of the
+/// file, so it must fail loudly instead.
+pub fn hot_path_alloc(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.sources {
+        for region in f.hot_regions() {
+            let Some(end) = region.end else {
+                out.push(Finding {
+                    rule: "hot-path-alloc",
+                    file: f.path.clone(),
+                    line: region.start,
+                    message: format!(
+                        "ANALYZE-HOT region {:?} is never closed with \
+                         ANALYZE-HOT-END",
+                        region.label
+                    ),
+                    waived: None,
+                });
+                continue;
+            };
+            for l in &f.lines {
+                if l.number <= region.start || l.number >= end || l.is_test {
+                    continue;
+                }
+                for tok in HOT_ALLOC_TOKENS {
+                    if l.code.contains(tok) {
+                        out.push(super::finding(
+                            f,
+                            "hot-path-alloc",
+                            l.number,
+                            format!(
+                                "{tok} inside hot region {:?} — \
+                                 steady-state dispatch must be \
+                                 allocation-free; hoist the buffer or \
+                                 recycle it through a ring",
+                                region.label
+                            ),
+                        ));
+                    }
+                }
+            }
         }
     }
 }

@@ -53,6 +53,27 @@ pub struct SourceFile {
 /// The marker rules look for inside comments.
 pub const WAIVE_MARK: &str = "ANALYZE-WAIVE(";
 
+/// Opens a hot region — the `ANALYZE-HOT` comment marker followed by a
+/// colon and a label. Inside one, the `hot-path-alloc` rule treats
+/// allocation tokens as violations. (This doc deliberately never spells
+/// the marker-plus-colon sequence: the scanner would read it as a real
+/// region opener in this very file.)
+pub const HOT_MARK: &str = "ANALYZE-HOT:";
+/// Closes the innermost open hot region.
+pub const HOT_END_MARK: &str = "ANALYZE-HOT-END";
+
+/// A parsed `ANALYZE-HOT` region (comment channel, like waivers).
+#[derive(Debug, Clone)]
+pub struct HotRegion {
+    pub label: String,
+    /// Line of the opening marker.
+    pub start: usize,
+    /// Line of the closing marker; `None` means unterminated (a
+    /// violation in its own right — an open-ended region would silently
+    /// police the whole rest of the file).
+    pub end: Option<usize>,
+}
+
 impl SourceFile {
     /// Scan `text` into stripped lines + waivers. `path` should be
     /// repo-relative with forward slashes (`rust/src/...`).
@@ -78,6 +99,31 @@ impl SourceFile {
             });
         }
         SourceFile { path: path.to_string(), lines, waivers }
+    }
+
+    /// Parse `ANALYZE-HOT` regions from the comment channel. Regions do
+    /// not nest; a close with no open region is ignored, and an open
+    /// region left unterminated is reported with `end: None`.
+    pub fn hot_regions(&self) -> Vec<HotRegion> {
+        let mut out: Vec<HotRegion> = Vec::new();
+        let mut open: Option<usize> = None;
+        for l in &self.lines {
+            if l.comment.contains(HOT_END_MARK) {
+                if let Some(idx) = open.take() {
+                    out[idx].end = Some(l.number);
+                }
+                continue;
+            }
+            if let Some(at) = l.comment.find(HOT_MARK) {
+                let label =
+                    l.comment[at + HOT_MARK.len()..].trim().to_string();
+                // A second open before the first closed leaves the first
+                // with `end: None` — flagged, never silently merged.
+                open = Some(out.len());
+                out.push(HotRegion { label, start: l.number, end: None });
+            }
+        }
+        out
     }
 
     /// Waivers for `rule` covering `line`: trailing waivers on the line

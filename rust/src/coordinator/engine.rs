@@ -1031,7 +1031,7 @@ impl Engine {
         // channels (the fixed depth is the backpressure a real exchange
         // fabric applies). Each returns its measured peak live gradient
         // elements.
-        let (handles, rx_ranks) = match sources {
+        let (handles, rx_ranks, ret_ranks) = match sources {
             RankSources::Full(srcs) => {
                 ensure!(
                     plan.production == GradProduction::FullImage,
@@ -1069,12 +1069,14 @@ impl Engine {
             &ready,
             &tile_comm,
             &rx_ranks,
+            &ret_ranks,
             start,
             stop,
         );
         // Unblock any rank still parked on a bounded send before joining
         // (the error path stops receiving mid-stream).
         drop(rx_ranks);
+        drop(ret_ranks);
         let mut peak_elems = 0usize;
         let mut join_err = None;
         for h in handles {
@@ -1244,6 +1246,11 @@ fn validate_grouped(
 /// Full-image producers: fast-forward past completed steps, then per step
 /// fill the whole gradient image and ship the tiles in visit order. Every
 /// rank holds the full image, so its peak is `params_len` elements.
+///
+/// Shipped tile payloads ride a recycled buffer ring: the leader sends
+/// spent chunk Vecs back on a per-rank return channel and the producer
+/// refills them, so the steady state allocates nothing — only the first
+/// in-flight chunks (bounded by the channel depth) are ever created.
 #[allow(clippy::type_complexity)]
 fn spawn_full_producers(
     sources: Vec<Box<dyn GradSource>>,
@@ -1251,12 +1258,19 @@ fn spawn_full_producers(
     params_len: usize,
     start: u64,
     stop: u64,
-) -> (Vec<thread::JoinHandle<usize>>, Vec<mpsc::Receiver<Vec<f32>>>) {
+) -> (
+    Vec<thread::JoinHandle<usize>>,
+    Vec<mpsc::Receiver<Vec<f32>>>,
+    Vec<mpsc::Sender<Vec<f32>>>,
+) {
     let mut handles = Vec::with_capacity(sources.len());
     let mut rx_ranks = Vec::with_capacity(sources.len());
+    let mut ret_ranks = Vec::with_capacity(sources.len());
     for mut src in sources {
         let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
         rx_ranks.push(rx);
+        let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+        ret_ranks.push(ret_tx);
         let ship = ship.clone();
         // ANALYZE-WAIVE(determinism): producers feed per-rank channels drained in rank order
         handles.push(thread::spawn(move || -> usize {
@@ -1271,16 +1285,21 @@ fn spawn_full_producers(
             for step in start + 1..=stop {
                 peak_elems = params_len;
                 src.fill(step, &mut grad);
+                // ANALYZE-HOT: full producer ship loop
                 for &(lo, hi) in &ship {
-                    if tx.send(grad[lo..hi].to_vec()).is_err() {
+                    let mut buf = ret_rx.try_recv().unwrap_or_default();
+                    buf.clear();
+                    buf.extend_from_slice(&grad[lo..hi]);
+                    if tx.send(buf).is_err() {
                         return peak_elems; // leader bailed; stop producing
                     }
                 }
+                // ANALYZE-HOT-END
             }
             peak_elems
         }));
     }
-    (handles, rx_ranks)
+    (handles, rx_ranks, ret_ranks)
 }
 
 /// Grouped producers: interleave group production with tile shipping.
@@ -1291,6 +1310,12 @@ fn spawn_full_producers(
 /// host-path twin of the paper's two-consecutive-gradients bound (§2.1),
 /// and it can never exceed the full image. Each thread returns its
 /// measured peak live gradient elements.
+/// Like the full producers, chunk payloads ride the leader's recycled
+/// buffer ring, and retired group buffers go to a local free list that
+/// the next group draws from — the per-step `vec![0f32; ..]` churn of
+/// the original implementation is gone after warm-up. The liveness
+/// *accounting* (peak live gradient elements) is unchanged: a buffer
+/// parked on the free list holds no live gradient data.
 #[allow(clippy::type_complexity)]
 fn spawn_grouped_producers(
     sources: Vec<Box<dyn GroupGradSource>>,
@@ -1298,12 +1323,19 @@ fn spawn_grouped_producers(
     extents: Vec<(usize, usize)>,
     start: u64,
     stop: u64,
-) -> (Vec<thread::JoinHandle<usize>>, Vec<mpsc::Receiver<Vec<f32>>>) {
+) -> (
+    Vec<thread::JoinHandle<usize>>,
+    Vec<mpsc::Receiver<Vec<f32>>>,
+    Vec<mpsc::Sender<Vec<f32>>>,
+) {
     let mut handles = Vec::with_capacity(sources.len());
     let mut rx_ranks = Vec::with_capacity(sources.len());
+    let mut ret_ranks = Vec::with_capacity(sources.len());
     for mut src in sources {
         let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(2);
         rx_ranks.push(rx);
+        let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+        ret_ranks.push(ret_tx);
         let tiles = tiles.clone();
         let extents = extents.clone();
         // ANALYZE-WAIVE(determinism): producers feed per-rank channels drained in rank order
@@ -1314,12 +1346,16 @@ fn spawn_grouped_producers(
             }
             drop(scratch);
             let mut peak_elems = 0usize;
+            let mut segs: VecDeque<(usize, Vec<f32>)> = VecDeque::new();
+            let mut free: Vec<Vec<f32>> = Vec::new();
             for step in start + 1..=stop {
-                let mut segs: VecDeque<(usize, Vec<f32>)> = VecDeque::new();
                 let mut live = 0usize;
                 let mut next_tile = tiles.len();
+                // ANALYZE-HOT: grouped producer fill/ship loop
                 for (g, &(lo, hi)) in extents.iter().enumerate() {
-                    let mut gbuf = vec![0f32; hi - lo];
+                    let mut gbuf = free.pop().unwrap_or_default();
+                    gbuf.clear();
+                    gbuf.resize(hi - lo, 0f32);
                     src.fill_group(step, g, &mut gbuf);
                     live += gbuf.len();
                     peak_elems = peak_elems.max(live);
@@ -1329,7 +1365,10 @@ fn spawn_grouped_producers(
                     // buffers (the one copy the exchange itself needs).
                     while next_tile > 0 && tiles[next_tile - 1].0 >= lo {
                         let (blo, bhi) = tiles[next_tile - 1];
-                        let mut chunk = vec![0f32; bhi - blo];
+                        let mut chunk =
+                            ret_rx.try_recv().unwrap_or_default();
+                        chunk.clear();
+                        chunk.resize(bhi - blo, 0f32);
                         for (slo, sbuf) in segs.iter() {
                             let slo = *slo;
                             let shi = slo + sbuf.len();
@@ -1345,14 +1384,17 @@ fn spawn_grouped_producers(
                         if tx.send(chunk).is_err() {
                             return peak_elems; // leader bailed; stop
                         }
-                        // Free every buffer the shipped region covers.
+                        // Retire every buffer the shipped region covers
+                        // to the free list for the next group's fill.
                         loop {
                             match segs.front() {
                                 Some(&(slo, _)) if slo >= blo => {
-                                    let (_, sbuf) = segs
-                                        .pop_front()
-                                        .expect("front checked above");
-                                    live -= sbuf.len();
+                                    if let Some((_, sbuf)) =
+                                        segs.pop_front()
+                                    {
+                                        live -= sbuf.len();
+                                        free.push(sbuf);
+                                    }
                                 }
                                 _ => break,
                             }
@@ -1360,12 +1402,13 @@ fn spawn_grouped_producers(
                         next_tile -= 1;
                     }
                 }
+                // ANALYZE-HOT-END
                 debug_assert!(segs.is_empty() && next_tile == 0);
             }
             peak_elems
         }));
     }
-    (handles, rx_ranks)
+    (handles, rx_ranks, ret_ranks)
 }
 
 /// THE leader loop — the single copy that used to exist per path: receive
@@ -1388,6 +1431,7 @@ fn leader_loop(
     ready: &[Vec<usize>],
     tile_comm: &[f64],
     rx_ranks: &[mpsc::Receiver<Vec<f32>>],
+    ret_ranks: &[mpsc::Sender<Vec<f32>>],
     start: u64,
     stop: u64,
 ) -> Result<(f64, f64, f64)> {
@@ -1396,6 +1440,10 @@ fn leader_loop(
     let inv = 1.0 / n_ranks as f32;
     let params_len = tiles.iter().map(|&(_, hi)| hi).max().unwrap_or(0);
     let mut grad = vec![0f32; params_len];
+    // Chunk holder reused across tiles and steps; spent payloads go back
+    // to their producer's recycle ring, so the steady-state exchange
+    // allocates nothing on the leader side.
+    let mut chunks: Vec<Vec<f32>> = Vec::with_capacity(n_ranks);
     let (mut compute, mut comm, mut exposed) = (0.0f64, 0.0f64, 0.0f64);
     let last_visit = visit.last().copied();
     for t in start + 1..=stop {
@@ -1404,6 +1452,7 @@ fn leader_loop(
         // reduction landing, previous work finishing).
         let mut comm_front = 0.0f64;
         let mut work_front = 0.0f64;
+        // ANALYZE-HOT: engine leader tile loop
         for &b in visit {
             let (lo, hi) = tiles[b];
             // Accumulate: one contribution per rank, received in rank
@@ -1412,7 +1461,7 @@ fn leader_loop(
             // feedback rungs fold rank r's residual slice for this
             // region into the payload before quantizing and bank the
             // new residual for the next step's same-region send.
-            let mut chunks = Vec::with_capacity(n_ranks);
+            chunks.clear();
             for (r, rx) in rx_ranks.iter().enumerate() {
                 let mut chunk = rx.recv().map_err(|_| {
                     anyhow!("rank gradient stream ended early")
@@ -1429,9 +1478,12 @@ fn leader_loop(
             }
             // Reduce: mean in rank order, element-parallel on the pool
             // (bit-identical for any worker count).
-            let refs: Vec<&[f32]> =
-                chunks.iter().map(|c| c.as_slice()).collect();
-            pool::par_average(&mut grad[lo..hi], &refs, inv, plan.n_shards);
+            pool::par_average(&mut grad[lo..hi], &chunks, inv, plan.n_shards);
+            // Hand the spent payloads back to their producers' rings
+            // (a closed ring just means that rank already exited).
+            for (r, chunk) in chunks.drain(..).enumerate() {
+                let _ = ret_ranks[r].send(chunk);
+            }
             comm_front += tile_comm[b];
             comm += tile_comm[b];
             // Step: whatever this tile's landing makes ready.
@@ -1470,6 +1522,7 @@ fn leader_loop(
             compute += dt;
             work_front = comm_front.max(work_front) + dt;
         }
+        // ANALYZE-HOT-END
         exposed += comm_front.max(work_front);
     }
     Ok((compute, comm, exposed))

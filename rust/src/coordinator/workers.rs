@@ -17,6 +17,9 @@
 //! leader broadcasts just the averaged parameter region and ranks return
 //! just their parameter region plus two scalars — the old protocol's
 //! O(ranks × blob_len) clones per round shrink to O(ranks × params_len).
+//! Those `params_len` payloads ride a recycled ring (rank → leader →
+//! refilled with the average → rank), so steady-state rounds perform no
+//! heap allocation at all on the sync path.
 //! Round averaging itself runs on the flat-engine worker pool
 //! ([`crate::optim::pool::par_average`]) — element-parallel and
 //! bit-identical to the sequential loop for any worker count.
@@ -109,8 +112,22 @@ pub fn apply_broadcast(
     msg: Broadcast,
     params_len: usize,
 ) -> Result<HostBlob> {
+    Ok(apply_broadcast_recycled(prev, msg, params_len)?.0)
+}
+
+/// [`apply_broadcast`] that also hands back the spent `Params` payload
+/// (empty for `Init` rounds). Steady-state rounds refill that Vec with
+/// the rank's own parameter region and ship it back — the recycled-ring
+/// seam that makes a sync round allocation-free on both sides.
+pub fn apply_broadcast_recycled(
+    prev: Option<HostBlob>,
+    msg: Broadcast,
+    params_len: usize,
+) -> Result<(HostBlob, Vec<f32>)> {
     match msg {
-        Broadcast::Init(blob) => Ok(splice_params(prev, blob, params_len)),
+        Broadcast::Init(blob) => {
+            Ok((splice_params(prev, blob, params_len), Vec::new()))
+        }
         Broadcast::Params(avg) => {
             ensure!(
                 avg.len() == params_len,
@@ -121,7 +138,7 @@ pub fn apply_broadcast(
                 bail!("params-only broadcast before any full init");
             };
             blob.data[..params_len].copy_from_slice(&avg);
-            Ok(blob)
+            Ok((blob, avg))
         }
     }
 }
@@ -178,8 +195,8 @@ pub fn run_local_sgd(
             while let Ok(cmd) = rx_cmd.recv() {
                 // None is the shutdown signal from the leader.
                 let Some(msg) = cmd else { break };
-                let start_blob =
-                    apply_broadcast(resume.take(), msg, params_len)?;
+                let (start_blob, mut send_buf) =
+                    apply_broadcast_recycled(resume.take(), msg, params_len)?;
                 let loader = DataLoader::lm(
                     domain,
                     stream_rng.next_u64(),
@@ -197,8 +214,12 @@ pub fn run_local_sgd(
                 trainer.set_host_blob(&start_blob)?;
                 let report = trainer.train_with_schedule(schedule)?;
                 let blob = trainer.host_blob()?;
+                // Refill the recycled broadcast buffer instead of
+                // materializing a fresh params copy every round.
+                send_buf.clear();
+                send_buf.extend_from_slice(&blob.data[..params_len]);
                 let round = RankRound {
-                    params: blob.data[..params_len].to_vec(),
+                    params: send_buf,
                     final_loss: report.final_loss,
                     state_sumsq: sum_sq(blob.state_region(&layout)),
                 };
@@ -227,6 +248,11 @@ pub fn run_local_sgd(
     let mut per_rank_final_loss = vec![0f32; n_ranks];
     let mut per_rank_state_sumsq = vec![0f32; n_ranks];
     let mut avg_params = vec![0f32; plen];
+    // Gathered rank buffers double as the next round's broadcast
+    // payloads: rank -> leader -> (refilled with the average) -> rank.
+    // After the cold first round the ring is primed and sync rounds
+    // stop allocating on the leader side too.
+    let mut rank_params: Vec<Vec<f32>> = Vec::with_capacity(n_ranks);
     for round in 0..rounds {
         for tx in &to_ranks {
             // Round 1: full blob (ranks are cold). Later rounds: only the
@@ -234,11 +260,14 @@ pub fn run_local_sgd(
             let msg = if round == 0 {
                 Broadcast::Init(global.clone())
             } else {
-                Broadcast::Params(avg_params.clone())
+                let mut buf = rank_params.pop().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(&avg_params);
+                Broadcast::Params(buf)
             };
             tx.send(Some(msg)).map_err(|e| anyhow!("send: {e}"))?;
         }
-        let mut rank_params = Vec::with_capacity(n_ranks);
+        rank_params.clear();
         for (rank, rx) in from_ranks.iter().enumerate() {
             let round_res =
                 rx.recv().map_err(|e| anyhow!("recv: {e}"))??;
@@ -246,14 +275,12 @@ pub fn run_local_sgd(
             per_rank_state_sumsq[rank] = round_res.state_sumsq;
             rank_params.push(round_res.params);
         }
-        // Average the parameter regions on the flat-engine pool; the
-        // leader's own state/metrics stay untouched — ranks never read
-        // them back.
-        let sources: Vec<&[f32]> =
-            rank_params.iter().map(|p| p.as_slice()).collect();
+        // Average the parameter regions on the flat-engine pool in rank
+        // order (the Vec order above); the leader's own state/metrics
+        // stay untouched — ranks never read them back.
         pool::par_average(
             &mut avg_params,
-            &sources,
+            &rank_params,
             1.0 / n_ranks as f32,
             pool::default_shards(),
         );

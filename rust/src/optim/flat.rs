@@ -59,7 +59,7 @@
 //! pass dominates, and intra-task cooperation would change the arithmetic
 //! without buying bandwidth.
 
-use std::sync::{Barrier, Mutex};
+use std::sync::{Barrier, Mutex, RwLock};
 
 use anyhow::{ensure, Context, Result};
 
@@ -249,6 +249,20 @@ struct TaskPart<'b, T = f32> {
     theta: Option<&'b mut [T]>,
     a: Option<&'b mut [T]>,
     b: Option<&'b mut [T]>,
+}
+
+impl<T> TaskPart<'_, T> {
+    /// Fresh short-lived views of the same slots. Unlike `mem::take`,
+    /// this leaves the part intact, which is what lets a persistent
+    /// [`StepSession`] re-dispatch the distributed parts round after
+    /// round without redoing (or re-allocating) the blob split.
+    fn reborrow(&mut self) -> TaskPart<'_, T> {
+        TaskPart {
+            theta: self.theta.as_deref_mut(),
+            a: self.a.as_deref_mut(),
+            b: self.b.as_deref_mut(),
+        }
+    }
 }
 
 /// Per-worker widen/round scratch for bf16-stored blobs: f32 staging for
@@ -939,7 +953,7 @@ impl FlatOptimizer {
                     if !mask[ti] {
                         continue;
                     }
-                    let part = std::mem::take(&mut my_parts[ti]);
+                    let part = my_parts[ti].reborrow();
                     run_task_bf16(
                         &tasks[ti], part, grads, grad_base, kind, h, t, lr,
                         wd, scratch,
@@ -965,8 +979,12 @@ impl FlatOptimizer {
         self.bf16_scratch.iter().map(|s| s.peak_elems).max().unwrap_or(0)
     }
 
-    /// Analytic bound the measured peak is pinned against: the largest
-    /// single task's `theta + state (+ u)` footprint. Always far below a
+    /// Analytic bound the measured peak is pinned against. Factored
+    /// kinds (AdaLomo/Adafactor) stage the largest single task whole —
+    /// `theta + state + u` — because their rms/factor reductions need
+    /// all of `u` at once. Elementwise kinds step in [`BF16_TILE`]-sized
+    /// cache blocks, so their staging is one tile per live slice
+    /// regardless of task size. Either way the bound sits far below a
     /// full-image f32 mirror (`shardable_len` elements) for model-shaped
     /// layouts — the "bounded scratch" half of the bf16 memory claim.
     pub fn bf16_scratch_bound_elems(&self) -> usize {
@@ -974,12 +992,19 @@ impl FlatOptimizer {
             .iter()
             .map(|task| {
                 let (a, b) = state_refs(&task.state);
-                let state = a.map_or(0, |s| s.size) + b.map_or(0, |s| s.size);
-                let u = match self.kind {
-                    OptKind::AdaLomo | OptKind::Adafactor => task.size,
-                    _ => 0,
-                };
-                task.size + state + u
+                match self.kind {
+                    OptKind::AdaLomo | OptKind::Adafactor => {
+                        let state = a.map_or(0, |s| s.size)
+                            + b.map_or(0, |s| s.size);
+                        task.size + state + task.size
+                    }
+                    _ => {
+                        let slices = 1
+                            + usize::from(a.is_some())
+                            + usize::from(b.is_some());
+                        task.size.min(BF16_TILE) * slices
+                    }
+                }
             })
             .max()
             .unwrap_or(0)
@@ -1016,7 +1041,7 @@ impl FlatOptimizer {
                     if !mask[ti] {
                         continue;
                     }
-                    let part = std::mem::take(&mut my_parts[ti]);
+                    let part = my_parts[ti].reborrow();
                     run_task_sequential(
                         &tasks[ti], part, grads, grad_base, kind, h, t, lr,
                         wd, scratch,
@@ -1045,17 +1070,195 @@ impl FlatOptimizer {
         let h = self.hyper;
         let tasks = &self.tasks;
         let mut jobs = Vec::with_capacity(self.n_shards);
-        for ((w, my_parts), scratch) in
+        for ((w, mut my_parts), scratch) in
             parts.into_iter().enumerate().zip(self.scratch.iter_mut())
         {
             jobs.push(move || {
                 run_worker_contiguous(
-                    tasks, my_parts, subset, grads, grad_base, kind, h, t,
-                    lr, wd, w, sync_ref, scratch,
+                    tasks, &mut my_parts, subset, grads, grad_base, kind, h,
+                    t, lr, wd, w, sync_ref, scratch,
                 );
             });
         }
         pool::run_jobs(jobs);
+    }
+
+    // --- persistent step sessions -------------------------------------
+
+    /// Run `body` with a persistent [`StepSession`]: the blob is split
+    /// across workers ONCE, a [`pool::crew`] parks one worker per shard,
+    /// and every [`StepSession::step`] is then a zero-allocation,
+    /// zero-spawn dispatch round. Workers re-read `grads` at the start of
+    /// each round, so the caller refills the gradient buffer between
+    /// steps through the `RwLock`; the crew's control handshake orders
+    /// those writes before the next round's reads. Results are
+    /// bit-identical to calling [`Self::step`] in a loop — partitioning,
+    /// kernel dispatch, and arithmetic are all shared with the classic
+    /// path, only the thread/allocation choreography differs.
+    pub fn session<R>(
+        &mut self,
+        blob: &mut [f32],
+        grads: &RwLock<Vec<f32>>,
+        body: impl FnOnce(&mut StepSession<'_, '_>) -> R,
+    ) -> Result<R> {
+        {
+            let g = grads.read().unwrap_or_else(|e| e.into_inner());
+            self.validate(blob, &g[..])?;
+        }
+        let parts =
+            distribute(blob, &self.spans, self.n_shards, self.tasks.len());
+        let mode = self.mode;
+        let kind = self.kind;
+        let h = self.hyper;
+        let tasks = &self.tasks;
+        let shard_tasks = &self.shard_tasks;
+        let sync_ref = &self.sync;
+        let cmd = Mutex::new(StepCmd::default());
+        let cmd_ref = &cmd;
+        let mut jobs: Vec<Box<dyn FnMut() + Send + '_>> =
+            Vec::with_capacity(self.n_shards);
+        for ((w, mut my_parts), scratch) in
+            parts.into_iter().enumerate().zip(self.scratch.iter_mut())
+        {
+            let my = &shard_tasks[w];
+            jobs.push(Box::new(move || {
+                // ANALYZE-HOT: session worker round (f32)
+                let c = *cmd_ref.lock().unwrap_or_else(|e| e.into_inner());
+                let g = grads.read().unwrap_or_else(|e| e.into_inner());
+                let g = &g[..];
+                match mode {
+                    ShardMode::Segments => {
+                        for &ti in my {
+                            run_task_sequential(
+                                &tasks[ti],
+                                my_parts[ti].reborrow(),
+                                g,
+                                0,
+                                kind,
+                                h,
+                                c.t,
+                                c.lr,
+                                c.wd,
+                                scratch,
+                            );
+                        }
+                    }
+                    ShardMode::Contiguous => {
+                        run_worker_contiguous(
+                            tasks, &mut my_parts, None, g, 0, kind, h, c.t,
+                            c.lr, c.wd, w, sync_ref, scratch,
+                        );
+                    }
+                }
+                // ANALYZE-HOT-END
+            }));
+        }
+        Ok(pool::crew(jobs, move |crew| {
+            let mut s = StepSession { crew, cmd: cmd_ref };
+            body(&mut s)
+        }))
+    }
+
+    /// [`Self::session`] on a [`TypedBlob`]: f32 storage reuses the
+    /// zero-copy session above; bf16 storage parks the crew over the bit
+    /// spans and runs the fused widen→step→round path every round.
+    /// Bit-identical to looping [`Self::step_typed`].
+    pub fn session_typed<R>(
+        &mut self,
+        blob: &mut TypedBlob,
+        grads: &RwLock<Vec<f32>>,
+        body: impl FnOnce(&mut StepSession<'_, '_>) -> R,
+    ) -> Result<R> {
+        match blob.parts_mut() {
+            BlobPartsMut::F32(data) => self.session(data, grads, body),
+            BlobPartsMut::Bf16 { bits, tail } => {
+                {
+                    let g = grads.read().unwrap_or_else(|e| e.into_inner());
+                    self.validate_bits(bits, tail.len(), &g[..])?;
+                }
+                let parts = distribute(
+                    bits,
+                    &self.bf16_spans,
+                    self.n_shards,
+                    self.tasks.len(),
+                );
+                let kind = self.kind;
+                let h = self.hyper;
+                let tasks = &self.tasks;
+                let shard_tasks = &self.shard_tasks;
+                let cmd = Mutex::new(StepCmd::default());
+                let cmd_ref = &cmd;
+                let mut jobs: Vec<Box<dyn FnMut() + Send + '_>> =
+                    Vec::with_capacity(self.n_shards);
+                for ((w, mut my_parts), scratch) in parts
+                    .into_iter()
+                    .enumerate()
+                    .zip(self.bf16_scratch.iter_mut())
+                {
+                    let my = &shard_tasks[w];
+                    jobs.push(Box::new(move || {
+                        // ANALYZE-HOT: session worker round (bf16)
+                        let c = *cmd_ref
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner());
+                        let g =
+                            grads.read().unwrap_or_else(|e| e.into_inner());
+                        for &ti in my {
+                            run_task_bf16(
+                                &tasks[ti],
+                                my_parts[ti].reborrow(),
+                                &g[..],
+                                0,
+                                kind,
+                                h,
+                                c.t,
+                                c.lr,
+                                c.wd,
+                                scratch,
+                            );
+                        }
+                        // ANALYZE-HOT-END
+                    }));
+                }
+                Ok(pool::crew(jobs, move |crew| {
+                    let mut s = StepSession { crew, cmd: cmd_ref };
+                    body(&mut s)
+                }))
+            }
+        }
+    }
+}
+
+/// One step's scalar knobs, broadcast to the crew through a mutex the
+/// leader writes before each dispatch round.
+#[derive(Clone, Copy, Default)]
+struct StepCmd {
+    t: u64,
+    lr: f32,
+    wd: f32,
+}
+
+/// Handle the [`FlatOptimizer::session`] body drives: each
+/// [`StepSession::step`] publishes the step knobs and runs one crew
+/// round over the already-distributed blob parts — no allocation, no
+/// thread spawn, no re-splitting of the blob.
+pub struct StepSession<'c, 'env> {
+    crew: &'c mut pool::Crew<'env>,
+    cmd: &'c Mutex<StepCmd>,
+}
+
+impl StepSession<'_, '_> {
+    /// One optimizer step (same contract as [`FlatOptimizer::step`]:
+    /// `t` is the 1-based step index). Errors if any worker panicked;
+    /// the crew stays usable for later rounds either way.
+    pub fn step(&mut self, t: u64, lr: f32, wd: f32) -> Result<()> {
+        // ANALYZE-HOT: session step dispatch
+        {
+            let mut c = self.cmd.lock().unwrap_or_else(|e| e.into_inner());
+            *c = StepCmd { t, lr, wd };
+        }
+        self.crew.round()
+        // ANALYZE-HOT-END
     }
 }
 
@@ -1293,6 +1496,7 @@ fn run_task_sequential(
     let theta = part.theta.expect("theta view assigned to owner");
     let a = part.a;
     let b = part.b;
+    // ANALYZE-HOT: flat kernel dispatch
     match kind {
         OptKind::Sgd | OptKind::Lomo => update::sgd_slice(theta, g, lr),
         OptKind::SgdMomentum => {
@@ -1343,15 +1547,25 @@ fn run_task_sequential(
             }
         }
     }
+    // ANALYZE-HOT-END
 }
 
-/// bf16-mode task runner: widen the task's stored bits into the worker's
-/// f32 scratch, run the ordinary whole-task slice kernels on the staged
-/// copies (identical arithmetic to the Segments-mode f32 path), then
-/// round every slice back to bf16 (round-to-nearest-even). The staging is
-/// the only conversion cost; its size — theta + state (+ the factored
-/// kernels' `u`) for THIS task alone — is tracked as the measured scratch
-/// peak.
+/// Cache-block size (f32 elements) for the fused bf16
+/// widen→step→round path. 4096 elements keeps the staged tile plus its
+/// state slices inside L1/L2 while amortizing loop overhead; every tile
+/// boundary is a pure data-position split, so tiling cannot move any
+/// element to a different arithmetic order.
+pub const BF16_TILE: usize = 4096;
+
+/// bf16-mode task runner. Elementwise kinds fuse widen→step→round into
+/// [`BF16_TILE`]-sized cache blocks — the staged f32 working set per
+/// tile is one tile per live slice instead of the whole task. Factored
+/// kinds (AdaLomo/Adafactor) stage the whole task, because their
+/// rms/factor reductions consume all of `u` at once and splitting them
+/// would change the blessed reduction order. Both paths run identical
+/// arithmetic to the Segments-mode f32 path and round back with
+/// round-to-nearest-even; the measured scratch peak tracks whichever
+/// staging the task actually used.
 #[allow(clippy::too_many_arguments)]
 fn run_task_bf16(
     spec: &TaskSpec,
@@ -1366,8 +1580,35 @@ fn run_task_bf16(
     scratch: &mut Bf16Scratch,
 ) {
     let theta_bits = part.theta.expect("theta bits assigned to owner");
-    let mut a_bits = part.a;
-    let mut b_bits = part.b;
+    match kind {
+        OptKind::AdaLomo | OptKind::Adafactor => run_task_bf16_whole(
+            spec, theta_bits, part.a, part.b, grads, grad_base, kind, h, t,
+            lr, wd, scratch,
+        ),
+        _ => run_task_bf16_tiled(
+            spec, theta_bits, part.a, part.b, grads, grad_base, kind, h, t,
+            lr, wd, scratch,
+        ),
+    }
+}
+
+/// Whole-task staging (factored kinds): widen every slice, run the
+/// ordinary whole-task kernel, round everything back.
+#[allow(clippy::too_many_arguments)]
+fn run_task_bf16_whole(
+    spec: &TaskSpec,
+    theta_bits: &mut [u16],
+    mut a_bits: Option<&mut [u16]>,
+    mut b_bits: Option<&mut [u16]>,
+    grads: &[f32],
+    grad_base: usize,
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    scratch: &mut Bf16Scratch,
+) {
     let Bf16Scratch { theta, a, b, inner, peak_elems } = scratch;
 
     let an = a_bits.as_deref().map_or(0, |s| s.len());
@@ -1414,6 +1655,87 @@ fn run_task_bf16(
     }
 }
 
+/// Fused tile staging (elementwise kinds): per cache block, widen the
+/// theta/state tiles, dispatch the slice kernel directly on them, and
+/// round the same tiles straight back. Elementwise kernels touch each
+/// index independently, so per-tile dispatch is bit-identical to the
+/// whole-task call — the tile boundary is a data-position split, never
+/// an arithmetic one.
+#[allow(clippy::too_many_arguments)]
+fn run_task_bf16_tiled(
+    spec: &TaskSpec,
+    theta_bits: &mut [u16],
+    mut a_bits: Option<&mut [u16]>,
+    mut b_bits: Option<&mut [u16]>,
+    grads: &[f32],
+    grad_base: usize,
+    kind: OptKind,
+    h: Hyper,
+    t: u64,
+    lr: f32,
+    wd: f32,
+    scratch: &mut Bf16Scratch,
+) {
+    let Bf16Scratch { theta, a, b, inner: _, peak_elems } = scratch;
+    let n = spec.size;
+    let slices = 1
+        + usize::from(a_bits.is_some())
+        + usize::from(b_bits.is_some());
+    *peak_elems = (*peak_elems).max(n.min(BF16_TILE) * slices);
+    let base = spec.offset - grad_base;
+
+    // ANALYZE-HOT: fused bf16 tile loop
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + BF16_TILE).min(n);
+        let g = &grads[base + lo..base + hi];
+        widen_bf16_into(&theta_bits[lo..hi], theta);
+        let mut fa: Option<&mut [f32]> = None;
+        if let Some(src) = a_bits.as_deref() {
+            widen_bf16_into(&src[lo..hi], a);
+            fa = Some(&mut a[..]);
+        }
+        let mut fb: Option<&mut [f32]> = None;
+        if let Some(src) = b_bits.as_deref() {
+            widen_bf16_into(&src[lo..hi], b);
+            fb = Some(&mut b[..]);
+        }
+        match kind {
+            OptKind::Sgd | OptKind::Lomo => {
+                update::sgd_slice(theta, g, lr);
+            }
+            OptKind::SgdMomentum => {
+                if let Some(m) = fa {
+                    update::sgd_momentum_slice(theta, g, m, t, lr, h);
+                }
+            }
+            OptKind::SgdVariance => {
+                if let Some(v) = fa {
+                    update::sgd_variance_slice(theta, g, v, t, lr, h);
+                }
+            }
+            OptKind::AdamW => {
+                if let (Some(m), Some(v)) = (fa, fb) {
+                    update::adamw_slice(theta, g, m, v, t, lr, wd, h);
+                }
+            }
+            // Routed to `run_task_bf16_whole` by the dispatcher.
+            OptKind::AdaLomo | OptKind::Adafactor => {
+                debug_assert!(false, "factored kind on the tiled bf16 path");
+            }
+        }
+        round_bf16_slice(theta, &mut theta_bits[lo..hi]);
+        if let Some(dst) = a_bits.as_deref_mut() {
+            round_bf16_slice(&a[..], &mut dst[lo..hi]);
+        }
+        if let Some(dst) = b_bits.as_deref_mut() {
+            round_bf16_slice(&b[..], &mut dst[lo..hi]);
+        }
+        lo = hi;
+    }
+    // ANALYZE-HOT-END
+}
+
 /// Contiguous-mode worker: walks the selected tasks in fused order
 /// (`subset: None` = all of them); elementwise rules need no
 /// synchronization, factored rules run the two-pass reductions described
@@ -1423,7 +1745,7 @@ fn run_task_bf16(
 #[allow(clippy::too_many_arguments)]
 fn run_worker_contiguous(
     specs: &[TaskSpec],
-    mut parts: Vec<TaskPart<'_>>,
+    parts: &mut [TaskPart<'_>],
     subset: Option<&[usize]>,
     grads: &[f32],
     grad_base: usize,
@@ -1438,16 +1760,16 @@ fn run_worker_contiguous(
 ) {
     match subset {
         None => {
-            for (spec, part) in specs.iter().zip(parts) {
+            for (spec, part) in specs.iter().zip(parts.iter_mut()) {
                 contiguous_task(
-                    spec, part, grads, grad_base, kind, h, t, lr, wd, w,
-                    sync, scratch,
+                    spec, part.reborrow(), grads, grad_base, kind, h, t, lr,
+                    wd, w, sync, scratch,
                 );
             }
         }
         Some(list) => {
             for &ti in list {
-                let part = std::mem::take(&mut parts[ti]);
+                let part = parts[ti].reborrow();
                 contiguous_task(
                     &specs[ti],
                     part,
@@ -2034,6 +2356,94 @@ mod tests {
                     .unwrap();
                 opt5.step(&mut raw32, &grads, 1, 1e-2, 0.01).unwrap();
                 assert_eq!(typed32.to_f32(), raw32, "{kind:?} {mode:?} f32");
+            }
+        }
+    }
+
+    /// Persistent-session stepping must be bit-identical to looping the
+    /// classic per-call entry points, across worker counts, both shard
+    /// plans, and both storage dtypes — the pool swap may not fork a
+    /// single bit. Gradients are rewritten between rounds through the
+    /// session `RwLock` to prove the crew observes fresh values.
+    #[test]
+    fn session_matches_scoped_spawn_bitwise() {
+        for kind in [OptKind::AdaLomo, OptKind::AdamW] {
+            for mode in [ShardMode::Segments, ShardMode::Contiguous] {
+                for shards in [1usize, 2, 4, 7] {
+                    // f32 blobs through `session`.
+                    let l = layout_for(kind);
+                    let (blob0, g0) = seeded_blob_and_grads(&l, 29);
+                    let mut classic = blob0.clone();
+                    let mut opt_c =
+                        FlatOptimizer::new(kind, &l, shards, mode).unwrap();
+                    let mut g = g0.clone();
+                    for t in 1..=3u64 {
+                        opt_c.step(&mut classic, &g, t, 1e-2, 0.01).unwrap();
+                        for x in g.iter_mut() {
+                            *x *= 1.25;
+                        }
+                    }
+                    let mut pooled = blob0.clone();
+                    let mut opt_s =
+                        FlatOptimizer::new(kind, &l, shards, mode).unwrap();
+                    let grads = RwLock::new(g0.clone());
+                    opt_s
+                        .session(&mut pooled, &grads, |s| {
+                            for t in 1..=3u64 {
+                                s.step(t, 1e-2, 0.01).unwrap();
+                                let mut gw = grads.write().unwrap();
+                                for x in gw.iter_mut() {
+                                    *x *= 1.25;
+                                }
+                            }
+                        })
+                        .unwrap();
+                    assert_eq!(
+                        classic, pooled,
+                        "{kind:?} {mode:?} shards={shards} f32"
+                    );
+
+                    // bf16 blobs through `session_typed` (fused tiles).
+                    let lb =
+                        layout_for(kind).with_storage_dtype(Dtype::Bf16);
+                    let (image, gb0) = seeded_blob_and_grads(&lb, 31);
+                    let typed0 =
+                        TypedBlob::from_f32(&lb, &image, Dtype::Bf16)
+                            .unwrap();
+                    let mut classic_b = typed0.clone();
+                    let mut opt_cb =
+                        FlatOptimizer::new(kind, &lb, shards, mode)
+                            .unwrap();
+                    let mut gb = gb0.clone();
+                    for t in 1..=3u64 {
+                        opt_cb
+                            .step_typed(&mut classic_b, &gb, t, 1e-2, 0.01)
+                            .unwrap();
+                        for x in gb.iter_mut() {
+                            *x *= 1.25;
+                        }
+                    }
+                    let mut pooled_b = typed0.clone();
+                    let mut opt_sb =
+                        FlatOptimizer::new(kind, &lb, shards, mode)
+                            .unwrap();
+                    let gradsb = RwLock::new(gb0.clone());
+                    opt_sb
+                        .session_typed(&mut pooled_b, &gradsb, |s| {
+                            for t in 1..=3u64 {
+                                s.step(t, 1e-2, 0.01).unwrap();
+                                let mut gw = gradsb.write().unwrap();
+                                for x in gw.iter_mut() {
+                                    *x *= 1.25;
+                                }
+                            }
+                        })
+                        .unwrap();
+                    assert_eq!(
+                        classic_b, pooled_b,
+                        "{kind:?} {mode:?} shards={shards} bf16"
+                    );
+                }
             }
         }
     }

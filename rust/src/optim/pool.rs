@@ -1,7 +1,19 @@
-//! Scoped worker-thread helpers for the flat optimizer engine and the
+//! Worker-thread helpers for the flat optimizer engine and the
 //! coordinator — the zero-dependency slice-parallel substrate (`rayon` is
 //! not in the offline registry, and the engine only needs fork/join over
 //! borrowed slices, which `std::thread::scope` provides since Rust 1.63).
+//!
+//! Two dispatch shapes:
+//!
+//! * [`run_jobs`] — spawn/join scoped threads for one fork/join round;
+//!   the right tool for cold or once-per-span work.
+//! * [`crew`] — a persistent session: workers are spawned ONCE, then
+//!   parked on a condvar between rounds; [`Crew::round`] re-dispatches
+//!   the same jobs with zero thread spawns and zero heap allocations per
+//!   round. The steady-state stepping paths (`flat::FlatOptimizer`
+//!   sessions, the bench loops) run on crews; the
+//!   `steady_state_thread_spawns_per_step` bench-gate metric pins the
+//!   per-round spawn count at exactly 0 via [`spawn_count`].
 //!
 //! Everything here is deterministic by construction: work is partitioned by
 //! *data position*, never by thread arrival order, so a result never
@@ -12,6 +24,12 @@
 //! else in coordinator/optim/runtime, so new parallelism either lands
 //! here or carries an explicit waiver with a schedule-independence
 //! argument.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use anyhow::{ensure, Result};
 
 /// Default shard/worker count: one per available hardware thread.
 pub fn default_shards() -> usize {
@@ -24,6 +42,15 @@ pub fn default_shards() -> usize {
 pub fn shards_with_reserved(reserved: usize) -> usize {
     default_shards().saturating_sub(reserved).max(1)
 }
+
+/// Total OS threads this module has ever spawned (both [`run_jobs`] and
+/// [`crew`] sessions). Monotone; the bench binaries difference it across
+/// the steady-state loop to prove a step spawns nothing.
+pub fn spawn_count() -> u64 {
+    SPAWNS.load(Ordering::Relaxed)
+}
+
+static SPAWNS: AtomicU64 = AtomicU64::new(0);
 
 /// Run one job per worker on scoped threads and join them all. Jobs may
 /// borrow from the caller's stack (scoped). A single job runs inline on the
@@ -41,6 +68,7 @@ pub fn run_jobs<J: FnOnce() + Send>(jobs: Vec<J>) {
         }
         return;
     }
+    SPAWNS.fetch_add(jobs.len() as u64, Ordering::Relaxed);
     std::thread::scope(|s| {
         let handles: Vec<_> = jobs.drain(..).map(|j| s.spawn(j)).collect();
         for h in handles {
@@ -51,10 +79,12 @@ pub fn run_jobs<J: FnOnce() + Send>(jobs: Vec<J>) {
 
 /// Contiguous range boundaries splitting `n` items into `parts` balanced
 /// pieces: piece k is `[bounds(k), bounds(k+1))` with sizes differing by at
-/// most one (same balancing rule as `sharding::plan_contiguous`).
+/// most one (same balancing rule as `sharding::plan_contiguous`). The
+/// product is taken in `u128` so huge `n × parts` never wraps (regression:
+/// `range_bound_survives_huge_products`).
 pub fn range_bound(n: usize, parts: usize, k: usize) -> usize {
     debug_assert!(parts > 0);
-    (n * k) / parts
+    ((n as u128 * k as u128) / parts as u128) as usize
 }
 
 /// Parallel element-wise average: `dst[i] = (Σ_s sources[s][i]) * scale`,
@@ -65,10 +95,19 @@ pub fn range_bound(n: usize, parts: usize, k: usize) -> usize {
 /// reduce their exchange buckets in ANY bucket order (ascending for the
 /// full-image path, descending for the fused-host path), without
 /// perturbing the bitwise-identity guarantees they are pinned to.
-pub fn par_average(dst: &mut [f32], sources: &[&[f32]], scale: f32, n_workers: usize) {
+///
+/// Generic over the source container so callers can pass owned recycled
+/// buffers (`&[Vec<f32>]`) directly — no per-call `Vec<&[f32]>` rebuild on
+/// the hot path.
+pub fn par_average<S: AsRef<[f32]> + Sync>(
+    dst: &mut [f32],
+    sources: &[S],
+    scale: f32,
+    n_workers: usize,
+) {
     let n = dst.len();
     for s in sources {
-        assert!(s.len() >= n, "source shorter than destination");
+        assert!(s.as_ref().len() >= n, "source shorter than destination");
     }
     let w = n_workers.clamp(1, n.max(1));
     let mut jobs = Vec::with_capacity(w);
@@ -84,7 +123,7 @@ pub fn par_average(dst: &mut [f32], sources: &[&[f32]], scale: f32, n_workers: u
                 let gi = base + i;
                 let mut acc = 0.0f32;
                 for src in sources {
-                    acc += src[gi];
+                    acc += src.as_ref()[gi];
                 }
                 *d = acc * scale;
             }
@@ -94,13 +133,170 @@ pub fn par_average(dst: &mut [f32], sources: &[&[f32]], scale: f32, n_workers: u
     run_jobs(jobs);
 }
 
+// --- persistent crew sessions ----------------------------------------------
+
+/// Round control shared between the crew leader and its parked workers.
+/// One generation number is the only dispatch signal: a worker runs its
+/// job exactly once per generation it observes, so every round executes
+/// every job exactly once — same fork/join semantics as [`run_jobs`],
+/// minus the per-round spawns.
+struct Ctrl {
+    generation: u64,
+    completed: usize,
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct CrewState {
+    ctrl: Mutex<Ctrl>,
+    /// Leader -> workers: a new generation (or shutdown) is posted.
+    go: Condvar,
+    /// Workers -> leader: another job finished the current generation.
+    done: Condvar,
+}
+
+/// Poison-immune lock: a panicked peer makes the data no less valid here
+/// (every field is a plain counter/flag written under the lock), and
+/// panicking again would turn one failed round into a hung session.
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(state: &CrewState, job: &mut (dyn FnMut() + Send)) {
+    let mut seen = 0u64;
+    loop {
+        let mut ctrl = lock(&state.ctrl);
+        while !ctrl.shutdown && ctrl.generation == seen {
+            ctrl = wait(&state.go, ctrl);
+        }
+        if ctrl.shutdown {
+            return;
+        }
+        seen = ctrl.generation;
+        drop(ctrl);
+        // A panicking job must fail the caller's round, not kill this
+        // worker: catch it, report it, and stay parked for the next
+        // round (the panic counter is reset per round, so one failure
+        // never poisons later dispatches).
+        let ok = catch_unwind(AssertUnwindSafe(&mut *job)).is_ok();
+        let mut ctrl = lock(&state.ctrl);
+        if !ok {
+            ctrl.panicked += 1;
+        }
+        ctrl.completed += 1;
+        state.done.notify_all();
+    }
+}
+
+/// Unblocks parked workers when the leader scope ends — including by
+/// panic, so a failing leader closure propagates instead of deadlocking
+/// the scope join.
+struct ShutdownGuard<'a>(&'a CrewState);
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        let mut ctrl = lock(&self.0.ctrl);
+        ctrl.shutdown = true;
+        self.0.go.notify_all();
+    }
+}
+
+/// Handle the `leader` closure of [`crew`] drives rounds through.
+pub struct Crew<'env> {
+    n: usize,
+    state: Option<Arc<CrewState>>,
+    inline: Option<Box<dyn FnMut() + Send + 'env>>,
+}
+
+impl Crew<'_> {
+    /// Number of jobs dispatched per round.
+    pub fn n_jobs(&self) -> usize {
+        self.n
+    }
+
+    /// Run every job once and wait for all of them — one fork/join round
+    /// with no spawns and no allocations. Returns an error (instead of
+    /// panicking) if any job panicked this round; the crew stays usable
+    /// for further rounds either way.
+    pub fn round(&mut self) -> Result<()> {
+        // ANALYZE-HOT: crew round dispatch — one step per round
+        if let Some(job) = self.inline.as_mut() {
+            let ok = catch_unwind(AssertUnwindSafe(&mut **job)).is_ok();
+            ensure!(ok, "crew job panicked");
+            return Ok(());
+        }
+        let Some(state) = self.state.as_ref() else {
+            return Ok(()); // zero jobs: a round is a no-op
+        };
+        let mut ctrl = lock(&state.ctrl);
+        ctrl.generation += 1;
+        ctrl.completed = 0;
+        ctrl.panicked = 0;
+        state.go.notify_all();
+        while ctrl.completed < self.n {
+            ctrl = wait(&state.done, ctrl);
+        }
+        let panicked = ctrl.panicked;
+        drop(ctrl);
+        ensure!(panicked == 0, "{panicked} crew worker job(s) panicked");
+        Ok(())
+        // ANALYZE-HOT-END
+    }
+}
+
+/// Spawn one parked worker per job ONCE, hand the `leader` closure a
+/// [`Crew`] whose [`Crew::round`] re-runs every job with zero spawns and
+/// zero allocations, and join the workers when the leader returns. Jobs
+/// may borrow from the caller's stack (the workers live inside a
+/// `thread::scope`). With zero or one job no thread is spawned at all —
+/// the single job runs inline on the calling thread, mirroring
+/// [`run_jobs`]'s 1-shard shortcut.
+///
+/// Same caveat as [`run_jobs`]: panic containment assumes independent
+/// jobs; jobs that rendezvous on a shared barrier can hang peers at the
+/// barrier if one of them panics between waits.
+pub fn crew<'env, R>(
+    mut jobs: Vec<Box<dyn FnMut() + Send + 'env>>,
+    leader: impl FnOnce(&mut Crew<'env>) -> R,
+) -> R {
+    if jobs.len() <= 1 {
+        let mut c = Crew { n: jobs.len(), state: None, inline: jobs.pop() };
+        return leader(&mut c);
+    }
+    let n = jobs.len();
+    let state = Arc::new(CrewState {
+        ctrl: Mutex::new(Ctrl {
+            generation: 0,
+            completed: 0,
+            panicked: 0,
+            shutdown: false,
+        }),
+        go: Condvar::new(),
+        done: Condvar::new(),
+    });
+    SPAWNS.fetch_add(n as u64, Ordering::Relaxed);
+    std::thread::scope(|s| {
+        for mut job in jobs {
+            let st = Arc::clone(&state);
+            s.spawn(move || worker_loop(&st, &mut *job));
+        }
+        let _guard = ShutdownGuard(&state);
+        let mut c = Crew { n, state: Some(Arc::clone(&state)), inline: None };
+        leader(&mut c)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn run_jobs_executes_all() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let hits = AtomicUsize::new(0);
         let jobs: Vec<_> = (0..8)
             .map(|_| {
@@ -151,6 +347,27 @@ mod tests {
     }
 
     #[test]
+    fn range_bound_survives_huge_products() {
+        // Regression: `(n * k) / parts` in usize wraps as soon as
+        // n * parts overflows — boundary sizes near usize::MAX used to
+        // come back tiny (and non-monotone), silently shredding the
+        // partition. u128 arithmetic keeps the exact quotient.
+        let n = usize::MAX - 7;
+        for parts in [2usize, 3, 7, 64] {
+            assert_eq!(range_bound(n, parts, 0), 0);
+            assert_eq!(range_bound(n, parts, parts), n);
+            let mut prev = 0;
+            for k in 0..=parts {
+                let b = range_bound(n, parts, k);
+                assert!(b >= prev, "bounds must be monotone at n={n}");
+                prev = b;
+            }
+        }
+        // The exact case that wrapped before: n * 2 > usize::MAX.
+        assert_eq!(range_bound(usize::MAX, 2, 1), usize::MAX / 2);
+    }
+
+    #[test]
     fn par_average_matches_sequential_any_worker_count() {
         let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
         let b: Vec<f32> = (0..103).map(|i| 103.0 - i as f32).collect();
@@ -165,5 +382,108 @@ mod tests {
             par_average(&mut dst, &sources, 1.0 / 3.0, w);
             assert_eq!(dst, expect, "workers={w} must be bit-identical");
         }
+        // Owned containers work without a ref-slice rebuild.
+        let owned = vec![a.clone(), b.clone(), c.clone()];
+        let mut dst = vec![0f32; 103];
+        par_average(&mut dst, &owned, 1.0 / 3.0, 4);
+        assert_eq!(dst, expect, "owned sources must be bit-identical");
+    }
+
+    #[test]
+    fn crew_rounds_execute_all_jobs_each_round() {
+        let hits = AtomicUsize::new(0);
+        for n_jobs in [0usize, 1, 4] {
+            hits.store(0, Ordering::SeqCst);
+            let jobs: Vec<Box<dyn FnMut() + Send + '_>> = (0..n_jobs)
+                .map(|_| {
+                    let hits = &hits;
+                    Box::new(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnMut() + Send + '_>
+                })
+                .collect();
+            crew(jobs, |c| {
+                assert_eq!(c.n_jobs(), n_jobs);
+                for r in 1..=3u64 {
+                    c.round().unwrap();
+                    assert_eq!(
+                        hits.load(Ordering::SeqCst) as u64,
+                        n_jobs as u64 * r,
+                        "every job must run exactly once per round"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn crew_spawns_workers_once_not_per_round() {
+        let before = spawn_count();
+        let jobs: Vec<Box<dyn FnMut() + Send + '_>> =
+            (0..4).map(|_| Box::new(|| ()) as Box<dyn FnMut() + Send + '_>).collect();
+        crew(jobs, |c| {
+            let after_setup = spawn_count();
+            for _ in 0..100 {
+                c.round().unwrap();
+            }
+            // Other tests may spawn concurrently, so assert only on THIS
+            // crew's contribution: rounds add nothing beyond setup.
+            assert!(after_setup >= before + 4);
+            assert_eq!(
+                spawn_count(),
+                after_setup,
+                "rounds must not spawn threads"
+            );
+        });
+    }
+
+    #[test]
+    fn crew_panics_fail_the_round_not_later_dispatches() {
+        let hits = AtomicUsize::new(0);
+        let boom = AtomicUsize::new(1);
+        let mut jobs: Vec<Box<dyn FnMut() + Send + '_>> = Vec::new();
+        for w in 0..3usize {
+            let hits = &hits;
+            let boom = &boom;
+            jobs.push(Box::new(move || {
+                if w == 2 && boom.load(Ordering::SeqCst) == 1 {
+                    panic!("injected crew panic");
+                }
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        crew(jobs, |c| {
+            assert!(
+                c.round().is_err(),
+                "a panicking job must fail the caller"
+            );
+            // Peers were not hung: both non-panicking jobs completed.
+            assert_eq!(hits.load(Ordering::SeqCst), 2);
+            boom.store(0, Ordering::SeqCst);
+            c.round().unwrap();
+            assert_eq!(
+                hits.load(Ordering::SeqCst),
+                5,
+                "a failed round must not poison later dispatches"
+            );
+        });
+    }
+
+    #[test]
+    fn crew_inline_single_job_panic_is_contained() {
+        let boom = AtomicUsize::new(1);
+        let hits = AtomicUsize::new(0);
+        let job: Box<dyn FnMut() + Send + '_> = Box::new(|| {
+            if boom.load(Ordering::SeqCst) == 1 {
+                panic!("inline crew panic");
+            }
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        crew(vec![job], |c| {
+            assert!(c.round().is_err());
+            boom.store(0, Ordering::SeqCst);
+            c.round().unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 1);
+        });
     }
 }

@@ -57,6 +57,100 @@ pub fn adafactor_beta2t(decay_pow: f32, t: u64) -> f32 {
 // re-exported here because the kernels are their hottest consumer.
 pub use crate::tensor::{rms, sum_sq};
 
+// --- chunked elementwise iteration -----------------------------------------
+//
+// The elementwise kernels walk their slices in fixed-width chunks with a
+// scalar remainder: the `chunks_exact` family hands LLVM loops whose trip
+// count is the constant `LANES`, with every bounds check elided, which is
+// exactly the shape the autovectorizer turns into SIMD. Crucially this is
+// a pure ITERATION restructure — each element still sees the identical
+// arithmetic expression in the identical order, and elementwise rules
+// carry no cross-element state, so the results are bit-identical to the
+// straightforward scalar loop (pinned by
+// `chunked_kernels_match_scalar_reference_bitwise`). Reductions (`rms`,
+// `sum_sq`, the `factor_rows` row sums) are NOT chunked: their
+// accumulation order is parity-critical and stays strictly sequential.
+
+const LANES: usize = 8;
+
+/// Chunked `zip` over (mut, const) slice pairs; applies `f` to the first
+/// `min(len)` elements in order, exactly like `a.iter_mut().zip(b)`.
+#[inline(always)]
+fn zip2_chunked(a: &mut [f32], b: &[f32], mut f: impl FnMut(&mut f32, f32)) {
+    let n = a.len().min(b.len());
+    let mut ac = a[..n].chunks_exact_mut(LANES);
+    let mut bc = b[..n].chunks_exact(LANES);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for (x, &y) in av.iter_mut().zip(bv) {
+            f(x, y);
+        }
+    }
+    for (x, &y) in ac.into_remainder().iter_mut().zip(bc.remainder()) {
+        f(x, y);
+    }
+}
+
+/// Chunked `zip` over (mut, const, mut) slice triples.
+#[inline(always)]
+fn zip3_chunked(
+    a: &mut [f32],
+    b: &[f32],
+    c: &mut [f32],
+    mut f: impl FnMut(&mut f32, f32, &mut f32),
+) {
+    let n = a.len().min(b.len()).min(c.len());
+    let mut ac = a[..n].chunks_exact_mut(LANES);
+    let mut bc = b[..n].chunks_exact(LANES);
+    let mut cc = c[..n].chunks_exact_mut(LANES);
+    for ((av, bv), cv) in (&mut ac).zip(&mut bc).zip(&mut cc) {
+        for ((x, &y), z) in av.iter_mut().zip(bv).zip(cv.iter_mut()) {
+            f(x, y, z);
+        }
+    }
+    for ((x, &y), z) in ac
+        .into_remainder()
+        .iter_mut()
+        .zip(bc.remainder())
+        .zip(cc.into_remainder().iter_mut())
+    {
+        f(x, y, z);
+    }
+}
+
+/// Chunked `zip` over (mut, const, mut, mut) slice quadruples.
+#[inline(always)]
+fn zip4_chunked(
+    a: &mut [f32],
+    b: &[f32],
+    c: &mut [f32],
+    d: &mut [f32],
+    mut f: impl FnMut(&mut f32, f32, &mut f32, &mut f32),
+) {
+    let n = a.len().min(b.len()).min(c.len()).min(d.len());
+    let mut ac = a[..n].chunks_exact_mut(LANES);
+    let mut bc = b[..n].chunks_exact(LANES);
+    let mut cc = c[..n].chunks_exact_mut(LANES);
+    let mut dc = d[..n].chunks_exact_mut(LANES);
+    for (((av, bv), cv), dv) in
+        (&mut ac).zip(&mut bc).zip(&mut cc).zip(&mut dc)
+    {
+        for (((x, &y), z), u) in
+            av.iter_mut().zip(bv).zip(cv.iter_mut()).zip(dv.iter_mut())
+        {
+            f(x, y, z, u);
+        }
+    }
+    for (((x, &y), z), u) in ac
+        .into_remainder()
+        .iter_mut()
+        .zip(bc.remainder())
+        .zip(cc.into_remainder().iter_mut())
+        .zip(dc.into_remainder().iter_mut())
+    {
+        f(x, y, z, u);
+    }
+}
+
 // --- slice kernels ---------------------------------------------------------
 
 /// Grouped update normalization (Algorithm 1 line 11), in place:
@@ -77,9 +171,9 @@ pub fn grouped_normalize_slice(
 
 /// theta <- theta - lr * g  (SGD; also the LOMO rule, paper Eq. 1).
 pub fn sgd_slice(theta: &mut [f32], g: &[f32], lr: f32) {
-    for (th, &gi) in theta.iter_mut().zip(g) {
+    zip2_chunked(theta, g, |th, gi| {
         *th += -lr * gi;
-    }
+    });
 }
 
 /// SGD + first moment only (paper Eq. 3). Elementwise: valid on any
@@ -94,10 +188,10 @@ pub fn sgd_momentum_slice(
     h: Hyper,
 ) {
     let bias = bias_correction(h.beta1, t);
-    for ((th, &gi), mi) in theta.iter_mut().zip(g).zip(m.iter_mut()) {
+    zip3_chunked(theta, g, m, |th, gi, mi| {
         *mi = h.beta1 * *mi + (1.0 - h.beta1) * gi;
         *th -= lr * (*mi / bias);
-    }
+    });
 }
 
 /// SGD + second moment only (paper Eq. 4). Elementwise.
@@ -110,13 +204,16 @@ pub fn sgd_variance_slice(
     h: Hyper,
 ) {
     let bias = bias_correction(h.beta2, t);
-    for ((th, &gi), vi) in theta.iter_mut().zip(g).zip(v.iter_mut()) {
+    zip3_chunked(theta, g, v, |th, gi, vi| {
         *vi = h.beta2 * *vi + (1.0 - h.beta2) * gi * gi;
         *th -= lr * gi / ((*vi / bias).sqrt() + h.adam_eps);
-    }
+    });
 }
 
-/// AdamW (paper Eq. 2 + decoupled weight decay). Elementwise.
+/// AdamW (paper Eq. 2 + decoupled weight decay). Elementwise. The old
+/// index-based loop re-checked four slice bounds per element, which kept
+/// LLVM from vectorizing the body; the chunked zip runs the identical
+/// per-element expression with no bounds checks.
 #[allow(clippy::too_many_arguments)]
 pub fn adamw_slice(
     theta: &mut [f32],
@@ -130,13 +227,12 @@ pub fn adamw_slice(
 ) {
     let bias1 = bias_correction(h.beta1, t);
     let bias2 = bias_correction(h.beta2, t);
-    let n = theta.len();
-    for i in 0..n {
-        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
-        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
-        let update = (m[i] / bias1) / ((v[i] / bias2).sqrt() + h.adam_eps);
-        theta[i] -= lr * (update + wd * theta[i]);
-    }
+    zip4_chunked(theta, g, m, v, |th, gi, mi, vi| {
+        *mi = h.beta1 * *mi + (1.0 - h.beta1) * gi;
+        *vi = h.beta2 * *vi + (1.0 - h.beta2) * gi * gi;
+        let update = (*mi / bias1) / ((*vi / bias2).sqrt() + h.adam_eps);
+        *th -= lr * (update + wd * *th);
+    });
 }
 
 /// Factored second-moment accumulation over a block of rows:
@@ -212,7 +308,7 @@ pub fn raw_u_rows(
 /// AdaLomo vector phase kernel: update the full second moment `v` and
 /// write the raw (pre-normalization) update into `u`. Elementwise.
 pub fn adalomo_vec_raw(g: &[f32], v: &mut [f32], bias: f32, h: Hyper, u: &mut [f32]) {
-    for ((ui, &gi), vi) in u.iter_mut().zip(g).zip(v.iter_mut()) {
+    zip3_chunked(u, g, v, |ui, gi, vi| {
         *vi = h.adalomo_beta * *vi + (1.0 - h.adalomo_beta) * gi * gi;
         let v_hat = *vi / bias;
         let denom = if h.no_sqrt {
@@ -221,16 +317,16 @@ pub fn adalomo_vec_raw(g: &[f32], v: &mut [f32], bias: f32, h: Hyper, u: &mut [f
             (v_hat + h.eps_div).sqrt()
         };
         *ui = gi / denom;
-    }
+    });
 }
 
 /// Adafactor vector phase kernel (no bias correction; +eps1 floor).
 /// Elementwise.
 pub fn adafactor_vec_raw(g: &[f32], v: &mut [f32], beta2t: f32, h: Hyper, u: &mut [f32]) {
-    for ((ui, &gi), vi) in u.iter_mut().zip(g).zip(v.iter_mut()) {
+    zip3_chunked(u, g, v, |ui, gi, vi| {
         *vi = beta2t * *vi + (1.0 - beta2t) * (gi * gi + h.adafactor_eps1);
         *ui = gi / (*vi + h.adafactor_eps1).sqrt();
-    }
+    });
 }
 
 /// AdaLomo step for a 2-D parameter (Algorithm 1 lines 7-12), on borrowed
@@ -256,9 +352,9 @@ pub fn adalomo_2d_slice(
     let sum_r = r.iter().sum::<f32>().max(h.eps_div);
     raw_u_rows(g, n, r, c, 1.0 / (sum_r * bias), h.eps_div, h.no_sqrt, u);
     let stats = grouped_normalize_slice(u, theta, h.eps_rms);
-    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+    zip2_chunked(theta, u, |th, ui| {
         *th += -lr * ui;
-    }
+    });
     stats
 }
 
@@ -276,9 +372,9 @@ pub fn adalomo_vec_slice(
     let bias = bias_correction(h.adalomo_beta, t);
     adalomo_vec_raw(g, v, bias, h, u);
     let stats = grouped_normalize_slice(u, theta, h.eps_rms);
-    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+    zip2_chunked(theta, u, |th, ui| {
         *th += -lr * ui;
-    }
+    });
     stats
 }
 
@@ -305,9 +401,9 @@ pub fn adafactor_2d_slice(
     raw_u_rows(g, n, r, c, 1.0 / sum_r, h.adafactor_eps1, false, u);
     let clip = 1.0f32.max(rms(u) / h.adafactor_clip_d);
     let alpha = h.adafactor_eps2.max(rms(theta)) * lr;
-    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+    zip2_chunked(theta, u, |th, ui| {
         *th += (-alpha / clip) * ui;
-    }
+    });
 }
 
 /// Adafactor step for vectors, on borrowed views.
@@ -324,9 +420,9 @@ pub fn adafactor_vec_slice(
     adafactor_vec_raw(g, v, beta2t, h, u);
     let clip = 1.0f32.max(rms(u) / h.adafactor_clip_d);
     let alpha = h.adafactor_eps2.max(rms(theta)) * lr;
-    for (th, &ui) in theta.iter_mut().zip(u.iter()) {
+    zip2_chunked(theta, u, |th, ui| {
         *th += (-alpha / clip) * ui;
-    }
+    });
 }
 
 // --- Tensor wrappers -------------------------------------------------------
@@ -629,6 +725,105 @@ mod tests {
         );
         assert!(theta1.data().iter().all(|x| x.is_finite()));
         assert!(v.data().iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn chunked_kernels_match_scalar_reference_bitwise() {
+        // The LANES-chunked iteration is a pure loop restructure: every
+        // length (below, at, just above, and far above one chunk) must
+        // produce bit-identical results to the naive indexed loops the
+        // kernels used before the autovectorization pass.
+        let h = hyper();
+        for n in [1usize, 7, 8, 9, 64, 103] {
+            let g: Vec<f32> = (0..n)
+                .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.013)
+                .collect();
+            let th0: Vec<f32> =
+                (0..n).map(|i| 0.3 + i as f32 * 0.001).collect();
+
+            // sgd
+            let mut a = th0.clone();
+            let mut b = th0.clone();
+            sgd_slice(&mut a, &g, 0.05);
+            for i in 0..n {
+                b[i] += -0.05 * g[i];
+            }
+            assert_eq!(a, b, "sgd n={n}");
+
+            // momentum
+            let (mut a, mut b) = (th0.clone(), th0.clone());
+            let mut ma = vec![0.01f32; n];
+            let mut mb = ma.clone();
+            for t in 1..4u64 {
+                sgd_momentum_slice(&mut a, &g, &mut ma, t, 0.05, h);
+                let bias = bias_correction(h.beta1, t);
+                for i in 0..n {
+                    mb[i] = h.beta1 * mb[i] + (1.0 - h.beta1) * g[i];
+                    b[i] -= 0.05 * (mb[i] / bias);
+                }
+            }
+            assert_eq!(a, b, "momentum n={n}");
+            assert_eq!(ma, mb, "momentum state n={n}");
+
+            // variance
+            let (mut a, mut b) = (th0.clone(), th0.clone());
+            let mut va = vec![0.02f32; n];
+            let mut vb = va.clone();
+            for t in 1..4u64 {
+                sgd_variance_slice(&mut a, &g, &mut va, t, 0.05, h);
+                let bias = bias_correction(h.beta2, t);
+                for i in 0..n {
+                    vb[i] = h.beta2 * vb[i] + (1.0 - h.beta2) * g[i] * g[i];
+                    b[i] -=
+                        0.05 * g[i] / ((vb[i] / bias).sqrt() + h.adam_eps);
+                }
+            }
+            assert_eq!(a, b, "variance n={n}");
+            assert_eq!(va, vb, "variance state n={n}");
+
+            // adamw
+            let (mut a, mut b) = (th0.clone(), th0.clone());
+            let mut ma = vec![0.01f32; n];
+            let mut mb = ma.clone();
+            let mut va = vec![0.02f32; n];
+            let mut vb = va.clone();
+            for t in 1..4u64 {
+                adamw_slice(&mut a, &g, &mut ma, &mut va, t, 0.05, 0.01, h);
+                let b1 = bias_correction(h.beta1, t);
+                let b2 = bias_correction(h.beta2, t);
+                for i in 0..n {
+                    mb[i] = h.beta1 * mb[i] + (1.0 - h.beta1) * g[i];
+                    vb[i] = h.beta2 * vb[i] + (1.0 - h.beta2) * g[i] * g[i];
+                    let update =
+                        (mb[i] / b1) / ((vb[i] / b2).sqrt() + h.adam_eps);
+                    b[i] -= 0.05 * (update + 0.01 * b[i]);
+                }
+            }
+            assert_eq!(a, b, "adamw n={n}");
+            assert_eq!(ma, mb, "adamw m n={n}");
+            assert_eq!(va, vb, "adamw v n={n}");
+
+            // adalomo vector raw phase
+            let mut va = vec![0.02f32; n];
+            let mut vb = va.clone();
+            let mut ua = vec![0f32; n];
+            let mut ub = vec![0f32; n];
+            let bias = bias_correction(h.adalomo_beta, 2);
+            adalomo_vec_raw(&g, &mut va, bias, h, &mut ua);
+            for i in 0..n {
+                vb[i] = h.adalomo_beta * vb[i]
+                    + (1.0 - h.adalomo_beta) * g[i] * g[i];
+                let v_hat = vb[i] / bias;
+                let denom = if h.no_sqrt {
+                    v_hat + h.eps_div
+                } else {
+                    (v_hat + h.eps_div).sqrt()
+                };
+                ub[i] = g[i] / denom;
+            }
+            assert_eq!(ua, ub, "adalomo_vec_raw u n={n}");
+            assert_eq!(va, vb, "adalomo_vec_raw v n={n}");
+        }
     }
 
     #[test]
