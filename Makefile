@@ -156,7 +156,8 @@ doc:
 # Makefile/CI/bench-baseline/docs surfaces. Exits nonzero on any
 # unwaivered finding; the JSON report is a CI artifact.
 analyze:
-	$(CARGO) run --release --quiet -- analyze --json analysis-report.json
+	$(CARGO) run --release --quiet -- analyze --json analysis-report.json \
+		--sarif analysis-report.sarif
 
 lint: fmt clippy doc analyze
 

@@ -390,6 +390,30 @@ fn host_blob_section(sink: &mut JsonSink) {
         );
         sink.metric("replan_splice_ns", splice.timing.mean * 1e9);
     }
+    // analyze_ns: one full static-analysis pass over this checkout —
+    // scan, lex, model build, every rule including the call-graph
+    // closure. Gated one-sided with a wide tolerance: this catches the
+    // analyzer accidentally going quadratic on the growing tree, not
+    // run-to-run noise.
+    {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ sits inside the repo root")
+            .to_path_buf();
+        let files = adalomo::analysis::run(&root)
+            .expect("analyze runs on the checkout")
+            .files_scanned as f64;
+        let pass = bench_units(
+            "static analysis: full-tree pass (per file)",
+            files,
+            || {
+                let report =
+                    adalomo::analysis::run(&root).expect("analyze runs");
+                std::hint::black_box(report.findings.len());
+            },
+        );
+        sink.metric("analyze_ns", pass.timing.mean * 1e9);
+    }
     println!();
 }
 

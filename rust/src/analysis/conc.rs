@@ -1,0 +1,1193 @@
+//! Concurrency-protocol rules over the semantic model: static
+//! lock-order (deadlock witness), condvar discipline, channel
+//! topology, and panic-under-guard. These run only over the watched
+//! dirs (coordinator/optim/runtime), on non-test code, and feed the
+//! same finding/waiver/report pipeline as the token rules.
+//!
+//! Heuristic bounds (documented in docs/ANALYSIS.md): guard tracking
+//! is intraprocedural (a callee that panics under a caller's guard is
+//! out of scope — `make tsan` is the dynamic companion); free calls
+//! resolve by bare name (same file first, else a unique cross-file
+//! def) while method calls resolve same-file only, so `.lock()` never
+//! aliases `pool::lock`; acquisition is a `.lock()`/`.read()`/
+//! `.write()` call with *empty* parens (io::Read/Write take buffers,
+//! so they never match) or a call to a single-lock wrapper fn whose
+//! lock is its own parameter (`pool::lock`). Acquisition sets
+//! propagate transitively over the call graph, so an inverted order
+//! hidden behind helpers still closes a cycle.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::Tok;
+use super::model::Model;
+use super::scanner::SourceFile;
+use super::{finding, rules, Finding, Tree};
+
+pub const LOCK_ORDER: &str = "lock-order";
+pub const CONDVAR: &str = "condvar-discipline";
+pub const CHANNEL: &str = "channel-topology";
+pub const LOCK_PANIC: &str = "lock-held-panic";
+
+const ACQUIRES: &[&str] = &["lock", "read", "write"];
+
+/// A live guard binding in the walk.
+struct Guard {
+    name: String,
+    lock: String,
+    line: usize,
+    depth: usize,
+}
+
+/// Witness for one lock-order edge: where the second lock was taken.
+struct Witness {
+    file: String,
+    line: usize,
+    via: String,
+}
+
+type EdgeMap = BTreeMap<(String, String), Witness>;
+
+/// One reachable `Condvar::wait` site.
+struct WaitSite {
+    cv: String,
+    file: String,
+    line: usize,
+    in_loop: bool,
+    held: bool,
+}
+
+/// Crate-wide facts the per-fn walk needs: transitive acquisition
+/// sets, wrapper classification, and the condvar registry.
+struct Facts {
+    trans: Vec<BTreeSet<String>>,
+    /// Single-lock wrapper whose lock is its own param (`pool::lock`):
+    /// a call both acquires and — under `let` — binds a guard named
+    /// after the call's first argument.
+    lock_wrapper: Vec<bool>,
+    /// Fn with a Condvar param that calls `.wait(` on it
+    /// (`pool::wait`): its call sites are condvar wait sites.
+    wait_wrapper: Vec<bool>,
+    /// (id, file index, decl line) per registered condvar.
+    condvars: Vec<(String, usize, usize)>,
+    /// Bare condvar names per file index.
+    cv_names: BTreeMap<usize, BTreeSet<String>>,
+}
+
+/// Run all four concurrency rules, appending findings.
+pub fn conc(tree: &Tree, out: &mut Vec<Finding>) {
+    let model = Model::build(tree, rules::in_watched);
+    let facts = collect_facts(&model);
+    let mut edges: EdgeMap = BTreeMap::new();
+    let mut waits: Vec<WaitSite> = Vec::new();
+    let mut notified: BTreeSet<String> = BTreeSet::new();
+    for fi in 0..model.fns.len() {
+        if model.fns[fi].is_test || !model.fns[fi].has_body() {
+            continue;
+        }
+        walk_fn(
+            tree, &model, &facts, fi, out, &mut edges, &mut waits,
+            &mut notified,
+        );
+        channel_topology(tree, &model, fi, out);
+    }
+    let mut waited: BTreeSet<String> = BTreeSet::new();
+    for w in &waits {
+        waited.insert(w.cv.clone());
+        let Some(src) = source_of(tree, &w.file) else { continue };
+        if !w.in_loop {
+            out.push(finding(
+                src,
+                CONDVAR,
+                w.line,
+                format!(
+                    "Condvar::wait on {} is not wrapped in a predicate \
+                     loop — spurious wakeups break the protocol",
+                    w.cv
+                ),
+            ));
+        }
+        if !w.held {
+            out.push(finding(
+                src,
+                CONDVAR,
+                w.line,
+                format!(
+                    "Condvar::wait on {} reached without its paired \
+                     mutex guard held",
+                    w.cv
+                ),
+            ));
+        }
+    }
+    for (id, file_idx, line) in &facts.condvars {
+        let path = &model.files[*file_idx].path;
+        let Some(src) = source_of(tree, path) else { continue };
+        if waited.contains(id) && !notified.contains(id) {
+            out.push(finding(
+                src,
+                CONDVAR,
+                *line,
+                format!("condvar {id} is waited but never notified"),
+            ));
+        }
+        if notified.contains(id) && !waited.contains(id) {
+            out.push(finding(
+                src,
+                CONDVAR,
+                *line,
+                format!("condvar {id} is notified but never waited"),
+            ));
+        }
+    }
+    report_cycles(tree, &edges, out);
+}
+
+fn source_of<'t>(tree: &'t Tree, path: &str) -> Option<&'t SourceFile> {
+    tree.sources.iter().find(|s| s.path == path)
+}
+
+/// Resolve a call site: free calls use the symbol table (same file,
+/// else unique cross-file); method calls (`recv.name(...)`) resolve in
+/// the same file only — a method named `lock` must never alias the
+/// free `pool::lock`.
+fn resolve_call(
+    model: &Model,
+    file_idx: usize,
+    toks: &[Tok],
+    k: usize,
+    name: &str,
+) -> Option<usize> {
+    let is_method = k >= 1 && toks[k - 1].text == ".";
+    if is_method {
+        model.files[file_idx]
+            .fns
+            .iter()
+            .copied()
+            .find(|&i| model.fns[i].name == name)
+    } else {
+        model.resolve(file_idx, name)
+    }
+}
+
+/// Direct acquisitions + resolved callees per fn, then the transitive
+/// closure, wrapper classification, and the condvar registry.
+fn collect_facts(model: &Model) -> Facts {
+    let n = model.fns.len();
+    let mut direct: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+    let mut callees: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for fi in 0..n {
+        let f = &model.fns[fi];
+        if !f.has_body() {
+            continue;
+        }
+        let toks = &model.files[f.file].toks;
+        let stem = &model.files[f.file].stem;
+        let skips = model.nested_ranges(fi);
+        let mut k = f.body.0;
+        while k < f.body.1 {
+            if let Some(&(_, e)) = skips.iter().find(|&&(s, _)| s == k)
+            {
+                k = e.max(k + 1);
+                continue;
+            }
+            if let Some(lock) = acquisition_at(toks, k, stem) {
+                direct[fi].insert(lock);
+            }
+            // `drop(x)` is std's drop, never a local `Drop::drop`.
+            if let Some(name) = call_at(toks, k) {
+                if name != "drop" {
+                    let resolved =
+                        resolve_call(model, f.file, toks, k, name);
+                    if let Some(ci) = resolved {
+                        if ci != fi {
+                            callees[fi].insert(ci);
+                        }
+                    }
+                }
+            }
+            k += 1;
+        }
+    }
+    let mut memo: Vec<Option<BTreeSet<String>>> = vec![None; n];
+    for fi in 0..n {
+        let mut visiting = BTreeSet::new();
+        close_over(fi, &direct, &callees, &mut memo, &mut visiting);
+    }
+    let trans: Vec<BTreeSet<String>> =
+        memo.into_iter().map(|t| t.unwrap_or_default()).collect();
+    let mut lock_wrapper = vec![false; n];
+    let mut wait_wrapper = vec![false; n];
+    for fi in 0..n {
+        let f = &model.fns[fi];
+        if trans[fi].len() == 1 {
+            let last = trans[fi]
+                .iter()
+                .next()
+                .and_then(|l| l.rsplit('.').next())
+                .unwrap_or_default();
+            lock_wrapper[fi] = f.params.iter().any(|p| p.name == last);
+        }
+        if f.params.iter().any(|p| p.ty.contains("Condvar")) {
+            let toks = &model.files[f.file].toks;
+            wait_wrapper[fi] = (f.body.0..f.body.1).any(|k| {
+                tok_is(toks, k, ".")
+                    && tok_is(toks, k + 1, "wait")
+                    && tok_is(toks, k + 2, "(")
+            });
+        }
+    }
+    let mut condvars = Vec::new();
+    let mut cv_names: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for (file_idx, fm) in model.files.iter().enumerate() {
+        for k in 0..fm.toks.len() {
+            if fm.toks[k].is_test {
+                continue;
+            }
+            let name = if fm.toks[k].is_ident()
+                && tok_is(&fm.toks, k + 1, ":")
+                && tok_is(&fm.toks, k + 2, "Condvar")
+            {
+                Some(&fm.toks[k].text)
+            } else if tok_is(&fm.toks, k, "=")
+                && tok_is(&fm.toks, k + 1, "Condvar")
+                && tok_is(&fm.toks, k + 2, "::")
+                && tok_is(&fm.toks, k + 3, "new")
+                && k >= 1
+                && fm.toks[k - 1].is_ident()
+            {
+                Some(&fm.toks[k - 1].text)
+            } else {
+                None
+            };
+            let Some(name) = name else { continue };
+            let id = format!("{}.{}", fm.stem, name);
+            if cv_names.entry(file_idx).or_default().insert(name.clone())
+            {
+                condvars.push((id, file_idx, fm.toks[k].line));
+            }
+        }
+    }
+    Facts { trans, lock_wrapper, wait_wrapper, condvars, cv_names }
+}
+
+fn close_over(
+    fi: usize,
+    direct: &[BTreeSet<String>],
+    callees: &[BTreeSet<usize>],
+    memo: &mut [Option<BTreeSet<String>>],
+    visiting: &mut BTreeSet<usize>,
+) -> BTreeSet<String> {
+    if let Some(done) = &memo[fi] {
+        return done.clone();
+    }
+    if !visiting.insert(fi) {
+        return BTreeSet::new(); // recursion: already accumulating
+    }
+    let mut set = direct[fi].clone();
+    for &ci in &callees[fi] {
+        set.extend(close_over(ci, direct, callees, memo, visiting));
+    }
+    visiting.remove(&fi);
+    memo[fi] = Some(set.clone());
+    set
+}
+
+fn tok_is(toks: &[Tok], k: usize, s: &str) -> bool {
+    toks.get(k).is_some_and(|t| t.text == s)
+}
+
+/// `.lock()` / `.read()` / `.write()` with empty parens at `k` (the
+/// dot): returns the lock id `stem.receiver_last_segment`.
+fn acquisition_at(toks: &[Tok], k: usize, stem: &str) -> Option<String> {
+    if !tok_is(toks, k, ".") {
+        return None;
+    }
+    let m = toks.get(k + 1)?;
+    if !ACQUIRES.contains(&m.text.as_str())
+        || !tok_is(toks, k + 2, "(")
+        || !tok_is(toks, k + 3, ")")
+    {
+        return None;
+    }
+    let recv = if k >= 1 && toks[k - 1].is_word() {
+        toks[k - 1].text.as_str()
+    } else {
+        "_expr"
+    };
+    Some(format!("{stem}.{recv}"))
+}
+
+/// Call site at `k`: an identifier directly followed by `(` (macros
+/// have a `!` between, so they never match). Returns the bare name.
+fn call_at(toks: &[Tok], k: usize) -> Option<&str> {
+    let t = toks.get(k)?;
+    if !t.is_ident()
+        || is_stmt_keyword(&t.text)
+        || !tok_is(toks, k + 1, "(")
+    {
+        return None;
+    }
+    Some(&t.text)
+}
+
+fn is_stmt_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while"
+            | "for"
+            | "match"
+            | "return"
+            | "loop"
+            | "let"
+            | "else"
+            | "move"
+            | "in"
+            | "as"
+            | "ref"
+            | "mut"
+            | "break"
+            | "continue"
+    )
+}
+
+/// Root identifier of the path ending at token `j` (`self.0.ctrl` →
+/// `self`; `sl.pa` → `sl`).
+fn path_root_left(toks: &[Tok], j: usize) -> Option<&str> {
+    if !toks.get(j).is_some_and(Tok::is_word) {
+        return None;
+    }
+    let mut r = j;
+    while r >= 2
+        && (toks[r - 1].text == "." || toks[r - 1].text == "::")
+        && toks[r - 2].is_word()
+    {
+        r -= 2;
+    }
+    Some(&toks[r].text)
+}
+
+/// Last path segment of the first call argument, `k` = index of `(`.
+fn arg0_last(toks: &[Tok], k: usize) -> Option<String> {
+    let mut j = k + 1;
+    let mut last = None;
+    while let Some(t) = toks.get(j) {
+        match t.text.as_str() {
+            "&" | "mut" | "." | "::" => {}
+            _ if t.is_word() => last = Some(t.text.clone()),
+            _ => break,
+        }
+        j += 1;
+    }
+    last
+}
+
+/// What a `let` initializer binds, classified by its leading tokens.
+enum LetKind {
+    /// Direct acquisition or lock-wrapper call: a guard.
+    Guard(String),
+    /// Anything else (incl. `*acq()` deref copies): not a guard; a
+    /// same-named earlier guard is shadowed dead.
+    Plain,
+}
+
+/// Classify the initializer starting at `init` (first token after
+/// `=`).
+fn classify_init(
+    toks: &[Tok],
+    init: usize,
+    stem: &str,
+    model: &Model,
+    facts: &Facts,
+    file_idx: usize,
+) -> LetKind {
+    if tok_is(toks, init, "*") {
+        return LetKind::Plain;
+    }
+    let mut j = init;
+    while let Some(t) = toks.get(j) {
+        match t.text.as_str() {
+            "&" | "mut" | "::" => j += 1,
+            "." => {
+                if let Some(lock) = acquisition_at(toks, j, stem) {
+                    return LetKind::Guard(lock);
+                }
+                j += 1;
+            }
+            "(" => {
+                // Call: a lock-wrapper call binds a guard named after
+                // its first argument (`lock(&state.ctrl)` →
+                // `pool.ctrl`).
+                if j > init {
+                    if let Some(name) = call_at(toks, j - 1) {
+                        let resolved = resolve_call(
+                            model, file_idx, toks, j - 1, name,
+                        );
+                        if let Some(ci) = resolved {
+                            if facts.lock_wrapper[ci] {
+                                let seg = arg0_last(toks, j)
+                                    .unwrap_or_else(|| "_expr".into());
+                                return LetKind::Guard(format!(
+                                    "{stem}.{seg}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                return LetKind::Plain;
+            }
+            _ if t.is_word() => j += 1,
+            _ => return LetKind::Plain,
+        }
+    }
+    LetKind::Plain
+}
+
+/// Record lock-order edges: every held guard orders before every lock
+/// the current expression acquires.
+fn add_edges(
+    guards: &[Guard],
+    acquired: &BTreeSet<String>,
+    file: &str,
+    line: usize,
+    via: &str,
+    edges: &mut EdgeMap,
+) {
+    for g in guards {
+        for t in acquired {
+            if *t != g.lock {
+                edges
+                    .entry((g.lock.clone(), t.clone()))
+                    .or_insert_with(|| Witness {
+                        file: file.to_string(),
+                        line,
+                        via: via.to_string(),
+                    });
+            }
+        }
+    }
+}
+
+/// The per-fn guard walk: emits lock-order edges, lock-held-panic
+/// findings, condvar wait sites and notify records.
+#[allow(clippy::too_many_arguments)]
+fn walk_fn(
+    tree: &Tree,
+    model: &Model,
+    facts: &Facts,
+    fi: usize,
+    out: &mut Vec<Finding>,
+    edges: &mut EdgeMap,
+    waits: &mut Vec<WaitSite>,
+    notified: &mut BTreeSet<String>,
+) {
+    let f = &model.fns[fi];
+    let fm = &model.files[f.file];
+    let toks = &fm.toks;
+    let stem = &fm.stem;
+    let Some(src) = source_of(tree, &fm.path) else { return };
+    let empty = BTreeSet::new();
+    let cv_set = facts.cv_names.get(&f.file).unwrap_or(&empty);
+    let skips = model.nested_ranges(fi);
+    let qual = model.qual_name(fi);
+    let is_wait_wrapper = facts.wait_wrapper[fi];
+
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    let mut blocks: Vec<&'static str> = Vec::new();
+    let mut pending_kind: Option<&'static str> = None;
+    // (depth, name, kind, line), applied at the `;` closing the let.
+    let mut pending_lets: Vec<(usize, String, LetKind, usize)> =
+        Vec::new();
+    let mut exempt: BTreeSet<usize> = BTreeSet::new();
+
+    let mut k = f.body.0;
+    while k < f.body.1 {
+        if let Some(&(_, e)) = skips.iter().find(|&&(s, _)| s == k) {
+            k = e.max(k + 1);
+            continue;
+        }
+        let line = toks[k].line;
+        match toks[k].text.as_str() {
+            "{" => {
+                blocks.push(pending_kind.take().unwrap_or("plain"));
+                depth += 1;
+            }
+            "}" => {
+                depth = depth.saturating_sub(1);
+                blocks.pop();
+                guards.retain(|g| g.depth <= depth);
+                pending_lets.retain(|p| p.0 <= depth);
+            }
+            ";" => {
+                pending_kind = None;
+                let mut rest = Vec::new();
+                for p in pending_lets.drain(..) {
+                    if p.0 == depth {
+                        guards.retain(|g| g.name != p.1);
+                        if let LetKind::Guard(lock) = p.2 {
+                            guards.push(Guard {
+                                name: p.1,
+                                lock,
+                                line: p.3,
+                                depth,
+                            });
+                        }
+                    } else {
+                        rest.push(p);
+                    }
+                }
+                pending_lets = rest;
+            }
+            "while" | "loop" => pending_kind = Some("loop"),
+            "if" | "for" | "match" | "else" => {
+                pending_kind = Some("plain");
+            }
+            "let" => {
+                let mut i = k + 1;
+                if tok_is(toks, i, "mut") {
+                    i += 1;
+                }
+                if toks.get(i).is_some_and(Tok::is_ident)
+                    && !is_stmt_keyword(&toks[i].text)
+                {
+                    let name = toks[i].text.clone();
+                    let mut j = i + 1;
+                    if tok_is(toks, j, ":") {
+                        while j < f.body.1
+                            && !tok_is(toks, j, "=")
+                            && !tok_is(toks, j, ";")
+                        {
+                            j += 1;
+                        }
+                    }
+                    if tok_is(toks, j, "=") {
+                        let kind = classify_init(
+                            toks, j + 1, stem, model, facts, f.file,
+                        );
+                        pending_lets.push((depth, name, kind, line));
+                    }
+                }
+            }
+            "drop" => {
+                if tok_is(toks, k + 1, "(")
+                    && toks.get(k + 2).is_some_and(Tok::is_ident)
+                    && tok_is(toks, k + 3, ")")
+                {
+                    let name = &toks[k + 2].text;
+                    guards.retain(|g| g.name != *name);
+                }
+            }
+            "." => {
+                if let Some(lock) = acquisition_at(toks, k, stem) {
+                    let mut set = BTreeSet::new();
+                    set.insert(lock);
+                    add_edges(
+                        &guards, &set, &fm.path, line, &qual, edges,
+                    );
+                    // House idiom: unwrap/expect chained directly onto
+                    // the acquisition handles poisoning, not data — it
+                    // is exempt from lock-held-panic.
+                    if tok_is(toks, k + 4, ".")
+                        && (tok_is(toks, k + 5, "unwrap")
+                            || tok_is(toks, k + 5, "expect"))
+                        && tok_is(toks, k + 6, "(")
+                    {
+                        exempt.insert(k + 5);
+                    }
+                } else if (tok_is(toks, k + 1, "notify_one")
+                    || tok_is(toks, k + 1, "notify_all"))
+                    && tok_is(toks, k + 2, "(")
+                    && k >= 1
+                    && toks[k - 1].is_word()
+                    && cv_set.contains(&toks[k - 1].text)
+                {
+                    notified
+                        .insert(format!("{stem}.{}", toks[k - 1].text));
+                } else if tok_is(toks, k + 1, "wait")
+                    && tok_is(toks, k + 2, "(")
+                    && !is_wait_wrapper
+                    && k >= 1
+                    && toks[k - 1].is_word()
+                    && cv_set.contains(&toks[k - 1].text)
+                {
+                    waits.push(WaitSite {
+                        cv: format!("{stem}.{}", toks[k - 1].text),
+                        file: fm.path.clone(),
+                        line,
+                        in_loop: blocks.contains(&"loop"),
+                        held: !guards.is_empty(),
+                    });
+                } else if (tok_is(toks, k + 1, "unwrap")
+                    || tok_is(toks, k + 1, "expect"))
+                    && tok_is(toks, k + 2, "(")
+                    && !exempt.contains(&(k + 1))
+                    && !guards.is_empty()
+                {
+                    let g = &guards[guards.len() - 1];
+                    out.push(finding(
+                        src,
+                        LOCK_PANIC,
+                        line,
+                        format!(
+                            ".{}() while guard {} ({}, taken line {}) \
+                             is live — a panic here poisons the lock",
+                            toks[k + 1].text, g.name, g.lock, g.line
+                        ),
+                    ));
+                }
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                if tok_is(toks, k + 1, "!") && !guards.is_empty() {
+                    let g = &guards[guards.len() - 1];
+                    out.push(finding(
+                        src,
+                        LOCK_PANIC,
+                        line,
+                        format!(
+                            "{}! while guard {} ({}, taken line {}) \
+                             is live — a panic here poisons the lock",
+                            toks[k].text, g.name, g.lock, g.line
+                        ),
+                    ));
+                }
+            }
+            "[" => {
+                let full_range = tok_is(toks, k + 1, "..")
+                    && tok_is(toks, k + 2, "]");
+                if !full_range && k >= 1 {
+                    let root = path_root_left(toks, k - 1);
+                    let hit = root.and_then(|r| {
+                        guards.iter().find(|g| g.name == r)
+                    });
+                    if let Some(g) = hit {
+                        out.push(finding(
+                            src,
+                            LOCK_PANIC,
+                            line,
+                            format!(
+                                "indexing through guard {} ({}, taken \
+                                 line {}) may panic and poison the \
+                                 lock — bound the index or use get()",
+                                g.name, g.lock, g.line
+                            ),
+                        ));
+                    }
+                }
+            }
+            _ => {
+                if let Some(name) = call_at(toks, k) {
+                    let resolved =
+                        resolve_call(model, f.file, toks, k, name);
+                    if let Some(ci) = resolved {
+                        if ci != fi {
+                            let eff = effective_acquires(
+                                toks, k, stem, facts, ci,
+                            );
+                            add_edges(
+                                &guards, &eff, &fm.path, line, &qual,
+                                edges,
+                            );
+                            if facts.wait_wrapper[ci] {
+                                let seg = arg0_last(toks, k + 1);
+                                let cv = seg
+                                    .filter(|s| cv_set.contains(s));
+                                if let Some(cv) = cv {
+                                    waits.push(WaitSite {
+                                        cv: format!("{stem}.{cv}"),
+                                        file: fm.path.clone(),
+                                        line,
+                                        in_loop: blocks
+                                            .contains(&"loop"),
+                                        held: !guards.is_empty(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+}
+
+/// Acquisition set a call site contributes: the callee's transitive
+/// set, with a lock-wrapper's single param-lock renamed to the actual
+/// argument (`lock(&state.ctrl)` acquires `pool.ctrl`, not `pool.m`).
+fn effective_acquires(
+    toks: &[Tok],
+    k: usize,
+    stem: &str,
+    facts: &Facts,
+    ci: usize,
+) -> BTreeSet<String> {
+    if facts.lock_wrapper[ci] {
+        if let Some(seg) = arg0_last(toks, k + 1) {
+            let mut set = BTreeSet::new();
+            set.insert(format!("{stem}.{seg}"));
+            return set;
+        }
+    }
+    facts.trans[ci].clone()
+}
+
+/// Channel-topology rule, per fn: (a) both endpoints of a
+/// `let (tx, rx) = …channel…()` destructure must be used after
+/// creation; (b) a fn that `recv`s work buffers and participates in a
+/// `ret_*` recycle ring must send a buffer back on it (the PR 9
+/// alloc-free invariant).
+fn channel_topology(
+    tree: &Tree,
+    model: &Model,
+    fi: usize,
+    out: &mut Vec<Finding>,
+) {
+    let f = &model.fns[fi];
+    let fm = &model.files[f.file];
+    let toks = &fm.toks;
+    let Some(src) = source_of(tree, &fm.path) else { return };
+    // (a) endpoint liveness.
+    let mut k = f.body.0;
+    while k < f.body.1 {
+        if tok_is(toks, k, "let") && tok_is(toks, k + 1, "(") {
+            let mut names = Vec::new();
+            let mut j = k + 2;
+            let mut pdepth = 1usize;
+            while j < f.body.1 && pdepth > 0 {
+                match toks[j].text.as_str() {
+                    "(" => pdepth += 1,
+                    ")" => pdepth -= 1,
+                    _ if pdepth == 1 && toks[j].is_ident() => {
+                        names
+                            .push((toks[j].text.clone(), toks[j].line));
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            // Initializer runs to the `;` at this statement's brace
+            // depth; track braces so closure bodies don't end it.
+            let mut bdepth = 0usize;
+            let mut is_channel = false;
+            while j < f.body.1 {
+                match toks[j].text.as_str() {
+                    "{" => bdepth += 1,
+                    "}" => bdepth = bdepth.saturating_sub(1),
+                    ";" if bdepth == 0 => break,
+                    "channel" | "sync_channel" => is_channel = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if is_channel && names.len() == 2 {
+                for (name, line) in &names {
+                    let used = toks[j..f.body.1]
+                        .iter()
+                        .any(|t| t.text == *name);
+                    if !used {
+                        out.push(finding(
+                            src,
+                            CHANNEL,
+                            *line,
+                            format!(
+                                "channel endpoint {name} is never \
+                                 used after creation — every send \
+                                 needs a live receive path",
+                            ),
+                        ));
+                    }
+                }
+            }
+            k = j;
+            continue;
+        }
+        k += 1;
+    }
+    // (b) ring return.
+    let mut nonret_recv_line = None;
+    let mut mentions_ret = false;
+    let mut ring_returned = false;
+    let mut stmt_has_ret = false;
+    let mut stmt_has_send = false;
+    for k in f.body.0..f.body.1 {
+        let t = &toks[k];
+        match t.text.as_str() {
+            ";" | "{" | "}" => {
+                if stmt_has_ret && stmt_has_send {
+                    ring_returned = true;
+                }
+                stmt_has_ret = false;
+                stmt_has_send = false;
+            }
+            "." => {
+                if (tok_is(toks, k + 1, "recv")
+                    || tok_is(toks, k + 1, "try_recv"))
+                    && tok_is(toks, k + 2, "(")
+                    && k >= 1
+                    && toks[k - 1].is_word()
+                    && !toks[k - 1].text.starts_with("ret_")
+                    && nonret_recv_line.is_none()
+                {
+                    nonret_recv_line = Some(t.line);
+                }
+                if tok_is(toks, k + 1, "send")
+                    && tok_is(toks, k + 2, "(")
+                {
+                    stmt_has_send = true;
+                }
+            }
+            _ if t.text.starts_with("ret_") => {
+                mentions_ret = true;
+                stmt_has_ret = true;
+            }
+            _ => {}
+        }
+    }
+    if stmt_has_ret && stmt_has_send {
+        ring_returned = true;
+    }
+    if let Some(line) = nonret_recv_line {
+        if mentions_ret && !ring_returned {
+            out.push(finding(
+                src,
+                CHANNEL,
+                line,
+                format!(
+                    "{} recv()s recycled buffers but never sends one \
+                     back on a ret_* endpoint — the ring leaks and \
+                     the steady state re-allocates",
+                    model.qual_name(fi)
+                ),
+            ));
+        }
+    }
+}
+
+/// Cycle detection over the global lock-order graph; each cycle is one
+/// finding with every conflicting acquisition path named.
+fn report_cycles(tree: &Tree, edges: &EdgeMap, out: &mut Vec<Finding>) {
+    let mut nodes: Vec<String> = Vec::new();
+    for (a, b) in edges.keys() {
+        if !nodes.contains(a) {
+            nodes.push(a.clone());
+        }
+        if !nodes.contains(b) {
+            nodes.push(b.clone());
+        }
+    }
+    nodes.sort();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for (a, b) in edges.keys() {
+        let i = nodes.iter().position(|n| n == a);
+        let j = nodes.iter().position(|n| n == b);
+        if let (Some(i), Some(j)) = (i, j) {
+            adj[i].push(j);
+        }
+    }
+    let mut state = vec![0u8; nodes.len()];
+    let mut stack = Vec::new();
+    let mut cycles: Vec<Vec<usize>> = Vec::new();
+    for v in 0..nodes.len() {
+        if state[v] == 0 {
+            dfs(v, &adj, &mut state, &mut stack, &mut cycles);
+        }
+    }
+    let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
+    for cyc in cycles {
+        let mut key = cyc.clone();
+        key.sort_unstable();
+        if !seen.insert(key) {
+            continue;
+        }
+        let mut parts = Vec::new();
+        let mut anchor: Option<&Witness> = None;
+        for i in 0..cyc.len() {
+            let from = &nodes[cyc[i]];
+            let to = &nodes[cyc[(i + 1) % cyc.len()]];
+            if let Some(w) = edges.get(&(from.clone(), to.clone())) {
+                parts.push(format!(
+                    "{from} -> {to} (acquired at {}:{} in {})",
+                    w.file, w.line, w.via
+                ));
+                if anchor.is_none() {
+                    anchor = Some(w);
+                }
+            }
+        }
+        let Some(w) = anchor else { continue };
+        let Some(src) = source_of(tree, &w.file) else { continue };
+        out.push(finding(
+            src,
+            LOCK_ORDER,
+            w.line,
+            format!(
+                "lock-order cycle — a static deadlock witness: {}",
+                parts.join(" vs ")
+            ),
+        ));
+    }
+}
+
+fn dfs(
+    v: usize,
+    adj: &[Vec<usize>],
+    state: &mut [u8],
+    stack: &mut Vec<usize>,
+    cycles: &mut Vec<Vec<usize>>,
+) {
+    state[v] = 1;
+    stack.push(v);
+    for &w in &adj[v] {
+        if state[w] == 0 {
+            dfs(w, adj, state, stack, cycles);
+        } else if state[w] == 1 {
+            if let Some(pos) = stack.iter().position(|&x| x == w) {
+                cycles.push(stack[pos..].to_vec());
+            }
+        }
+    }
+    stack.pop();
+    state[v] = 2;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: &str = "rust/src/optim/fix.rs";
+
+    fn run_conc(src: &str) -> Vec<Finding> {
+        let tree = Tree {
+            sources: vec![SourceFile::parse(W, src)],
+            ..Tree::default()
+        };
+        let mut out = Vec::new();
+        conc(&tree, &mut out);
+        out
+    }
+
+    fn count(out: &[Finding], rule: &str) -> usize {
+        out.iter().filter(|f| f.rule == rule).count()
+    }
+
+    #[test]
+    fn direct_lock_inversion_is_a_cycle_with_both_paths() {
+        let out = run_conc(
+            "struct S { a: Mutex<u64>, b: Mutex<u64> }\n\
+             fn fwd(s: &S) {\n\
+             let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+             let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());\n\
+             drop(gb);\n\
+             drop(ga);\n\
+             }\n\
+             fn rev(s: &S) {\n\
+             let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());\n\
+             let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+             drop(ga);\n\
+             drop(gb);\n\
+             }\n",
+        );
+        assert_eq!(count(&out, LOCK_ORDER), 1, "{out:?}");
+        let f = out.iter().find(|f| f.rule == LOCK_ORDER).unwrap();
+        assert!(f.message.contains("fix.a -> fix.b"), "{}", f.message);
+        assert!(f.message.contains("fix.b -> fix.a"), "{}", f.message);
+        assert!(f.message.contains("fix::"), "{}", f.message);
+    }
+
+    #[test]
+    fn inversion_hidden_behind_helpers_is_caught() {
+        // fwd/rev bind their first guard through the wrapper, then the
+        // second acquisition happens one call deep: the cycle is only
+        // visible interprocedurally.
+        let out = run_conc(
+            "fn lk<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {\n\
+             m.lock().unwrap_or_else(|e| e.into_inner())\n\
+             }\n\
+             fn take_a(s: &S) {\n\
+             let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+             drop(ga);\n\
+             }\n\
+             fn take_b(s: &S) {\n\
+             let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());\n\
+             drop(gb);\n\
+             }\n\
+             fn fwd(s: &S) {\n\
+             let ga = lk(&s.a);\n\
+             take_b(s);\n\
+             drop(ga);\n\
+             }\n\
+             fn rev(s: &S) {\n\
+             let gb = lk(&s.b);\n\
+             take_a(s);\n\
+             drop(gb);\n\
+             }\n",
+        );
+        assert_eq!(count(&out, LOCK_ORDER), 1, "{out:?}");
+        let f = out.iter().find(|f| f.rule == LOCK_ORDER).unwrap();
+        assert!(f.message.contains("fix.a -> fix.b"), "{}", f.message);
+        assert!(f.message.contains("fix.b -> fix.a"), "{}", f.message);
+    }
+
+    #[test]
+    fn crew_barrier_protocol_is_clean() {
+        // Distilled from optim/pool.rs: wrapper-bound guards, condvar
+        // waits in predicate loops under the guard, notifies on both
+        // condvars, drop-based release. Must produce zero findings.
+        let out = run_conc(
+            "struct CrewState { ctrl: Mutex<Ctrl>, go: Condvar, \
+             done: Condvar }\n\
+             fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {\n\
+             m.lock().unwrap_or_else(|e| e.into_inner())\n\
+             }\n\
+             fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) \
+             -> MutexGuard<'a, T> {\n\
+             cv.wait(g).unwrap_or_else(|e| e.into_inner())\n\
+             }\n\
+             fn worker_loop(state: &CrewState) {\n\
+             let mut seen = 0u64;\n\
+             loop {\n\
+             let mut ctrl = lock(&state.ctrl);\n\
+             while !ctrl.shutdown && ctrl.generation == seen {\n\
+             ctrl = wait(&state.go, ctrl);\n\
+             }\n\
+             if ctrl.shutdown {\n\
+             return;\n\
+             }\n\
+             seen = ctrl.generation;\n\
+             drop(ctrl);\n\
+             let mut ctrl = lock(&state.ctrl);\n\
+             ctrl.completed += 1;\n\
+             state.done.notify_all();\n\
+             }\n\
+             }\n\
+             fn round(state: &CrewState, n: usize) {\n\
+             let mut ctrl = lock(&state.ctrl);\n\
+             ctrl.generation += 1;\n\
+             state.go.notify_all();\n\
+             while ctrl.completed < n {\n\
+             ctrl = wait(&state.done, ctrl);\n\
+             }\n\
+             drop(ctrl);\n\
+             }\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn condvar_wait_needs_loop_and_notify() {
+        let out = run_conc(
+            "struct S2 { m: Mutex<u64>, cv: Condvar }\n\
+             fn bad_wait(s: &S2) {\n\
+             let g = s.m.lock().unwrap_or_else(|e| e.into_inner());\n\
+             let g2 = s.cv.wait(g).unwrap_or_else(|e| e.into_inner());\n\
+             drop(g2);\n\
+             }\n",
+        );
+        assert_eq!(count(&out, CONDVAR), 2, "{out:?}");
+        assert!(out.iter().any(|f| f.message.contains("predicate loop")));
+        assert!(out.iter().any(|f| f.message.contains("never notified")));
+    }
+
+    #[test]
+    fn condvar_wait_without_its_mutex_is_flagged() {
+        let out = run_conc(
+            "struct S2 { m: Mutex<u64>, cv: Condvar }\n\
+             fn naked(s: &S2) {\n\
+             loop {\n\
+             let q = s.cv.wait(guard_from(s)).unwrap_or_else(|e| \
+             e.into_inner());\n\
+             drop(q);\n\
+             s.cv.notify_one();\n\
+             }\n\
+             }\n",
+        );
+        assert_eq!(count(&out, CONDVAR), 1, "{out:?}");
+        assert!(out[0].message.contains("without its paired mutex"));
+    }
+
+    #[test]
+    fn orphaned_channel_endpoint_is_flagged() {
+        let out = run_conc(
+            "fn orphan() {\n\
+             let (tx, rx) = std::sync::mpsc::channel::<u32>();\n\
+             let _ = tx.send(1);\n\
+             }\n",
+        );
+        assert_eq!(count(&out, CHANNEL), 1, "{out:?}");
+        assert!(out[0].message.contains("rx"), "{out:?}");
+    }
+
+    #[test]
+    fn recycled_ring_buffers_must_be_returned() {
+        let leak = run_conc(
+            "fn pump(rx: &Receiver<Vec<u8>>, ret_tx: &Sender<Vec<u8>>) {\n\
+             while let Ok(buf) = rx.recv() {\n\
+             consume(&buf);\n\
+             }\n\
+             drop(ret_tx);\n\
+             }\n",
+        );
+        assert_eq!(count(&leak, CHANNEL), 1, "{leak:?}");
+        assert!(leak[0].message.contains("ret_*"), "{leak:?}");
+        let ok = run_conc(
+            "fn pump(rx: &Receiver<Vec<u8>>, ret_tx: &Sender<Vec<u8>>) {\n\
+             while let Ok(buf) = rx.recv() {\n\
+             let _ = ret_tx.send(buf);\n\
+             }\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn panic_tokens_under_a_live_guard_are_flagged() {
+        // The unwraps chained directly onto the two acquisitions are
+        // the house poison idiom and exempt; the third unwrap and the
+        // indexing through guard `g` are real violations.
+        let out = run_conc(
+            "fn risky(s: &S) {\n\
+             let g = s.a.lock().unwrap();\n\
+             let h = s.b.lock().unwrap();\n\
+             let v = parse_it().unwrap();\n\
+             g.buf[v] = 0;\n\
+             drop(h);\n\
+             drop(g);\n\
+             }\n",
+        );
+        assert_eq!(count(&out, LOCK_PANIC), 2, "{out:?}");
+        assert!(out.iter().any(|f| f.message.contains(".unwrap()")));
+        assert!(out.iter().any(|f| f.message.contains("indexing")));
+    }
+
+    #[test]
+    fn shadowing_and_drop_end_guard_liveness() {
+        // `let g = &g[..]` is the flat.rs session idiom: the rebind
+        // kills the guard, so later panic tokens are clean, and the
+        // full-range `[..]` on the guard itself is exempt.
+        let out = run_conc(
+            "fn shadowed(s: &S) {\n\
+             let g = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+             let g = &g[..];\n\
+             let v = other().unwrap();\n\
+             let n = g[0];\n\
+             }\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn copy_returning_accessor_is_not_a_phantom_guard() {
+        // read_scale has a singleton acquisition set but the lock is
+        // not its own parameter, so callers do not bind phantom guards.
+        let out = run_conc(
+            "fn read_scale(sync: &SyncState) -> f32 {\n\
+             *sync.scale.read().unwrap_or_else(|e| e.into_inner())\n\
+             }\n\
+             fn caller(sync: &SyncState) {\n\
+             let scale = read_scale(sync);\n\
+             let v = thing().unwrap();\n\
+             }\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

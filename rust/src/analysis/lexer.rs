@@ -1,0 +1,160 @@
+//! Token stream over scanner-stripped source — the semantic pipeline's
+//! first stage. The [`super::scanner`] already removed comments and
+//! blanked string/char-literal contents, so lexing here is a small,
+//! deterministic pass: identifiers, numbers, and punctuation (with the
+//! few two-character operators the parser cares about kept whole). Each
+//! token remembers its source line and whether it sits in the trailing
+//! test region, so every downstream rule inherits the scanner's
+//! test-code exemption for free.
+
+use super::scanner::SourceFile;
+
+/// One token of stripped code.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    /// True inside the trailing `#[cfg(test)]` region.
+    pub is_test: bool,
+}
+
+impl Tok {
+    /// Identifier-or-number check (path segments, receiver roots).
+    pub fn is_word(&self) -> bool {
+        self.text
+            .bytes()
+            .next()
+            .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_')
+    }
+
+    /// Identifier check (starts with a letter or `_`, so `0` in a tuple
+    /// field access is a word but not an ident).
+    pub fn is_ident(&self) -> bool {
+        self.text
+            .bytes()
+            .next()
+            .is_some_and(|b| b.is_ascii_alphabetic() || b == b'_')
+    }
+}
+
+/// Two-character operators kept as single tokens: `::` for paths, `->`
+/// so generic-angle matching never miscounts a return arrow, `=>` so
+/// match arms cannot read as assignments, `..` so full-range indexing
+/// (`[..]`) is one recognizable token.
+const DOUBLES: &[&str] = &["::", "->", "=>", ".."];
+
+/// Lex a scanned file's code channel into a flat token stream.
+pub fn lex(file: &SourceFile) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for line in &file.lines {
+        let bytes = line.code.as_bytes();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let b = bytes[i];
+            if b.is_ascii_whitespace() {
+                i += 1;
+                continue;
+            }
+            if b.is_ascii_alphanumeric() || b == b'_' {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push(Tok {
+                    text: line.code[start..i].to_string(),
+                    line: line.number,
+                    is_test: line.is_test,
+                });
+                continue;
+            }
+            // Multi-byte UTF-8 punctuation (only reachable through odd
+            // doc text the scanner left in code position): skip whole.
+            if b >= 0x80 {
+                let mut end = i + 1;
+                while end < bytes.len() && (bytes[end] & 0xC0) == 0x80 {
+                    end += 1;
+                }
+                i = end;
+                continue;
+            }
+            let two = &line.code[i..(i + 2).min(line.code.len())];
+            if DOUBLES.contains(&two) {
+                out.push(Tok {
+                    text: two.to_string(),
+                    line: line.number,
+                    is_test: line.is_test,
+                });
+                i += 2;
+                continue;
+            }
+            out.push(Tok {
+                text: (b as char).to_string(),
+                line: line.number,
+                is_test: line.is_test,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        let f = SourceFile::parse("x.rs", src);
+        lex(&f).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_paths_and_doubles() {
+        assert_eq!(
+            texts("let g = state.ctrl.lock();\n"),
+            ["let", "g", "=", "state", ".", "ctrl", ".", "lock", "(", ")",
+             ";"]
+        );
+        assert_eq!(
+            texts("fn f() -> Result<()> { pool::run(x) }\n"),
+            ["fn", "f", "(", ")", "->", "Result", "<", "(", ")", ">", "{",
+             "pool", "::", "run", "(", "x", ")", "}"]
+        );
+        assert_eq!(texts("&buf[..]\n"), ["&", "buf", "[", "..", "]"]);
+        assert_eq!(texts("m => 1,\n"), ["m", "=>", "1", ","]);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_one_token() {
+        // `.unwrap()` matching must never fire inside the house
+        // `unwrap_or_else(|e| e.into_inner())` idiom.
+        let toks = texts("g.unwrap_or_else(|e| e.into_inner());\n");
+        assert!(toks.contains(&"unwrap_or_else".to_string()));
+        assert!(!toks.contains(&"unwrap".to_string()));
+    }
+
+    #[test]
+    fn comments_and_strings_never_tokenize() {
+        let toks = texts(
+            "let s = \"lock() inside a string\"; // m.lock() in a comment\n",
+        );
+        assert!(!toks.contains(&"lock".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_and_test_region() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn a() {}\n#[cfg(test)]\nmod tests { fn b() {} }\n",
+        );
+        let toks = lex(&f);
+        let a = toks.iter().find(|t| t.text == "a").unwrap();
+        assert_eq!(a.line, 1);
+        assert!(!a.is_test);
+        let b = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+        assert!(b.is_test);
+    }
+}

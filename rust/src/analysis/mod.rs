@@ -20,6 +20,9 @@
 //! panic-discipline — an annotated budget in
 //! [`rules::PANIC_ALLOWLIST`]. See docs/ANALYSIS.md.
 
+pub mod conc;
+pub mod lexer;
+pub mod model;
 pub mod rules;
 pub mod scanner;
 
@@ -163,6 +166,10 @@ pub struct Report {
     /// Metric names the micro benches emit, derived statically — the
     /// set `bench-check` gates against `bench/baseline.json`.
     pub bench_metrics: Vec<String>,
+    /// `(file, line, rule)` of every stale waiver — the removal list
+    /// `adalomo analyze --bless-waivers` prints as a diff. Each is
+    /// also a waiver-syntax violation in [`Report::findings`].
+    pub stale_waivers: Vec<(String, usize, String)>,
 }
 
 impl Report {
@@ -236,6 +243,70 @@ impl Report {
             ("notes", arr(self.notes.iter().map(|n| s(n)).collect())),
         ])
     }
+
+    /// Minimal SARIF 2.1.0 document (uploaded from CI so findings can
+    /// annotate PR diffs; the JSON artifact stays the canonical
+    /// machine-readable report). Violations map to level "error",
+    /// waived findings to "note"; file-level findings (line 0) clamp
+    /// to startLine 1 as the SARIF region grammar requires.
+    pub fn to_sarif(&self) -> Json {
+        let rule_objs = rules::RULES
+            .iter()
+            .map(|(id, desc)| {
+                obj(vec![
+                    ("id", s(id)),
+                    ("shortDescription", obj(vec![("text", s(desc))])),
+                ])
+            })
+            .collect();
+        let results = self
+            .findings
+            .iter()
+            .map(|f| {
+                let level =
+                    if f.waived.is_some() { "note" } else { "error" };
+                let region = obj(vec![(
+                    "startLine",
+                    num(f.line.max(1) as f64),
+                )]);
+                let loc = obj(vec![(
+                    "physicalLocation",
+                    obj(vec![
+                        (
+                            "artifactLocation",
+                            obj(vec![("uri", s(&f.file))]),
+                        ),
+                        ("region", region),
+                    ]),
+                )]);
+                obj(vec![
+                    ("ruleId", s(f.rule)),
+                    ("level", s(level)),
+                    ("message", obj(vec![("text", s(&f.message))])),
+                    ("locations", arr(vec![loc])),
+                ])
+            })
+            .collect();
+        let driver = obj(vec![
+            ("name", s("adalomo-analyze")),
+            ("version", s("1.0")),
+            ("rules", arr(rule_objs)),
+        ]);
+        obj(vec![
+            (
+                "$schema",
+                s("https://json.schemastore.org/sarif-2.1.0.json"),
+            ),
+            ("version", s("2.1.0")),
+            (
+                "runs",
+                arr(vec![obj(vec![
+                    ("tool", obj(vec![("driver", driver)])),
+                    ("results", arr(results)),
+                ])]),
+            ),
+        ])
+    }
 }
 
 /// Run every rule over `tree`.
@@ -248,7 +319,22 @@ pub fn analyze(tree: &Tree) -> Report {
     rules::panic_discipline(tree, &mut findings, &mut notes);
     rules::hot_path_alloc(tree, &mut findings);
     let bench_metrics = rules::consistency(tree, &mut findings, &mut notes);
-    unused_waiver_notes(tree, &findings, &mut notes);
+    conc::conc(tree, &mut findings);
+    let stale_waivers = stale_waivers(tree, &findings);
+    for (file, line, rule) in &stale_waivers {
+        findings.push(Finding {
+            rule: "waiver-syntax",
+            file: file.clone(),
+            line: *line,
+            message: format!(
+                "stale waiver: waives {rule:?} but no finding matches — \
+                 the offending code was fixed, so the comment must go \
+                 (`adalomo analyze --bless-waivers` prints the removal \
+                 diff)"
+            ),
+            waived: None,
+        });
+    }
     Report {
         findings,
         notes,
@@ -256,21 +342,26 @@ pub fn analyze(tree: &Tree) -> Report {
             + tree.benches.len()
             + tree.aux.len(),
         bench_metrics,
+        stale_waivers,
     }
 }
 
 /// A waiver no finding consumed is stale — the offending code was fixed,
-/// so the comment should go. Advisory (a note, not a violation): a stale
-/// waiver cannot hide a real finding, only outlive one.
-fn unused_waiver_notes(
+/// so the comment should go. Stale waivers are hard violations (under
+/// waiver-syntax): an outdated waiver is camouflage for the next real
+/// finding on that line. Malformed and unknown-rule waivers are skipped
+/// here — they are already violations in their own right.
+fn stale_waivers(
     tree: &Tree,
     findings: &[Finding],
-    notes: &mut Vec<String>,
-) {
+) -> Vec<(String, usize, String)> {
+    let known: std::collections::BTreeSet<&str> =
+        rules::RULES.iter().map(|(id, _)| *id).collect();
+    let mut stale = Vec::new();
     for f in &tree.sources {
         for w in &f.waivers {
-            if w.rule.is_empty() {
-                continue; // malformed — already a violation
+            if w.rule.is_empty() || !known.contains(w.rule.as_str()) {
+                continue;
             }
             let used = findings.iter().any(|fd| {
                 fd.file == f.path
@@ -280,14 +371,11 @@ fn unused_waiver_notes(
                         .is_some_and(|cov| cov.line == w.line)
             });
             if !used {
-                notes.push(format!(
-                    "stale waiver: {}:{} waives {:?} but nothing matches \
-                     — remove the comment",
-                    f.path, w.line, w.rule
-                ));
+                stale.push((f.path.clone(), w.line, w.rule.clone()));
             }
         }
     }
+    stale
 }
 
 /// Convenience: load + analyze a checkout.
@@ -564,16 +652,105 @@ mod tests {
     fn malformed_and_stale_waivers_surface() {
         let t = tree_of(&[(W, "// ANALYZE-WAIVE(determinism) no colon\n")]);
         assert_eq!(violations_of(&t, "waiver-syntax"), 1);
+        // An unknown-rule waiver is one violation (unknown rule), not
+        // two (it is excluded from the stale scan).
         let t = tree_of(&[(W, "// ANALYZE-WAIVE(imaginary-rule): hi\n")]);
         assert_eq!(violations_of(&t, "waiver-syntax"), 1);
+        // A stale waiver is a hard violation and lands in the
+        // bless-waivers removal list.
         let t = tree_of(&[(
             W,
             "// ANALYZE-WAIVE(determinism): nothing here needs this\n\
              fn clean() {}\n",
         )]);
         let r = analyze(&t);
-        assert_eq!(r.violations().len(), 0);
-        assert!(r.notes.iter().any(|n| n.contains("stale waiver")));
+        assert_eq!(r.violations().len(), 1, "{:?}", r.violations());
+        assert!(r.violations()[0].message.contains("stale waiver"));
+        assert_eq!(
+            r.stale_waivers,
+            vec![(W.to_string(), 1, "determinism".to_string())]
+        );
+        // A consumed waiver is not stale.
+        let t = tree_of(&[(
+            W,
+            "let t = Instant::now(); // ANALYZE-WAIVE(determinism): \
+             report-only timing\n",
+        )]);
+        let r = analyze(&t);
+        assert_eq!(r.violations().len(), 0, "{:?}", r.violations());
+        assert!(r.stale_waivers.is_empty());
+    }
+
+    #[test]
+    fn concurrency_rules_run_through_analyze() {
+        // End-to-end: a lock inversion seeded through the normal
+        // pipeline surfaces as a lock-order violation, and a waiver on
+        // the witness line silences it (and is then consumed, not
+        // stale).
+        // The cycle finding anchors at the first edge's witness — the
+        // second acquisition in fwd — so the waiver sits there.
+        let src = "fn fwd(s: &S) {\n\
+                   let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+                   // ANALYZE-WAIVE(lock-order): fixture inversion\n\
+                   let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());\n\
+                   drop(gb);\n\
+                   drop(ga);\n\
+                   }\n\
+                   fn rev(s: &S) {\n\
+                   let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());\n\
+                   let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());\n\
+                   drop(ga);\n\
+                   drop(gb);\n\
+                   }\n";
+        let t = tree_of(&[(W, src)]);
+        let r = analyze(&t);
+        assert_eq!(r.violations().len(), 0, "{:?}", r.violations());
+        assert_eq!(r.waived_count(), 1);
+        assert!(r.stale_waivers.is_empty());
+        let unwaived = src.replace(
+            "// ANALYZE-WAIVE(lock-order): fixture inversion\n",
+            "",
+        );
+        let t = tree_of(&[(W, unwaived.as_str())]);
+        assert_eq!(violations_of(&t, "lock-order"), 1);
+    }
+
+    #[test]
+    fn sarif_shape() {
+        let t = tree_of(&[(
+            W,
+            "let t0 = Instant::now();\n\
+             let t1 = Instant::now(); // ANALYZE-WAIVE(determinism): \
+             report-only timing\n",
+        )]);
+        let j = analyze(&t).to_sarif();
+        assert_eq!(
+            j.get("version").unwrap().as_str().unwrap(),
+            "2.1.0"
+        );
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let results = runs[0].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        let levels: Vec<&str> = results
+            .iter()
+            .map(|r| r.get("level").unwrap().as_str().unwrap())
+            .collect();
+        assert!(levels.contains(&"error"));
+        assert!(levels.contains(&"note"));
+        let driver = runs[0]
+            .get("tool")
+            .unwrap()
+            .get("driver")
+            .unwrap()
+            .get("rules")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(driver.len(), rules::RULES.len());
+        // Round-trips through the JSON parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 
     #[test]

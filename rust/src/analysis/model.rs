@@ -1,0 +1,443 @@
+//! Item-level semantic model: functions, parameters, bodies and a
+//! per-crate symbol table, built over the lexer's token streams. This
+//! is the middle stage of the analysis pipeline (scanner → lexer →
+//! model → rules): the concurrency rules in [`super::conc`] walk each
+//! function body with guard state, resolve call sites through the
+//! symbol table here, and propagate acquisition sets over the call
+//! graph.
+//!
+//! The parser is item-level on purpose. It recognizes `fn` items
+//! (free functions, inherent/trait methods, nested fns), their
+//! parameter lists and brace-matched body ranges — nothing more. Rust's
+//! expression grammar stays opaque; the rules that need expression
+//! structure use small token-pattern recognizers over the body range.
+//! Resolution is by bare name: same file wins, then a unique cross-file
+//! definition; ambiguous names stay unresolved (the rules treat
+//! unresolved calls as acquiring nothing, which keeps the analysis
+//! sound for the watched tree where protocol functions have unique
+//! names).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, Tok};
+use super::Tree;
+
+/// A function parameter: binding name and its type as token text
+/// (joined with single spaces, e.g. `& ' a Mutex < T >`).
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub ty: String,
+}
+
+/// One `fn` item.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    pub name: String,
+    /// Index into [`Model::files`].
+    pub file: usize,
+    /// Source line of the `fn` keyword.
+    pub line: usize,
+    /// True when declared inside the trailing `#[cfg(test)]` region.
+    pub is_test: bool,
+    pub params: Vec<Param>,
+    /// Token index of the `fn` keyword (start of the item).
+    pub sig_start: usize,
+    /// Token range of the body contents, exclusive of the braces:
+    /// `toks[body.0..body.1]`. Empty for bodyless trait declarations.
+    pub body: (usize, usize),
+}
+
+impl FnDef {
+    pub fn has_body(&self) -> bool {
+        self.body.1 > self.body.0
+    }
+}
+
+/// One parsed file: path, stem (`pool` for `optim/pool.rs`), token
+/// stream and the functions found in it.
+#[derive(Debug)]
+pub struct FileModel {
+    pub path: String,
+    pub stem: String,
+    pub toks: Vec<Tok>,
+    /// Indices into [`Model::fns`], in source order.
+    pub fns: Vec<usize>,
+}
+
+/// Per-crate symbol table over a set of files.
+#[derive(Debug, Default)]
+pub struct Model {
+    pub files: Vec<FileModel>,
+    pub fns: Vec<FnDef>,
+    by_name: BTreeMap<String, Vec<usize>>,
+}
+
+impl Model {
+    /// Build the model over every tree file accepted by `keep`.
+    pub fn build(tree: &Tree, keep: impl Fn(&str) -> bool) -> Model {
+        let mut m = Model::default();
+        for sf in &tree.sources {
+            if !keep(&sf.path) {
+                continue;
+            }
+            let toks = lex(sf);
+            let file_idx = m.files.len();
+            let mut fns = Vec::new();
+            let mut i = 0usize;
+            while i < toks.len() {
+                if toks[i].text == "fn" {
+                    if let Some(def) = parse_fn(&toks, i, file_idx) {
+                        // Continue scanning from just after the
+                        // signature so nested fns are found too; body
+                        // ranges are recorded per item.
+                        i = def.body.0.max(i + 1);
+                        fns.push(m.fns.len());
+                        m.by_name
+                            .entry(def.name.clone())
+                            .or_default()
+                            .push(m.fns.len());
+                        m.fns.push(def);
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            m.files.push(FileModel {
+                path: sf.path.clone(),
+                stem: stem_of(&sf.path),
+                toks,
+                fns,
+            });
+        }
+        m
+    }
+
+    /// Resolve a call by bare name from a given file: a definition in
+    /// the same file wins, else a unique cross-file definition; `None`
+    /// when unknown or ambiguous.
+    pub fn resolve(&self, from_file: usize, name: &str) -> Option<usize> {
+        let cands = self.by_name.get(name)?;
+        if let Some(&idx) =
+            cands.iter().find(|&&idx| self.fns[idx].file == from_file)
+        {
+            return Some(idx);
+        }
+        if cands.len() == 1 {
+            return Some(cands[0]);
+        }
+        None
+    }
+
+    /// Strictly-nested fn items inside `outer`'s body, as
+    /// `(sig_start, body_end)` skip ranges for body walks.
+    pub fn nested_ranges(&self, outer: usize) -> Vec<(usize, usize)> {
+        let o = &self.fns[outer];
+        self.files[o.file]
+            .fns
+            .iter()
+            .map(|&i| &self.fns[i])
+            .filter(|g| g.sig_start > o.body.0 && g.body.1 < o.body.1)
+            .map(|g| (g.sig_start, g.body.1 + 1))
+            .collect()
+    }
+
+    /// `stem.name` display form for findings.
+    pub fn qual_name(&self, idx: usize) -> String {
+        let f = &self.fns[idx];
+        format!("{}::{}", self.files[f.file].stem, f.name)
+    }
+}
+
+pub fn stem_of(path: &str) -> String {
+    let base = path.rsplit('/').next().unwrap_or(path);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+/// Parse one `fn` item starting at the `fn` keyword; `None` when the
+/// token is a function-pointer type (`fn(`), or malformed.
+fn parse_fn(toks: &[Tok], at: usize, file: usize) -> Option<FnDef> {
+    let name_tok = toks.get(at + 1)?;
+    if !name_tok.is_ident() || is_keyword(&name_tok.text) {
+        return None;
+    }
+    let mut j = at + 2;
+    // Generic parameter list: skip to the matching `>`. The lexer keeps
+    // `->` as one token, so only bare `<`/`>` move the depth.
+    if toks.get(j).map(|t| t.text.as_str()) == Some("<") {
+        let mut depth = 0usize;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "<" => depth += 1,
+                ">" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    if toks.get(j).map(|t| t.text.as_str()) != Some("(") {
+        return None;
+    }
+    let (params, after_params) = parse_params(toks, j);
+    // Return type / where clause: scan to the body `{` or a bodyless
+    // `;`, tracking paren/bracket depth (closure types in return
+    // position carry parens; braces never legally appear before the
+    // body in this crate's grammar).
+    let mut k = after_params;
+    let mut depth = 0isize;
+    let mut body = (0usize, 0usize);
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            ";" if depth == 0 => break,
+            "{" if depth == 0 => {
+                let close = match_brace(toks, k);
+                body = (k + 1, close);
+                break;
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    Some(FnDef {
+        name: name_tok.text.clone(),
+        file,
+        line: toks[at].line,
+        is_test: toks[at].is_test,
+        params,
+        sig_start: at,
+        body,
+    })
+}
+
+/// Parse a parenthesized parameter list starting at `(`; returns the
+/// params and the token index just past the closing `)`.
+fn parse_params(toks: &[Tok], open: usize) -> (Vec<Param>, usize) {
+    let mut params = Vec::new();
+    let mut paren = 0isize;
+    let mut angle = 0isize;
+    let mut seg: Vec<&Tok> = Vec::new();
+    let mut k = open;
+    loop {
+        let Some(t) = toks.get(k) else {
+            return (params, k);
+        };
+        match t.text.as_str() {
+            "(" => {
+                paren += 1;
+                if paren > 1 {
+                    seg.push(t);
+                }
+            }
+            ")" => {
+                paren -= 1;
+                if paren == 0 {
+                    push_param(&mut params, &seg);
+                    return (params, k + 1);
+                }
+                seg.push(t);
+            }
+            "<" => {
+                angle += 1;
+                seg.push(t);
+            }
+            ">" => {
+                angle -= 1;
+                seg.push(t);
+            }
+            "," if paren == 1 && angle == 0 => {
+                push_param(&mut params, &seg);
+                seg.clear();
+            }
+            _ => seg.push(t),
+        }
+        k += 1;
+    }
+}
+
+/// Turn one comma-separated segment into a [`Param`]: the binding name
+/// is the last identifier before the first top-level `:` (handles
+/// `mut x: T`); `self` receivers (no `:`) are skipped.
+fn push_param(params: &mut Vec<Param>, seg: &[&Tok]) {
+    let Some(colon) = seg.iter().position(|t| t.text == ":") else {
+        return;
+    };
+    let Some(name) =
+        seg[..colon].iter().rev().find(|t| t.is_ident()).map(|t| &t.text)
+    else {
+        return;
+    };
+    let ty = seg[colon + 1..]
+        .iter()
+        .map(|t| t.text.as_str())
+        .collect::<Vec<_>>()
+        .join(" ");
+    params.push(Param { name: name.clone(), ty });
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token when
+/// unbalanced, which truncates rather than panics on malformed input).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0isize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while"
+            | "for"
+            | "match"
+            | "return"
+            | "loop"
+            | "let"
+            | "else"
+            | "move"
+            | "in"
+            | "as"
+            | "ref"
+            | "mut"
+            | "fn"
+            | "impl"
+            | "pub"
+            | "use"
+            | "where"
+            | "break"
+            | "continue"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::SourceFile;
+
+    fn model_of(src: &str) -> Model {
+        let tree = Tree {
+            sources: vec![SourceFile::parse("rust/src/optim/pool.rs", src)],
+            ..Tree::default()
+        };
+        Model::build(&tree, |_| true)
+    }
+
+    #[test]
+    fn finds_free_fns_methods_and_params() {
+        let m = model_of(
+            "fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {\n\
+             \x20   m.lock().unwrap_or_else(|e| e.into_inner())\n\
+             }\n\
+             impl Crew {\n\
+             \x20   fn round(&self, jobs: &mut [Job]) -> Result<()> {\n\
+             \x20       Ok(())\n\
+             \x20   }\n\
+             }\n",
+        );
+        assert_eq!(m.fns.len(), 2);
+        let lock = &m.fns[0];
+        assert_eq!(lock.name, "lock");
+        assert_eq!(lock.line, 1);
+        assert_eq!(lock.params.len(), 1);
+        assert_eq!(lock.params[0].name, "m");
+        assert!(lock.params[0].ty.contains("Mutex"));
+        let round = &m.fns[1];
+        assert_eq!(round.name, "round");
+        // `&self` is skipped; `jobs` keeps its type text.
+        assert_eq!(round.params.len(), 1);
+        assert_eq!(round.params[0].name, "jobs");
+        assert!(m.files[0].toks[round.body.0..round.body.1]
+            .iter()
+            .any(|t| t.text == "Ok"));
+    }
+
+    #[test]
+    fn fn_pointer_types_and_closure_param_types_are_not_items() {
+        let m = model_of(
+            "fn takes(cb: fn(u32) -> u32, body: impl FnOnce(&mut S)) {\n\
+             \x20   body(cb)\n\
+             }\n",
+        );
+        assert_eq!(m.fns.len(), 1);
+        assert_eq!(m.fns[0].name, "takes");
+        assert_eq!(m.fns[0].params.len(), 2);
+        assert_eq!(m.fns[0].params[1].name, "body");
+    }
+
+    #[test]
+    fn bodyless_decls_and_nested_fns() {
+        let m = model_of(
+            "trait T { fn hook(&self) -> u32; }\n\
+             fn outer() {\n\
+             \x20   fn inner() { helper(); }\n\
+             \x20   inner();\n\
+             }\n",
+        );
+        let names: Vec<_> =
+            m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["hook", "outer", "inner"]);
+        assert!(!m.fns[0].has_body());
+        let outer = m
+            .fns
+            .iter()
+            .position(|f| f.name == "outer")
+            .unwrap();
+        assert_eq!(m.nested_ranges(outer).len(), 1);
+    }
+
+    #[test]
+    fn resolve_prefers_same_file_then_unique() {
+        let tree = Tree {
+            sources: vec![
+                SourceFile::parse(
+                    "rust/src/optim/pool.rs",
+                    "fn wait() {}\nfn only_here() {}\n",
+                ),
+                SourceFile::parse(
+                    "rust/src/optim/flat.rs",
+                    "fn wait() {}\n",
+                ),
+            ],
+            ..Tree::default()
+        };
+        let m = Model::build(&tree, |_| true);
+        // Same-file wins for the duplicate name.
+        let from_flat = m.resolve(1, "wait").unwrap();
+        assert_eq!(m.fns[from_flat].file, 1);
+        // Unique cross-file name resolves from anywhere.
+        let uniq = m.resolve(1, "only_here").unwrap();
+        assert_eq!(m.qual_name(uniq), "pool::only_here");
+        // Unknown stays unresolved.
+        assert!(m.resolve(0, "nope").is_none());
+    }
+
+    #[test]
+    fn test_region_fns_are_marked() {
+        let m = model_of(
+            "fn prod() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   fn helper() {}\n\
+             }\n",
+        );
+        assert!(!m.fns[0].is_test);
+        assert!(m.fns[1].is_test);
+    }
+}

@@ -48,6 +48,30 @@ pub const RULES: &[(&str, &str)] = &[
          Box::new) inside ANALYZE-HOT regions — the marked steady-state \
          dispatch paths stay heap-free",
     ),
+    (
+        "lock-order",
+        "the global lock-order graph (guard acquisition sets propagated \
+         over the call graph) is acyclic — a cycle is a static deadlock \
+         witness",
+    ),
+    (
+        "condvar-discipline",
+        "every Condvar::wait is reached holding its paired mutex, sits in \
+         a predicate loop, and has a matching notify somewhere in the \
+         watched tree",
+    ),
+    (
+        "channel-topology",
+        "every channel endpoint is used after creation (sends have a live \
+         receive path) and every recycled ring buffer recv'd comes back \
+         on a ret_* endpoint — the alloc-free steady-state invariant",
+    ),
+    (
+        "lock-held-panic",
+        "no unwrap()/expect()/panic-family/indexing-panic token while a \
+         MutexGuard is live outside test code — poison on the barrier \
+         path wedges the whole crew",
+    ),
 ];
 
 /// Directories (repo-relative prefixes) the determinism and
@@ -99,9 +123,10 @@ pub const PANIC_ALLOWLIST: &[(&str, usize, &str)] = &[
     ),
     (
         "rust/src/runtime/session.rs",
-        9,
-        "compile-cache/stats mutex locks and a cache hit checked two lines \
-         above; lock poisoning is itself a crashed-thread symptom",
+        8,
+        "compile-cache/stats mutex locks; lock poisoning is itself a \
+         crashed-thread symptom (the cache-hit expect became an anyhow \
+         error when the lock-held-panic rule landed)",
     ),
     (
         "rust/src/coordinator/engine.rs",
@@ -154,7 +179,7 @@ pub const DOCS_VERSION_MARK: &str = "ADCP format version:";
 /// `q8 block size: 64` — the on-the-wire contract of the q8 rung.
 pub const DOCS_Q8_MARK: &str = "q8 block size:";
 
-fn in_watched(path: &str) -> bool {
+pub(crate) fn in_watched(path: &str) -> bool {
     WATCHED_DIRS.iter().any(|d| path.starts_with(d))
 }
 

@@ -303,6 +303,11 @@ fn strip(text: &str) -> (Vec<Line>, Vec<(usize, String)>) {
                 }
             }
             Mode::Str => match b {
+                // An escape consumes the next byte — except a
+                // string-continuation backslash before a newline, which
+                // must leave the newline for the line-tracking branch
+                // above or every later line number in the file shifts.
+                b'\\' if bytes.get(i + 1) == Some(&b'\n') => i += 1,
                 b'\\' => i += 2,
                 b'"' => {
                     code.push('"');
@@ -379,8 +384,10 @@ fn closes_raw(bytes: &[u8], i: usize, hashes: usize) -> bool {
 fn char_literal_len(bytes: &[u8], i: usize) -> Option<usize> {
     match bytes.get(i + 1)? {
         b'\\' => {
-            // Escaped char: scan to the closing quote (handles \n, \u{..}).
-            let mut j = i + 2;
+            // Escaped char: scan to the closing quote (handles \n,
+            // \u{..}). The scan starts PAST the escaped byte so the
+            // quote inside '\'' is not mistaken for the terminator.
+            let mut j = i + 3;
             while j < bytes.len() && j < i + 12 {
                 if bytes[j] == b'\'' {
                     return Some(j + 1 - i);
@@ -463,6 +470,62 @@ mod tests {
         assert!(!f.lines[0].code.contains("unsafe"));
         assert!(f.lines[0].code.contains("&'a str"));
         assert!(!f.lines[1].code.contains('x'));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_derail_the_scan() {
+        // '\'' used to terminate at the escape's own quote, leaving the
+        // scanner one byte short and misreading the rest of the line.
+        let f = SourceFile::parse(
+            "x.rs",
+            "let q = '\\''; let h = HashMap::new();\n\
+             let b = '\\\\'; let n = '\\n'; unsafe {}\n",
+        );
+        assert!(f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[1].code.contains("unsafe"));
+        assert!(!f.lines[1].code.contains("\\n"));
+    }
+
+    #[test]
+    fn string_continuation_keeps_line_numbers() {
+        // A trailing backslash inside a string literal continues it on
+        // the next line; the swallowed newline used to shift every later
+        // line number in the file.
+        let f = SourceFile::parse(
+            "x.rs",
+            "let s = \"one \\\n     two\";\nlet t = Instant::now();\n",
+        );
+        assert_eq!(f.lines.len(), 3);
+        assert_eq!(f.lines[2].number, 3);
+        assert!(f.lines[2].code.contains("Instant::now"));
+        // The continuation's contents stay blanked out of the code
+        // channel on both physical lines.
+        assert!(!f.lines[0].code.contains("one"));
+        assert!(!f.lines[1].code.contains("two"));
+    }
+
+    #[test]
+    fn multiline_raw_string_keeps_line_numbers() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "let s = r#\"first\nunsafe {}\nlast\"#;\nlet x = 1;\n",
+        );
+        assert_eq!(f.lines.len(), 4);
+        assert_eq!(f.lines[3].number, 4);
+        assert!(f.lines[3].code.contains("let x = 1;"));
+        assert!(!f.lines[1].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn lifetimes_and_loop_labels_are_not_char_literals() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn f<'a>(x: &'a str) -> &'a str { x }\n\
+             'outer: loop { break 'outer; }\n",
+        );
+        assert!(f.lines[0].code.contains("<'a>"));
+        assert!(f.lines[0].code.contains("&'a str"));
+        assert!(f.lines[1].code.contains("'outer: loop"));
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! adalomo train      --plan pipelined-fused [--resume ckpt]       (unified engine)
 //! adalomo checkpoint-inspect --ckpt engine_ckpt.bin               (ckpt header dump)
 //! adalomo hparams                                                 (Tables 3/6/7)
-//! adalomo analyze    [--root DIR --json REPORT.json]              (static analysis)
+//! adalomo analyze    [--root DIR --json R.json --sarif R.sarif]   (static analysis)
 //! adalomo info                                                    (artifacts summary)
 //! ```
 #![forbid(unsafe_code)]
@@ -109,9 +109,13 @@ USAGE: adalomo <subcommand> [--flag value ...]
               --dtype D asserts the stored dtype, --wire W the wire rung)
   hparams     the paper's hyper-parameter tables (3/6/7)
   analyze     static analysis over rust/src + cross-artifact checks:
-              no-unsafe, determinism, panic-discipline, consistency
-              (--root DIR, --json REPORT.json, --list shows the rules);
-              exits nonzero on any unwaivered finding
+              no-unsafe, determinism, panic-discipline, consistency,
+              plus the concurrency-protocol family (lock-order,
+              condvar-discipline, channel-topology, lock-held-panic)
+              (--root DIR, --json REPORT.json, --sarif OUT.sarif,
+              --list shows the rules, --bless-waivers prints the
+              stale-waiver removal diff); exits nonzero on any
+              unwaivered or stale finding
   bench-check gate measured bench metrics against bench/baseline.json
   info        artifacts + manifest summary
 
@@ -832,7 +836,9 @@ fn cmd_hparams(args: &Args) -> Result<()> {
 fn cmd_analyze(args: &Args) -> Result<()> {
     let root = args.str_or("root", ".");
     let json_path = args.get("json").map(str::to_string);
+    let sarif_path = args.get("sarif").map(str::to_string);
     let list = args.bool("list");
+    let bless_waivers = args.bool("bless-waivers");
     args.finish()?;
     if list {
         let mut t = Table::new("analyze — rule registry")
@@ -844,8 +850,33 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         return Ok(());
     }
     let report = adalomo::analysis::run(Path::new(&root))?;
+    if bless_waivers {
+        if report.stale_waivers.is_empty() {
+            println!("no stale waivers — nothing to remove");
+            return Ok(());
+        }
+        for (file, line, rule) in &report.stale_waivers {
+            println!("--- {file}:{line} (waives {rule:?}, no finding)");
+            let text = std::fs::read_to_string(Path::new(&root).join(file))
+                .unwrap_or_default();
+            if let Some(l) =
+                line.checked_sub(1).and_then(|i| text.lines().nth(i))
+            {
+                println!("-{l}");
+            }
+        }
+        bail!(
+            "{} stale waiver(s) — delete the lines above (or just the \
+             trailing comment where the waiver shares a line with code)",
+            report.stale_waivers.len()
+        );
+    }
     if let Some(path) = &json_path {
         std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+    }
+    if let Some(path) = &sarif_path {
+        std::fs::write(path, report.to_sarif().to_string())
             .map_err(|e| anyhow!("writing {path}: {e}"))?;
     }
     let violations = report.violations();

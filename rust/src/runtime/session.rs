@@ -108,7 +108,11 @@ impl Session {
     ) -> Result<R> {
         self.compile(entry_name)?;
         let cache = self.cache.lock().unwrap();
-        f(cache.get(entry_name).expect("compiled above"))
+        // An anyhow error (not expect): a panic here would poison the
+        // compile cache for every other session user.
+        f(cache
+            .get(entry_name)
+            .ok_or_else(|| anyhow!("{entry_name} missing from cache"))?)
     }
 
     fn check_args(&self, entry: &Entry, n: usize) -> Result<()> {

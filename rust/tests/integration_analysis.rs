@@ -139,6 +139,201 @@ fn binary_exits_nonzero_on_each_seeded_rule_violation() {
     }
 }
 
+/// One minimal seeded violation per concurrency-protocol rule. Kept out
+/// of the flat `seeds` table above because each fixture is a small
+/// multi-line program, not a one-liner.
+#[test]
+fn binary_exits_nonzero_on_each_seeded_conc_violation() {
+    let seeds: &[(&str, &str)] = &[
+        (
+            // Two functions acquire the same two mutexes in opposite
+            // orders — the canonical static deadlock witness.
+            "lock-order",
+            r#"use std::sync::Mutex;
+pub struct S { pub a: Mutex<u32>, pub b: Mutex<u32> }
+pub fn fwd(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());
+    let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());
+    drop(gb);
+    drop(ga);
+}
+pub fn rev(s: &S) {
+    let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());
+    let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());
+    drop(ga);
+    drop(gb);
+}
+"#,
+        ),
+        (
+            // A wait outside a predicate loop whose condvar is never
+            // notified anywhere in the tree.
+            "condvar-discipline",
+            r#"use std::sync::{Condvar, Mutex};
+pub struct S { pub m: Mutex<bool>, pub cv: Condvar }
+pub fn bad(s: &S) {
+    let g = s.m.lock().unwrap_or_else(|e| e.into_inner());
+    let g = s.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+    drop(g);
+}
+"#,
+        ),
+        (
+            // The receiver half of a channel is created and then never
+            // touched again — sends go nowhere.
+            "channel-topology",
+            r#"use std::sync::mpsc::channel;
+pub fn orphan() -> u32 {
+    let (tx, rx) = channel::<u32>();
+    let _ = tx.send(1);
+    7
+}
+"#,
+        ),
+        (
+            // Buffers drained off the ring are never handed back on the
+            // ret_* endpoint — the alloc-free steady state leaks.
+            "channel-topology",
+            r#"use std::sync::mpsc::{Receiver, Sender};
+pub fn drain(rx: &Receiver<Vec<f32>>, ret_tx: &Sender<Vec<f32>>) -> usize {
+    let mut n = 0;
+    while let Ok(buf) = rx.try_recv() {
+        n += buf.len();
+    }
+    let _keep = ret_tx;
+    n
+}
+"#,
+        ),
+        (
+            // unwrap() while a MutexGuard is live (and not the waived
+            // lock().unwrap() acquisition idiom).
+            "lock-held-panic",
+            r#"use std::sync::Mutex;
+pub fn bad(m: &Mutex<Vec<u32>>) -> u32 {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    g.first().copied().unwrap()
+}
+"#,
+        ),
+    ];
+    for (i, (rule, content)) in seeds.iter().enumerate() {
+        let root = fixture_root(&format!("conc-{i}-{rule}"));
+        write(&root, "rust/src/optim/x.rs", content);
+        let (code, stdout) = run_analyze(&root);
+        assert_eq!(
+            code, 1,
+            "{rule}: seeded violation must exit 1; stdout:\n{stdout}"
+        );
+        assert!(
+            stdout.contains(&format!("VIOLATION [{rule}]")),
+            "{rule}: violation line missing from output:\n{stdout}"
+        );
+        let report =
+            std::fs::read_to_string(root.join("report.json")).expect("json");
+        let j = Json::parse(&report).expect("report parses");
+        assert!(
+            j.get("rules")
+                .and_then(|r| r.get(rule))
+                .and_then(|r| r.get("violations"))
+                .and_then(|v| v.as_usize())
+                .expect("rule counter")
+                >= 1,
+            "{rule}: JSON report counter not bumped"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// The lock-order inversion from the seed table, with the anchoring
+/// acquisition explicitly waived — exits 0 and reports the waiver, the
+/// same contract the committed tree relies on.
+#[test]
+fn binary_exits_zero_on_waived_conc_fixture() {
+    let root = fixture_root("conc-waived");
+    write(
+        &root,
+        "rust/src/optim/x.rs",
+        r#"use std::sync::Mutex;
+pub struct S { pub a: Mutex<u32>, pub b: Mutex<u32> }
+pub fn fwd(s: &S) {
+    let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());
+    // ANALYZE-WAIVE(lock-order): fixture inversion kept on purpose
+    let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());
+    drop(gb);
+    drop(ga);
+}
+pub fn rev(s: &S) {
+    let gb = s.b.lock().unwrap_or_else(|e| e.into_inner());
+    let ga = s.a.lock().unwrap_or_else(|e| e.into_inner());
+    drop(ga);
+    drop(gb);
+}
+"#,
+    );
+    let (code, stdout) = run_analyze(&root);
+    assert_eq!(
+        code, 0,
+        "waived inversion must exit 0; stdout:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("1 waived"),
+        "waived cycle should be reported:\n{stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// `--sarif` writes a parseable SARIF 2.1.0 report even on failure, and
+/// `--bless-waivers` prints the removal diff for stale waivers.
+#[test]
+fn sarif_output_and_stale_waiver_blessing() {
+    let root = fixture_root("sarif");
+    write(
+        &root,
+        "rust/src/coordinator/x.rs",
+        "// ANALYZE-WAIVE(determinism): long-gone HashMap\n\
+         pub fn f() -> u32 {\n    7\n}\n",
+    );
+    let out = Command::new(env!("CARGO_BIN_EXE_adalomo"))
+        .args(["analyze", "--root"])
+        .arg(&root)
+        .arg("--sarif")
+        .arg(root.join("report.sarif"))
+        .output()
+        .expect("spawn adalomo analyze");
+    // The waiver no longer matches any finding, so it is itself a
+    // violation now — but the SARIF report must still be written.
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("stale waiver"),
+        "stale waiver must surface as a violation:\n{stdout}"
+    );
+    let sarif =
+        std::fs::read_to_string(root.join("report.sarif")).expect("sarif");
+    assert!(Json::parse(&sarif).is_ok(), "SARIF must be valid JSON");
+    assert!(sarif.contains("\"2.1.0\""), "SARIF version pin missing");
+    assert!(sarif.contains("adalomo-analyze"), "driver name missing");
+
+    let bless = Command::new(env!("CARGO_BIN_EXE_adalomo"))
+        .args(["analyze", "--root"])
+        .arg(&root)
+        .arg("--bless-waivers")
+        .output()
+        .expect("spawn adalomo analyze --bless-waivers");
+    assert_eq!(bless.status.code(), Some(1));
+    let bstdout = String::from_utf8_lossy(&bless.stdout);
+    assert!(
+        bstdout.contains("rust/src/coordinator/x.rs:1"),
+        "removal diff must name the stale waiver line:\n{bstdout}"
+    );
+    assert!(
+        bstdout.contains("ANALYZE-WAIVE(determinism)"),
+        "removal diff must echo the line to delete:\n{bstdout}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// A fixture with the violation fixed (or waived) exits 0 — the gate
 /// passes clean trees, not just fails dirty ones.
 #[test]
